@@ -1,0 +1,51 @@
+//! §3.2.3: Level-4 autonomous driving on a $700 Jetson-class board — the
+//! XEngine runtime demo. Simulates the Fig 16 application under all five
+//! scheduling regimes of Table 5 and prints the per-module latency table.
+//!
+//! ```bash
+//! cargo run --release --example autonomous_driving [ADy416]
+//! ```
+
+use xgen::xengine::adapp::{modules, variants};
+use xgen::xengine::sim::simulate;
+use xgen::xengine::Policy;
+
+fn main() {
+    let want = std::env::args().nth(1);
+    for v in variants() {
+        if let Some(w) = &want {
+            if v.name != *w {
+                continue;
+            }
+        }
+        println!("=== {} (Jetson-AGX-class board: 4 CPU cores, GPU, 2 DLAs) ===", v.name);
+        let mods = modules(v);
+        for p in Policy::all() {
+            let r = simulate(v.name, &mods, p, 5000.0, 0xAD);
+            println!("\n{}", p.name());
+            for m in &r.modules {
+                if m.name == "percept_postproc" {
+                    continue;
+                }
+                if m.timed_out() {
+                    println!("  {:<14} ∞ (deadlock)", m.name);
+                } else {
+                    let star = if m.miss_rate() > 0.5 { "*" } else { " " };
+                    println!(
+                        " {star}{:<14} {:7.1} ± {:5.1} ms   miss {:5.1}%",
+                        m.name,
+                        m.mean(),
+                        m.std(),
+                        m.miss_rate() * 100.0
+                    );
+                }
+            }
+            println!("  => application miss rate: {:.0}%", r.worst_miss_rate() * 100.0);
+        }
+        println!();
+        if want.is_none() {
+            break; // default: first variant only (use an arg for others)
+        }
+    }
+    println!("(compare against Table 5 in EXPERIMENTS.md; `xgen sched --variant all` sweeps everything)");
+}

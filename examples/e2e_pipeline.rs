@@ -1,0 +1,108 @@
+//! **End-to-end validation driver** (recorded in EXPERIMENTS.md §E13):
+//! proves all three layers compose on a real small workload.
+//!
+//! * L1/L2 (build time): `make artifacts` trained the demo CNN on the
+//!   synthetic shape corpus, pattern-pruned + fine-tuned it, and AOT-lowered
+//!   dense + pattern variants (the pattern variant goes through the Pallas
+//!   pattern-GEMM kernel) to HLO text.
+//! * L3 (this binary): loads both artifacts through the PJRT CPU client and
+//!   serves a batched request stream with the dynamic-batching coordinator,
+//!   reporting throughput, latency percentiles, batch occupancy, and
+//!   dense-vs-pattern prediction agreement, plus the measured training
+//!   accuracies from artifacts/accuracy.json.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use std::time::{Duration, Instant};
+
+use xgen::coordinator::Server;
+use xgen::runtime::{artifacts_present, default_artifact_dir, ModelRuntime};
+use xgen::util::json::Json;
+use xgen::util::rng::Rng;
+
+const REQUESTS: usize = 256;
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_present() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let dir = default_artifact_dir();
+
+    // Measured training accuracies (python/compile/train.py).
+    if let Ok(text) = std::fs::read_to_string(dir.join("accuracy.json")) {
+        if let Ok(acc) = Json::parse(&text) {
+            println!("measured accuracy (python training, synthetic 8-class corpus):");
+            if let Some(obj) = acc.as_obj() {
+                for (k, v) in obj {
+                    println!("  {:>15}: {:.3}", k, v.as_f64().unwrap_or(0.0));
+                }
+            }
+        }
+    }
+
+    // Dense vs pattern agreement on a fixed input set (direct runtime).
+    let mut rt = ModelRuntime::open(&dir)?;
+    let per: usize = rt.load("cnn_dense_b1")?.input_shape[1..].iter().product();
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..per).map(|_| rng.f32() * 2.0 - 1.0).collect())
+        .collect();
+    let mut agree = 0;
+    for x in &inputs {
+        let d = rt.load("cnn_dense_b1")?.run(x)?;
+        let p = rt.load("cnn_pattern_b1")?.run(x)?;
+        if argmax(&d) == argmax(&p) {
+            agree += 1;
+        }
+    }
+    println!(
+        "\ndense vs pattern top-1 agreement on random probes: {}/{}",
+        agree,
+        inputs.len()
+    );
+    drop(rt);
+
+    // Batched serving of both variants.
+    for artifact in ["cnn_dense", "cnn_pattern"] {
+        let server = Server::start(
+            dir.clone(),
+            &format!("{artifact}_b1"),
+            &format!("{artifact}_b4"),
+            Duration::from_millis(2),
+        )?;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..REQUESTS)
+            .map(|_| server.submit((0..per).map(|_| rng.f32() * 2.0 - 1.0).collect()))
+            .collect();
+        let mut ok = 0;
+        for rx in rxs {
+            if rx.recv().unwrap().is_ok() {
+                ok += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let st = server.stats();
+        let s = st.summary().expect("latencies recorded");
+        println!(
+            "\n[{artifact}] {ok}/{REQUESTS} ok in {:6.1} ms | {:7.0} req/s | mean batch {:4.2} | p50 {:6.2} ms | p95 {:6.2} ms",
+            wall * 1e3,
+            ok as f64 / wall,
+            st.mean_batch(),
+            s.p50,
+            s.p95
+        );
+    }
+    println!("\ne2e OK: python built the artifacts once; Rust served everything.");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: the XGen pipeline on one model, end to end.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. builds ResNet-50 from the zoo,
+//! 2. runs graph rewriting → pattern pruning (ADMM projection) → DNNFusion,
+//! 3. prints latency estimates on the Galaxy-S10-class device vs baselines,
+//! 4. if `make artifacts` has been run, executes the real AOT demo CNN
+//!    through the PJRT runtime.
+
+use xgen::baselines::{DeviceClass, Framework};
+use xgen::coordinator::compile;
+use xgen::cost::devices;
+use xgen::graph::zoo::by_name;
+use xgen::graph::WeightStore;
+use xgen::pruning::PruneScheme;
+use xgen::runtime::{artifacts_present, default_artifact_dir, ModelRuntime};
+use xgen::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+    let g = by_name("resnet-50", 1);
+    println!("model:   {}", g.summary());
+    let ops = g.operator_count();
+
+    let mut ws = WeightStore::init_random(&g, &mut rng);
+    let scheme = PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.4 };
+    let c = compile(g, Some(&mut ws), scheme);
+
+    println!(
+        "rewrite: {} -> {} ops   fusion: {} fused layers (was {} ops)",
+        ops,
+        c.rewrite_stats.ops_after,
+        c.plan.fused_layer_count(),
+        c.rewrite_stats.ops_after,
+    );
+    if let Some(r) = &c.prune_report {
+        println!(
+            "prune:   {:.1}% sparsity over {} layers, effective {:.2} GMACs",
+            r.sparsity * 100.0,
+            r.layers_pruned,
+            r.effective_macs as f64 / 1e9
+        );
+    }
+    let dev = devices::s10_cpu();
+    println!("\nlatency on {} (cost model):", dev.name);
+    for fw in [Framework::Mnn, Framework::Tvm, Framework::TfLite, Framework::XGenFull] {
+        // Baselines run the dense model with their own fusion.
+        let lat = if fw == Framework::XGenFull {
+            c.latency_ms(&dev, fw, DeviceClass::MobileCpu)
+        } else {
+            let dense = by_name("resnet-50", 1);
+            let dc = compile(dense, None, PruneScheme::None);
+            dc.latency_ms(&dev, fw, DeviceClass::MobileCpu)
+        };
+        if let Some(ms) = lat {
+            println!("  {:>14}: {:7.1} ms", fw.name(), ms);
+        }
+    }
+
+    if artifacts_present() {
+        println!("\nPJRT demo (real execution of the AOT CNN):");
+        let mut rt = ModelRuntime::open(default_artifact_dir())?;
+        let m = rt.load("cnn_pattern_b1")?;
+        let n: usize = m.input_shape.iter().product();
+        let x: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let t0 = std::time::Instant::now();
+        let y = m.run(&x)?;
+        println!(
+            "  cnn_pattern_b1: {:?} -> {} logits in {:.2} ms",
+            m.input_shape,
+            y.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    } else {
+        println!("\n(run `make artifacts` to enable the PJRT demo)");
+    }
+    Ok(())
+}

@@ -1,0 +1,99 @@
+"""AOT lowering: JAX/Pallas models → HLO **text** artifacts for the Rust
+PJRT runtime.
+
+HLO text (not `HloModuleProto.serialize()`) is the interchange format: jax
+≥0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Weights are closed over (baked as HLO constants), so each artifact is a
+self-contained `f(x) -> logits/image` the Rust side feeds raw input
+tensors. `artifacts/meta.json` records input/output shapes per artifact.
+
+Runs once under `make artifacts`; never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+
+def to_hlo_text(fn, *example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_or_train(out_dir, steps):
+    wpath = os.path.join(out_dir, "cnn_weights.npz")
+    ppath = os.path.join(out_dir, "cnn_pattern_weights.npz")
+    if not (os.path.exists(wpath) and os.path.exists(ppath)):
+        T.main(out_dir=out_dir, steps=steps)
+    dense = {k: jnp.asarray(v) for k, v in np.load(wpath).items()}
+    praw = np.load(ppath)
+    pparams = {k: jnp.asarray(v) for k, v in praw.items() if not k.startswith("mask_")}
+    pmasks = {k[5:]: jnp.asarray(v) for k, v in praw.items() if k.startswith("mask_")}
+    return dense, pparams, pmasks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--train-steps", type=int, default=300)
+    args = ap.parse_args()
+    out_dir = args.out if os.path.isdir(os.path.dirname(args.out) or ".") else "../artifacts"
+    os.makedirs(out_dir, exist_ok=True)
+
+    dense, pparams, pmasks = load_or_train(out_dir, args.train_steps)
+    meta = {}
+
+    def emit(name, fn, in_shape):
+        x = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+        text = to_hlo_text(fn, x)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta[name] = {"input": list(in_shape), "chars": len(text)}
+        print(f"wrote {name}: {len(text)} chars")
+
+    for batch in (1, 4):
+        emit(
+            f"cnn_dense_b{batch}",
+            lambda x: (M.cnn_forward(dense, x, variant="dense"),),
+            (batch, *M.CNN_IN),
+        )
+        # Pattern variant: pruned weights through the Pallas kernel path.
+        emit(
+            f"cnn_pattern_b{batch}",
+            lambda x: (M.cnn_forward(pparams, x, variant="pattern", masks=pmasks),),
+            (batch, *M.CNN_IN),
+        )
+
+    wdsr = M.init_wdsr(1)
+    emit("wdsr_b1", lambda x: (M.wdsr_forward(wdsr, x),), (1, *M.WDSR_IN))
+    wmasks = M.elite8_masks(wdsr, ["r1b", "r2b"])
+    wpruned = {k: (v * wmasks[k] if k in wmasks else v) for k, v in wdsr.items()}
+    emit(
+        "wdsr_pattern_b1",
+        lambda x: (M.wdsr_forward(wpruned, x, variant="pattern", masks=wmasks),),
+        (1, *M.WDSR_IN),
+    )
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    print(f"meta.json: {len(meta)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: pattern-pruned convolution as a tiled im2col GEMM.
+
+TPU adaptation of PatDNN's mobile-SIMD story (DESIGN.md
+§Hardware-Adaptation): the 4-entry kernel patterns are folded into the
+weight matrix at *pack time* (the FKW analogue), and the hot loop is a
+VMEM-tiled GEMM over im2col patches — BlockSpec expresses the HBM→VMEM
+schedule the paper expressed with threadblocks. Block shapes default to
+MXU-friendly 128×128 tiles (shrunk for small problems).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated structurally (VMEM
+footprint / MXU utilization) in DESIGN.md.
+"""
+
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _round_to(v, m):
+    return max(m, (v + m - 1) // m * m)
+
+
+def pallas_gemm(x, w, bm=128, bn=128, bk=128):
+    """Pallas tiled GEMM (accumulating in the output tile — valid because
+    the grid's k dimension is sequential in interpret mode)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = min(bm, _round_to(m, 8))
+    bn = min(bn, _round_to(n, 8))
+    bk = min(bk, _round_to(k, 8))
+    mp, kp, np_ = _round_to(m, bm), _round_to(k, bk), _round_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // bk
+
+    def kernel(x_ref, w_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def pattern_conv2d(x, w, mask, stride=1, pad=1, bm=128, bn=128, bk=128):
+    """Pattern-pruned conv: weights are packed (masked) at trace time, the
+    conv executes as an im2col + Pallas tiled GEMM.
+
+    x: [N, C, H, W]; w, mask: [O, I, KH, KW].
+    """
+    o, i, kh, kw = w.shape
+    packed = (w * mask).reshape(o, i * kh * kw).T  # [K, O]
+    patches, oh, ow = ref.im2col(x, kh, kw, stride=stride, pad=pad)
+    y = pallas_gemm(patches, packed, bm=bm, bn=bn, bk=bk)  # [N*OH*OW, O]
+    n = x.shape[0]
+    return y.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def vmem_bytes(bm=128, bn=128, bk=128):
+    """Structural VMEM footprint of one grid step (f32): x-tile + w-tile +
+    out-tile. The perf notes in EXPERIMENTS.md §Perf track this against the
+    ~16 MiB/core budget."""
+    return 4 * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Pallas kernel in this package is checked against these functions by
+pytest (with hypothesis sweeping shapes/seeds) before anything is AOT-lowered
+for the Rust runtime.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_nchw(x, w, stride=1, pad=1):
+    """Reference NCHW/OIHW conv via lax.conv_general_dilated."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def pattern_conv2d(x, w, mask, stride=1, pad=1):
+    """Pattern-pruned conv: `mask` (OIHW {0,1}) encodes the per-kernel
+    4-entry patterns; semantics are conv with the masked weights."""
+    return conv2d_nchw(x, w * mask, stride=stride, pad=pad)
+
+
+def block_gemm(x, w, block_mask, bk, bn):
+    """Block-sparse GEMM: x [M,K] @ (w [K,N] masked by block_mask
+    [K//bk, N//bn])."""
+    k, n = w.shape
+    mask = jnp.repeat(jnp.repeat(block_mask, bk, axis=0), bn, axis=1)
+    mask = mask[:k, :n]
+    return x @ (w * mask)
+
+
+def im2col(x, kh, kw, stride=1, pad=1):
+    """Unfold NCHW into [N*OH*OW, C*KH*KW] patches (GEMM formulation)."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = xp[:, :, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            cols.append(patch.reshape(n, c, oh * ow))
+    # [n, c, kh*kw, oh*ow] -> [n*oh*ow, c*kh*kw]
+    stacked = jnp.stack(cols, axis=2)
+    return stacked.transpose(0, 3, 1, 2).reshape(n * oh * ow, c * kh * kw), oh, ow

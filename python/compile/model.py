@@ -1,0 +1,148 @@
+"""L2: the demonstration models, written in JAX and calling the L1 Pallas
+kernels, AOT-lowered by `aot.py` into the artifacts the Rust runtime
+serves.
+
+* `SmallCNN` — an 8-class image classifier (the car-classification /
+  quickstart workload) with three execution variants: `dense` (lax.conv),
+  `pattern` (4-entry pattern-pruned convs through the Pallas pattern-GEMM
+  kernel) and `block` (block-pruned dense head through the Pallas
+  block-sparse kernel).
+* `wdsr_tiny` — a WDSR-style ×2 super-resolution body (use case III).
+
+Parameters are plain pytrees (dicts); `init_*` builds them deterministically
+from a seed so Python and Rust agree on shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_gemm as bg
+from .kernels import pattern_conv as pc
+from .kernels import ref
+
+# ---------------------------------------------------------------- SmallCNN
+
+CNN_CLASSES = 8
+CNN_IN = (3, 24, 24)  # C, H, W
+
+
+def init_cnn(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    he = lambda k, shape, fan: jax.random.normal(k, shape, jnp.float32) * (2.0 / fan) ** 0.5
+    return {
+        "c1": he(ks[0], (16, 3, 3, 3), 27),
+        "b1": jnp.zeros((16,), jnp.float32),
+        "c2": he(ks[1], (32, 16, 3, 3), 144),
+        "b2": jnp.zeros((32,), jnp.float32),
+        "c3": he(ks[2], (32, 32, 3, 3), 288),
+        "b3": jnp.zeros((32,), jnp.float32),
+        "d1": he(ks[3], (32, CNN_CLASSES), 32),
+        "db": jnp.zeros((CNN_CLASSES,), jnp.float32),
+    }
+
+
+def cnn_forward(params, x, variant="dense", masks=None):
+    """Forward pass. `variant`: dense | pattern | block.
+
+    pattern: convs run through the Pallas pattern GEMM with `masks[name]`
+    (OIHW 0/1, 4-of-9 patterns). block: the classifier head runs through
+    the Pallas block-sparse GEMM with masks["d1_block"].
+    """
+
+    def conv(name, x, stride):
+        w = params[name]
+        if variant == "pattern" and masks is not None and name in masks:
+            y = pc.pattern_conv2d(x, w, masks[name], stride=stride, pad=1, bm=128, bn=32, bk=32)
+        else:
+            y = ref.conv2d_nchw(x, w, stride=stride, pad=1)
+        b = params["b" + name[1]]
+        return jax.nn.relu(y + b[None, :, None, None])
+
+    x = conv("c1", x, 1)
+    x = conv("c2", x, 2)
+    x = conv("c3", x, 2)
+    x = jnp.mean(x, axis=(2, 3))  # global average pool -> [N, 32]
+    if variant == "block" and masks is not None and "d1_block" in masks:
+        logits = bg.dense_via_block_gemm(x, params["d1"], masks["d1_block"], bk=8, bn=4)
+    else:
+        logits = x @ params["d1"]
+    return logits + params["db"]
+
+
+# ------------------------------------------------------------- WDSR (tiny)
+
+WDSR_IN = (3, 32, 32)  # upscales x2 -> (3, 64, 64)
+WDSR_FEATS = 8
+
+
+def init_wdsr(seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    f = WDSR_FEATS
+    he = lambda k, shape, fan: jax.random.normal(k, shape, jnp.float32) * (2.0 / fan) ** 0.5
+    return {
+        "head": he(ks[0], (f, 3, 3, 3), 27),
+        "r1a": he(ks[1], (f * 4, f, 1, 1), f),
+        "r1b": he(ks[2], (f, f * 4, 3, 3), f * 36),
+        "r2a": he(ks[3], (f * 4, f, 1, 1), f),
+        "r2b": he(ks[4], (f, f * 4, 3, 3), f * 36),
+        "up": he(ks[5], (12, f, 3, 3), f * 9),
+        "skip": he(ks[6], (12, 3, 5, 5), 75),
+    }
+
+
+def _pixel_shuffle2(x):
+    n, c, h, w = x.shape
+    r = 2
+    x = x.reshape(n, c // (r * r), r, r, h, w)
+    return x.transpose(0, 1, 4, 2, 5, 3).reshape(n, c // (r * r), h * r, w * r)
+
+
+def wdsr_forward(params, x, variant="dense", masks=None):
+    def conv(name, x, pad):
+        w = params[name]
+        if variant == "pattern" and masks is not None and name in masks:
+            return pc.pattern_conv2d(x, w, masks[name], stride=1, pad=pad, bm=128, bn=32, bk=32)
+        return ref.conv2d_nchw(x, w, stride=1, pad=pad)
+
+    t = conv("head", x, 1)
+    for r in ("r1", "r2"):
+        y = conv(r + "a", t, 0)
+        y = jax.nn.relu(y)
+        y = conv(r + "b", y, 1)
+        t = t + y
+    main = _pixel_shuffle2(conv("up", t, 1))
+    skip = _pixel_shuffle2(ref.conv2d_nchw(x, params["skip"], stride=1, pad=2))
+    return main + skip
+
+
+# ------------------------------------------------- pattern mask generation
+
+def elite8_masks(params, conv_names):
+    """Assign each 3×3 kernel the best 4-entry pattern from the elite-8 set
+    (center + 3 neighbours) — mirrors rust/src/pruning/pattern.rs."""
+    elite = []
+    for trio in ([1, 3, 0], [1, 5, 2], [3, 7, 6], [5, 7, 8],
+                 [1, 3, 5], [3, 7, 5], [1, 7, 3], [1, 7, 5]):
+        m = jnp.zeros((9,), jnp.float32).at[jnp.array(trio + [4])].set(1.0)
+        elite.append(m.reshape(3, 3))
+    pats = jnp.stack(elite)  # [8, 3, 3]
+    masks = {}
+    for name in conv_names:
+        w = params[name]
+        if w.shape[-2:] != (3, 3):
+            continue
+        energy = jnp.einsum("oihw,phw->oip", w * w, pats)
+        best = jnp.argmax(energy, axis=-1)  # [O, I]
+        masks[name] = pats[best]  # [O, I, 3, 3]
+    return masks
+
+
+def block_mask_for_dense(w, bk=8, bn=4, keep=0.5, seed=3):
+    """Magnitude-ranked block mask for a dense matrix [K, N]."""
+    k, n = w.shape
+    gk, gn = (k + bk - 1) // bk, (n + bn - 1) // bn
+    pad = jnp.pad(w, ((0, gk * bk - k), (0, gn * bn - n)))
+    blocks = pad.reshape(gk, bk, gn, bn)
+    energy = jnp.sum(blocks * blocks, axis=(1, 3))  # [gk, gn]
+    kth = jnp.quantile(energy.reshape(-1), 1.0 - keep)
+    return (energy >= kth).astype(jnp.float32)

@@ -1,0 +1,151 @@
+"""Build-time training: the *measured* accuracy leg of the reproduction.
+
+Trains `SmallCNN` on a deterministic synthetic 8-class shape corpus, then
+prunes it with each scheme (pattern / block / magnitude / structured),
+fine-tunes, and writes the accuracy table to `artifacts/accuracy.json` —
+the measured counterpart of the paper's "same accuracy" claims and the
+Fig 6 accuracy ordering (non-structured ≥ pattern ≥ block ≥ structured).
+
+Runs once under `make artifacts`; never on the request path.
+"""
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import ref
+
+CLASSES = M.CNN_CLASSES
+
+
+def make_dataset(n, seed=0):
+    """8 distinguishable procedural classes on 3x24x24 images."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 3, 24, 24), np.float32)
+    ys = rng.integers(0, CLASSES, size=n)
+    yy, xx = np.mgrid[0:24, 0:24].astype(np.float32)
+    for i in range(n):
+        c = ys[i]
+        phase = rng.uniform(0, 2 * np.pi)
+        freq = 0.25 + 0.045 * c
+        if c % 4 == 0:
+            base = np.sin(freq * xx + phase)
+        elif c % 4 == 1:
+            base = np.sin(freq * yy + phase)
+        elif c % 4 == 2:
+            base = np.sin(freq * (xx + yy) + phase)
+        else:
+            r2 = (xx - 12) ** 2 + (yy - 12) ** 2
+            base = np.sin(freq * np.sqrt(r2) + phase)
+        for ch in range(3):
+            gain = 1.0 if (c < 4) == (ch % 2 == 0) else 0.75
+            xs[i, ch] = gain * base + rng.normal(0, 1.1, (24, 24))
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+def loss_fn(params, x, y, variant="dense", masks=None):
+    logits = M.cnn_forward(params, x, variant=variant, masks=masks)
+    onehot = jax.nn.one_hot(y, CLASSES)
+    return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+
+
+def accuracy(params, x, y, variant="dense", masks=None):
+    logits = M.cnn_forward(params, x, variant=variant, masks=masks)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+def sgd_train(params, xs, ys, steps, lr=0.05, bs=64, masks=None, mask_weights=False, seed=0):
+    """Plain-momentum SGD; if mask_weights, conv weights are re-masked after
+    every step (straight-through pruned fine-tuning)."""
+    grad = jax.jit(jax.grad(lambda p, x, y: loss_fn(p, x, y)))
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed)
+    n = xs.shape[0]
+    for _ in range(steps):
+        idx = rng.integers(0, n, bs)
+        g = grad(params, xs[idx], ys[idx])
+        vel = jax.tree_util.tree_map(lambda v, gg: 0.9 * v - lr * gg, vel, g)
+        params = jax.tree_util.tree_map(lambda p, v: p + v, params, vel)
+        if mask_weights and masks is not None:
+            params = dict(params)
+            for name, m in masks.items():
+                if name in params:
+                    params[name] = params[name] * m
+    return params
+
+
+def structured_masks(params, conv_names, keep=4.0 / 9.0):
+    """Filter-pruning masks: keep the strongest `keep` fraction of filters
+    entirely (whole-matrix granularity)."""
+    masks = {}
+    for name in conv_names:
+        w = params[name]
+        energy = jnp.sum(w * w, axis=(1, 2, 3))
+        kth = jnp.quantile(energy, 1.0 - keep)
+        m = (energy >= kth).astype(jnp.float32)
+        masks[name] = jnp.broadcast_to(m[:, None, None, None], w.shape)
+    return masks
+
+
+def magnitude_masks(params, conv_names, keep=4.0 / 9.0):
+    masks = {}
+    for name in conv_names:
+        w = params[name]
+        kth = jnp.quantile(jnp.abs(w).reshape(-1), 1.0 - keep)
+        masks[name] = (jnp.abs(w) >= kth).astype(jnp.float32)
+    return masks
+
+
+def main(out_dir="../artifacts", steps=300, finetune=120):
+    os.makedirs(out_dir, exist_ok=True)
+    xs, ys = make_dataset(2048, seed=0)
+    xt, yt = make_dataset(512, seed=1)
+    conv_names = ["c1", "c2", "c3"]
+
+    params = M.init_cnn(0)
+    params = sgd_train(params, xs, ys, steps)
+    acc = {"dense": accuracy(params, xt, yt)}
+
+    # Pattern pruning (4-of-9 = 44% density) + fine-tune.
+    pmasks = M.elite8_masks(params, conv_names)
+    pparams = {k: (v * pmasks[k] if k in pmasks else v) for k, v in params.items()}
+    pparams = sgd_train(pparams, xs, ys, finetune, masks=pmasks, mask_weights=True)
+    acc["pattern"] = accuracy(pparams, xt, yt, variant="dense")
+
+    # Magnitude (non-structured) at the same density.
+    mmasks = magnitude_masks(params, conv_names)
+    mparams = {k: (v * mmasks[k] if k in mmasks else v) for k, v in params.items()}
+    mparams = sgd_train(mparams, xs, ys, finetune, masks=mmasks, mask_weights=True)
+    acc["non_structured"] = accuracy(mparams, xt, yt)
+
+    # Structured (filter) pruning at the same density.
+    smasks = structured_masks(params, conv_names)
+    sparams = {k: (v * smasks[k] if k in smasks else v) for k, v in params.items()}
+    sparams = sgd_train(sparams, xs, ys, finetune, masks=smasks, mask_weights=True)
+    acc["structured"] = accuracy(sparams, xt, yt)
+
+    with open(os.path.join(out_dir, "accuracy.json"), "w") as f:
+        json.dump(acc, f, indent=1, sort_keys=True)
+
+    # Save dense + pattern weights (and masks) for aot.py.
+    np.savez(
+        os.path.join(out_dir, "cnn_weights.npz"),
+        **{k: np.asarray(v) for k, v in params.items()},
+    )
+    np.savez(
+        os.path.join(out_dir, "cnn_pattern_weights.npz"),
+        **{k: np.asarray(v) for k, v in pparams.items()},
+        **{"mask_" + k: np.asarray(v) for k, v in pmasks.items()},
+    )
+    print("accuracy:", json.dumps(acc, sort_keys=True))
+    return acc
+
+
+if __name__ == "__main__":
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 300
+    main(steps=steps)

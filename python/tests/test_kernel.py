@@ -1,0 +1,95 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py), with
+hypothesis sweeping shapes — the core correctness signal gating AOT."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_gemm as bg
+from compile.kernels import pattern_conv as pc
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_pallas_gemm_matches_jnp(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    got = pc.pallas_gemm(x, w, bm=32, bn=32, bk=32)
+    want = x @ w
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 6),
+    o=st.integers(1, 10),
+    hw=st.integers(4, 14),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_pattern_conv_matches_ref(n, c, o, hw, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, c, hw, hw)
+    w = rand(rng, o, c, 3, 3)
+    # Random 4-of-9 patterns per kernel.
+    masks = np.zeros((o, c, 9), np.float32)
+    for i in range(o):
+        for j in range(c):
+            masks[i, j, rng.choice(9, 4, replace=False)] = 1.0
+    mask = jnp.asarray(masks.reshape(o, c, 3, 3))
+    got = pc.pattern_conv2d(x, w, mask, stride=stride, pad=1, bm=32, bn=16, bk=16)
+    want = ref.pattern_conv2d(x, w, mask, stride=stride, pad=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    gk=st.integers(1, 5),
+    gn=st.integers(1, 5),
+    bk=st.sampled_from([4, 8]),
+    bn=st.sampled_from([4, 8]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_block_gemm_matches_ref(m, gk, gn, bk, bn, density, seed):
+    rng = np.random.default_rng(seed)
+    k, n = gk * bk, gn * bn
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    mask = jnp.asarray((rng.random((gk, gn)) < density).astype(np.float32))
+    got = bg.block_gemm(x, w, mask, bk=bk, bn=bn, bm=32)
+    want = ref.block_gemm(x, w, mask, bk=bk, bn=bn)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_block_gemm_all_masked_is_zero():
+    rng = np.random.default_rng(0)
+    x, w = rand(rng, 8, 16), rand(rng, 16, 8)
+    mask = jnp.zeros((2, 2), jnp.float32)
+    got = bg.block_gemm(x, w, mask, bk=8, bn=4, bm=8)
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+def test_im2col_shapes():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 2, 3, 8, 8)
+    patches, oh, ow = ref.im2col(x, 3, 3, stride=2, pad=1)
+    assert (oh, ow) == (4, 4)
+    assert patches.shape == (2 * 16, 27)
+
+
+def test_vmem_budget_of_default_tiles():
+    # 128x128x128 f32 tiles: 3 * 64 KiB*... must stay well under 16 MiB.
+    assert pc.vmem_bytes(128, 128, 128) < 16 * 1024 * 1024

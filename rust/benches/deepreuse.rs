@@ -1,0 +1,61 @@
+//! E11 — §2.3.2: deep reuse "halves the inference time … while causing
+//! virtually no accuracy loss". Real wall-clock on the Rust executor:
+//! dense conv vs deep-reuse conv on correlated (image-like) inputs, with
+//! the MAC savings and output error reported.
+
+use xgen::deepreuse::{reuse_conv2d, ReuseConfig};
+use xgen::tensor::Tensor;
+use xgen::util::bench::{sink, time_ms, Table};
+use xgen::util::rng::Rng;
+
+fn smooth_image(rng: &mut Rng, c: usize, hw: usize) -> Tensor {
+    let mut x = Tensor::zeros(&[1, c, hw, hw]);
+    for ci in 0..c {
+        let fx = 0.15 + 0.1 * ci as f32;
+        for y in 0..hw {
+            for xx in 0..hw {
+                let v = (fx * xx as f32).sin() + (fx * 0.8 * y as f32).cos()
+                    + rng.normal_f32(0.0, 0.02);
+                x.set(&[0, ci, y, xx], v);
+            }
+        }
+    }
+    x
+}
+
+fn main() {
+    let mut rng = Rng::new(0xDEE9);
+    let mut t = Table::new(&[
+        "Layer", "Dense (ms)", "Reuse (ms)", "Speedup", "MACs saved", "Reuse ratio", "Rel err",
+    ]);
+    for (c, o, hw) in [(8usize, 64usize, 40usize), (16, 64, 28), (32, 128, 20)] {
+        let x = smooth_image(&mut rng, c, hw);
+        let w = Tensor::randn(&[o, c, 3, 3], 0.4, &mut rng);
+        let dense_t = time_ms(1, 5, || {
+            sink(x.conv2d(&w, 1, 1));
+        });
+        let cfg = ReuseConfig { hash_bits: 12, max_rel_dev: 0.35, ..Default::default() };
+        let mut stats = Default::default();
+        let mut out = Tensor::zeros(&[1]);
+        let reuse_t = time_ms(1, 5, || {
+            let (y, s) = reuse_conv2d(&x, &w, 1, 1, &cfg);
+            stats = s;
+            out = y;
+        });
+        let dense = x.conv2d(&w, 1, 1);
+        let scale = dense.data().iter().map(|v| v.abs()).sum::<f32>() / dense.len() as f32;
+        let rel = out.mad(&dense) / scale.max(1e-9);
+        t.row(vec![
+            format!("{c}->{o} @{hw}x{hw}"),
+            format!("{:.2}", dense_t.mean),
+            format!("{:.2}", reuse_t.mean),
+            format!("{:.2}x", dense_t.mean / reuse_t.mean),
+            format!("{:.0}%", stats.savings() * 100.0),
+            format!("{:.1}", stats.reuse_ratio()),
+            format!("{rel:.4}"),
+        ]);
+    }
+    t.print("deep reuse on correlated inputs (real executor wall-clock)");
+    println!("\npaper: ~2x inference-time reduction at <5e-4 accuracy loss on CNNs;");
+    println!("our relative output error is bounded by the adaptive-outlier knob (max_rel_dev).");
+}

@@ -1,0 +1,69 @@
+//! E1 — Fig 17: average speedup summary over the other frameworks under
+//! the same accuracy (the bar chart derived from Table 3).
+
+use xgen::baselines::{DeviceClass, Framework};
+use xgen::cost::{devices, estimate_latency, scheme_density_map, sparse_efficiency};
+use xgen::graph::zoo::by_name;
+use xgen::pruning::PruneScheme;
+use xgen::util::bench::Table;
+
+fn lat(model: &str, fw: Framework, class: DeviceClass) -> Option<f64> {
+    let g = by_name(model, 1);
+    if !fw.supports(&g, class) {
+        return None;
+    }
+    let dev = match class {
+        DeviceClass::MobileCpu => devices::s10_cpu(),
+        DeviceClass::MobileGpu => devices::s10_gpu(),
+        _ => return None,
+    };
+    let scheme = fw.deploy_scheme();
+    let plan = fw.fusion_plan(&g);
+    let prof = fw.profile(class)?;
+    let dm = if matches!(scheme, PruneScheme::None) {
+        Default::default()
+    } else {
+        scheme_density_map(&g, &scheme)
+    };
+    Some(estimate_latency(&g, &plan, &dev, &prof, &dm, sparse_efficiency(&scheme)).total_ms())
+}
+
+fn main() {
+    let models = [
+        "efficientnet-b0",
+        "resnet-50",
+        "vgg-16",
+        "mobilenet-v1-ssd",
+        "mobilenet-v3",
+        "yolo-v4",
+        "u-net",
+    ];
+    let paper = [("MNN", 6.4), ("TVM", 8.2), ("TFLite", 6.8), ("PyTorch", 16.5)];
+    let mut t = Table::new(&["Baseline", "Ours (geomean)", "Ours (mean)", "Paper (mean)"]);
+    for (fw, paper_x) in [
+        (Framework::Mnn, paper[0].1),
+        (Framework::Tvm, paper[1].1),
+        (Framework::TfLite, paper[2].1),
+        (Framework::PyTorchMobile, paper[3].1),
+    ] {
+        let mut ratios = Vec::new();
+        for m in models {
+            for class in [DeviceClass::MobileCpu, DeviceClass::MobileGpu] {
+                if let (Some(b), Some(x)) = (lat(m, fw, class), lat(m, Framework::XGenFull, class))
+                {
+                    ratios.push(b / x);
+                }
+            }
+        }
+        if ratios.is_empty() {
+            continue;
+        }
+        t.row(vec![
+            fw.name().to_string(),
+            format!("{:.1}x", xgen::util::geomean(&ratios)),
+            format!("{:.1}x", xgen::util::mean(&ratios)),
+            format!("{paper_x:.1}x"),
+        ]);
+    }
+    t.print("Fig 17 — average XGen speedup under the same accuracy");
+}

@@ -1,0 +1,90 @@
+//! E8 — Fig 21: the three product use cases — car classification (2–3.3×),
+//! home safety monitor / S3D (22.6× vs PyTorch), super-resolution / WDSR
+//! (1.9× compiler-only, 7.2× with pruning).
+
+use xgen::baselines::{DeviceClass, Framework};
+use xgen::coordinator::compile;
+use xgen::cost::devices;
+use xgen::graph::zoo::by_name;
+use xgen::graph::WeightStore;
+use xgen::pruning::PruneScheme;
+use xgen::util::bench::Table;
+use xgen::util::rng::Rng;
+
+fn main() {
+    let gpu = devices::s10_gpu();
+    let cpu = devices::s10_cpu();
+    let mut rng = Rng::new(21);
+    let mut t = Table::new(&["Use case", "Baseline", "Base (ms)", "XGen (ms)", "Speedup", "Paper"]);
+
+    // I: car classification (EfficientNet-B0 class).
+    let base = compile(by_name("efficientnet-b0", 1), None, PruneScheme::None)
+        .latency_ms(&gpu, Framework::Mnn, DeviceClass::MobileGpu)
+        .unwrap();
+    let g = by_name("efficientnet-b0", 1);
+    let mut ws = WeightStore::init_random(&g, &mut rng);
+    let x = compile(g, Some(&mut ws), PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.35 })
+        .latency_ms(&gpu, Framework::XGenFull, DeviceClass::MobileGpu)
+        .unwrap();
+    t.row(vec![
+        "car classification".into(),
+        "MNN".into(),
+        format!("{base:.1}"),
+        format!("{x:.1}"),
+        format!("{:.1}x", base / x),
+        "2-3.3x".into(),
+    ]);
+
+    // II: home monitor (S3D), vs PyTorch Mobile (the only baseline that runs it).
+    let base = compile(by_name("s3d", 1), None, PruneScheme::None)
+        .latency_ms(&cpu, Framework::PyTorchMobile, DeviceClass::MobileCpu)
+        .unwrap();
+    let g = by_name("s3d", 1);
+    let mut ws = WeightStore::init_random(&g, &mut rng);
+    let x = compile(g, Some(&mut ws), PruneScheme::Block { block: 8, rate: 0.8 })
+        .latency_ms(&gpu, Framework::XGenFull, DeviceClass::MobileGpu)
+        .unwrap();
+    t.row(vec![
+        "home monitor (S3D)".into(),
+        "PyTorch".into(),
+        format!("{base:.0}"),
+        format!("{x:.0}"),
+        format!("{:.1}x", base / x),
+        "22.6x".into(),
+    ]);
+
+    // III: super resolution (WDSR) vs TFLite: compiler-only, then +pruning.
+    let base = compile(by_name("wdsr-b", 1), None, PruneScheme::None)
+        .latency_ms(&gpu, Framework::TfLite, DeviceClass::MobileGpu)
+        .unwrap();
+    let comp_only = compile(by_name("wdsr-b", 1), None, PruneScheme::None)
+        .latency_ms(&gpu, Framework::XGenFull, DeviceClass::MobileGpu)
+        .unwrap();
+    let g = by_name("wdsr-b", 1);
+    let mut ws = WeightStore::init_random(&g, &mut rng);
+    let pruned = compile(g, Some(&mut ws), PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.4 })
+        .latency_ms(&gpu, Framework::XGenFull, DeviceClass::MobileGpu)
+        .unwrap();
+    t.row(vec![
+        "super res (compiler)".into(),
+        "TFLite".into(),
+        format!("{base:.1}"),
+        format!("{comp_only:.1}"),
+        format!("{:.1}x", base / comp_only),
+        "1.9x".into(),
+    ]);
+    t.row(vec![
+        "super res (+pruning)".into(),
+        "TFLite".into(),
+        format!("{base:.1}"),
+        format!("{pruned:.1}"),
+        format!("{:.1}x", base / pruned),
+        "7.2x".into(),
+    ]);
+    t.print("Fig 21 — use cases (cost model on Galaxy-S10-class device)");
+    println!(
+        "\nsuper-res FPS: TFLite {:.1} -> XGen {:.1} (paper: 5 -> 36)",
+        1000.0 / base,
+        1000.0 / pruned
+    );
+}

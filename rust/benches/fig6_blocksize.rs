@@ -1,0 +1,58 @@
+//! E4 — Fig 6: accuracy vs latency across block sizes on ResNet-50 under
+//! a uniform 6× pruning rate. Latency from the cost model on the mobile
+//! GPU (as in the paper's figure), accuracy from the calibrated
+//! [`AccuracyModel`]; the measured accuracy ordering on the real
+//! (trainable) demo CNN is in artifacts/accuracy.json (see EXPERIMENTS.md).
+
+use xgen::baselines::{DeviceClass, Framework};
+use xgen::cost::{devices, estimate_latency, scheme_density_map, sparse_efficiency};
+use xgen::fusion::{fuse, FusionConfig};
+use xgen::graph::zoo::by_name;
+use xgen::pruning::{AccuracyModel, PruneScheme};
+use xgen::util::bench::Table;
+
+fn main() {
+    let g = by_name("resnet-50", 1);
+    let plan = fuse(&g, &FusionConfig::default());
+    let dev = devices::s10_gpu();
+    let prof = Framework::XGenFull.profile(DeviceClass::MobileGpu).unwrap();
+    let rate = 1.0 - 1.0 / 6.0;
+    let am = AccuracyModel::default();
+    let base = 76.5; // ResNet-50 ImageNet top-1
+
+    let mut t = Table::new(&["Scheme", "Block", "Latency (ms)", "Top-1 (%)"]);
+    let mut points = Vec::new();
+    let schemes: Vec<(String, PruneScheme)> = vec![
+        ("non-structured".into(), PruneScheme::NonStructured { rate }),
+        ("block 4x4".into(), PruneScheme::Block { block: 4, rate }),
+        ("block 8x8".into(), PruneScheme::Block { block: 8, rate }),
+        ("block 16x16".into(), PruneScheme::Block { block: 16, rate }),
+        ("block 32x32".into(), PruneScheme::Block { block: 32, rate }),
+        ("block 64x64".into(), PruneScheme::Block { block: 64, rate }),
+        ("block 256x256".into(), PruneScheme::Block { block: 256, rate }),
+        ("structured (whole)".into(), PruneScheme::Structured { rate }),
+    ];
+    for (name, scheme) in schemes {
+        let dm = scheme_density_map(&g, &scheme);
+        let lat =
+            estimate_latency(&g, &plan, &dev, &prof, &dm, sparse_efficiency(&scheme)).total_ms();
+        let acc = am.estimate(base, &scheme);
+        points.push((lat, acc));
+        let block = match &scheme {
+            PruneScheme::Block { block, .. } => block.to_string(),
+            PruneScheme::Structured { .. } => "matrix".into(),
+            _ => "1".into(),
+        };
+        t.row(vec![name, block, format!("{lat:.1}"), format!("{acc:.2}")]);
+    }
+    t.print("Fig 6 — ResNet-50 @ uniform 6x rate: accuracy vs latency by block size");
+    // Shape checks mirrored from the paper's figure.
+    let ns = points[0];
+    let st = *points.last().unwrap();
+    println!(
+        "\nshape: non-structured = best accuracy ({:.2}) worst latency ({:.1} ms); \
+         structured = worst accuracy ({:.2}) best latency ({:.1} ms); \
+         mid-size blocks get both (e.g. 8x8: {:.1} ms @ {:.2}%).",
+        ns.1, ns.0, st.1, st.0, points[2].0, points[2].1
+    );
+}

@@ -1,0 +1,122 @@
+//! E14 — hot-path microbenchmarks feeding EXPERIMENTS.md §Perf:
+//! 1. dense reference conv vs the FKW pattern-specialized sparse kernel
+//!    (with and without filter-kernel reorder) — §2.3.1's generated-code
+//!    story on the Rust substrate;
+//! 2. straight-line executor vs the fused executor on the demo CNN;
+//! 3. (artifacts present) PJRT single vs batched serving throughput.
+
+use std::time::Duration;
+
+use xgen::exec::{Executor, FusedExecutor};
+use xgen::fkw::FkwLayer;
+use xgen::fusion::{fuse, FusionConfig};
+use xgen::graph::zoo::NetBuilder;
+use xgen::graph::{Act, WeightStore};
+use xgen::pruning::pattern::{apply_assignment, assign_patterns, connectivity_prune, PatternSet};
+use xgen::tensor::Tensor;
+use xgen::util::bench::{sink, time_ms, Table};
+use xgen::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xBEEF);
+
+    // 1. FKW sparse conv vs dense conv (pattern sparsity 5/9 + 40% conn).
+    let mut t = Table::new(&["Kernel", "ms/run", "vs dense"]);
+    let (c, o, hw) = (32usize, 64usize, 32usize);
+    let x = Tensor::randn(&[1, c, hw, hw], 1.0, &mut rng);
+    let w = Tensor::randn(&[o, c, 3, 3], 0.5, &mut rng);
+    let mut asg = assign_patterns(&w, &PatternSet::elite8());
+    connectivity_prune(&w, &mut asg, 0.4);
+    let wp = apply_assignment(&w, &asg);
+    let dense = time_ms(2, 8, || {
+        sink(x.conv2d(&wp, 1, 1));
+    });
+    let fkw_plain = FkwLayer::encode(&wp, &asg, 1, 1, false);
+    let fkw_reord = FkwLayer::encode(&wp, &asg, 1, 1, true);
+    let plain = time_ms(2, 8, || {
+        sink(fkw_plain.conv2d(&x));
+    });
+    let reord = time_ms(2, 8, || {
+        sink(fkw_reord.conv2d(&x));
+    });
+    t.row(vec!["dense conv (masked weights)".into(), format!("{:.2}", dense.mean), "1.00x".into()]);
+    t.row(vec![
+        "FKW sparse conv".into(),
+        format!("{:.2}", plain.mean),
+        format!("{:.2}x", dense.mean / plain.mean),
+    ]);
+    t.row(vec![
+        "FKW + filter-kernel reorder".into(),
+        format!("{:.2}", reord.mean),
+        format!("{:.2}x", dense.mean / reord.mean),
+    ]);
+    t.print(&format!(
+        "pattern-sparse conv {c}->{o} @{hw}x{hw} (sparsity {:.0}%, switches {} -> {})",
+        wp.zero_fraction() * 100.0,
+        fkw_plain.pattern_switches(),
+        fkw_reord.pattern_switches()
+    ));
+
+    // 2. straight-line vs fused executor on the demo CNN.
+    let mut b = NetBuilder::new("demo", &[1, 3, 32, 32]);
+    b.conv_bn_act(16, 3, 1, 1, Act::Relu);
+    b.conv_bn_act(16, 3, 1, 1, Act::Relu);
+    b.conv_bn_act(32, 3, 2, 1, Act::Relu);
+    b.gap();
+    b.dense(10);
+    let g = b.finish();
+    let ws = WeightStore::init_random(&g, &mut rng);
+    let xin = Tensor::randn(&[1, 3, 32, 32], 1.0, &mut rng);
+    let plan = fuse(&g, &FusionConfig::default());
+    let straight = time_ms(2, 10, || {
+        sink(Executor::new(&g, &ws).run(std::slice::from_ref(&xin)).unwrap());
+    });
+    let fused = time_ms(2, 10, || {
+        sink(
+            FusedExecutor::new(&g, &ws, &plan)
+                .run(std::slice::from_ref(&xin))
+                .unwrap(),
+        );
+    });
+    let mut t = Table::new(&["Executor", "ms/run", "speedup"]);
+    t.row(vec!["straight-line".into(), format!("{:.2}", straight.mean), "1.00x".into()]);
+    t.row(vec![
+        "fused (in-place elementwise)".into(),
+        format!("{:.2}", fused.mean),
+        format!("{:.2}x", straight.mean / fused.mean),
+    ]);
+    t.print("executor hot path (demo CNN)");
+
+    // 3. PJRT serving loop, single vs batched.
+    if xgen::runtime::artifacts_present() {
+        use xgen::coordinator::Server;
+        let per = 3 * 24 * 24;
+        let mut results = Vec::new();
+        for (label, wait_ms) in [("single (no batching)", 0u64), ("dynamic batch (<=4)", 2u64)] {
+            let server = Server::start(
+                xgen::runtime::default_artifact_dir(),
+                "cnn_dense_b1",
+                "cnn_dense_b4",
+                Duration::from_millis(wait_ms),
+            )
+            .unwrap();
+            let n = 128;
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = (0..n)
+                .map(|_| server.submit((0..per).map(|_| rng.f32()).collect()))
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            results.push((label, n as f64 / wall, server.stats().mean_batch()));
+        }
+        let mut t = Table::new(&["Serving mode", "req/s", "mean batch"]);
+        for (label, rps, mb) in results {
+            t.row(vec![label.into(), format!("{rps:.0}"), format!("{mb:.2}")]);
+        }
+        t.print("PJRT serving loop (real execution)");
+    } else {
+        println!("\n(PJRT serving bench skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,111 @@
+//! E1 — Table 3: mobile CPU/GPU latency across the model zoo and
+//! frameworks, at the paper's "same accuracy" operating point (baselines
+//! dense, XGen pattern-pruned + universally fused). Prints the table the
+//! paper prints; "-" cells come from op-coverage gaps. Paper averages:
+//! XGen 6.8×/8.2×/6.4×/16.5× over TFLite/TVM/MNN/PyTorch.
+
+use xgen::baselines::{DeviceClass, Framework};
+use xgen::cost::devices;
+use xgen::graph::zoo::by_name;
+use xgen::pruning::PruneScheme;
+use xgen::util::bench::Table;
+use xgen::util::fmt_ms;
+
+const MODELS: &[&str] = &[
+    "efficientnet-b0",
+    "resnet-50",
+    "vgg-16",
+    "mobilenet-v1-ssd",
+    "mobilenet-v3",
+    "yolo-v4",
+    "c3d",
+    "r2plus1d",
+    "s3d",
+    "pointpillar",
+    "u-net",
+    "faster-rcnn",
+    "mask-rcnn",
+    "tinybert",
+    "distilbert",
+    "bert-base",
+    "mobilebert",
+    "gpt-2",
+];
+
+fn latency(model: &str, fw: Framework, class: DeviceClass) -> Option<f64> {
+    let g = by_name(model, 1);
+    if !fw.supports(&g, class) {
+        return None;
+    }
+    let dev = match class {
+        DeviceClass::MobileCpu => devices::s10_cpu(),
+        DeviceClass::MobileGpu => devices::s10_gpu(),
+        _ => unreachable!(),
+    };
+    let scheme = fw.deploy_scheme();
+    // Baselines use their own fusion strategy; plan comes from the fw.
+    let plan = fw.fusion_plan(&g);
+    let prof = fw.profile(class)?;
+    let dm = if matches!(scheme, PruneScheme::None) {
+        Default::default()
+    } else {
+        xgen::cost::scheme_density_map(&g, &scheme)
+    };
+    Some(
+        xgen::cost::estimate_latency(
+            &g,
+            &plan,
+            &dev,
+            &prof,
+            &dm,
+            xgen::cost::sparse_efficiency(&scheme),
+        )
+        .total_ms(),
+    )
+}
+
+fn main() {
+    let fws = [Framework::Mnn, Framework::Tvm, Framework::TfLite, Framework::PyTorchMobile, Framework::XGenFull];
+    let mut t = Table::new(&[
+        "Model", "#Params", "#MACs", "MNN cpu", "MNN gpu", "TVM cpu", "TVM gpu", "TFL cpu",
+        "TFL gpu", "PT cpu", "XGen cpu", "XGen gpu",
+    ]);
+    let mut speedups: Vec<(&str, Vec<f64>)> = fws[..4].iter().map(|f| (f.name(), vec![])).collect();
+    for m in MODELS {
+        let g = by_name(m, 1);
+        let mut row = vec![
+            m.to_string(),
+            format!("{:.1}M", g.total_params() as f64 / 1e6),
+            format!("{:.1}G", g.total_macs() as f64 / 1e9),
+        ];
+        let xgen_cpu = latency(m, Framework::XGenFull, DeviceClass::MobileCpu);
+        for fw in &fws {
+            for class in [DeviceClass::MobileCpu, DeviceClass::MobileGpu] {
+                if *fw == Framework::PyTorchMobile && class == DeviceClass::MobileGpu {
+                    continue; // PyTorch has no GPU column in Table 3
+                }
+                match latency(m, *fw, class) {
+                    Some(ms) => {
+                        row.push(fmt_ms(ms));
+                        if class == DeviceClass::MobileCpu && *fw != Framework::XGenFull {
+                            if let (Some(x), Some(su)) =
+                                (xgen_cpu, speedups.iter_mut().find(|(n, _)| *n == fw.name()))
+                            {
+                                su.1.push(ms / x);
+                            }
+                        }
+                    }
+                    None => row.push("-".to_string()),
+                }
+            }
+        }
+        t.row(row);
+    }
+    t.print("Table 3 — mobile latency (ms), same-accuracy operating points");
+    println!("\naverage XGen CPU speedups (paper: MNN 6.4x, TVM 8.2x, TFLite 6.8x, PyTorch 16.5x):");
+    for (name, xs) in &speedups {
+        if !xs.is_empty() {
+            println!("  over {:>8}: {:.1}x (n={})", name, xgen::util::mean(xs), xs.len());
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! CAPS — Compiler-Aware neural architecture & Pruning co-Search (§2.4,
+//! Fig 13; the NPAS framework of the Fig 14 results).
+//!
+//! The search space couples *architecture* knobs (depth/width multipliers,
+//! per-stage kernel size) with *compression* knobs (pruning scheme and
+//! rate), and — the paper's differentiator — evaluates every candidate
+//! through the actual compiler pipeline: the candidate graph is built,
+//! fused by DNNFusion, and costed on the target device, so the latency
+//! constraint reflects code generation, not a FLOPs proxy.
+//!
+//! Search: an ε-greedy evolutionary controller (the RL-with-fast-
+//! evaluation stand-in; see DESIGN.md) over a Pareto archive, plus the
+//! **composability** optimization: candidate layer sequences are mined
+//! with [`sequitur`] for shared blocks whose training cost is paid once
+//! ([`composability`]).
+
+pub mod composability;
+pub mod sequitur;
+
+use crate::baselines::{DeviceClass, Framework};
+use crate::cost::{estimate_latency, scheme_density_map, sparse_efficiency, DensityMap, Device};
+use crate::fusion::{fuse, FusionConfig};
+use crate::graph::zoo::NetBuilder;
+use crate::graph::{Act, Graph};
+use crate::pruning::{AccuracyModel, PruneScheme};
+use crate::util::rng::Rng;
+
+/// One point in the joint architecture × pruning space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Width multiplier ∈ {0.5, 0.75, 1.0, 1.25, 1.5} (×32 base channels).
+    pub width: f64,
+    /// Depth: number of stage repeats ∈ 1..=4.
+    pub depth: usize,
+    /// Kernel size per stage (3 or 5).
+    pub kernels: [usize; 3],
+    /// Pruning scheme + rate.
+    pub scheme: PruneScheme,
+}
+
+impl Candidate {
+    /// Layer-symbol sequence for composability mining: each (kind, width,
+    /// kernel) combination is one terminal symbol.
+    pub fn layer_symbols(&self) -> Vec<u32> {
+        let mut syms = Vec::new();
+        let w = (self.width * 4.0).round() as u32; // quantized width id
+        for (si, &k) in self.kernels.iter().enumerate() {
+            let stage_width = w + si as u32 * 16;
+            for _ in 0..self.depth {
+                syms.push(stage_width * 10 + if k == 5 { 5 } else { 3 });
+            }
+        }
+        syms
+    }
+
+    /// Materialize the candidate as a graph (MobileNet-ish 3-stage CNN).
+    pub fn build_graph(&self) -> Graph {
+        let base = (32.0 * self.width).round() as usize;
+        let mut b = NetBuilder::new("caps-cand", &[1, 3, 224, 224]);
+        b.conv_bn_act(base.max(8), 3, 2, 1, Act::HardSwish);
+        let mut c = base.max(8);
+        for (si, &k) in self.kernels.iter().enumerate() {
+            let c_out = c * 2;
+            for d in 0..self.depth {
+                let stride = if d == 0 { 2 } else { 1 };
+                // Inverted residual-ish: expand, dw k×k, project.
+                b.conv_bn_act(c * 4, 1, 1, 0, Act::HardSwish);
+                b.dwconv(k, stride, k / 2);
+                b.bn();
+                b.act(Act::HardSwish);
+                b.conv(if d == self.depth - 1 { c_out } else { c }, 1, 1, 0, 1);
+                b.bn();
+            }
+            c = c_out;
+            let _ = si;
+        }
+        b.conv_bn_act(c * 2, 1, 1, 0, Act::HardSwish);
+        b.gap();
+        b.dense(1000);
+        b.finish()
+    }
+}
+
+/// Evaluation of one candidate through the full compiler loop.
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    pub cand: Candidate,
+    pub latency_ms: f64,
+    pub accuracy: f64,
+    pub macs: u64,
+}
+
+/// CAPS configuration.
+#[derive(Debug, Clone)]
+pub struct CapsConfig {
+    /// Latency budget on the target device (None = unconstrained frontier).
+    pub latency_budget_ms: Option<f64>,
+    pub iterations: usize,
+    pub population: usize,
+    pub seed: u64,
+}
+
+impl Default for CapsConfig {
+    fn default() -> Self {
+        CapsConfig { latency_budget_ms: None, iterations: 24, population: 12, seed: 0xCA95 }
+    }
+}
+
+/// Synthetic accuracy surface for the search family: grows
+/// logarithmically with capacity (diminishing returns), kernel-5 stages
+/// add a little; pruning subtracts per [`AccuracyModel`]. Calibrated so
+/// 1.0×-width dense ≈ 75–78% — the Fig 14 regime. (The *measured*
+/// accuracy experiment on the trainable demo CNN lives in python/.)
+pub fn accuracy_surface(cand: &Candidate, macs: u64) -> f64 {
+    let gmacs = macs as f64 / 1e9;
+    let base = 70.0 + 3.4 * (gmacs / 0.05).max(0.2).ln();
+    let k5_bonus: f64 = cand.kernels.iter().filter(|&&k| k == 5).count() as f64 * 0.15;
+    let am = AccuracyModel::default();
+    am.estimate((base + k5_bonus).min(82.0), &cand.scheme)
+}
+
+/// Evaluate one candidate: build graph → fuse → cost → accuracy estimate.
+pub fn evaluate(cand: &Candidate, device: &Device) -> Evaluated {
+    let g = cand.build_graph();
+    let plan = fuse(&g, &FusionConfig::default());
+    let prof = Framework::XGenFull.profile(DeviceClass::MobileCpu).unwrap();
+    let dm = if matches!(cand.scheme, PruneScheme::None) {
+        DensityMap::new()
+    } else {
+        scheme_density_map(&g, &cand.scheme)
+    };
+    let lat = estimate_latency(&g, &plan, device, &prof, &dm, sparse_efficiency(&cand.scheme))
+        .total_ms();
+    let macs = g.total_macs();
+    Evaluated {
+        cand: cand.clone(),
+        latency_ms: lat,
+        accuracy: accuracy_surface(cand, macs),
+        macs,
+    }
+}
+
+fn random_candidate(rng: &mut Rng) -> Candidate {
+    let widths = [0.5, 0.75, 1.0, 1.25, 1.5];
+    let schemes = [
+        PruneScheme::None,
+        PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 },
+        PruneScheme::Block { block: 8, rate: 0.75 },
+        PruneScheme::Block { block: 32, rate: 0.85 },
+        PruneScheme::Structured { rate: 0.5 },
+    ];
+    Candidate {
+        width: *rng.choose(&widths),
+        depth: 1 + rng.below(4),
+        kernels: [
+            *rng.choose(&[3usize, 5]),
+            *rng.choose(&[3usize, 5]),
+            *rng.choose(&[3usize, 5]),
+        ],
+        scheme: schemes[rng.below(schemes.len())].clone(),
+    }
+}
+
+fn mutate(c: &Candidate, rng: &mut Rng) -> Candidate {
+    let mut m = c.clone();
+    match rng.below(4) {
+        0 => m.width = *rng.choose(&[0.5, 0.75, 1.0, 1.25, 1.5]),
+        1 => m.depth = 1 + rng.below(4),
+        2 => m.kernels[rng.below(3)] = *rng.choose(&[3usize, 5]),
+        _ => {
+            m.scheme = match rng.below(4) {
+                0 => PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.2 + rng.f64() * 0.4 },
+                1 => PruneScheme::Block { block: *rng.choose(&[4usize, 8, 16, 32]), rate: 0.6 + rng.f64() * 0.3 },
+                2 => PruneScheme::Structured { rate: 0.3 + rng.f64() * 0.4 },
+                _ => PruneScheme::None,
+            }
+        }
+    }
+    m
+}
+
+/// Search result: Pareto archive (accuracy vs latency) + bookkeeping.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Pareto-optimal evaluated candidates, sorted by latency.
+    pub frontier: Vec<Evaluated>,
+    pub evaluated: usize,
+    /// Best candidate meeting the budget, if one was set.
+    pub best_in_budget: Option<Evaluated>,
+}
+
+/// Run the NPAS co-search loop.
+pub fn search(cfg: &CapsConfig, device: &Device) -> SearchResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut archive: Vec<Evaluated> = Vec::new();
+    let mut evaluated = 0usize;
+    let mut population: Vec<Candidate> =
+        (0..cfg.population).map(|_| random_candidate(&mut rng)).collect();
+    for _ in 0..cfg.iterations {
+        for cand in &population {
+            let e = evaluate(cand, device);
+            evaluated += 1;
+            insert_pareto(&mut archive, e);
+        }
+        // ε-greedy: mostly mutate archive elites, sometimes explore fresh.
+        population = (0..cfg.population)
+            .map(|_| {
+                if !archive.is_empty() && rng.chance(0.8) {
+                    let parent = &archive[rng.below(archive.len())].cand;
+                    mutate(parent, &mut rng)
+                } else {
+                    random_candidate(&mut rng)
+                }
+            })
+            .collect();
+    }
+    archive.sort_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap());
+    let best_in_budget = cfg.latency_budget_ms.and_then(|budget| {
+        archive
+            .iter()
+            .filter(|e| e.latency_ms <= budget)
+            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+            .cloned()
+    });
+    SearchResult { frontier: archive, evaluated, best_in_budget }
+}
+
+fn insert_pareto(archive: &mut Vec<Evaluated>, e: Evaluated) {
+    if archive
+        .iter()
+        .any(|a| a.latency_ms <= e.latency_ms && a.accuracy >= e.accuracy)
+    {
+        return; // dominated
+    }
+    archive.retain(|a| !(e.latency_ms <= a.latency_ms && e.accuracy >= a.accuracy));
+    archive.push(e);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::devices;
+
+    #[test]
+    fn candidate_builds_valid_graph() {
+        let c = Candidate {
+            width: 1.0,
+            depth: 2,
+            kernels: [3, 5, 3],
+            scheme: PruneScheme::None,
+        };
+        let g = c.build_graph();
+        assert!(g.validate().is_ok());
+        assert!(g.total_macs() > 10_000_000);
+    }
+
+    #[test]
+    fn accuracy_surface_monotone_in_capacity() {
+        let mk = |width| Candidate {
+            width,
+            depth: 2,
+            kernels: [3, 3, 3],
+            scheme: PruneScheme::None,
+        };
+        let small = evaluate(&mk(0.5), &devices::s10_cpu());
+        let big = evaluate(&mk(1.5), &devices::s10_cpu());
+        assert!(big.accuracy > small.accuracy);
+        assert!(big.latency_ms > small.latency_ms);
+    }
+
+    #[test]
+    fn search_produces_nonempty_pareto_frontier() {
+        let cfg = CapsConfig { iterations: 6, population: 6, ..Default::default() };
+        let r = search(&cfg, &devices::s10_cpu());
+        assert!(r.frontier.len() >= 3, "frontier size {}", r.frontier.len());
+        assert!(r.evaluated >= 36);
+        // Frontier is strictly improving in accuracy as latency grows.
+        for w in r.frontier.windows(2) {
+            assert!(w[0].latency_ms <= w[1].latency_ms);
+            assert!(
+                w[1].accuracy > w[0].accuracy - 1e-9,
+                "dominated point on frontier"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_budget_respected() {
+        let cfg = CapsConfig {
+            latency_budget_ms: Some(8.0),
+            iterations: 6,
+            population: 6,
+            ..Default::default()
+        };
+        let r = search(&cfg, &devices::s10_cpu());
+        if let Some(best) = &r.best_in_budget {
+            assert!(best.latency_ms <= 8.0);
+        }
+        // With a generous budget a model must be found.
+        let cfg2 = CapsConfig { latency_budget_ms: Some(1e6), iterations: 3, population: 4, ..Default::default() };
+        assert!(search(&cfg2, &devices::s10_cpu()).best_in_budget.is_some());
+    }
+
+    #[test]
+    fn pruned_candidates_dominate_dense_at_same_accuracy_band() {
+        // A pattern-pruned 1.0x net should be faster than the dense 1.0x
+        // net with only a small accuracy drop — the co-search's raison
+        // d'être.
+        let dense = Candidate { width: 1.0, depth: 2, kernels: [3, 3, 3], scheme: PruneScheme::None };
+        let pruned = Candidate {
+            scheme: PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 },
+            ..dense.clone()
+        };
+        let d = evaluate(&dense, &devices::s10_cpu());
+        let p = evaluate(&pruned, &devices::s10_cpu());
+        assert!(p.latency_ms < d.latency_ms * 0.75, "{} vs {}", p.latency_ms, d.latency_ms);
+        assert!(d.accuracy - p.accuracy < 1.0, "accuracy drop {}", d.accuracy - p.accuracy);
+    }
+
+    #[test]
+    fn layer_symbols_shared_between_similar_candidates() {
+        let a = Candidate { width: 1.0, depth: 3, kernels: [3, 3, 3], scheme: PruneScheme::None };
+        let b = Candidate { width: 1.0, depth: 2, kernels: [3, 3, 5], scheme: PruneScheme::None };
+        let sa = a.layer_symbols();
+        let sb = b.layer_symbols();
+        let shared = sb.iter().filter(|s| sa.contains(s)).count();
+        assert!(shared >= sb.len() / 2, "only {shared}/{} shared", sb.len());
+    }
+}

@@ -1,0 +1,181 @@
+//! Sequitur (Nevill-Manning & Witten, 1997) — the hierarchical grammar
+//! inference algorithm XGen uses to find the **most reusable building
+//! blocks** across the networks CAPS explores (§2.4): all layers of all
+//! candidate networks are flattened into a symbol sequence; Sequitur's
+//! rules are exactly the repeated layer blocks worth pre-training once.
+//!
+//! Implementation: iterative digram replacement to a fixpoint. This is the
+//! O(n²) formulation (repeatedly find the most frequent digram and replace
+//! it), which produces the same grammar class as the online algorithm and
+//! is simpler to verify; sequences here are thousands of symbols, far
+//! below where the asymptotics matter.
+
+use std::collections::BTreeMap;
+
+/// Terminal symbols are user values; nonterminals index `Grammar::rules`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Sym {
+    T(u32),
+    /// Rule reference.
+    N(u32),
+}
+
+/// A context-free grammar with rule 0 as the start rule.
+#[derive(Debug, Clone)]
+pub struct Grammar {
+    /// rules[0] = start; rules[i] for i>0 are introduced digram rules.
+    pub rules: Vec<Vec<Sym>>,
+}
+
+impl Grammar {
+    /// Infer a grammar for `seq` by repeated replacement of repeating
+    /// digrams (digram uniqueness), then removing rules used once (rule
+    /// utility).
+    pub fn infer(seq: &[u32]) -> Grammar {
+        let mut rules: Vec<Vec<Sym>> = vec![seq.iter().map(|&t| Sym::T(t)).collect()];
+        loop {
+            // Count digrams across all rules (non-overlapping, greedy).
+            let mut counts: BTreeMap<(Sym, Sym), usize> = BTreeMap::new();
+            for r in &rules {
+                let mut i = 0;
+                while i + 1 < r.len() {
+                    let d = (r[i], r[i + 1]);
+                    *counts.entry(d).or_insert(0) += 1;
+                    // Avoid counting aaa as two aa digrams.
+                    if i + 2 < r.len() && r[i] == r[i + 1] && r[i + 1] == r[i + 2] {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            let Some((&digram, &count)) = counts.iter().max_by_key(|(_, &c)| c) else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            // Introduce a rule for the digram and rewrite everywhere —
+            // everywhere EXCEPT the new rule's own body (rewriting it would
+            // produce the cyclic rule N → N).
+            let new_rule = rules.len();
+            let nt = Sym::N(new_rule as u32);
+            rules.push(vec![digram.0, digram.1]);
+            for (ri, r) in rules.iter_mut().enumerate() {
+                if ri == new_rule {
+                    continue;
+                }
+                let mut out = Vec::with_capacity(r.len());
+                let mut i = 0;
+                while i < r.len() {
+                    if i + 1 < r.len() && (r[i], r[i + 1]) == digram {
+                        out.push(nt);
+                        i += 2;
+                    } else {
+                        out.push(r[i]);
+                        i += 1;
+                    }
+                }
+                *r = out;
+            }
+        }
+        Grammar { rules }
+    }
+
+    /// Expand a symbol to its terminal string.
+    pub fn expand(&self, s: Sym) -> Vec<u32> {
+        match s {
+            Sym::T(t) => vec![t],
+            Sym::N(i) => self.rules[i as usize]
+                .iter()
+                .flat_map(|&x| self.expand(x))
+                .collect(),
+        }
+    }
+
+    /// Reconstruct the original sequence from the start rule.
+    pub fn reconstruct(&self) -> Vec<u32> {
+        self.rules[0].iter().flat_map(|&s| self.expand(s)).collect()
+    }
+
+    /// How many times each non-tombstone rule is referenced.
+    pub fn rule_usage(&self) -> Vec<usize> {
+        let mut usage = vec![0usize; self.rules.len()];
+        for r in &self.rules {
+            for s in r {
+                if let Sym::N(i) = s {
+                    usage[*i as usize] += 1;
+                }
+            }
+        }
+        usage
+    }
+
+    /// The reusable blocks: (terminal expansion, reference count) of every
+    /// rule used ≥2 times, longest first — the pre-training candidates.
+    pub fn reusable_blocks(&self) -> Vec<(Vec<u32>, usize)> {
+        let usage = self.rule_usage();
+        let mut out: Vec<(Vec<u32>, usize)> = (1..self.rules.len())
+            .filter(|&i| usage[i] >= 2 && !self.rules[i].is_empty())
+            .map(|i| (self.expand(Sym::N(i as u32)), usage[i]))
+            .collect();
+        out.sort_by(|a, b| (b.0.len() * b.1).cmp(&(a.0.len() * a.1)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::forall;
+
+    #[test]
+    fn reconstruction_is_lossless() {
+        forall("sequitur reconstructs input", 32, |rng| {
+            let n = 2 + rng.below(60);
+            let alphabet = 1 + rng.below(5) as u32;
+            let seq: Vec<u32> = (0..n).map(|_| rng.next_u32() % alphabet).collect();
+            let g = Grammar::infer(&seq);
+            assert_eq!(g.reconstruct(), seq);
+        });
+    }
+
+    #[test]
+    fn finds_repeated_block() {
+        // abcabcabc → a rule covering "abc" (possibly nested) used 3 times.
+        let seq = [1, 2, 3, 1, 2, 3, 1, 2, 3];
+        let g = Grammar::infer(&seq);
+        let blocks = g.reusable_blocks();
+        assert!(!blocks.is_empty());
+        let top = &blocks[0];
+        assert_eq!(top.0, vec![1, 2, 3]);
+        assert!(top.1 >= 3);
+    }
+
+    #[test]
+    fn no_rules_for_unique_sequence() {
+        let seq = [1, 2, 3, 4, 5, 6];
+        let g = Grammar::infer(&seq);
+        assert!(g.reusable_blocks().is_empty());
+        assert_eq!(g.reconstruct(), seq);
+    }
+
+    #[test]
+    fn grammar_is_smaller_than_repetitive_input() {
+        let mut seq = Vec::new();
+        for _ in 0..16 {
+            seq.extend_from_slice(&[7, 8, 9, 10]);
+        }
+        let g = Grammar::infer(&seq);
+        let grammar_size: usize = g.rules.iter().map(|r| r.len()).sum();
+        assert!(grammar_size < seq.len() / 2, "grammar {grammar_size} vs seq {}", seq.len());
+        assert_eq!(g.reconstruct(), seq);
+    }
+
+    #[test]
+    fn digram_counting_handles_aaa_runs() {
+        let seq = [5, 5, 5, 5, 5, 5];
+        let g = Grammar::infer(&seq);
+        assert_eq!(g.reconstruct(), seq);
+    }
+}

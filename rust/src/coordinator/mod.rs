@@ -1,0 +1,272 @@
+//! The XGen coordinator: (a) the compilation pipeline driver tying the
+//! model optimizer, graph rewriting, DNNFusion and the cost model together
+//! (§2's Fig 2 flow, and the Fig 20 "Usage II/III" service path), and
+//! (b) a serving loop that batches requests over the PJRT runtime with
+//! Python never on the request path.
+//!
+//! The serving loop uses std threads + mpsc channels (tokio is not in the
+//! offline vendor set — see DESIGN.md): one dispatcher thread drains a
+//! request queue, forms batches (up to the artifact's batch size, bounded
+//! wait), executes on [`ModelRuntime`], and completes per-request
+//! responses through per-request channels.
+
+pub mod service;
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::baselines::{DeviceClass, Framework};
+use crate::cost::{estimate_latency, scheme_density_map, sparse_efficiency, DensityMap, Device};
+use crate::fusion::FusionPlan;
+use crate::graph::{Graph, WeightStore};
+use crate::pruning::{prune_graph, PruneReport, PruneScheme};
+use crate::rewrite::{rewrite, RewriteConfig, RewriteStats};
+use crate::runtime::ModelRuntime;
+use crate::util::stats::Summary;
+
+/// Everything the pipeline produced for one model.
+pub struct Compiled {
+    pub graph: Graph,
+    pub plan: FusionPlan,
+    pub rewrite_stats: RewriteStats,
+    pub prune_report: Option<PruneReport>,
+    pub scheme: PruneScheme,
+}
+
+impl Compiled {
+    /// Cost-model latency on a device under a framework profile.
+    pub fn latency_ms(&self, device: &Device, fw: Framework, class: DeviceClass) -> Option<f64> {
+        let prof = fw.profile(class)?;
+        let dm = if matches!(self.scheme, PruneScheme::None) {
+            DensityMap::new()
+        } else {
+            scheme_density_map(&self.graph, &self.scheme)
+        };
+        Some(
+            estimate_latency(&self.graph, &self.plan, device, &prof, &dm, sparse_efficiency(&self.scheme))
+                .total_ms(),
+        )
+    }
+}
+
+/// Run the full XGen pipeline: rewrite → prune → fuse.
+pub fn compile(
+    mut graph: Graph,
+    mut ws: Option<&mut WeightStore>,
+    scheme: PruneScheme,
+) -> Compiled {
+    let rewrite_stats = rewrite(&mut graph, ws.as_deref_mut(), &RewriteConfig::default());
+    let prune_report = ws
+        .filter(|_| !matches!(scheme, PruneScheme::None))
+        .map(|ws| prune_graph(&graph, ws, &scheme));
+    let plan = crate::fusion::fuse(&graph, &crate::fusion::FusionConfig::default());
+    Compiled { graph, plan, rewrite_stats, prune_report, scheme }
+}
+
+/// A single inference request: input tensor + response channel.
+struct Request {
+    input: Vec<f32>,
+    reply: mpsc::Sender<Result<Vec<f32>, String>>,
+    enqueued: Instant,
+}
+
+/// Serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub completed: usize,
+    pub batches: usize,
+    pub latencies_ms: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn summary(&self) -> Option<Summary> {
+        if self.latencies_ms.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latencies_ms))
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Dynamic-batching server over one artifact family.
+///
+/// `batch_artifact` (e.g. `cnn_dense_b4`) serves full batches;
+/// `single_artifact` (`cnn_dense_b1`) serves the remainder — the classic
+/// bucketed-batching scheme.
+pub struct Server {
+    tx: mpsc::Sender<Request>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<ServeStats>>,
+}
+
+impl Server {
+    /// Spawn the dispatcher thread. The PJRT client is **created inside**
+    /// the thread (the xla crate's client is not `Send`); artifacts are
+    /// compiled there before the call returns.
+    pub fn start(
+        artifact_dir: std::path::PathBuf,
+        single_artifact: &str,
+        batch_artifact: &str,
+        max_wait: Duration,
+    ) -> Result<Server> {
+        let single = single_artifact.to_string();
+        let batched = batch_artifact.to_string();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats2 = stats.clone();
+        let handle = std::thread::spawn(move || {
+            let mut rt = match ModelRuntime::open(&artifact_dir) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            // Pre-compile both variants before accepting traffic.
+            let batch_size = match (|| -> Result<usize> {
+                rt.load(&single)?;
+                Ok(rt.load(&batched)?.input_shape[0])
+            })() {
+                Ok(b) => b,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            let _ = ready_tx.send(Ok(()));
+            dispatcher(rt, rx, &single, &batched, batch_size, max_wait, stats2);
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server thread died"))?
+            .map_err(anyhow::Error::msg)?;
+        Ok(Server { tx, handle: Some(handle), stats })
+    }
+
+    /// Enqueue a request; returns the response receiver.
+    pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Result<Vec<f32>, String>> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Request { input, reply, enqueued: Instant::now() });
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, String> {
+        self.submit(input)
+            .recv()
+            .map_err(|_| "server shut down".to_string())?
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Closing the channel stops the dispatcher.
+        let (dummy_tx, _) = mpsc::channel();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher(
+    mut rt: ModelRuntime,
+    rx: mpsc::Receiver<Request>,
+    single: &str,
+    batched: &str,
+    batch_size: usize,
+    max_wait: Duration,
+    stats: Arc<Mutex<ServeStats>>,
+) {
+    loop {
+        // Block for the first request.
+        let Ok(first) = rx.recv() else { return };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + max_wait;
+        // Coalesce until a full batch or the wait bound.
+        while pending.len() < batch_size {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Serve: full batches through the batch artifact, remainder 1-by-1.
+        while !pending.is_empty() {
+            let take = if pending.len() >= batch_size { batch_size } else { 1 };
+            let chunk: Vec<Request> = pending.drain(..take).collect();
+            let artifact = if take == batch_size { batched } else { single };
+            let inputs: Vec<Vec<f32>> = chunk.iter().map(|r| r.input.clone()).collect();
+            let result = rt
+                .load(artifact)
+                .and_then(|m| if take == 1 { m.run(&inputs[0]).map(|o| vec![o]) } else { m.run_batch(&inputs) });
+            let mut st = stats.lock().unwrap();
+            st.batches += 1;
+            match result {
+                Ok(outs) => {
+                    for (req, out) in chunk.into_iter().zip(outs) {
+                        st.completed += 1;
+                        st.latencies_ms
+                            .push(req.enqueued.elapsed().as_secs_f64() * 1e3);
+                        let _ = req.reply.send(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    for req in chunk {
+                        let _ = req.reply.send(Err(e.to_string()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo::by_name;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pipeline_compile_produces_report() {
+        let g = by_name("mobilenet-v2", 1);
+        let mut rng = Rng::new(201);
+        let mut ws = WeightStore::init_random(&g, &mut rng);
+        let c = compile(g, Some(&mut ws), PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 });
+        assert!(c.prune_report.is_some());
+        assert!(c.plan.fused_layer_count() > 0);
+        let lat = c
+            .latency_ms(&crate::cost::devices::s10_cpu(), Framework::XGenFull, DeviceClass::MobileCpu)
+            .unwrap();
+        assert!(lat > 0.0 && lat < 1000.0);
+    }
+
+    #[test]
+    fn compile_without_weights_is_structural() {
+        let g = by_name("wdsr-b", 1);
+        let c = compile(g, None, PruneScheme::None);
+        assert!(c.prune_report.is_none());
+        assert!(c.rewrite_stats.ops_after <= c.rewrite_stats.ops_before);
+    }
+}

@@ -1,0 +1,245 @@
+//! The XGen product service paths (§4, Fig 20).
+//!
+//! * **Scenario I** — the customer's requirement is met by a model XGen
+//!   already produced: serve it straight from the repository (green path).
+//! * **Scenario II** — no stored model fits: pick a promising base model,
+//!   run the optimizing pipeline (CAPS-style search over schemes), store
+//!   and return the result (red path).
+//! * **Scenario III** — customer brings their own model/dataset: same as
+//!   II but seeded with the customer graph (red + broken path).
+//! * **Scenario IV** — new hardware backend: register a [`cost::Device`]
+//!   and profile; the IR and pipeline are device-agnostic.
+
+use std::collections::BTreeMap;
+
+use crate::baselines::{DeviceClass, Framework};
+use crate::coordinator::compile;
+use crate::cost::Device;
+use crate::graph::zoo::by_name;
+use crate::graph::Graph;
+use crate::pruning::{AccuracyModel, PruneScheme};
+
+/// A customer requirement (Fig 20 left).
+#[derive(Debug, Clone)]
+pub struct Requirement {
+    /// Task family, e.g. "classification" (selects base models).
+    pub task: String,
+    pub max_latency_ms: f64,
+    pub min_accuracy: f64,
+}
+
+/// A stored, optimized AI capability.
+#[derive(Debug, Clone)]
+pub struct StoredModel {
+    pub base: String,
+    pub scheme: PruneScheme,
+    pub latency_ms: f64,
+    pub accuracy: f64,
+}
+
+/// Which Fig 20 path served a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServicePath {
+    /// Scenario I: repository hit.
+    Repository,
+    /// Scenario II/III: freshly optimized.
+    Optimized,
+}
+
+/// The XGen service: a repository plus the optimizing pipeline.
+pub struct XGenService {
+    device: Device,
+    repo: BTreeMap<String, Vec<StoredModel>>,
+    /// Base models per task family (Scenario II picks from these).
+    bases: BTreeMap<String, Vec<&'static str>>,
+    base_acc: BTreeMap<&'static str, f64>,
+}
+
+impl XGenService {
+    pub fn new(device: Device) -> XGenService {
+        let mut bases = BTreeMap::new();
+        bases.insert(
+            "classification".to_string(),
+            vec!["mobilenet-v3", "efficientnet-b0", "resnet-50"],
+        );
+        bases.insert("segmentation".to_string(), vec!["u-net"]);
+        bases.insert("super-resolution".to_string(), vec!["wdsr-b"]);
+        let mut base_acc = BTreeMap::new();
+        base_acc.insert("mobilenet-v3", 75.2);
+        base_acc.insert("efficientnet-b0", 77.1);
+        base_acc.insert("resnet-50", 76.5);
+        base_acc.insert("u-net", 76.0);
+        base_acc.insert("wdsr-b", 74.0);
+        XGenService { device, repo: BTreeMap::new(), bases, base_acc }
+    }
+
+    pub fn repo_size(&self) -> usize {
+        self.repo.values().map(|v| v.len()).sum()
+    }
+
+    /// Serve a requirement (Scenario I if possible, else II).
+    pub fn request(&mut self, req: &Requirement) -> Option<(StoredModel, ServicePath)> {
+        if let Some(hit) = self.lookup(req) {
+            return Some((hit, ServicePath::Repository));
+        }
+        let built = self.optimize_for(req)?;
+        self.repo.entry(req.task.clone()).or_default().push(built.clone());
+        Some((built, ServicePath::Optimized))
+    }
+
+    /// Scenario III: customer-supplied graph + base accuracy.
+    pub fn request_custom(
+        &mut self,
+        req: &Requirement,
+        graph_builder: impl Fn() -> Graph,
+        base_acc: f64,
+    ) -> Option<StoredModel> {
+        let m = self.optimize_graph(req, "custom", &graph_builder, base_acc)?;
+        self.repo.entry(req.task.clone()).or_default().push(m.clone());
+        Some(m)
+    }
+
+    fn lookup(&self, req: &Requirement) -> Option<StoredModel> {
+        self.repo.get(&req.task).and_then(|models| {
+            models
+                .iter()
+                .filter(|m| m.latency_ms <= req.max_latency_ms && m.accuracy >= req.min_accuracy)
+                .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+                .cloned()
+        })
+    }
+
+    fn optimize_for(&self, req: &Requirement) -> Option<StoredModel> {
+        let bases = self.bases.get(&req.task)?.clone();
+        let mut best: Option<StoredModel> = None;
+        for base in bases {
+            let acc = *self.base_acc.get(base).unwrap_or(&75.0);
+            if let Some(m) = self.optimize_graph(req, base, &|| by_name(base, 1), acc) {
+                let better = best
+                    .as_ref()
+                    .map(|b| m.accuracy > b.accuracy)
+                    .unwrap_or(true);
+                if better {
+                    best = Some(m);
+                }
+            }
+        }
+        best
+    }
+
+    fn optimize_graph(
+        &self,
+        req: &Requirement,
+        base: &str,
+        graph_builder: &impl Fn() -> Graph,
+        base_acc: f64,
+    ) -> Option<StoredModel> {
+        let am = AccuracyModel::default();
+        let schemes = [
+            PruneScheme::None,
+            PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.2 },
+            PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.4 },
+            PruneScheme::Block { block: 8, rate: 0.75 },
+            PruneScheme::Block { block: 32, rate: 0.85 },
+        ];
+        let mut best: Option<StoredModel> = None;
+        for scheme in schemes {
+            let c = compile(graph_builder(), None, scheme.clone());
+            let lat = c.latency_ms(&self.device, Framework::XGenFull, DeviceClass::MobileCpu)?;
+            let acc = am.estimate(base_acc, &scheme);
+            if lat <= req.max_latency_ms && acc >= req.min_accuracy {
+                let better = best.as_ref().map(|b| acc > b.accuracy).unwrap_or(true);
+                if better {
+                    best = Some(StoredModel { base: base.to_string(), scheme, latency_ms: lat, accuracy: acc });
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::devices;
+
+    fn svc() -> XGenService {
+        XGenService::new(devices::s10_cpu())
+    }
+
+    #[test]
+    fn scenario_ii_then_i() {
+        let mut s = svc();
+        let req = Requirement {
+            task: "classification".into(),
+            max_latency_ms: 30.0,
+            min_accuracy: 70.0,
+        };
+        // First request: no repo → optimized (Scenario II).
+        let (m1, path1) = s.request(&req).expect("satisfiable");
+        assert_eq!(path1, ServicePath::Optimized);
+        assert!(m1.latency_ms <= 30.0 && m1.accuracy >= 70.0);
+        assert_eq!(s.repo_size(), 1);
+        // Same request again: repository hit (Scenario I).
+        let (m2, path2) = s.request(&req).unwrap();
+        assert_eq!(path2, ServicePath::Repository);
+        assert_eq!(m2.base, m1.base);
+        assert_eq!(s.repo_size(), 1);
+    }
+
+    #[test]
+    fn infeasible_requirement_returns_none() {
+        let mut s = svc();
+        let req = Requirement {
+            task: "classification".into(),
+            max_latency_ms: 0.01,
+            min_accuracy: 99.0,
+        };
+        assert!(s.request(&req).is_none());
+        assert_eq!(s.repo_size(), 0);
+    }
+
+    #[test]
+    fn tighter_latency_prefers_lighter_base_or_stronger_pruning() {
+        let mut s = svc();
+        let loose = Requirement {
+            task: "classification".into(),
+            max_latency_ms: 200.0,
+            min_accuracy: 60.0,
+        };
+        let tight = Requirement {
+            task: "classification".into(),
+            max_latency_ms: 6.0,
+            min_accuracy: 60.0,
+        };
+        let (ml, _) = s.request(&loose).unwrap();
+        let (mt, _) = s.request(&tight).unwrap();
+        assert!(mt.latency_ms <= 6.0);
+        assert!(ml.accuracy >= mt.accuracy, "loose budget should buy accuracy");
+    }
+
+    #[test]
+    fn scenario_iii_custom_model() {
+        let mut s = svc();
+        let req = Requirement {
+            task: "custom-det".into(),
+            max_latency_ms: 80.0,
+            min_accuracy: 60.0,
+        };
+        let m = s
+            .request_custom(&req, || by_name("u-net", 1), 72.0)
+            .expect("custom model optimizable");
+        assert!(m.latency_ms <= 80.0);
+        assert_eq!(m.base, "custom");
+        // Now served from the repository.
+        let (_, path) = s.request(&req).unwrap();
+        assert_eq!(path, ServicePath::Repository);
+    }
+
+    #[test]
+    fn unknown_task_unserved() {
+        let mut s = svc();
+        let req = Requirement { task: "speech".into(), max_latency_ms: 100.0, min_accuracy: 0.0 };
+        assert!(s.request(&req).is_none());
+    }
+}

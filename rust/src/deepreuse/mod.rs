@@ -1,0 +1,338 @@
+//! Deep reuse (§2.3.2, Figs 11–12): exploit similarity among **neuron
+//! vectors** — consecutive segments of the input/activation map — so one
+//! dot product's result is reused for every similar vector in its cluster.
+//!
+//! Implementation follows the cited papers (Ning & Shen, ICS'19/ICDE'19):
+//! the im2col patch matrix `X [rows, cols]` is split column-wise into
+//! sub-vectors of length `l`; each sub-vector is hashed with `h` random
+//! hyperplanes (LSH); rows falling in the same bucket share a centroid,
+//! and the GEMM `X·W` is computed on centroids only, then scattered back:
+//!
+//! ```text
+//! X·W  ≈  G · (C·W)      G = cluster membership, C = centroids
+//! ```
+//!
+//! Cost drops from `rows·cols·n` to `clusters·cols·n (+ hashing)`; the
+//! reuse ratio `rows/clusters` is the paper's knob: ~2× savings at <5e-4
+//! accuracy loss (benchmarked in `benches/deepreuse.rs`).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Deep-reuse configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ReuseConfig {
+    /// Neuron-vector (sub-vector) length; columns are processed in chunks
+    /// of this size.
+    pub vec_len: usize,
+    /// LSH hyperplanes per chunk (bucket id bits).
+    pub hash_bits: usize,
+    /// Seed for the hyperplanes (deterministic).
+    pub seed: u64,
+    /// Outlier control (the *adaptive* deep-reuse knob, Ning & Shen
+    /// ICDE'19): a member whose L2 distance from its cluster centroid
+    /// exceeds `max_rel_dev × ‖segment‖` is computed exactly instead of
+    /// reusing the centroid result. Bounds the approximation error at the
+    /// cost of some savings; set to `f32::INFINITY` to disable.
+    pub max_rel_dev: f32,
+}
+
+impl Default for ReuseConfig {
+    fn default() -> Self {
+        ReuseConfig { vec_len: 8, hash_bits: 6, seed: 0xDEE9_0001, max_rel_dev: 0.25 }
+    }
+}
+
+/// Statistics of one deep-reuse GEMM.
+#[derive(Debug, Clone, Default)]
+pub struct ReuseStats {
+    pub rows: usize,
+    pub chunks: usize,
+    /// Total clusters across chunks (Σ per-chunk cluster count).
+    pub clusters: usize,
+    /// MACs actually executed (centroid GEMM).
+    pub macs_done: u64,
+    /// MACs a dense GEMM would execute.
+    pub macs_dense: u64,
+}
+
+impl ReuseStats {
+    /// rows·chunks / clusters — how many vectors share one computation.
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.clusters == 0 {
+            return 1.0;
+        }
+        (self.rows * self.chunks) as f64 / self.clusters as f64
+    }
+
+    /// Fraction of dense MACs avoided.
+    pub fn savings(&self) -> f64 {
+        if self.macs_dense == 0 {
+            return 0.0;
+        }
+        1.0 - self.macs_done as f64 / self.macs_dense as f64
+    }
+}
+
+/// Compute `x · w` (`[rows, cols] x [cols, n]`) with LSH-clustered reuse.
+pub fn reuse_gemm(x: &Tensor, w: &Tensor, cfg: &ReuseConfig) -> (Tensor, ReuseStats) {
+    assert_eq!(x.rank(), 2);
+    assert_eq!(w.rank(), 2);
+    let (rows, cols) = (x.shape()[0], x.shape()[1]);
+    let (cols2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(cols, cols2);
+    let l = cfg.vec_len.min(cols).max(1);
+    let mut out = Tensor::zeros(&[rows, n]);
+    let mut stats = ReuseStats {
+        rows,
+        macs_dense: (rows * cols * n) as u64,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut c0 = 0usize;
+    while c0 < cols {
+        let cw = l.min(cols - c0);
+        stats.chunks += 1;
+        // Random hyperplanes for this chunk.
+        let planes: Vec<Vec<f32>> = (0..cfg.hash_bits)
+            .map(|_| rng.normal_vec(cw, 0.0, 1.0))
+            .collect();
+        // Bucket rows by LSH signature.
+        let mut buckets: std::collections::HashMap<u64, Vec<usize>> =
+            std::collections::HashMap::new();
+        for r in 0..rows {
+            let seg = &x.data()[r * cols + c0..r * cols + c0 + cw];
+            let mut sig = 0u64;
+            for (bi, p) in planes.iter().enumerate() {
+                let dot: f32 = seg.iter().zip(p).map(|(a, b)| a * b).sum();
+                if dot >= 0.0 {
+                    sig |= 1 << bi;
+                }
+            }
+            buckets.entry(sig).or_default().push(r);
+        }
+        stats.clusters += buckets.len();
+        // Centroid per bucket; centroid GEMM; scatter (outliers exact).
+        for (_, members) in buckets {
+            let mut centroid = vec![0.0f32; cw];
+            for &r in &members {
+                let seg = &x.data()[r * cols + c0..r * cols + c0 + cw];
+                for (c, &v) in centroid.iter_mut().zip(seg) {
+                    *c += v;
+                }
+            }
+            let inv = 1.0 / members.len() as f32;
+            for c in centroid.iter_mut() {
+                *c *= inv;
+            }
+            // partial = centroid · w[c0..c0+cw, :]
+            let mut partial = vec![0.0f32; n];
+            for (i, &cv) in centroid.iter().enumerate() {
+                if cv == 0.0 {
+                    continue;
+                }
+                let wrow = &w.data()[(c0 + i) * n..(c0 + i + 1) * n];
+                for (p, &wv) in partial.iter_mut().zip(wrow) {
+                    *p += cv * wv;
+                }
+            }
+            stats.macs_done += (cw * n) as u64;
+            for &r in &members {
+                let seg = &x.data()[r * cols + c0..r * cols + c0 + cw];
+                // Adaptive outlier check: exact compute for far members.
+                let (mut d2, mut s2) = (0.0f32, 0.0f32);
+                for (&v, &c) in seg.iter().zip(&centroid) {
+                    d2 += (v - c) * (v - c);
+                    s2 += v * v;
+                }
+                let orow = &mut out.data_mut()[r * n..(r + 1) * n];
+                if members.len() > 1 && d2 > (cfg.max_rel_dev * cfg.max_rel_dev) * s2.max(1e-12)
+                {
+                    // Exact path for this member.
+                    for (i, &v) in seg.iter().enumerate() {
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let wrow = &w.data()[(c0 + i) * n..(c0 + i + 1) * n];
+                        for (o, &wv) in orow.iter_mut().zip(wrow) {
+                            *o += v * wv;
+                        }
+                    }
+                    stats.macs_done += (cw * n) as u64;
+                } else {
+                    for (o, &p) in orow.iter_mut().zip(&partial) {
+                        *o += p;
+                    }
+                }
+            }
+        }
+        c0 += cw;
+    }
+    // Hashing cost, charged as MACs.
+    stats.macs_done += (rows * cols * cfg.hash_bits) as u64 / 1;
+    (out, stats)
+}
+
+/// Deep-reuse convolution: im2col + [`reuse_gemm`] (the paper's CNN use).
+pub fn reuse_conv2d(
+    input: &Tensor,
+    weight: &Tensor,
+    stride: usize,
+    pad: usize,
+    cfg: &ReuseConfig,
+) -> (Tensor, ReuseStats) {
+    let (n, _c, h, w) = (
+        input.shape()[0],
+        input.shape()[1],
+        input.shape()[2],
+        input.shape()[3],
+    );
+    let (o, i, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let patches = input.im2col(kh, kw, stride, pad); // [n*oh*ow, i*kh*kw]
+    // wmat^T: [i*kh*kw, o]
+    let mut wt = Tensor::zeros(&[i * kh * kw, o]);
+    let wm = weight.reshape(&[o, i * kh * kw]);
+    for f in 0..o {
+        for c in 0..i * kh * kw {
+            wt.set(&[c, f], wm.at(&[f, c]));
+        }
+    }
+    let (y, stats) = reuse_gemm(&patches, &wt, cfg);
+    // [n*oh*ow, o] -> [n, o, oh, ow]
+    let mut out = Tensor::zeros(&[n, o, oh, ow]);
+    for b in 0..n {
+        for f in 0..o {
+            for yy in 0..oh {
+                for xx in 0..ow {
+                    let row = (b * oh + yy) * ow + xx;
+                    out.set(&[b, f, yy, xx], y.at(&[row, f]));
+                }
+            }
+        }
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::forall;
+
+    /// Inputs with repeated rows (the similarity deep reuse exploits).
+    fn clustered_input(rng: &mut Rng, rows: usize, cols: usize, protos: usize) -> Tensor {
+        let base: Vec<Vec<f32>> = (0..protos)
+            .map(|_| rng.normal_vec(cols, 0.0, 1.0))
+            .collect();
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows {
+            let p = &base[rng.below(protos)];
+            // Small jitter around the prototype.
+            data.extend(p.iter().map(|&v| v + rng.normal_f32(0.0, 0.01)));
+        }
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn exact_on_identical_rows() {
+        let mut rng = Rng::new(61);
+        let row = rng.normal_vec(16, 0.0, 1.0);
+        let mut data = Vec::new();
+        for _ in 0..8 {
+            data.extend(&row);
+        }
+        let x = Tensor::from_vec(&[8, 16], data);
+        let w = Tensor::randn(&[16, 4], 1.0, &mut rng);
+        let (y, stats) = reuse_gemm(&x, &w, &ReuseConfig::default());
+        let dense = x.matmul(&w);
+        assert!(y.max_abs_diff(&dense) < 1e-4);
+        assert!(stats.reuse_ratio() > 7.9, "ratio {}", stats.reuse_ratio());
+    }
+
+    #[test]
+    fn approximate_on_clustered_rows_with_high_savings() {
+        // Wide output (n >> hash bits) so hashing cost amortizes — the
+        // regime of real conv layers.
+        forall("deep reuse accurate on clustered inputs", 8, |rng| {
+            let x = clustered_input(rng, 64, 32, 4);
+            let w = Tensor::randn(&[32, 64], 0.5, rng);
+            let (y, stats) = reuse_gemm(&x, &w, &ReuseConfig::default());
+            let dense = x.matmul(&w);
+            let scale = dense.data().iter().map(|v| v.abs()).sum::<f32>()
+                / dense.len() as f32;
+            let rel = y.mad(&dense) / scale.max(1e-6);
+            assert!(rel < 0.10, "relative error {rel}");
+            assert!(stats.savings() > 0.4, "savings {}", stats.savings());
+        });
+    }
+
+    #[test]
+    fn reuse_conv_close_to_dense_on_smooth_input() {
+        let mut rng = Rng::new(63);
+        // Smooth input (natural-image-like): neighbouring patches similar.
+        let mut x = Tensor::zeros(&[1, 3, 16, 16]);
+        for c in 0..3 {
+            for y in 0..16 {
+                for xx in 0..16 {
+                    let v = ((y as f32) / 8.0).sin() + ((xx as f32) / 8.0).cos() + c as f32 * 0.1;
+                    x.set(&[0, c, y, xx], v);
+                }
+            }
+        }
+        let w = Tensor::randn(&[16, 3, 3, 3], 0.5, &mut rng);
+        let cfg = ReuseConfig { hash_bits: 8, ..Default::default() };
+        let (y, stats) = reuse_conv2d(&x, &w, 1, 1, &cfg);
+        let dense = x.conv2d(&w, 1, 1);
+        let scale =
+            dense.data().iter().map(|v| v.abs()).sum::<f32>() / dense.len() as f32;
+        let rel = y.mad(&dense) / scale.max(1e-6);
+        assert!(rel < 0.25, "relative error {rel}");
+        assert!(stats.reuse_ratio() > 1.5, "ratio {}", stats.reuse_ratio());
+    }
+
+    #[test]
+    fn more_hash_bits_monotonically_reduce_error() {
+        // The paper's accuracy knob: finer LSH buckets → smaller clusters →
+        // less approximation (and less reuse).
+        let mut rng = Rng::new(64);
+        let x = Tensor::randn(&[48, 16], 1.0, &mut rng);
+        let w = Tensor::randn(&[16, 32], 1.0, &mut rng);
+        let dense = x.matmul(&w);
+        let err = |bits: usize| {
+            // Disable the adaptive fallback to observe the raw LSH error.
+            let cfg = ReuseConfig {
+                hash_bits: bits,
+                max_rel_dev: f32::INFINITY,
+                ..Default::default()
+            };
+            reuse_gemm(&x, &w, &cfg).0.mad(&dense)
+        };
+        let (e2, e6, e14) = (err(2), err(6), err(14));
+        assert!(e14 <= e6 && e6 <= e2, "not monotone: {e2} {e6} {e14}");
+        assert!(e14 < e2 * 0.5, "insufficient improvement: {e2} -> {e14}");
+        // And the adaptive fallback bounds the error tightly even at few bits.
+        let bounded = reuse_gemm(&x, &w, &ReuseConfig { hash_bits: 2, ..Default::default() })
+            .0
+            .mad(&dense);
+        assert!(bounded < e2 * 0.5, "adaptive fallback ineffective: {bounded} vs {e2}");
+    }
+
+    #[test]
+    fn stats_accounting_consistent() {
+        let mut rng = Rng::new(65);
+        let x = clustered_input(&mut rng, 40, 24, 3);
+        let w = Tensor::randn(&[24, 32], 1.0, &mut rng);
+        let (_y, stats) = reuse_gemm(&x, &w, &ReuseConfig::default());
+        assert_eq!(stats.rows, 40);
+        assert_eq!(stats.chunks, 3);
+        assert!(stats.clusters >= stats.chunks);
+        assert!(stats.macs_done < stats.macs_dense);
+    }
+}

@@ -1,0 +1,744 @@
+//! Reference CPU executor over the graph IR — the numeric ground truth for
+//! every optimized path in the crate (FKW sparse conv, fused elementwise
+//! chains, deep-reuse GEMM), and the engine behind the use-case examples.
+//!
+//! Two executors:
+//! * [`Executor`] — straight-line, one materialized tensor per node.
+//! * [`FusedExecutor`] — consumes a [`FusionPlan`]; elementwise members of
+//!   a group are applied **in place** on the producer's buffer (no
+//!   allocation, no extra traversal), conv layers with a pattern
+//!   assignment run through the compact [`FkwLayer`] kernel, and GEMMs can
+//!   be routed through [`crate::deepreuse`]. `benches/hotpath_exec.rs`
+//!   measures the gap between the two — the Rust-side stand-in for the
+//!   paper's generated mobile code vs naive execution.
+//!
+//! Supported op subset: everything the demo CNNs / WDSR / MLP graphs use.
+//! Transformer-specific movement ops (Transpose with implicit perms,
+//! Gather, Embedding) are intentionally out of scope and return an error —
+//! the structural zoo models are cost-modeled, not CPU-executed.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fkw::FkwLayer;
+use crate::fusion::FusionPlan;
+use crate::graph::{Act, Graph, NodeId, OpKind, WeightStore};
+use crate::pruning::pattern::PatternAssignment;
+use crate::tensor::Tensor;
+
+/// Straight-line reference executor.
+pub struct Executor<'g> {
+    g: &'g Graph,
+    ws: &'g WeightStore,
+}
+
+impl<'g> Executor<'g> {
+    pub fn new(g: &'g Graph, ws: &'g WeightStore) -> Executor<'g> {
+        Executor { g, ws }
+    }
+
+    /// Evaluate the graph on `inputs` (one tensor per Input node, in id
+    /// order); returns the output tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut vals: Vec<Option<Tensor>> = vec![None; self.g.nodes.len()];
+        let mut next_input = 0usize;
+        for n in &self.g.nodes {
+            let v = match &n.op {
+                OpKind::Input => {
+                    let t = inputs
+                        .get(next_input)
+                        .ok_or_else(|| anyhow!("missing input {next_input}"))?
+                        .clone();
+                    if t.shape() != &n.shape[..] {
+                        bail!("input {} shape {:?} != {:?}", next_input, t.shape(), n.shape);
+                    }
+                    next_input += 1;
+                    t
+                }
+                OpKind::Weight => self
+                    .ws
+                    .get(&n.name)
+                    .ok_or_else(|| anyhow!("weight '{}' missing", n.name))?
+                    .clone(),
+                _ => {
+                    let args: Vec<&Tensor> = n
+                        .inputs
+                        .iter()
+                        .map(|&i| vals[i].as_ref().expect("topological order"))
+                        .collect();
+                    eval_op(self.g, n.id, &args)?
+                }
+            };
+            vals[n.id] = Some(v);
+        }
+        Ok(self
+            .g
+            .outputs
+            .iter()
+            .map(|&o| vals[o].clone().expect("output computed"))
+            .collect())
+    }
+}
+
+/// Evaluate a single compute op on already-evaluated inputs.
+pub fn eval_op(g: &Graph, id: NodeId, args: &[&Tensor]) -> Result<Tensor> {
+    let n = g.node(id);
+    let out = match &n.op {
+        OpKind::Conv2d { k, stride, pad, groups } => {
+            let (x, w) = (args[0], args[1]);
+            if *groups == 1 {
+                x.conv2d(w, *stride, *pad)
+            } else {
+                grouped_conv2d(x, w, *k, *stride, *pad, *groups)?
+            }
+        }
+        OpKind::Dense => {
+            let (x, w) = (args[0], args[1]);
+            // Collapse leading dims to rows.
+            let in_f = *x.shape().last().unwrap();
+            let rows = x.len() / in_f;
+            let y = x.reshape(&[rows, in_f]).matmul(w);
+            y.reshape(&n.shape)
+        }
+        OpKind::MatMul => {
+            let (a, b) = (args[0], args[1]);
+            batched_matmul(a, b)?
+        }
+        OpKind::BatchNorm => apply_bn(args[0], args[1]),
+        OpKind::Bias => apply_bias(args[0], args[1], &n.shape),
+        OpKind::LayerNorm => layer_norm(args[0], args[1]),
+        OpKind::Activation(a) => args[0].map(act_fn(*a)),
+        OpKind::Add => args[0].add(args[1]),
+        OpKind::Sub => args[0].sub(args[1]),
+        OpKind::Mul => args[0].mul(args[1]),
+        OpKind::Div => args[0].zip(args[1], |a, b| a / b),
+        OpKind::Pow { e } => {
+            let e = *e as f32;
+            args[0].map(move |x| x.powf(e))
+        }
+        OpKind::Sqrt => args[0].map(|x| x.max(0.0).sqrt()),
+        OpKind::Scale { mul, add } => {
+            if args.len() > 1 {
+                // Per-channel scale via weight.
+                apply_bn(args[0], args[1])
+            } else {
+                let (m, a) = (*mul as f32, *add as f32);
+                args[0].map(move |x| x * m + a)
+            }
+        }
+        OpKind::Softmax => {
+            let x = args[0];
+            let last = *x.shape().last().unwrap();
+            let rows = x.len() / last;
+            x.reshape(&[rows, last]).softmax_rows().reshape(&n.shape)
+        }
+        OpKind::MaxPool { k: 2, stride: 2 } => args[0].maxpool2(),
+        OpKind::AvgPool { k, stride } => avg_pool(args[0], *k, *stride),
+        OpKind::GlobalAvgPool => args[0].global_avg_pool(),
+        OpKind::Reshape | OpKind::Flatten => args[0].reshape(&n.shape),
+        OpKind::Concat => concat_channels(args, &n.shape),
+        OpKind::Upsample { r } => upsample(args[0], *r),
+        OpKind::PixelShuffle { r } => pixel_shuffle(args[0], *r),
+        OpKind::Broadcast => broadcast_to(args[0], &n.shape)?,
+        other => bail!("executor does not support op '{}'", other.name()),
+    };
+    if out.shape() != &n.shape[..] {
+        bail!(
+            "op '{}' produced shape {:?}, node declares {:?}",
+            n.op.name(),
+            out.shape(),
+            n.shape
+        );
+    }
+    Ok(out)
+}
+
+fn act_fn(a: Act) -> impl Fn(f32) -> f32 {
+    move |x| match a {
+        Act::Relu => x.max(0.0),
+        Act::Relu6 => x.clamp(0.0, 6.0),
+        Act::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        Act::Tanh => x.tanh(),
+        Act::Gelu => {
+            0.5 * x * (1.0 + (0.7978845608f32 * (x + 0.044715 * x * x * x)).tanh())
+        }
+        Act::Swish => x / (1.0 + (-x).exp()),
+        Act::HardSwish => x * (x + 3.0).clamp(0.0, 6.0) / 6.0,
+        Act::LeakyRelu => {
+            if x >= 0.0 {
+                x
+            } else {
+                0.1 * x
+            }
+        }
+        Act::Mish => x * (1.0 + x.exp()).ln().tanh(),
+    }
+}
+
+fn grouped_conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    _k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Result<Tensor> {
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (o, ig, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    if c % groups != 0 || o % groups != 0 || ig != c / groups {
+        bail!("bad grouped conv shapes");
+    }
+    let (cg, og) = (c / groups, o / groups);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[n, o, oh, ow]);
+    for gi in 0..groups {
+        // Slice input channels and weight filters of this group.
+        let mut xg = Tensor::zeros(&[n, cg, h, wd]);
+        for b in 0..n {
+            for ci in 0..cg {
+                for y in 0..h {
+                    for xx in 0..wd {
+                        xg.set(&[b, ci, y, xx], x.at(&[b, gi * cg + ci, y, xx]));
+                    }
+                }
+            }
+        }
+        let mut wg = Tensor::zeros(&[og, cg, kh, kw]);
+        for f in 0..og {
+            for ci in 0..cg {
+                for y in 0..kh {
+                    for xx in 0..kw {
+                        wg.set(&[f, ci, y, xx], w.at(&[gi * og + f, ci, y, xx]));
+                    }
+                }
+            }
+        }
+        let yg = xg.conv2d(&wg, stride, pad);
+        for b in 0..n {
+            for f in 0..og {
+                for y in 0..oh {
+                    for xx in 0..ow {
+                        out.set(&[b, gi * og + f, y, xx], yg.at(&[b, f, y, xx]));
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Per-channel scale+shift (BatchNorm inference form; weight = [2, c]).
+fn apply_bn(x: &Tensor, w: &Tensor) -> Tensor {
+    let c = w.shape()[1];
+    let mut out = x.clone();
+    let per = per_channel_stride(x.shape(), c);
+    let od = out.data_mut();
+    for (i, v) in od.iter_mut().enumerate() {
+        let ch = (i / per.0) % c;
+        *v = *v * w.data()[ch] + w.data()[c + ch];
+    }
+    out
+}
+
+/// Per-channel bias (weight = [c]).
+fn apply_bias(x: &Tensor, w: &Tensor, _shape: &[usize]) -> Tensor {
+    let c = w.len();
+    let mut out = x.clone();
+    let per = per_channel_stride(x.shape(), c);
+    let od = out.data_mut();
+    for (i, v) in od.iter_mut().enumerate() {
+        let ch = (i / per.0) % c;
+        *v += w.data()[ch];
+    }
+    out
+}
+
+/// For NCHW the channel varies every h*w elements; for [.., c] layouts (2-D
+/// dense outputs / sequences) it varies every element.
+fn per_channel_stride(shape: &[usize], c: usize) -> (usize, ()) {
+    if shape.len() >= 3 && shape[1] == c {
+        (shape[2..].iter().product::<usize>(), ())
+    } else {
+        (1, ())
+    }
+}
+
+/// LayerNorm over the last dim; weight [2, d] = (gamma, beta).
+fn layer_norm(x: &Tensor, w: &Tensor) -> Tensor {
+    let d = *x.shape().last().unwrap();
+    let rows = x.len() / d;
+    let mut out = x.clone();
+    let od = out.data_mut();
+    for r in 0..rows {
+        let row = &mut od[r * d..(r + 1) * d];
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * w.data()[i] + w.data()[d + i];
+        }
+    }
+    out
+}
+
+/// Batched matmul over leading dims: [..., m, k] x [..., k, n] (or 2-D rhs
+/// broadcast across batches).
+fn batched_matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let ar = a.rank();
+    let br = b.rank();
+    if ar == 2 && br == 2 {
+        return Ok(a.matmul(b));
+    }
+    if ar == 3 && br == 3 {
+        let (bt, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+        let (bt2, k2, n) = (b.shape()[0], b.shape()[1], b.shape()[2]);
+        if bt != bt2 || k != k2 {
+            bail!("batched matmul mismatch");
+        }
+        let mut out = Tensor::zeros(&[bt, m, n]);
+        for bi in 0..bt {
+            let am = Tensor::from_vec(&[m, k], a.data()[bi * m * k..(bi + 1) * m * k].to_vec());
+            let bm = Tensor::from_vec(&[k, n], b.data()[bi * k * n..(bi + 1) * k * n].to_vec());
+            let y = am.matmul(&bm);
+            out.data_mut()[bi * m * n..(bi + 1) * m * n].copy_from_slice(y.data());
+        }
+        return Ok(out);
+    }
+    if ar == 3 && br == 2 {
+        let (bt, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+        let y = a.reshape(&[bt * m, k]).matmul(b);
+        return Ok(y.reshape(&[bt, m, b.shape()[1]]));
+    }
+    bail!("unsupported matmul ranks {ar}/{br}")
+}
+
+fn avg_pool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (oh, ow) = (h / stride, w / stride);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for b in 0..n {
+        for ci in 0..c {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut s = 0.0;
+                    let mut cnt = 0;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let iy = y * stride + dy;
+                            let ix = xx * stride + dx;
+                            if iy < h && ix < w {
+                                s += x.at(&[b, ci, iy, ix]);
+                                cnt += 1;
+                            }
+                        }
+                    }
+                    out.set(&[b, ci, y, xx], s / cnt as f32);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn concat_channels(args: &[&Tensor], shape: &[usize]) -> Tensor {
+    let mut out = Tensor::zeros(shape);
+    let (n, h, w) = (shape[0], shape[2], shape[3]);
+    let mut c0 = 0usize;
+    for a in args {
+        let ca = a.shape()[1];
+        for b in 0..n {
+            for ci in 0..ca {
+                for y in 0..h {
+                    for xx in 0..w {
+                        out.set(&[b, c0 + ci, y, xx], a.at(&[b, ci, y, xx]));
+                    }
+                }
+            }
+        }
+        c0 += ca;
+    }
+    out
+}
+
+fn upsample(x: &Tensor, r: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let mut out = Tensor::zeros(&[n, c, h * r, w * r]);
+    for b in 0..n {
+        for ci in 0..c {
+            for y in 0..h * r {
+                for xx in 0..w * r {
+                    out.set(&[b, ci, y, xx], x.at(&[b, ci, y / r, xx / r]));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn pixel_shuffle(x: &Tensor, r: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oc = c / (r * r);
+    let mut out = Tensor::zeros(&[n, oc, h * r, w * r]);
+    for b in 0..n {
+        for co in 0..oc {
+            for y in 0..h {
+                for xx in 0..w {
+                    for dy in 0..r {
+                        for dx in 0..r {
+                            let ci = co * r * r + dy * r + dx;
+                            out.set(&[b, co, y * r + dy, xx * r + dx], x.at(&[b, ci, y, xx]));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn broadcast_to(x: &Tensor, shape: &[usize]) -> Result<Tensor> {
+    // Supported: [c] or [1] -> [n, c, h, w] (channel gates) and
+    // [a, b] -> [n, a, b].
+    if x.len() == 1 {
+        return Ok(Tensor::full(shape, x.data()[0]));
+    }
+    if x.rank() == 2 && shape.len() == 3 && x.shape() == &shape[1..] {
+        let mut out = Tensor::zeros(shape);
+        let per = x.len();
+        for b in 0..shape[0] {
+            out.data_mut()[b * per..(b + 1) * per].copy_from_slice(x.data());
+        }
+        return Ok(out);
+    }
+    if x.rank() == 2 && shape.len() == 4 && x.shape()[1] == shape[1] {
+        // [n, c] gate -> [n, c, h, w]
+        let (n, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+        let mut out = Tensor::zeros(shape);
+        for b in 0..n {
+            for ci in 0..c {
+                let v = x.at(&[b, ci]);
+                for y in 0..h {
+                    for xx in 0..w {
+                        out.set(&[b, ci, y, xx], v);
+                    }
+                }
+            }
+        }
+        return Ok(out);
+    }
+    bail!("unsupported broadcast {:?} -> {:?}", x.shape(), shape)
+}
+
+/// Optimized executor: in-place elementwise within fused groups + FKW
+/// sparse conv kernels for layers with a pattern assignment.
+pub struct FusedExecutor<'g> {
+    g: &'g Graph,
+    ws: &'g WeightStore,
+    plan: &'g FusionPlan,
+    /// conv node id -> FKW-encoded layer.
+    fkw: BTreeMap<NodeId, FkwLayer>,
+}
+
+impl<'g> FusedExecutor<'g> {
+    pub fn new(g: &'g Graph, ws: &'g WeightStore, plan: &'g FusionPlan) -> FusedExecutor<'g> {
+        FusedExecutor { g, ws, plan, fkw: BTreeMap::new() }
+    }
+
+    /// Register a pattern assignment for a conv node: it will execute via
+    /// the compact FKW kernel.
+    pub fn with_fkw(mut self, node: NodeId, asg: &PatternAssignment) -> Result<Self> {
+        let n = self.g.node(node);
+        let OpKind::Conv2d { stride, pad, groups: 1, k: 3 } = n.op else {
+            bail!("FKW applies to 3x3 groups=1 conv nodes");
+        };
+        let wname = &self.g.node(
+            *n.inputs
+                .iter()
+                .find(|&&i| matches!(self.g.node(i).op, OpKind::Weight))
+                .ok_or_else(|| anyhow!("conv without weight"))?,
+        )
+        .name;
+        let w = self.ws.get(wname).ok_or_else(|| anyhow!("weight missing"))?;
+        self.fkw.insert(node, FkwLayer::encode(w, asg, stride, pad, true));
+        Ok(self)
+    }
+
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut vals: Vec<Option<Tensor>> = vec![None; self.g.nodes.len()];
+        let mut next_input = 0usize;
+        // Seed sources.
+        for n in &self.g.nodes {
+            match &n.op {
+                OpKind::Input => {
+                    vals[n.id] = Some(inputs[next_input].clone());
+                    next_input += 1;
+                }
+                OpKind::Weight => {
+                    vals[n.id] = Some(
+                        self.ws
+                            .get(&n.name)
+                            .ok_or_else(|| anyhow!("weight '{}' missing", n.name))?
+                            .clone(),
+                    );
+                }
+                _ => {}
+            }
+        }
+        // Execute groups in order of their first node (plan preserves
+        // topological order within and across groups by construction).
+        // users() hoisted out of the hot loop (§Perf iteration 1: it was
+        // recomputed per node, costing O(V·E) on deep graphs).
+        let users = self.g.users();
+        let mut groups: Vec<&crate::fusion::FusedGroup> = self.plan.groups.iter().collect();
+        groups.sort_by_key(|gr| gr.nodes[0]);
+        for gr in groups {
+            // Fused evaluation: walk members; elementwise unary members
+            // mutate the running buffer in place.
+            let mut buf: Option<Tensor> = None;
+            for &id in &gr.nodes {
+                let n = self.g.node(id);
+                let in_place = buf.is_some()
+                    && n.inputs.len() == 1
+                    && matches!(
+                        n.op,
+                        OpKind::Activation(_)
+                            | OpKind::Scale { .. }
+                            | OpKind::Pow { .. }
+                            | OpKind::Sqrt
+                    );
+                let out = if in_place {
+                    let mut t = buf.take().unwrap();
+                    apply_unary_inplace(&n.op, &mut t);
+                    t
+                } else if let Some(fkw) = self.fkw.get(&id) {
+                    let x = n
+                        .inputs
+                        .iter()
+                        .map(|&i| vals[i].as_ref())
+                        .find(|v| v.is_some())
+                        .flatten()
+                        .ok_or_else(|| anyhow!("missing conv input"))?;
+                    fkw.conv2d(x)
+                } else {
+                    let prev = buf.take();
+                    let args: Vec<&Tensor> = n
+                        .inputs
+                        .iter()
+                        .map(|&i| {
+                            vals[i]
+                                .as_ref()
+                                .or(prev.as_ref())
+                                .expect("fused input available")
+                        })
+                        .collect();
+                    eval_op(self.g, id, &args)?
+                };
+                // Tail of group keeps the buffer; intermediates whose value
+                // escapes the group are materialized into vals.
+                buf = Some(out);
+                let escapes = users[id].iter().any(|&uu| !gr.nodes.contains(&uu))
+                    || self.g.outputs.contains(&id);
+                if id == *gr.nodes.last().unwrap() {
+                    // Tail: the buffer's last stop — move, don't clone
+                    // (§Perf iteration 2: the clone here copied every
+                    // group-boundary tensor twice).
+                    vals[id] = buf.take();
+                } else if escapes {
+                    vals[id] = buf.clone();
+                }
+            }
+        }
+        Ok(self
+            .g
+            .outputs
+            .iter()
+            .map(|&o| vals[o].clone().expect("output computed"))
+            .collect())
+    }
+}
+
+fn apply_unary_inplace(op: &OpKind, t: &mut Tensor) {
+    match op {
+        OpKind::Activation(a) => {
+            let f = act_fn(*a);
+            for v in t.data_mut() {
+                *v = f(*v);
+            }
+        }
+        OpKind::Scale { mul, add } => {
+            let (m, a) = (*mul as f32, *add as f32);
+            for v in t.data_mut() {
+                *v = *v * m + a;
+            }
+        }
+        OpKind::Pow { e } => {
+            let e = *e as f32;
+            for v in t.data_mut() {
+                *v = v.powf(e);
+            }
+        }
+        OpKind::Sqrt => {
+            for v in t.data_mut() {
+                *v = v.max(0.0).sqrt();
+            }
+        }
+        _ => unreachable!("not a unary in-place op"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{fuse, FusionConfig};
+    use crate::graph::zoo::NetBuilder;
+    use crate::pruning::pattern::{apply_assignment, assign_patterns, PatternSet};
+    use crate::util::proptest_lite::forall;
+    use crate::util::rng::Rng;
+
+    /// A small CNN covering conv/bn/act/pool/residual/gap/dense.
+    fn demo_cnn() -> Graph {
+        let mut b = NetBuilder::new("demo", &[1, 3, 16, 16]);
+        b.conv_bn_act(8, 3, 1, 1, Act::Relu);
+        let skip = b.cur();
+        b.conv_bn_act(8, 3, 1, 1, Act::Relu);
+        let t = b.cur();
+        b.add_residual(skip, t);
+        b.maxpool(2, 2);
+        b.gap();
+        b.dense(10);
+        b.finish()
+    }
+
+    #[test]
+    fn executor_runs_demo_cnn() {
+        let g = demo_cnn();
+        let mut rng = Rng::new(51);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let x = Tensor::randn(&[1, 3, 16, 16], 1.0, &mut rng);
+        let y = Executor::new(&g, &ws).run(&[x]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 10]);
+        assert!(y[0].data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fused_executor_matches_reference() {
+        forall("fused == reference on demo CNN", 8, |rng| {
+            let g = demo_cnn();
+            let ws = WeightStore::init_random(&g, &mut rng.fork());
+            let x = Tensor::randn(&[1, 3, 16, 16], 1.0, rng);
+            let a = Executor::new(&g, &ws).run(&[x.clone()]).unwrap();
+            let plan = fuse(&g, &FusionConfig::default());
+            let b = FusedExecutor::new(&g, &ws, &plan).run(&[x]).unwrap();
+            assert!(
+                a[0].max_abs_diff(&b[0]) < 1e-4,
+                "fused diverges: {}",
+                a[0].max_abs_diff(&b[0])
+            );
+        });
+    }
+
+    #[test]
+    fn fkw_path_matches_dense_pruned() {
+        let mut rng = Rng::new(53);
+        let mut b = NetBuilder::new("p", &[1, 4, 12, 12]);
+        let conv_id = b.conv(8, 3, 1, 1, 1);
+        b.act(Act::Relu);
+        let g = b.finish();
+        let mut ws = WeightStore::init_random(&g, &mut rng);
+        // Pattern-prune the conv weight.
+        let wname = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, OpKind::Weight))
+            .unwrap()
+            .name
+            .clone();
+        let w = ws.get(&wname).unwrap().clone();
+        let asg = assign_patterns(&w, &PatternSet::elite8());
+        ws.set(&wname, apply_assignment(&w, &asg));
+        let x = Tensor::randn(&[1, 4, 12, 12], 1.0, &mut rng);
+        let dense = Executor::new(&g, &ws).run(&[x.clone()]).unwrap();
+        let plan = fuse(&g, &FusionConfig::default());
+        let fused = FusedExecutor::new(&g, &ws, &plan)
+            .with_fkw(conv_id, &asg)
+            .unwrap()
+            .run(&[x])
+            .unwrap();
+        assert!(dense[0].max_abs_diff(&fused[0]) < 1e-4);
+    }
+
+    #[test]
+    fn depthwise_conv_supported() {
+        let mut b = NetBuilder::new("dw", &[1, 4, 8, 8]);
+        b.dwconv(3, 1, 1);
+        b.act(Act::Relu);
+        let g = b.finish();
+        let mut rng = Rng::new(54);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let x = Tensor::randn(&[1, 4, 8, 8], 1.0, &mut rng);
+        let y = Executor::new(&g, &ws).run(&[x]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 4, 8, 8]);
+    }
+
+    #[test]
+    fn wdsr_like_pixel_shuffle_path() {
+        let mut b = NetBuilder::new("sr", &[1, 3, 8, 8]);
+        b.conv(12, 3, 1, 1, 1);
+        b.pixel_shuffle(2);
+        let g = b.finish();
+        let mut rng = Rng::new(55);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let x = Tensor::randn(&[1, 3, 8, 8], 1.0, &mut rng);
+        let y = Executor::new(&g, &ws).run(&[x]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 3, 16, 16]);
+    }
+
+    #[test]
+    fn unsupported_op_errors_cleanly() {
+        let mut g = Graph::new("bad");
+        let x = g.input("x", &[1, 4]);
+        let gth = g.add("g", OpKind::Gather, vec![x], vec![1, 4]);
+        g.outputs = vec![gth];
+        let ws = WeightStore::new();
+        let err = Executor::new(&g, &ws)
+            .run(&[Tensor::zeros(&[1, 4])])
+            .unwrap_err();
+        assert!(err.to_string().contains("gather"));
+    }
+
+    #[test]
+    fn rewrite_preserves_semantics_with_weight_store() {
+        use crate::rewrite::{rewrite, RewriteConfig};
+        // dense-dense + scale + identity chain, rewritten with weights.
+        forall("rewrite preserves numerics", 10, |rng| {
+            let mut b = NetBuilder::new("rw", &[1, 6]);
+            b.dense(12);
+            b.dense(4);
+            let mut g = b.finish();
+            // Append a scale and an identity reshape.
+            let s = g.add(
+                "post_scale",
+                OpKind::Scale { mul: 0.5, add: 0.0 },
+                vec![g.outputs[0]],
+                vec![1, 4],
+            );
+            let r = g.add("noop_reshape", OpKind::Reshape, vec![s], vec![1, 4]);
+            g.outputs = vec![r];
+            let ws = WeightStore::init_random(&g, &mut rng.fork());
+            let x = Tensor::randn(&[1, 6], 1.0, rng);
+            let before = Executor::new(&g, &ws).run(&[x.clone()]).unwrap();
+            let mut g2 = g.clone();
+            let mut ws2 = ws.clone();
+            rewrite(&mut g2, Some(&mut ws2), &RewriteConfig::default());
+            let after = Executor::new(&g2, &ws2).run(&[x]).unwrap();
+            assert!(
+                before[0].max_abs_diff(&after[0]) < 1e-4,
+                "rewrite changed numerics by {}",
+                before[0].max_abs_diff(&after[0])
+            );
+            assert!(g2.operator_count() < g.operator_count());
+        });
+    }
+}

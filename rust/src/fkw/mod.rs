@@ -1,0 +1,339 @@
+//! FKW — the compact **Filter-Kernel-Weight** storage format plus
+//! **filter-kernel reorder** (§2.3.1, Fig 10).
+//!
+//! After pattern pruning, every surviving kernel is one of ≤8 known
+//! patterns, so a layer's weights compress to: a filter permutation
+//! (filters with similar pattern mixes grouped for inter-thread load
+//! balance), per-filter kernel records `(channel, pattern_id)` with kernels
+//! sorted by pattern for intra-thread locality, and a flat array of exactly
+//! 4 weights per surviving kernel. Index overhead is one byte-pair per
+//! *kernel* — much less than CSR's per-*nonzero* column indices, which is
+//! the paper's overhead claim, quantified in [`index_overhead_bytes`] /
+//! [`csr_overhead_bytes`] and benchmarked in `benches/hotpath_exec.rs`.
+//!
+//! [`FkwLayer::conv2d`] executes the layer directly from the compact form
+//! with a branch-less pattern-specialized inner loop — the Rust equivalent
+//! of the paper's generated mobile code (the load-redundancy-elimination
+//! codegen story continues in [`crate::codegen`]).
+
+use crate::pruning::pattern::{Pattern, PatternAssignment};
+use crate::tensor::Tensor;
+
+/// One kernel record: input channel + pattern + 4 packed weights.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelRec {
+    pub channel: u16,
+    pub pattern: u8,
+}
+
+/// One filter: its original index and its kernel records (sorted by
+/// pattern id after reorder).
+#[derive(Debug, Clone)]
+pub struct FilterRec {
+    pub original_index: u16,
+    pub kernels: Vec<KernelRec>,
+}
+
+/// FKW-encoded pattern-pruned 3×3 conv layer.
+#[derive(Debug, Clone)]
+pub struct FkwLayer {
+    pub out_channels: usize,
+    pub in_channels: usize,
+    /// The pattern vocabulary (≤ 256 entries).
+    pub patterns: Vec<Pattern>,
+    /// Filters in *execution order* (reordered).
+    pub filters: Vec<FilterRec>,
+    /// 4 weights per kernel record, flat, in filter-major execution order.
+    pub weights: Vec<f32>,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl FkwLayer {
+    /// Encode a pattern-pruned OIHW weight tensor.
+    ///
+    /// `reorder=true` applies filter-kernel reorder (Fig 10): filters are
+    /// sorted by their pattern histogram so similar filters are adjacent
+    /// (inter-thread balance), and each filter's kernels are sorted by
+    /// pattern id (intra-thread: consecutive kernels share the unrolled
+    /// body, removing branches).
+    pub fn encode(
+        w: &Tensor,
+        asg: &PatternAssignment,
+        stride: usize,
+        pad: usize,
+        reorder: bool,
+    ) -> FkwLayer {
+        assert_eq!(w.rank(), 4);
+        let (o, i) = (w.shape()[0], w.shape()[1]);
+        assert!(o <= u16::MAX as usize && i <= u16::MAX as usize);
+        let mut filters: Vec<FilterRec> = (0..o)
+            .map(|f| {
+                let mut kernels: Vec<KernelRec> = (0..i)
+                    .filter(|&c| !asg.is_kernel_pruned(f, c))
+                    .map(|c| KernelRec {
+                        channel: c as u16,
+                        pattern: asg.assignment[f][c] as u8,
+                    })
+                    .collect();
+                if reorder {
+                    kernels.sort_by_key(|k| (k.pattern, k.channel));
+                }
+                FilterRec { original_index: f as u16, kernels }
+            })
+            .collect();
+        if reorder {
+            // Group filters by pattern signature (sorted pattern multiset).
+            filters.sort_by_key(|f| {
+                let mut sig: Vec<u8> = f.kernels.iter().map(|k| k.pattern).collect();
+                sig.sort_unstable();
+                (sig, f.original_index)
+            });
+        }
+        // Pack weights in execution order.
+        let mut weights = Vec::new();
+        for fr in &filters {
+            let f = fr.original_index as usize;
+            for kr in &fr.kernels {
+                let p = asg.set.patterns[kr.pattern as usize];
+                for pos in p.positions() {
+                    weights.push(w.at(&[f, kr.channel as usize, pos / 3, pos % 3]));
+                }
+            }
+        }
+        FkwLayer {
+            out_channels: o,
+            in_channels: i,
+            patterns: asg.set.patterns.clone(),
+            filters,
+            weights,
+            stride,
+            pad,
+        }
+    }
+
+    /// Decode back to a dense OIHW tensor (testing / interop).
+    pub fn decode(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.out_channels, self.in_channels, 3, 3]);
+        let mut wi = 0;
+        for fr in &self.filters {
+            let f = fr.original_index as usize;
+            for kr in &fr.kernels {
+                let p = self.patterns[kr.pattern as usize];
+                for pos in p.positions() {
+                    out.set(&[f, kr.channel as usize, pos / 3, pos % 3], self.weights[wi]);
+                    wi += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Surviving kernel count.
+    pub fn kernel_count(&self) -> usize {
+        self.filters.iter().map(|f| f.kernels.len()).sum()
+    }
+
+    /// Index (structure) overhead in bytes: 2B channel + 1B pattern per
+    /// kernel, 2B per filter for the permutation.
+    pub fn index_overhead_bytes(&self) -> usize {
+        self.kernel_count() * 3 + self.filters.len() * 2
+    }
+
+    /// Number of pattern-id switches along each filter's kernel list —
+    /// the branch-divergence proxy that reorder minimizes (Fig 10).
+    pub fn pattern_switches(&self) -> usize {
+        self.filters
+            .iter()
+            .map(|f| {
+                f.kernels
+                    .windows(2)
+                    .filter(|w| w[0].pattern != w[1].pattern)
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Execute the layer on an NCHW input, directly from compact form.
+    ///
+    /// The inner loop is branch-less per kernel group: pattern offsets are
+    /// resolved once per kernel into 4 static (dy,dx) pairs, and the 4
+    /// multiply-adds are unrolled. This is the hot path that
+    /// `benches/hotpath_exec.rs` profiles.
+    pub fn conv2d(&self, input: &Tensor) -> Tensor {
+        assert_eq!(input.rank(), 4);
+        let (n, c, h, w) = (
+            input.shape()[0],
+            input.shape()[1],
+            input.shape()[2],
+            input.shape()[3],
+        );
+        assert_eq!(c, self.in_channels);
+        let oh = (h + 2 * self.pad - 3) / self.stride + 1;
+        let ow = (w + 2 * self.pad - 3) / self.stride + 1;
+        let mut out = Tensor::zeros(&[n, self.out_channels, oh, ow]);
+        // Precompute per-pattern position tables.
+        let ptab: Vec<[(usize, usize); 4]> = self
+            .patterns
+            .iter()
+            .map(|p| {
+                let pos = p.positions();
+                [
+                    (pos[0] / 3, pos[0] % 3),
+                    (pos[1] / 3, pos[1] % 3),
+                    (pos[2] / 3, pos[2] % 3),
+                    (pos[3] / 3, pos[3] % 3),
+                ]
+            })
+            .collect();
+        let in_data = input.data();
+        let (pad, stride) = (self.pad as isize, self.stride);
+        for b in 0..n {
+            let mut wi = 0usize;
+            for fr in &self.filters {
+                let f = fr.original_index as usize;
+                let out_base = ((b * self.out_channels) + f) * oh * ow;
+                for kr in &fr.kernels {
+                    let ci = kr.channel as usize;
+                    let in_base = ((b * c) + ci) * h * w;
+                    let tab = &ptab[kr.pattern as usize];
+                    let wk = [
+                        self.weights[wi],
+                        self.weights[wi + 1],
+                        self.weights[wi + 2],
+                        self.weights[wi + 3],
+                    ];
+                    wi += 4;
+                    for y in 0..oh {
+                        let row_out = out_base + y * ow;
+                        for x in 0..ow {
+                            let mut acc = 0.0f32;
+                            // Unrolled 4-entry pattern body.
+                            for t in 0..4 {
+                                let (ky, kx) = tab[t];
+                                let iy = (y * stride + ky) as isize - pad;
+                                let ix = (x * stride + kx) as isize - pad;
+                                if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
+                                    acc += wk[t]
+                                        * in_data[in_base + iy as usize * w + ix as usize];
+                                }
+                            }
+                            let od = out.data_mut();
+                            od[row_out + x] += acc;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// CSR overhead for the same sparse tensor: 4B column index per nonzero +
+/// 4B row pointer per row (the comparison the paper's FKW claim makes).
+pub fn csr_overhead_bytes(nnz: usize, rows: usize) -> usize {
+    nnz * 4 + (rows + 1) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::pattern::{assign_patterns, apply_assignment, connectivity_prune, PatternSet};
+    use crate::util::proptest_lite::forall;
+    use crate::util::rng::Rng;
+
+    fn pruned_layer(rng: &mut Rng, o: usize, i: usize, conn: f64) -> (Tensor, PatternAssignment) {
+        let w = Tensor::randn(&[o, i, 3, 3], 1.0, rng);
+        let mut asg = assign_patterns(&w, &PatternSet::elite8());
+        if conn > 0.0 {
+            connectivity_prune(&w, &mut asg, conn);
+        }
+        let wp = apply_assignment(&w, &asg);
+        (wp, asg)
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        forall("fkw roundtrip", 16, |rng| {
+            let o = 2 + rng.below(6);
+            let i = 1 + rng.below(5);
+            let conn = if rng.chance(0.5) { 0.3 } else { 0.0 };
+            let (wp, asg) = pruned_layer(rng, o, i, conn);
+            for reorder in [false, true] {
+                let fkw = FkwLayer::encode(&wp, &asg, 1, 1, reorder);
+                assert_eq!(fkw.decode(), wp, "roundtrip failed (reorder={reorder})");
+            }
+        });
+    }
+
+    #[test]
+    fn fkw_conv_matches_dense_conv() {
+        forall("fkw conv == dense conv on pruned weights", 12, |rng| {
+            let o = 2 + rng.below(4);
+            let i = 1 + rng.below(4);
+            let (wp, asg) = pruned_layer(rng, o, i, 0.2);
+            let x = Tensor::randn(&[1, i, 6 + rng.below(5), 6 + rng.below(5)], 1.0, rng);
+            let stride = 1 + rng.below(2);
+            let fkw = FkwLayer::encode(&wp, &asg, stride, 1, true);
+            let dense = x.conv2d(&wp, stride, 1);
+            let sparse = fkw.conv2d(&x);
+            assert!(
+                dense.max_abs_diff(&sparse) < 1e-4,
+                "diff {}",
+                dense.max_abs_diff(&sparse)
+            );
+        });
+    }
+
+    #[test]
+    fn reorder_reduces_pattern_switches() {
+        let mut rng = Rng::new(41);
+        let (wp, asg) = pruned_layer(&mut rng, 32, 16, 0.0);
+        let plain = FkwLayer::encode(&wp, &asg, 1, 1, false);
+        let reordered = FkwLayer::encode(&wp, &asg, 1, 1, true);
+        assert!(
+            reordered.pattern_switches() <= plain.pattern_switches(),
+            "reorder increased switches: {} -> {}",
+            plain.pattern_switches(),
+            reordered.pattern_switches()
+        );
+        // With 8 patterns over 16 kernels, sorting must strictly help on
+        // random assignments.
+        assert!(reordered.pattern_switches() < plain.pattern_switches());
+    }
+
+    #[test]
+    fn fkw_overhead_below_csr() {
+        let mut rng = Rng::new(42);
+        let (wp, asg) = pruned_layer(&mut rng, 64, 32, 0.3);
+        let fkw = FkwLayer::encode(&wp, &asg, 1, 1, true);
+        let nnz = wp.data().iter().filter(|&&v| v != 0.0).count();
+        let csr = csr_overhead_bytes(nnz, 64 * 32 * 3); // CSR over the GEMM matrix rows
+        assert!(
+            fkw.index_overhead_bytes() * 2 < csr,
+            "fkw {} vs csr {}",
+            fkw.index_overhead_bytes(),
+            csr
+        );
+    }
+
+    #[test]
+    fn connectivity_pruned_kernels_absent() {
+        let mut rng = Rng::new(43);
+        let (wp, asg) = pruned_layer(&mut rng, 8, 8, 0.5);
+        let fkw = FkwLayer::encode(&wp, &asg, 1, 1, true);
+        // ~50% of 64 kernels cut.
+        assert!(fkw.kernel_count() <= 36, "kernels {}", fkw.kernel_count());
+        assert_eq!(fkw.weights.len(), fkw.kernel_count() * 4);
+    }
+
+    #[test]
+    fn strided_output_shape() {
+        let mut rng = Rng::new(44);
+        let (wp, asg) = pruned_layer(&mut rng, 4, 3, 0.0);
+        let fkw = FkwLayer::encode(&wp, &asg, 2, 1, true);
+        let x = Tensor::randn(&[2, 3, 8, 8], 1.0, &mut rng);
+        let y = fkw.conv2d(&x);
+        assert_eq!(y.shape(), &[2, 4, 4, 4]);
+    }
+}

@@ -1,0 +1,371 @@
+//! The DNN computational-graph IR all XGen passes operate on.
+//!
+//! A [`Graph`] is an SSA-style DAG: each [`Node`] consumes earlier node ids
+//! and produces one tensor whose shape is recorded on the node. Weights are
+//! explicit [`OpKind::Weight`] source nodes — rewriting (Fig 9) dispatches
+//! on whether an operand is a weight or an intermediate, and pruning
+//! rewrites weight nodes in place.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::ops::{MappingType, OpKind};
+
+/// Node identifier (index into `Graph::nodes`).
+pub type NodeId = usize;
+
+/// One operator instance.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: OpKind,
+    /// Ids of the value inputs (data first, then weights by convention).
+    pub inputs: Vec<NodeId>,
+    /// Output tensor shape.
+    pub shape: Vec<usize>,
+}
+
+impl Node {
+    /// Number of elements in the output.
+    pub fn out_elems(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+}
+
+/// A DNN computational graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { name: name.to_string(), nodes: Vec::new(), outputs: Vec::new() }
+    }
+
+    /// Append a node; inputs must already exist (ids are topological by
+    /// construction).
+    pub fn add(&mut self, name: &str, op: OpKind, inputs: Vec<NodeId>, shape: Vec<usize>) -> NodeId {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            assert!(i < id, "graph input {i} does not precede node {id}");
+        }
+        self.nodes.push(Node { id, name: name.to_string(), op, inputs, shape });
+        id
+    }
+
+    /// Add a graph input placeholder.
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        self.add(name, OpKind::Input, vec![], shape.to_vec())
+    }
+
+    /// Add a weight source.
+    pub fn weight(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        self.add(name, OpKind::Weight, vec![], shape.to_vec())
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Ids of compute nodes (non-source).
+    pub fn compute_nodes(&self) -> Vec<NodeId> {
+        self.nodes.iter().filter(|n| !n.op.is_source()).map(|n| n.id).collect()
+    }
+
+    /// users[v] = nodes that consume v.
+    pub fn users(&self) -> Vec<Vec<NodeId>> {
+        let mut u = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                u[i].push(n.id);
+            }
+        }
+        u
+    }
+
+    /// The single *data* (non-weight) input of a node, if it has exactly one.
+    pub fn data_input(&self, id: NodeId) -> Option<NodeId> {
+        let data: Vec<NodeId> = self.nodes[id]
+            .inputs
+            .iter()
+            .copied()
+            .filter(|&i| !matches!(self.nodes[i].op, OpKind::Weight))
+            .collect();
+        if data.len() == 1 {
+            Some(data[0])
+        } else {
+            None
+        }
+    }
+
+    /// Multiply–accumulate count of one node (inference, batch included).
+    pub fn node_macs(&self, id: NodeId) -> u64 {
+        let n = &self.nodes[id];
+        let out = n.out_elems();
+        match &n.op {
+            OpKind::Conv2d { k, groups, .. } => {
+                let in_c = self.nodes[n.inputs[0]].shape[1] as u64;
+                out * in_c / *groups as u64 * (*k as u64) * (*k as u64)
+            }
+            OpKind::Conv3d { kt, k, .. } => {
+                let in_c = self.nodes[n.inputs[0]].shape[1] as u64;
+                out * in_c * (*kt as u64) * (*k as u64) * (*k as u64)
+            }
+            OpKind::ConvTranspose2d { k, .. } => {
+                let in_c = self.nodes[n.inputs[0]].shape[1] as u64;
+                out * in_c * (*k as u64) * (*k as u64)
+            }
+            OpKind::Dense => {
+                let in_f = *self.nodes[n.inputs[0]].shape.last().unwrap() as u64;
+                out * in_f
+            }
+            OpKind::MatMul => {
+                // [..., m, k] x [..., k, n] -> [..., m, n]
+                let k = *self.nodes[n.inputs[0]].shape.last().unwrap() as u64;
+                out * k
+            }
+            OpKind::MaxPool { k, .. } | OpKind::AvgPool { k, .. } => out * (*k as u64) * (*k as u64),
+            OpKind::GlobalAvgPool => {
+                let i = &self.nodes[n.inputs[0]];
+                i.out_elems()
+            }
+            OpKind::Softmax | OpKind::LayerNorm => out * 4,
+            OpKind::BatchNorm | OpKind::Bias | OpKind::Scale { .. } | OpKind::Activation(_)
+            | OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Pow { .. }
+            | OpKind::Sqrt => out,
+            OpKind::Embedding => out,
+            _ => 0, // movement ops: no MACs
+        }
+    }
+
+    /// Parameter count of one node's weight inputs.
+    pub fn node_params(&self, id: NodeId) -> u64 {
+        self.nodes[id]
+            .inputs
+            .iter()
+            .filter(|&&i| matches!(self.nodes[i].op, OpKind::Weight))
+            .map(|&i| self.nodes[i].out_elems())
+            .sum()
+    }
+
+    /// Total MACs over the graph.
+    pub fn total_macs(&self) -> u64 {
+        (0..self.nodes.len()).map(|i| self.node_macs(i)).sum()
+    }
+
+    /// Total parameters (each weight node counted once).
+    pub fn total_params(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Weight))
+            .map(|n| n.out_elems())
+            .sum()
+    }
+
+    /// Number of operator nodes (paper Table 4 "#Operators").
+    pub fn operator_count(&self) -> usize {
+        self.compute_nodes().len()
+    }
+
+    /// Total intermediate-tensor bytes (f32), a memory-pressure proxy the
+    /// fusion profitability analysis consumes.
+    pub fn intermediate_bytes(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| !n.op.is_source())
+            .map(|n| n.out_elems() * 4)
+            .sum()
+    }
+
+    /// Verify structural invariants; returns an error string on violation.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node {} has id {}", i, n.id));
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    return Err(format!("node {} consumes non-preceding {}", i, inp));
+                }
+            }
+            if n.op.is_source() && !n.inputs.is_empty() {
+                return Err(format!("source node {} has inputs", i));
+            }
+            if !n.op.is_source() && n.inputs.is_empty() {
+                return Err(format!("compute node {} ({}) has no inputs", i, n.op.name()));
+            }
+            if n.shape.iter().any(|&d| d == 0) {
+                return Err(format!("node {} has zero dim", i));
+            }
+        }
+        for &o in &self.outputs {
+            if o >= self.nodes.len() {
+                return Err(format!("output {o} out of range"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Nodes reachable (backwards) from the outputs — used by rewrite passes
+    /// to drop dead code after substitution.
+    pub fn live_set(&self) -> BTreeSet<NodeId> {
+        let mut live = BTreeSet::new();
+        let mut stack: Vec<NodeId> = self.outputs.clone();
+        while let Some(id) = stack.pop() {
+            if live.insert(id) {
+                stack.extend(&self.nodes[id].inputs);
+            }
+        }
+        live
+    }
+
+    /// Remove dead nodes, renumbering ids. Returns old→new id map.
+    pub fn prune_dead(&mut self) -> BTreeMap<NodeId, NodeId> {
+        let live = self.live_set();
+        let mut remap = BTreeMap::new();
+        let mut nodes = Vec::with_capacity(live.len());
+        for old in &live {
+            let new_id = nodes.len();
+            let mut n = self.nodes[*old].clone();
+            n.id = new_id;
+            n.inputs = n.inputs.iter().map(|i| remap[i]).collect();
+            remap.insert(*old, new_id);
+            nodes.push(n);
+        }
+        self.nodes = nodes;
+        self.outputs = self.outputs.iter().map(|o| remap[o]).collect();
+        remap
+    }
+
+    /// Histogram of mapping types over compute nodes.
+    pub fn mapping_histogram(&self) -> BTreeMap<&'static str, usize> {
+        let mut h = BTreeMap::new();
+        for id in self.compute_nodes() {
+            let m = self.nodes[id].op.mapping();
+            let key = match m {
+                MappingType::OneToOne => "one-to-one",
+                MappingType::OneToMany => "one-to-many",
+                MappingType::ManyToMany => "many-to-many",
+                MappingType::Reorganize => "reorganize",
+                MappingType::Shuffle => "shuffle",
+            };
+            *h.entry(key).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Pretty one-line summary used by the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} ops, {:.2}M params, {:.2}G MACs",
+            self.name,
+            self.operator_count(),
+            self.total_params() as f64 / 1e6,
+            self.total_macs() as f64 / 1e9,
+        )
+    }
+}
+
+/// Convolution output spatial size helper shared by zoo builders.
+pub fn conv_out(h: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (h + 2 * pad - k) / stride + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ops::Act;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.input("x", &[1, 3, 8, 8]);
+        let w = g.weight("w", &[16, 3, 3, 3]);
+        let c = g.add("conv", OpKind::Conv2d { k: 3, stride: 1, pad: 1, groups: 1 }, vec![x, w], vec![1, 16, 8, 8]);
+        let r = g.add("relu", OpKind::Activation(Act::Relu), vec![c], vec![1, 16, 8, 8]);
+        g.outputs = vec![r];
+        g
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn macs_conv_formula() {
+        let g = tiny();
+        // out elems = 16*8*8 = 1024; per-out = 3*3*3 = 27.
+        assert_eq!(g.node_macs(2), 1024 * 27);
+        // relu = 1 per element
+        assert_eq!(g.node_macs(3), 1024);
+    }
+
+    #[test]
+    fn params_counts_weight_nodes() {
+        let g = tiny();
+        assert_eq!(g.total_params(), 16 * 3 * 3 * 3);
+        assert_eq!(g.node_params(2), 16 * 27);
+    }
+
+    #[test]
+    fn dead_code_elimination() {
+        let mut g = tiny();
+        // Add a dead branch.
+        let x2 = g.weight("dead_w", &[4, 4]);
+        let _dead = g.add("dead_sqrt", OpKind::Sqrt, vec![x2], vec![4, 4]);
+        assert_eq!(g.len(), 6);
+        g.prune_dead();
+        assert_eq!(g.len(), 4);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.outputs, vec![3]);
+    }
+
+    #[test]
+    fn users_inverts_inputs() {
+        let g = tiny();
+        let u = g.users();
+        assert_eq!(u[0], vec![2]); // x used by conv
+        assert_eq!(u[2], vec![3]); // conv used by relu
+        assert!(u[3].is_empty());
+    }
+
+    #[test]
+    fn data_input_skips_weights() {
+        let g = tiny();
+        assert_eq!(g.data_input(2), Some(0));
+        assert_eq!(g.data_input(3), Some(2));
+    }
+
+    #[test]
+    fn rejects_forward_edges() {
+        let g = tiny();
+        let mut bad = g.clone();
+        bad.nodes[2].inputs = vec![3, 1];
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn mapping_histogram_counts() {
+        let g = tiny();
+        let h = g.mapping_histogram();
+        assert_eq!(h.get("many-to-many"), Some(&1));
+        assert_eq!(h.get("one-to-one"), Some(&1));
+    }
+
+    #[test]
+    fn conv_out_helper() {
+        assert_eq!(conv_out(224, 7, 2, 3), 112);
+        assert_eq!(conv_out(8, 3, 1, 1), 8);
+    }
+}

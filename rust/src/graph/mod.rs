@@ -1,0 +1,12 @@
+//! DNN computational-graph IR, operator vocabulary with DNNFusion mapping
+//! types, and the model zoo reproducing every network in the paper's
+//! evaluation.
+
+pub mod ir;
+pub mod ops;
+pub mod weights;
+pub mod zoo;
+
+pub use ir::{Graph, Node, NodeId};
+pub use ops::{Act, FuseClass, MappingType, OpKind};
+pub use weights::WeightStore;

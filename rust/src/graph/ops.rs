@@ -1,0 +1,317 @@
+//! Operator vocabulary and the DNNFusion **mapping-type** classification
+//! (§2.2.2, Table 1 of the paper): every operator is classified by the
+//! relation between its input and output elements — One-to-One,
+//! One-to-Many, Many-to-Many, Reorganize, or Shuffle — and fusion legality
+//! and the fused operator's mapping type are derived from an algebra over
+//! these types rather than from a fixed pattern list.
+
+/// DNNFusion mapping types (paper Table 1 header row/column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MappingType {
+    /// Elementwise: each output element depends on exactly one input element.
+    OneToOne,
+    /// Each input element feeds many outputs (e.g. upsample, broadcast).
+    OneToMany,
+    /// Dense dependence (conv, matmul, pooling, softmax reductions).
+    ManyToMany,
+    /// Pure data movement that changes layout (reshape/transpose/concat/pad).
+    Reorganize,
+    /// Index-permuting movement (channel/pixel shuffle, gather).
+    Shuffle,
+}
+
+/// Fusion profitability classes (Table 1 cell colors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuseClass {
+    /// Green: legal and likely profitable — fuse directly.
+    Direct,
+    /// Yellow: legal but profitability depends on shapes — needs profiling.
+    Profile,
+    /// Red (×): illegal/unprofitable — do not fuse.
+    Never,
+}
+
+/// The mapping-type algebra of Table 1: the mapping type of `second ∘ first`
+/// when fusion is legal, or `None` for the × cells.
+///
+/// Row = mapping type of the *first* operator, column = the *second*.
+pub fn fused_mapping(first: MappingType, second: MappingType) -> Option<MappingType> {
+    use MappingType::*;
+    Some(match (first, second) {
+        // Row One-to-One: result takes the second op's type.
+        (OneToOne, t) => t,
+        // Row One-to-Many.
+        (OneToMany, OneToOne) => OneToMany,
+        (OneToMany, OneToMany) => OneToMany,
+        (OneToMany, ManyToMany) => return None, // ×
+        (OneToMany, Reorganize) => OneToMany,
+        (OneToMany, Shuffle) => OneToMany,
+        // Row Many-to-Many.
+        (ManyToMany, OneToOne) => ManyToMany,
+        (ManyToMany, OneToMany) => ManyToMany,
+        (ManyToMany, ManyToMany) => return None, // ×
+        (ManyToMany, Reorganize) => ManyToMany,
+        (ManyToMany, Shuffle) => ManyToMany,
+        // Row Reorganize.
+        (Reorganize, OneToOne) => Reorganize,
+        (Reorganize, OneToMany) => OneToMany,
+        (Reorganize, ManyToMany) => ManyToMany,
+        (Reorganize, Reorganize) => Reorganize,
+        (Reorganize, Shuffle) => Reorganize,
+        // Row Shuffle.
+        (Shuffle, OneToOne) => Shuffle,
+        (Shuffle, OneToMany) => OneToMany,
+        (Shuffle, ManyToMany) => ManyToMany,
+        (Shuffle, Reorganize) => Reorganize,
+        (Shuffle, Shuffle) => Shuffle,
+    })
+}
+
+/// Profitability classification of a fusion candidate (Table 1 colors).
+///
+/// The paper's figure colors are not recoverable from the text dump; the
+/// encoding here follows the DNNFusion (PLDI'21) analysis it cites:
+/// * `×` cells are [`FuseClass::Never`];
+/// * absorbing a data-movement op (Reorganize/Shuffle) into a compute op, or
+///   chaining it after one, is shape-dependent → [`FuseClass::Profile`];
+/// * everything else (elementwise chains, compute+elementwise, movement
+///   chains) is [`FuseClass::Direct`].
+pub fn fuse_class(first: MappingType, second: MappingType) -> FuseClass {
+    use MappingType::*;
+    if fused_mapping(first, second).is_none() {
+        return FuseClass::Never;
+    }
+    match (first, second) {
+        // Data movement feeding heavy compute, or heavy compute feeding data
+        // movement: legal, but the layout change may or may not be absorbable
+        // for free — profile.
+        (Reorganize | Shuffle, ManyToMany) => FuseClass::Profile,
+        (ManyToMany, Reorganize | Shuffle) => FuseClass::Profile,
+        (OneToMany, Reorganize | Shuffle) => FuseClass::Profile,
+        _ => FuseClass::Direct,
+    }
+}
+
+/// Activation functions (kept separate so graph rewriting can reason about
+/// them uniformly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Act {
+    Relu,
+    Relu6,
+    Sigmoid,
+    Tanh,
+    Gelu,
+    Swish,
+    HardSwish,
+    LeakyRelu,
+    Mish,
+}
+
+/// Operator kinds. Shape/arity metadata lives on the graph node; the kind
+/// carries only what optimization passes dispatch on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Graph input placeholder.
+    Input,
+    /// Trainable weight/constant tensor (distinguishing weights from
+    /// intermediates is what enables the Fig 9 rewrites).
+    Weight,
+    /// 2-D convolution: kernel k×k, stride, padding, groups.
+    Conv2d { k: usize, stride: usize, pad: usize, groups: usize },
+    /// 3-D convolution (C3D/S3D/R2+1D): kt×k×k kernel.
+    Conv3d { kt: usize, k: usize, stride: usize, pad: usize },
+    /// Transposed conv (CycleGAN / U-Net upsampling path).
+    ConvTranspose2d { k: usize, stride: usize, pad: usize },
+    /// Fully-connected / linear layer.
+    Dense,
+    /// Batched matmul (attention).
+    MatMul,
+    /// Inference-form batch norm (per-channel scale+shift).
+    BatchNorm,
+    /// Per-channel bias add.
+    Bias,
+    /// Layer norm (transformers).
+    LayerNorm,
+    /// Elementwise activation.
+    Activation(Act),
+    /// Elementwise binary ops between two graph values.
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// Elementwise power by a constant exponent.
+    Pow { e: f64 },
+    Sqrt,
+    /// Elementwise affine by constants: `x*mul + add` (strength-reduced
+    /// form that constant-folding rewrites produce; a weight input, when
+    /// present, overrides with per-channel scale).
+    Scale { mul: f64, add: f64 },
+    Softmax,
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    /// Layout / movement ops (Reorganize).
+    Reshape,
+    Transpose,
+    Concat,
+    Slice,
+    Pad,
+    Flatten,
+    /// Shuffle ops.
+    ChannelShuffle { groups: usize },
+    PixelShuffle { r: usize },
+    Gather,
+    /// One-to-Many ops.
+    Upsample { r: usize },
+    Broadcast,
+    Embedding,
+    /// Detection-head post-processing (NMS etc.) — treated as CPU-side op.
+    PostProcess,
+}
+
+impl OpKind {
+    /// DNNFusion mapping type of this operator.
+    pub fn mapping(&self) -> MappingType {
+        use MappingType::*;
+        use OpKind::*;
+        match self {
+            Input | Weight => OneToOne, // sources; never fused as "ops"
+            Conv2d { .. } | Conv3d { .. } | ConvTranspose2d { .. } | Dense | MatMul
+            | Softmax | MaxPool { .. } | AvgPool { .. } | GlobalAvgPool | PostProcess => ManyToMany,
+            BatchNorm | Bias | LayerNorm | Activation(_) | Add | Sub | Mul | Div
+            | Pow { .. } | Sqrt | Scale { .. } => OneToOne,
+            Reshape | Transpose | Concat | Slice | Pad | Flatten => Reorganize,
+            ChannelShuffle { .. } | PixelShuffle { .. } | Gather => Shuffle,
+            Upsample { .. } | Broadcast | Embedding => OneToMany,
+        }
+    }
+
+    /// Is this a source (no compute) node?
+    pub fn is_source(&self) -> bool {
+        matches!(self, OpKind::Input | OpKind::Weight)
+    }
+
+    /// Does this op carry trainable weights as its second input?
+    pub fn has_weights(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d { .. }
+                | OpKind::Conv3d { .. }
+                | OpKind::ConvTranspose2d { .. }
+                | OpKind::Dense
+                | OpKind::BatchNorm
+                | OpKind::Bias
+                | OpKind::LayerNorm
+                | OpKind::Embedding
+                | OpKind::Scale { .. }
+        )
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        use OpKind::*;
+        match self {
+            Input => "input",
+            Weight => "weight",
+            Conv2d { .. } => "conv2d",
+            Conv3d { .. } => "conv3d",
+            ConvTranspose2d { .. } => "conv_transpose2d",
+            Dense => "dense",
+            MatMul => "matmul",
+            BatchNorm => "batch_norm",
+            Bias => "bias",
+            LayerNorm => "layer_norm",
+            Activation(_) => "activation",
+            Add => "add",
+            Sub => "sub",
+            Mul => "mul",
+            Div => "div",
+            Pow { .. } => "pow",
+            Sqrt => "sqrt",
+            Scale { .. } => "scale",
+            Softmax => "softmax",
+            MaxPool { .. } => "max_pool",
+            AvgPool { .. } => "avg_pool",
+            GlobalAvgPool => "global_avg_pool",
+            Reshape => "reshape",
+            Transpose => "transpose",
+            Concat => "concat",
+            Slice => "slice",
+            Pad => "pad",
+            Flatten => "flatten",
+            ChannelShuffle { .. } => "channel_shuffle",
+            PixelShuffle { .. } => "pixel_shuffle",
+            Gather => "gather",
+            Upsample { .. } => "upsample",
+            Broadcast => "broadcast",
+            Embedding => "embedding",
+            PostProcess => "post_process",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use MappingType::*;
+
+    #[test]
+    fn table1_row_one_to_one_copies_second() {
+        for t in [OneToOne, OneToMany, ManyToMany, Reorganize, Shuffle] {
+            assert_eq!(fused_mapping(OneToOne, t), Some(t));
+        }
+    }
+
+    #[test]
+    fn table1_cross_cells() {
+        // The two × cells.
+        assert_eq!(fused_mapping(OneToMany, ManyToMany), None);
+        assert_eq!(fused_mapping(ManyToMany, ManyToMany), None);
+        // Spot-check non-trivial cells against the printed table.
+        assert_eq!(fused_mapping(Reorganize, OneToMany), Some(OneToMany));
+        assert_eq!(fused_mapping(Shuffle, Reorganize), Some(Reorganize));
+        assert_eq!(fused_mapping(Shuffle, Shuffle), Some(Shuffle));
+        assert_eq!(fused_mapping(ManyToMany, Shuffle), Some(ManyToMany));
+    }
+
+    #[test]
+    fn never_matches_cross_cells_only() {
+        let all = [OneToOne, OneToMany, ManyToMany, Reorganize, Shuffle];
+        let mut nevers = Vec::new();
+        for f in all {
+            for s in all {
+                if fuse_class(f, s) == FuseClass::Never {
+                    nevers.push((f, s));
+                }
+            }
+        }
+        assert_eq!(nevers, vec![(OneToMany, ManyToMany), (ManyToMany, ManyToMany)]);
+    }
+
+    #[test]
+    fn conv_relu_is_direct() {
+        let conv = OpKind::Conv2d { k: 3, stride: 1, pad: 1, groups: 1 };
+        let relu = OpKind::Activation(Act::Relu);
+        assert_eq!(fuse_class(conv.mapping(), relu.mapping()), FuseClass::Direct);
+    }
+
+    #[test]
+    fn conv_conv_never_fuses() {
+        let conv = OpKind::Conv2d { k: 3, stride: 1, pad: 1, groups: 1 };
+        assert_eq!(fuse_class(conv.mapping(), conv.mapping()), FuseClass::Never);
+    }
+
+    #[test]
+    fn reshape_into_conv_needs_profile() {
+        assert_eq!(fuse_class(Reorganize, ManyToMany), FuseClass::Profile);
+    }
+
+    #[test]
+    fn mapping_assignments() {
+        assert_eq!(OpKind::Softmax.mapping(), ManyToMany);
+        assert_eq!(OpKind::ChannelShuffle { groups: 2 }.mapping(), Shuffle);
+        assert_eq!(OpKind::Upsample { r: 2 }.mapping(), OneToMany);
+        assert_eq!(OpKind::Transpose.mapping(), Reorganize);
+        assert_eq!(OpKind::Activation(Act::Gelu).mapping(), OneToOne);
+    }
+}

@@ -1,0 +1,151 @@
+//! Weight storage: concrete tensors for the [`OpKind::Weight`] nodes of a
+//! graph, keyed by weight-node *name* (names survive dead-code elimination
+//! and rewriting, node ids do not). Used by the reference executor, the
+//! pruning passes (which rewrite weights in place), and the graph-rewriting
+//! pass (which folds weights, e.g. BN-into-conv).
+
+use std::collections::BTreeMap;
+
+use super::ir::Graph;
+use super::ops::OpKind;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Name → tensor map for the weights of one graph.
+#[derive(Debug, Clone, Default)]
+pub struct WeightStore {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn new() -> WeightStore {
+        WeightStore::default()
+    }
+
+    /// Initialize every weight node of `g` with Gaussian values scaled by
+    /// 1/sqrt(fan_in) (enough to keep activations bounded in tests).
+    pub fn init_random(g: &Graph, rng: &mut Rng) -> WeightStore {
+        let mut ws = WeightStore::new();
+        for n in &g.nodes {
+            if matches!(n.op, OpKind::Weight) {
+                let fan_in: usize = n.shape.iter().skip(1).product::<usize>().max(1);
+                let std = 1.0 / (fan_in as f32).sqrt();
+                let t = if n.shape.len() == 2 && n.shape[0] == 2 {
+                    // BatchNorm/LayerNorm [2, c] params: scale≈1, shift≈0.
+                    let c = n.shape[1];
+                    let mut data = Vec::with_capacity(2 * c);
+                    for _ in 0..c {
+                        data.push(1.0 + 0.1 * rng.normal() as f32);
+                    }
+                    for _ in 0..c {
+                        data.push(0.1 * rng.normal() as f32);
+                    }
+                    Tensor::from_vec(&n.shape, data)
+                } else {
+                    Tensor::randn(&n.shape, std, rng)
+                };
+                ws.map.insert(n.name.clone(), t);
+            }
+        }
+        ws
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn expect(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("weight '{name}' missing from store"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.map.remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// Total nonzero fraction across all stored tensors (sparsity probe).
+    pub fn overall_density(&self) -> f64 {
+        let total: usize = self.map.values().map(|t| t.len()).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let nz: usize = self
+            .map
+            .values()
+            .map(|t| t.data().iter().filter(|&&x| x != 0.0).count())
+            .sum();
+        nz as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo::NetBuilder;
+    use crate::graph::Act;
+
+    #[test]
+    fn init_covers_all_weight_nodes() {
+        let mut b = NetBuilder::new("t", &[1, 3, 8, 8]);
+        b.conv_bn_act(8, 3, 1, 1, Act::Relu);
+        b.conv(4, 1, 1, 0, 1);
+        let g = b.finish();
+        let mut rng = Rng::new(1);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let wnodes = g.nodes.iter().filter(|n| matches!(n.op, OpKind::Weight)).count();
+        assert_eq!(ws.len(), wnodes);
+        for n in &g.nodes {
+            if matches!(n.op, OpKind::Weight) {
+                assert_eq!(ws.expect(&n.name).shape(), &n.shape[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn bn_weights_initialized_near_identity() {
+        let mut b = NetBuilder::new("t", &[1, 4, 4, 4]);
+        b.conv(4, 3, 1, 1, 1);
+        b.bn();
+        let g = b.finish();
+        let mut rng = Rng::new(2);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let bn_name = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, OpKind::Weight) && n.shape == vec![2, 4])
+            .unwrap()
+            .name
+            .clone();
+        let t = ws.expect(&bn_name);
+        for c in 0..4 {
+            assert!((t.at(&[0, c]) - 1.0).abs() < 0.6, "scale far from 1");
+            assert!(t.at(&[1, c]).abs() < 0.6, "shift far from 0");
+        }
+    }
+
+    #[test]
+    fn density_of_fresh_store_is_one() {
+        let mut b = NetBuilder::new("t", &[1, 3, 4, 4]);
+        b.conv(2, 3, 1, 1, 1);
+        let g = b.finish();
+        let ws = WeightStore::init_random(&g, &mut Rng::new(3));
+        assert!(ws.overall_density() > 0.99);
+    }
+}

@@ -1,0 +1,304 @@
+//! Image-classification backbones from Table 3 / Table 4 / Fig 19.
+//! Each builder's test pins the parameter count against the published
+//! figure (tolerance noted per model).
+
+use super::NetBuilder;
+use crate::graph::ir::Graph;
+use crate::graph::ops::Act;
+
+/// ResNet-50 (He et al.): stem 7×7/2 + [3,4,6,3] bottleneck stages + fc.
+/// Published: 25.5M params, ~4.1 GMACs @224.
+pub fn resnet50(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("resnet-50", &[batch, 3, 224, 224]);
+    b.conv_bn_act(64, 7, 2, 3, Act::Relu);
+    b.maxpool(3, 2);
+    // (width, blocks, first-stride) per stage.
+    let stages: [(usize, usize, usize); 4] = [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)];
+    for &(w, blocks, stride1) in stages.iter() {
+        for bi in 0..blocks {
+            let stride = if bi == 0 { stride1 } else { 1 };
+            let identity = b.cur();
+            // Projection shortcut on the first block of each stage.
+            let shortcut = if bi == 0 {
+                b.set_cur(identity);
+                b.conv(w * 4, 1, stride, 0, 1);
+                b.bn();
+                b.cur()
+            } else {
+                identity
+            };
+            b.set_cur(identity);
+            b.conv_bn_act(w, 1, 1, 0, Act::Relu);
+            b.conv_bn_act(w, 3, stride, 1, Act::Relu);
+            b.conv(w * 4, 1, 1, 0, 1);
+            b.bn();
+            let trunk = b.cur();
+            b.add_residual(shortcut, trunk);
+            b.act(Act::Relu);
+        }
+    }
+    b.gap();
+    b.dense(1000);
+    b.finish()
+}
+
+/// VGG-16: 13 convs + 3 fc. Published: 138M params (fc-heavy), ~15.5 GMACs.
+pub fn vgg16(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("vgg-16", &[batch, 3, 224, 224]);
+    let cfg: [(usize, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    for (w, reps) in cfg {
+        for _ in 0..reps {
+            b.conv(w, 3, 1, 1, 1);
+            b.bias();
+            b.act(Act::Relu);
+        }
+        b.maxpool(2, 2);
+    }
+    b.flatten();
+    b.dense(4096);
+    b.act(Act::Relu);
+    b.dense(4096);
+    b.act(Act::Relu);
+    b.dense(1000);
+    b.finish()
+}
+
+/// MobileNetV1: 13 depthwise-separable blocks. Published: 4.2M params.
+pub fn mobilenet_v1(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("mobilenet-v1", &[batch, 3, 224, 224]);
+    b.conv_bn_act(32, 3, 2, 1, Act::Relu);
+    let cfg: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (c, s) in cfg {
+        b.dwconv(3, s, 1);
+        b.bn();
+        b.act(Act::Relu);
+        b.conv_bn_act(c, 1, 1, 0, Act::Relu);
+    }
+    b.gap();
+    b.dense(1000);
+    b.finish()
+}
+
+/// Inverted-residual (MobileNetV2/V3, EfficientNet) block.
+/// expand×, dw k×k/s, (optional SE), project; residual when s=1 and c_in=c_out.
+pub(crate) fn inverted_residual(
+    b: &mut NetBuilder,
+    c_out: usize,
+    k: usize,
+    stride: usize,
+    expand: usize,
+    se: bool,
+    a: Act,
+) {
+    let c_in = b.shape()[1];
+    let input = b.cur();
+    let hidden = c_in * expand;
+    if expand != 1 {
+        b.conv_bn_act(hidden, 1, 1, 0, a);
+    }
+    b.dwconv(k, stride, k / 2);
+    b.bn();
+    b.act(a);
+    if se {
+        // EfficientNet-style SE squeezes to c_in/4 (not hidden/4), so the
+        // reduction relative to the expanded width is 4×expand.
+        b.se_block(4 * expand);
+    }
+    b.conv(c_out, 1, 1, 0, 1);
+    b.bn();
+    if stride == 1 && c_in == c_out {
+        let trunk = b.cur();
+        b.add_residual(input, trunk);
+    }
+}
+
+/// MobileNetV2: t=6 inverted residuals. Published: 3.5M params, ~300 MMACs.
+pub fn mobilenet_v2(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("mobilenet-v2", &[batch, 3, 224, 224]);
+    b.conv_bn_act(32, 3, 2, 1, Act::Relu6);
+    inverted_residual(&mut b, 16, 3, 1, 1, false, Act::Relu6);
+    let cfg: [(usize, usize, usize, usize); 6] = [
+        // (c, n, s, t)
+        (24, 2, 2, 6),
+        (32, 3, 2, 6),
+        (64, 4, 2, 6),
+        (96, 3, 1, 6),
+        (160, 3, 2, 6),
+        (320, 1, 1, 6),
+    ];
+    for (c, n, s, t) in cfg {
+        for i in 0..n {
+            inverted_residual(&mut b, c, 3, if i == 0 { s } else { 1 }, t, false, Act::Relu6);
+        }
+    }
+    b.conv_bn_act(1280, 1, 1, 0, Act::Relu6);
+    b.gap();
+    b.dense(1000);
+    b.finish()
+}
+
+/// MobileNetV3-Large (approximation: V3 head, SE on the published subset).
+/// Published: ~5.4M params, ~219 MMACs (paper Table 3 lists 6M / 0.45 GFLOPs).
+pub fn mobilenet_v3(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("mobilenet-v3", &[batch, 3, 224, 224]);
+    b.conv_bn_act(16, 3, 2, 1, Act::HardSwish);
+    // (c_out, k, s, expand_ratio_hundredths, se, act)
+    struct L(usize, usize, usize, usize, bool, Act);
+    let cfg = [
+        L(16, 3, 1, 100, false, Act::Relu),
+        L(24, 3, 2, 400, false, Act::Relu),
+        L(24, 3, 1, 300, false, Act::Relu),
+        L(40, 5, 2, 300, true, Act::Relu),
+        L(40, 5, 1, 300, true, Act::Relu),
+        L(40, 5, 1, 300, true, Act::Relu),
+        L(80, 3, 2, 600, false, Act::HardSwish),
+        L(80, 3, 1, 250, false, Act::HardSwish),
+        L(80, 3, 1, 230, false, Act::HardSwish),
+        L(80, 3, 1, 230, false, Act::HardSwish),
+        L(112, 3, 1, 600, true, Act::HardSwish),
+        L(112, 3, 1, 600, true, Act::HardSwish),
+        L(160, 5, 2, 600, true, Act::HardSwish),
+        L(160, 5, 1, 600, true, Act::HardSwish),
+        L(160, 5, 1, 600, true, Act::HardSwish),
+    ];
+    for L(c, k, s, e100, se, a) in cfg {
+        let c_in = b.shape()[1];
+        let hidden = (c_in * e100 / 100).max(c_in);
+        // Emulate fractional expansion with explicit hidden width.
+        let input = b.cur();
+        if hidden != c_in {
+            b.conv_bn_act(hidden, 1, 1, 0, a);
+        }
+        b.dwconv(k, s, k / 2);
+        b.bn();
+        b.act(a);
+        if se {
+            b.se_block(4);
+        }
+        b.conv(c, 1, 1, 0, 1);
+        b.bn();
+        if s == 1 && c_in == c {
+            let t = b.cur();
+            b.add_residual(input, t);
+        }
+    }
+    b.conv_bn_act(960, 1, 1, 0, Act::HardSwish);
+    b.gap();
+    b.dense(1280);
+    b.act(Act::HardSwish);
+    b.dense(1000);
+    b.finish()
+}
+
+/// EfficientNet-B0: MBConv with SE throughout. Published: 5.3M params,
+/// ~390 MMACs (paper: 5.3M / 0.8 GFLOPs ✓).
+pub fn efficientnet_b0(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("efficientnet-b0", &[batch, 3, 224, 224]);
+    b.conv_bn_act(32, 3, 2, 1, Act::Swish);
+    // (c, n, k, s, expand)
+    let cfg: [(usize, usize, usize, usize, usize); 7] = [
+        (16, 1, 3, 1, 1),
+        (24, 2, 3, 2, 6),
+        (40, 2, 5, 2, 6),
+        (80, 3, 3, 2, 6),
+        (112, 3, 5, 1, 6),
+        (192, 4, 5, 2, 6),
+        (320, 1, 3, 1, 6),
+    ];
+    for (c, n, k, s, t) in cfg {
+        for i in 0..n {
+            inverted_residual(&mut b, c, k, if i == 0 { s } else { 1 }, t, true, Act::Swish);
+        }
+    }
+    b.conv_bn_act(1280, 1, 1, 0, Act::Swish);
+    b.gap();
+    b.dense(1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mparams(g: &Graph) -> f64 {
+        g.total_params() as f64 / 1e6
+    }
+
+    fn gmacs(g: &Graph) -> f64 {
+        g.total_macs() as f64 / 1e9
+    }
+
+    #[test]
+    fn resnet50_matches_published_size() {
+        let g = resnet50(1);
+        let p = mparams(&g);
+        assert!((23.0..28.0).contains(&p), "resnet50 params {p}M");
+        let m = gmacs(&g);
+        assert!((3.5..4.8).contains(&m), "resnet50 macs {m}G");
+    }
+
+    #[test]
+    fn vgg16_matches_published_size() {
+        let g = vgg16(1);
+        let p = mparams(&g);
+        assert!((130.0..142.0).contains(&p), "vgg16 params {p}M");
+        let m = gmacs(&g);
+        assert!((14.0..17.0).contains(&m), "vgg16 macs {m}G");
+    }
+
+    #[test]
+    fn mobilenet_v1_matches_published_size() {
+        let g = mobilenet_v1(1);
+        let p = mparams(&g);
+        assert!((3.8..4.8).contains(&p), "mnv1 params {p}M");
+        let m = gmacs(&g);
+        assert!((0.45..0.70).contains(&m), "mnv1 macs {m}G");
+    }
+
+    #[test]
+    fn mobilenet_v2_matches_published_size() {
+        let g = mobilenet_v2(1);
+        let p = mparams(&g);
+        assert!((3.0..4.2).contains(&p), "mnv2 params {p}M");
+        let m = gmacs(&g);
+        assert!((0.25..0.45).contains(&m), "mnv2 macs {m}G");
+    }
+
+    #[test]
+    fn mobilenet_v3_close_to_published() {
+        let g = mobilenet_v3(1);
+        let p = mparams(&g);
+        assert!((4.0..7.5).contains(&p), "mnv3 params {p}M");
+    }
+
+    #[test]
+    fn efficientnet_b0_matches_published_size() {
+        let g = efficientnet_b0(1);
+        let p = mparams(&g);
+        assert!((4.4..6.2).contains(&p), "effb0 params {p}M");
+        let m = gmacs(&g);
+        assert!((0.3..0.55).contains(&m), "effb0 macs {m}G");
+    }
+
+    #[test]
+    fn stride_chain_shapes_sane() {
+        let g = resnet50(1);
+        // Final dense output is [1, 1000].
+        let out = &g.node(*g.outputs.last().unwrap()).shape;
+        assert_eq!(out, &vec![1, 1000]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Remaining Table 3/4 + Fig 21 models: U-Net segmentation, WDSR-b
+//! super-resolution (use case III), fast-style-transfer, CycleGAN generator.
+
+use super::NetBuilder;
+use crate::graph::ir::Graph;
+use crate::graph::ops::Act;
+
+/// Slim U-Net (paper row: 2.1M params / 15 GFLOPs — a mobile variant, so
+/// base width 22 rather than the classic 64).
+pub fn unet(batch: usize) -> Graph {
+    let w0 = 18usize;
+    let mut b = NetBuilder::new("u-net", &[batch, 3, 256, 256]);
+    let mut skips = Vec::new();
+    // Encoder: 4 down stages.
+    let mut w = w0;
+    for _ in 0..4 {
+        b.conv_bn_act(w, 3, 1, 1, Act::Relu);
+        b.conv_bn_act(w, 3, 1, 1, Act::Relu);
+        skips.push(b.cur());
+        b.maxpool(2, 2);
+        w *= 2;
+    }
+    // Bottleneck.
+    b.conv_bn_act(w, 3, 1, 1, Act::Relu);
+    b.conv_bn_act(w, 3, 1, 1, Act::Relu);
+    // Decoder.
+    for skip in skips.into_iter().rev() {
+        w /= 2;
+        b.deconv(w, 2, 2);
+        let up = b.cur();
+        b.concat(&[up, skip]);
+        b.conv_bn_act(w, 3, 1, 1, Act::Relu);
+        b.conv_bn_act(w, 3, 1, 1, Act::Relu);
+    }
+    b.conv(2, 1, 1, 0, 1); // binary segmentation head
+    b.finish()
+}
+
+/// WDSR-b super-resolution (use case III; Table 4 row: 22.2K params /
+/// 11.5 GMACs — tiny params, huge spatial). ×2 upscale from 360p.
+pub fn wdsr_b(batch: usize) -> Graph {
+    let feats = 16usize;
+    let mut b = NetBuilder::new("wdsr-b", &[batch, 3, 360, 640]);
+    b.conv(feats, 3, 1, 1, 1);
+    let mut trunk = b.cur();
+    // 4 wide-activation residual blocks (expand 4x via 1x1, contract, 3x3).
+    for _ in 0..4 {
+        b.set_cur(trunk);
+        b.conv(feats * 4, 1, 1, 0, 1);
+        b.act(Act::Relu);
+        b.conv(feats, 1, 1, 0, 1);
+        b.conv(feats, 3, 1, 1, 1);
+        let body = b.cur();
+        trunk = b.add_residual(trunk, body);
+    }
+    b.set_cur(trunk);
+    // Upsample head: conv to 3*r^2 then pixel shuffle.
+    b.conv(3 * 4, 3, 1, 1, 1);
+    b.pixel_shuffle(2);
+    let main = b.cur();
+    // Global skip: shallow conv path from input.
+    b.set_cur(0);
+    b.conv(3 * 4, 5, 1, 2, 1);
+    b.pixel_shuffle(2);
+    let skip = b.cur();
+    b.add_residual(main, skip);
+    b.finish()
+}
+
+/// Fast style transfer (Johnson et al.): down ×2, 5 res blocks, up ×2.
+/// Paper row: 1.7M params / 161 GMACs @ high-res input.
+pub fn fst(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("fst", &[batch, 3, 512, 512]);
+    b.conv_bn_act(32, 9, 1, 4, Act::Relu);
+    b.conv_bn_act(64, 3, 2, 1, Act::Relu);
+    b.conv_bn_act(128, 3, 2, 1, Act::Relu);
+    for _ in 0..5 {
+        let inp = b.cur();
+        b.conv_bn_act(128, 3, 1, 1, Act::Relu);
+        b.conv(128, 3, 1, 1, 1);
+        b.bn();
+        let t = b.cur();
+        b.add_residual(inp, t);
+    }
+    b.deconv(64, 3, 2);
+    b.bn();
+    b.act(Act::Relu);
+    b.deconv(32, 3, 2);
+    b.bn();
+    b.act(Act::Relu);
+    b.conv(3, 9, 1, 4, 1);
+    b.act(Act::Tanh);
+    b.finish()
+}
+
+/// CycleGAN generator (ResNet, 9 blocks). Paper row: 11M params / 186 GMACs.
+pub fn cyclegan(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("cyclegan", &[batch, 3, 512, 512]);
+    b.conv_bn_act(64, 7, 1, 3, Act::Relu);
+    b.conv_bn_act(128, 3, 2, 1, Act::Relu);
+    b.conv_bn_act(256, 3, 2, 1, Act::Relu);
+    for _ in 0..9 {
+        let inp = b.cur();
+        b.conv_bn_act(256, 3, 1, 1, Act::Relu);
+        b.conv(256, 3, 1, 1, 1);
+        b.bn();
+        let t = b.cur();
+        b.add_residual(inp, t);
+    }
+    b.deconv(128, 3, 2);
+    b.bn();
+    b.act(Act::Relu);
+    b.deconv(64, 3, 2);
+    b.bn();
+    b.act(Act::Relu);
+    b.conv(3, 7, 1, 3, 1);
+    b.act(Act::Tanh);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unet_scale() {
+        let g = unet(1);
+        let p = g.total_params() as f64 / 1e6;
+        assert!((1.2..3.2).contains(&p), "unet params {p}M");
+        let m = g.total_macs() as f64 / 1e9;
+        assert!((3.0..12.0).contains(&m), "unet macs {m}G");
+    }
+
+    #[test]
+    fn wdsr_tiny_params_big_macs() {
+        let g = wdsr_b(1);
+        let p = g.total_params() as f64 / 1e3;
+        assert!((12.0..40.0).contains(&p), "wdsr params {p}K");
+        let m = g.total_macs() as f64 / 1e9;
+        assert!((2.0..15.0).contains(&m), "wdsr macs {m}G");
+        // Output is 2x the input spatial size.
+        let out = &g.node(g.outputs[0]).shape;
+        assert_eq!(out, &vec![1, 3, 720, 1280]);
+    }
+
+    #[test]
+    fn fst_scale() {
+        let g = fst(1);
+        let p = g.total_params() as f64 / 1e6;
+        assert!((1.2..2.4).contains(&p), "fst params {p}M");
+        let m = g.total_macs() as f64 / 1e9;
+        assert!((25.0..120.0).contains(&m), "fst macs {m}G");
+    }
+
+    #[test]
+    fn cyclegan_scale() {
+        let g = cyclegan(1);
+        let p = g.total_params() as f64 / 1e6;
+        assert!((9.0..14.0).contains(&p), "cyclegan params {p}M");
+    }
+
+    #[test]
+    fn generators_preserve_resolution() {
+        let g = fst(1);
+        let out = &g.node(g.outputs[0]).shape;
+        assert_eq!(out, &vec![1, 3, 512, 512]);
+        let g = cyclegan(1);
+        let out = &g.node(g.outputs[0]).shape;
+        assert_eq!(out, &vec![1, 3, 512, 512]);
+    }
+}

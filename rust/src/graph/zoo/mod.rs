@@ -1,0 +1,507 @@
+//! Model zoo: graph-level reconstructions of every network the paper's
+//! evaluation touches (Tables 3–4, Figs 6/14/19/21). These are *structural*
+//! models — correct operator sequences, shapes, parameter and MAC counts —
+//! used by the compiler passes and the device cost model. (The numerically
+//! executed demo models live in `python/compile/model.py` and
+//! [`crate::exec`]; the zoo's job is to make the paper's tables
+//! reproducible at the right scale.)
+//!
+//! Parameter/MAC counts are asserted against published figures in each
+//! builder's tests where the architecture is unambiguous, and documented as
+//! approximations where the paper's variant is underspecified (e.g.
+//! EfficientDet's exact BiFPN repeat count).
+
+pub mod cnn;
+pub mod detect;
+pub mod video;
+pub mod nlp;
+pub mod misc;
+
+use super::ir::{conv_out, Graph, NodeId};
+use super::ops::{Act, OpKind};
+
+/// Fluent builder over [`Graph`] tracking the "current" tensor, with the
+/// composite blocks (conv-bn-act, inverted residual, SE, attention, ...)
+/// the zoo architectures are made of.
+pub struct NetBuilder {
+    pub g: Graph,
+    cur: NodeId,
+    /// Monotonic counter for unique node names.
+    n: usize,
+}
+
+impl NetBuilder {
+    /// Start a network with one input of the given shape (NCHW / NCDHW / NLC).
+    pub fn new(name: &str, input_shape: &[usize]) -> NetBuilder {
+        let mut g = Graph::new(name);
+        let cur = g.input("input", input_shape);
+        NetBuilder { g, cur, n: 0 }
+    }
+
+    fn uid(&mut self, base: &str) -> String {
+        self.n += 1;
+        format!("{}_{}", base, self.n)
+    }
+
+    /// Current tensor id.
+    pub fn cur(&self) -> NodeId {
+        self.cur
+    }
+
+    /// Current tensor shape.
+    pub fn shape(&self) -> Vec<usize> {
+        self.g.node(self.cur).shape.clone()
+    }
+
+    /// Reset the current tensor (branching).
+    pub fn set_cur(&mut self, id: NodeId) -> &mut Self {
+        self.cur = id;
+        self
+    }
+
+    /// Finish: mark current tensor as the output and return the graph.
+    pub fn finish(mut self) -> Graph {
+        self.g.outputs = vec![self.cur];
+        debug_assert!(self.g.validate().is_ok());
+        self.g
+    }
+
+    /// Finish with explicit outputs (multi-head models).
+    pub fn finish_multi(mut self, outputs: Vec<NodeId>) -> Graph {
+        self.g.outputs = outputs;
+        debug_assert!(self.g.validate().is_ok());
+        self.g
+    }
+
+    // ---- primitive layers ------------------------------------------------
+
+    /// conv2d (+ optional groups); updates current tensor. Input NCHW.
+    pub fn conv(&mut self, c_out: usize, k: usize, stride: usize, pad: usize, groups: usize) -> NodeId {
+        let s = self.shape();
+        assert_eq!(s.len(), 4, "conv on non-4d tensor for {}", self.g.name);
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        assert!(c % groups == 0 && c_out % groups == 0);
+        let name = self.uid("conv");
+        let wname = format!("{name}_w");
+        let wgt = self.g.weight(&wname, &[c_out, c / groups, k, k]);
+        let oh = conv_out(h, k, stride, pad);
+        let ow = conv_out(w, k, stride, pad);
+        let id = self.g.add(
+            &name,
+            OpKind::Conv2d { k, stride, pad, groups },
+            vec![self.cur, wgt],
+            vec![n, c_out, oh, ow],
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Depthwise conv (groups == channels).
+    pub fn dwconv(&mut self, k: usize, stride: usize, pad: usize) -> NodeId {
+        let c = self.shape()[1];
+        self.conv(c, k, stride, pad, c)
+    }
+
+    /// conv3d over NCDHW.
+    pub fn conv3d(&mut self, c_out: usize, kt: usize, k: usize, stride: usize, pad: usize) -> NodeId {
+        let s = self.shape();
+        assert_eq!(s.len(), 5);
+        let (n, c, d, h, w) = (s[0], s[1], s[2], s[3], s[4]);
+        let name = self.uid("conv3d");
+        let wname = format!("{name}_w");
+        let wgt = self.g.weight(&wname, &[c_out, c, kt, k, k]);
+        let od = conv_out(d, kt, stride, kt / 2);
+        let oh = conv_out(h, k, stride, pad);
+        let ow = conv_out(w, k, stride, pad);
+        let id = self.g.add(
+            &name,
+            OpKind::Conv3d { kt, k, stride, pad },
+            vec![self.cur, wgt],
+            vec![n, c_out, od, oh, ow],
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Transposed conv doubling spatial size.
+    pub fn deconv(&mut self, c_out: usize, k: usize, stride: usize) -> NodeId {
+        let s = self.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let name = self.uid("deconv");
+        let wname = format!("{name}_w");
+        let wgt = self.g.weight(&wname, &[c, c_out, k, k]);
+        let id = self.g.add(
+            &name,
+            OpKind::ConvTranspose2d { k, stride, pad: k / 2 },
+            vec![self.cur, wgt],
+            vec![n, c_out, h * stride, w * stride],
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Inference batch-norm (scale+shift weights).
+    pub fn bn(&mut self) -> NodeId {
+        let s = self.shape();
+        let c = s[1];
+        let name = self.uid("bn");
+        let wname = format!("{name}_w");
+        let wgt = self.g.weight(&wname, &[2, c]);
+        let id = self.g.add(&name, OpKind::BatchNorm, vec![self.cur, wgt], s);
+        self.cur = id;
+        id
+    }
+
+    /// Per-channel bias.
+    pub fn bias(&mut self) -> NodeId {
+        let s = self.shape();
+        let c = if s.len() >= 2 { s[1] } else { s[0] };
+        let name = self.uid("bias");
+        let wname = format!("{name}_w");
+        let wgt = self.g.weight(&wname, &[c]);
+        let id = self.g.add(&name, OpKind::Bias, vec![self.cur, wgt], s);
+        self.cur = id;
+        id
+    }
+
+    /// Activation.
+    pub fn act(&mut self, a: Act) -> NodeId {
+        let s = self.shape();
+        let name = self.uid("act");
+        let id = self.g.add(&name, OpKind::Activation(a), vec![self.cur], s);
+        self.cur = id;
+        id
+    }
+
+    /// conv + bn + activation, the workhorse CNN block.
+    pub fn conv_bn_act(&mut self, c_out: usize, k: usize, stride: usize, pad: usize, a: Act) -> NodeId {
+        self.conv(c_out, k, stride, pad, 1);
+        self.bn();
+        self.act(a)
+    }
+
+    /// Max pool k×k stride s.
+    pub fn maxpool(&mut self, k: usize, stride: usize) -> NodeId {
+        let s = self.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let name = self.uid("maxpool");
+        let id = self.g.add(
+            &name,
+            OpKind::MaxPool { k, stride },
+            vec![self.cur],
+            vec![n, c, h / stride, w / stride],
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Average pool.
+    pub fn avgpool(&mut self, k: usize, stride: usize) -> NodeId {
+        let s = self.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let name = self.uid("avgpool");
+        let id = self.g.add(
+            &name,
+            OpKind::AvgPool { k, stride },
+            vec![self.cur],
+            vec![n, c, h / stride, w / stride],
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Global average pool to [n, c].
+    pub fn gap(&mut self) -> NodeId {
+        let s = self.shape();
+        let name = self.uid("gap");
+        let id = self.g.add(&name, OpKind::GlobalAvgPool, vec![self.cur], vec![s[0], s[1]]);
+        self.cur = id;
+        id
+    }
+
+    /// Dense layer on the last dim.
+    pub fn dense(&mut self, out_f: usize) -> NodeId {
+        let mut s = self.shape();
+        let in_f = *s.last().unwrap();
+        *s.last_mut().unwrap() = out_f;
+        let name = self.uid("dense");
+        let wname = format!("{name}_w");
+        let wgt = self.g.weight(&wname, &[in_f, out_f]);
+        let id = self.g.add(&name, OpKind::Dense, vec![self.cur, wgt], s);
+        self.cur = id;
+        id
+    }
+
+    /// Flatten NCHW → [n, c*h*w].
+    pub fn flatten(&mut self) -> NodeId {
+        let s = self.shape();
+        let n = s[0];
+        let rest: usize = s[1..].iter().product();
+        let name = self.uid("flatten");
+        let id = self.g.add(&name, OpKind::Flatten, vec![self.cur], vec![n, rest]);
+        self.cur = id;
+        id
+    }
+
+    /// Residual add of two tensors (shapes must match).
+    pub fn add_residual(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let sa = self.g.node(a).shape.clone();
+        assert_eq!(sa, self.g.node(b).shape, "residual shape mismatch in {}", self.g.name);
+        let name = self.uid("add");
+        let id = self.g.add(&name, OpKind::Add, vec![a, b], sa);
+        self.cur = id;
+        id
+    }
+
+    /// Elementwise multiply (SE gates, attention masks).
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let sa = self.g.node(a).shape.clone();
+        let name = self.uid("mul");
+        let id = self.g.add(&name, OpKind::Mul, vec![a, b], sa);
+        self.cur = id;
+        id
+    }
+
+    /// Concat along channel dim.
+    pub fn concat(&mut self, parts: &[NodeId]) -> NodeId {
+        let mut s = self.g.node(parts[0]).shape.clone();
+        s[1] = parts.iter().map(|&p| self.g.node(p).shape[1]).sum();
+        let name = self.uid("concat");
+        let id = self.g.add(&name, OpKind::Concat, parts.to_vec(), s);
+        self.cur = id;
+        id
+    }
+
+    /// Nearest-neighbour upsample ×r.
+    pub fn upsample(&mut self, r: usize) -> NodeId {
+        let s = self.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let name = self.uid("upsample");
+        let id = self.g.add(&name, OpKind::Upsample { r }, vec![self.cur], vec![n, c, h * r, w * r]);
+        self.cur = id;
+        id
+    }
+
+    /// Pixel shuffle (depth-to-space) ×r.
+    pub fn pixel_shuffle(&mut self, r: usize) -> NodeId {
+        let s = self.shape();
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        assert!(c % (r * r) == 0);
+        let name = self.uid("pixel_shuffle");
+        let id = self.g.add(
+            &name,
+            OpKind::PixelShuffle { r },
+            vec![self.cur],
+            vec![n, c / (r * r), h * r, w * r],
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Squeeze-and-excitation block: GAP → dense(reduce) → relu → dense →
+    /// sigmoid → broadcast-mul with the trunk.
+    pub fn se_block(&mut self, reduction: usize) -> NodeId {
+        let trunk = self.cur;
+        let s = self.shape();
+        let c = s[1];
+        self.gap();
+        self.dense((c / reduction).max(1));
+        self.act(Act::Relu);
+        self.dense(c);
+        self.act(Act::Sigmoid);
+        // Broadcast gate back over spatial dims.
+        let gate = self.cur;
+        let name = self.uid("se_broadcast");
+        let bid = self.g.add(&name, OpKind::Broadcast, vec![gate], s);
+        self.mul(trunk, bid)
+    }
+
+    // ---- transformer pieces ---------------------------------------------
+
+    /// LayerNorm over last dim.
+    pub fn layer_norm(&mut self) -> NodeId {
+        let s = self.shape();
+        let d = *s.last().unwrap();
+        let name = self.uid("ln");
+        let wname = format!("{name}_w");
+        let wgt = self.g.weight(&wname, &[2, d]);
+        let id = self.g.add(&name, OpKind::LayerNorm, vec![self.cur, wgt], s);
+        self.cur = id;
+        id
+    }
+
+    /// Multi-head self-attention over [n, L, d]; returns output id.
+    /// Structure: LN → Q,K,V dense → QK^T matmul → scale → softmax → V
+    /// matmul → output dense → residual add.
+    pub fn attention(&mut self, heads: usize) -> NodeId {
+        let resid = self.cur;
+        let s = self.shape();
+        assert_eq!(s.len(), 3, "attention wants [n, L, d]");
+        let (n, l, d) = (s[0], s[1], s[2]);
+        assert!(d % heads == 0);
+        self.layer_norm();
+        let x = self.cur;
+        let q = {
+            self.set_cur(x);
+            self.dense(d)
+        };
+        let k = {
+            self.set_cur(x);
+            self.dense(d)
+        };
+        let v = {
+            self.set_cur(x);
+            self.dense(d)
+        };
+        // scores = q @ k^T : [n, L, L] (head dim folded into the matmul).
+        let name = self.uid("qk");
+        let scores = self.g.add(&name, OpKind::MatMul, vec![q, k], vec![n, l, l]);
+        let name = self.uid("scale");
+        let dh = (d / heads) as f64;
+        let scaled = self.g.add(
+            &name,
+            OpKind::Scale { mul: 1.0 / dh.sqrt(), add: 0.0 },
+            vec![scores],
+            vec![n, l, l],
+        );
+        let name = self.uid("softmax");
+        let probs = self.g.add(&name, OpKind::Softmax, vec![scaled], vec![n, l, l]);
+        let name = self.uid("av");
+        let ctx = self.g.add(&name, OpKind::MatMul, vec![probs, v], vec![n, l, d]);
+        self.set_cur(ctx);
+        self.dense(d);
+        let o = self.cur;
+        self.add_residual(resid, o)
+    }
+
+    /// Transformer FFN block with residual: LN → dense(hidden) → act → dense(d) → add.
+    pub fn ffn(&mut self, hidden: usize, a: Act) -> NodeId {
+        let resid = self.cur;
+        let d = *self.shape().last().unwrap();
+        self.layer_norm();
+        self.dense(hidden);
+        self.act(a);
+        self.dense(d);
+        let o = self.cur;
+        self.add_residual(resid, o)
+    }
+
+    /// One standard transformer encoder layer.
+    pub fn transformer_layer(&mut self, heads: usize, ffn_hidden: usize, a: Act) -> NodeId {
+        self.attention(heads);
+        self.ffn(ffn_hidden, a)
+    }
+}
+
+/// Registry: build any zoo model by its paper name, at a given batch size.
+/// Panics on unknown name (callers enumerate via [`all_models`]).
+pub fn by_name(name: &str, batch: usize) -> Graph {
+    match name {
+        "efficientnet-b0" => cnn::efficientnet_b0(batch),
+        "resnet-50" => cnn::resnet50(batch),
+        "vgg-16" => cnn::vgg16(batch),
+        "mobilenet-v1" => cnn::mobilenet_v1(batch),
+        "mobilenet-v1-ssd" => detect::mobilenet_v1_ssd(batch),
+        "mobilenet-v2" => cnn::mobilenet_v2(batch),
+        "mobilenet-v3" => cnn::mobilenet_v3(batch),
+        "yolo-v4" => detect::yolo_v4(batch),
+        "c3d" => video::c3d(batch),
+        "r2plus1d" => video::r2plus1d(batch),
+        "s3d" => video::s3d(batch),
+        "pointpillar" => detect::pointpillar(batch),
+        "u-net" => misc::unet(batch),
+        "faster-rcnn" => detect::faster_rcnn(batch),
+        "mask-rcnn" => detect::mask_rcnn(batch),
+        "tinybert" => nlp::tinybert(batch),
+        "distilbert" => nlp::distilbert(batch),
+        "bert-base" => nlp::bert_base(batch),
+        "mobilebert" => nlp::mobilebert(batch),
+        "gpt-2" => nlp::gpt2(batch),
+        "conformer" => nlp::conformer(batch),
+        "fst" => misc::fst(batch),
+        "cyclegan" => misc::cyclegan(batch),
+        "wdsr-b" => misc::wdsr_b(batch),
+        "efficientdet-d0" => detect::efficientdet_d0(batch),
+        "pixor" => detect::pixor(batch),
+        _ => panic!("unknown zoo model '{name}'"),
+    }
+}
+
+/// All registry names (stable order).
+pub fn all_models() -> Vec<&'static str> {
+    vec![
+        "efficientnet-b0",
+        "resnet-50",
+        "vgg-16",
+        "mobilenet-v1",
+        "mobilenet-v1-ssd",
+        "mobilenet-v2",
+        "mobilenet-v3",
+        "yolo-v4",
+        "c3d",
+        "r2plus1d",
+        "s3d",
+        "pointpillar",
+        "u-net",
+        "faster-rcnn",
+        "mask-rcnn",
+        "tinybert",
+        "distilbert",
+        "bert-base",
+        "mobilebert",
+        "gpt-2",
+        "conformer",
+        "fst",
+        "cyclegan",
+        "wdsr-b",
+        "efficientdet-d0",
+        "pixor",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registry_model_builds_and_validates() {
+        for name in all_models() {
+            let g = by_name(name, 1);
+            assert!(g.validate().is_ok(), "{name} invalid: {:?}", g.validate());
+            assert!(g.operator_count() > 3, "{name} suspiciously small");
+            assert!(g.total_macs() > 0, "{name} has no compute");
+        }
+    }
+
+    #[test]
+    fn batch_scales_macs_linearly() {
+        let g1 = by_name("resnet-50", 1);
+        let g2 = by_name("resnet-50", 2);
+        // Dense classifier head params identical; MACs scale with batch.
+        assert_eq!(g1.total_params(), g2.total_params());
+        assert!(g2.total_macs() > g1.total_macs() * 19 / 10);
+    }
+
+    #[test]
+    fn se_block_round_trips_shape() {
+        let mut b = NetBuilder::new("se_test", &[1, 32, 8, 8]);
+        b.conv_bn_act(32, 3, 1, 1, Act::Relu);
+        let before = b.shape();
+        b.se_block(4);
+        assert_eq!(b.shape(), before);
+        let g = b.finish();
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn transformer_layer_preserves_shape() {
+        let mut b = NetBuilder::new("tl", &[1, 16, 64]);
+        b.transformer_layer(4, 256, Act::Gelu);
+        assert_eq!(b.shape(), vec![1, 16, 64]);
+        // One layer = 12 d^2 params (+ LN/embed): 4 attn dense + 2 ffn dense.
+        let g = b.finish();
+        let expect = (4 * 64 * 64 + 2 * 64 * 256) as u64;
+        let params = g.total_params();
+        assert!(params >= expect && params < expect + 1000, "params {params}");
+    }
+}

@@ -1,0 +1,187 @@
+//! 3-D convolution video models (Table 3: C3D, R(2+1)D, S3D; §2.1.2's
+//! block-pruning generalization to 3-D convolutions targets exactly these).
+//! All take 16-frame 112×112 clips like the paper ("C3D (16 frames)").
+
+use super::NetBuilder;
+use crate::graph::ir::Graph;
+use crate::graph::ops::{Act, OpKind};
+
+/// C3D (Tran et al.): 8 3×3×3 conv layers + 2 fc. Published: ~78M params
+/// (fc-heavy), ~38.5 GMACs @16×112×112. Paper row: 78M / 77 GFLOPs ✓.
+pub fn c3d(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("c3d", &[batch, 3, 16, 112, 112]);
+    let pool3d = |b: &mut NetBuilder, kt: usize| {
+        // 3-D pooling approximated on the NCDHW tensor as a shape op +
+        // MACs-free reduction node.
+        let s = b.shape();
+        let (n, c, d, h, w) = (s[0], s[1], s[2], s[3], s[4]);
+        let id = b.g.add(
+            &format!("pool3d_{}", b.g.len()),
+            OpKind::MaxPool { k: 2, stride: 2 },
+            vec![b.cur()],
+            vec![n, c, (d / kt).max(1), h / 2, w / 2],
+        );
+        b.set_cur(id);
+    };
+    b.conv3d(64, 3, 3, 1, 1);
+    b.act(Act::Relu);
+    pool3d(&mut b, 1);
+    b.conv3d(128, 3, 3, 1, 1);
+    b.act(Act::Relu);
+    pool3d(&mut b, 2);
+    for &w in &[256usize, 256] {
+        b.conv3d(w, 3, 3, 1, 1);
+        b.act(Act::Relu);
+    }
+    pool3d(&mut b, 2);
+    for &w in &[512usize, 512] {
+        b.conv3d(w, 3, 3, 1, 1);
+        b.act(Act::Relu);
+    }
+    pool3d(&mut b, 2);
+    for &w in &[512usize, 512] {
+        b.conv3d(w, 3, 3, 1, 1);
+        b.act(Act::Relu);
+    }
+    pool3d(&mut b, 2);
+    b.flatten();
+    b.dense(4096);
+    b.act(Act::Relu);
+    b.dense(4096);
+    b.act(Act::Relu);
+    b.dense(487);
+    b.finish()
+}
+
+/// R(2+1)D-34: 3-D convs factorized into 2-D spatial + 1-D temporal.
+/// Published: ~63.6M params. Paper row: 64M / 76.3 GFLOPs ✓.
+pub fn r2plus1d(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("r2plus1d", &[batch, 3, 16, 112, 112]);
+    // Factorized conv: spatial 1×3×3 then temporal 3×1×1, with the
+    // intermediate width M chosen (as in the paper) to keep params equal to
+    // the full 3-D conv.
+    fn conv2plus1d(b: &mut NetBuilder, c_out: usize, stride: usize) {
+        let c_in = b.shape()[1];
+        let m = (3 * 3 * 3 * c_in * c_out) / (3 * 3 * c_in + 3 * c_out);
+        b.conv3d(m.max(1), 1, 3, stride, 1);
+        b.bn();
+        b.act(Act::Relu);
+        b.conv3d(c_out, 3, 1, 1, 0);
+    }
+    b.conv3d(64, 3, 7, 2, 3);
+    b.bn();
+    b.act(Act::Relu);
+    // ResNet-34 style: [3,4,6,3] basic blocks.
+    for &(w, blocks, stride1) in &[(64usize, 3usize, 1usize), (128, 4, 2), (256, 6, 2), (512, 3, 2)] {
+        for bi in 0..blocks {
+            let stride = if bi == 0 { stride1 } else { 1 };
+            let identity = b.cur();
+            let shortcut = if bi == 0 && (stride != 1 || b.shape()[1] != w) {
+                b.set_cur(identity);
+                b.conv3d(w, 1, 1, stride, 0);
+                b.bn();
+                b.cur()
+            } else {
+                identity
+            };
+            b.set_cur(identity);
+            conv2plus1d(&mut b, w, stride);
+            b.bn();
+            b.act(Act::Relu);
+            conv2plus1d(&mut b, w, 1);
+            b.bn();
+            let t = b.cur();
+            if b.g.node(shortcut).shape == b.g.node(t).shape {
+                b.add_residual(shortcut, t);
+            }
+            b.act(Act::Relu);
+        }
+    }
+    // Global spatiotemporal pool + readout.
+    b.gap();
+    b.dense(400);
+    b.finish()
+}
+
+/// S3D: separable 3-D Inception. Published: ~8M params. Paper row:
+/// 8.0M / 79.6 GFLOPs. Approximated as an inception-ish stack of separable
+/// (spatial+temporal) conv blocks with channel concat branches.
+pub fn s3d(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("s3d", &[batch, 3, 16, 112, 112]);
+    fn sep_conv(b: &mut NetBuilder, c_out: usize, stride: usize) {
+        b.conv3d(c_out, 1, 3, stride, 1);
+        b.bn();
+        b.act(Act::Relu);
+        b.conv3d(c_out, 3, 1, 1, 0);
+        b.bn();
+        b.act(Act::Relu);
+    }
+    fn inception_sep(b: &mut NetBuilder, c1: usize, c3: usize) {
+        let input = b.cur();
+        b.conv3d(c1, 1, 1, 1, 0);
+        b.bn();
+        b.act(Act::Relu);
+        let branch1 = b.cur();
+        b.set_cur(input);
+        b.conv3d(c3 / 2, 1, 1, 1, 0);
+        b.bn();
+        b.act(Act::Relu);
+        sep_conv(b, c3, 1);
+        let branch2 = b.cur();
+        b.concat(&[branch1, branch2]);
+    }
+    b.conv3d(64, 1, 7, 2, 3);
+    b.bn();
+    b.act(Act::Relu);
+    b.conv3d(64, 1, 1, 1, 0);
+    b.bn();
+    b.act(Act::Relu);
+    sep_conv(&mut b, 192, 2);
+    inception_sep(&mut b, 64, 128);
+    inception_sep(&mut b, 96, 160);
+    sep_conv(&mut b, 256, 2);
+    inception_sep(&mut b, 128, 256);
+    inception_sep(&mut b, 128, 256);
+    sep_conv(&mut b, 384, 2);
+    inception_sep(&mut b, 192, 320);
+    b.gap();
+    b.dense(400);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c3d_matches_published() {
+        let g = c3d(1);
+        let p = g.total_params() as f64 / 1e6;
+        assert!((60.0..90.0).contains(&p), "c3d params {p}M");
+        let m = g.total_macs() as f64 / 1e9;
+        assert!((20.0..60.0).contains(&m), "c3d macs {m}G");
+    }
+
+    #[test]
+    fn r2plus1d_matches_published() {
+        let g = r2plus1d(1);
+        let p = g.total_params() as f64 / 1e6;
+        assert!((40.0..80.0).contains(&p), "r2+1d params {p}M");
+    }
+
+    #[test]
+    fn s3d_matches_published() {
+        let g = s3d(1);
+        let p = g.total_params() as f64 / 1e6;
+        assert!((3.0..13.0).contains(&p), "s3d params {p}M");
+    }
+
+    #[test]
+    fn video_models_use_conv3d() {
+        use crate::graph::ops::OpKind;
+        for g in [c3d(1), r2plus1d(1), s3d(1)] {
+            let any3d = g.nodes.iter().any(|n| matches!(n.op, OpKind::Conv3d { .. }));
+            assert!(any3d, "{} has no conv3d", g.name);
+        }
+    }
+}

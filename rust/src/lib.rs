@@ -1,0 +1,49 @@
+//! # xgen — a reproduction of CoCoPIE XGen
+//!
+//! XGen (Li, Ren, Shen, Wang, 2022) is a *full-stack* DNN-inference
+//! optimizing framework built around **compression–compilation co-design**:
+//! model-level pruning (pattern-based / block-based), graph-level rewriting
+//! and universal operator fusion (DNNFusion), pattern-conscious code
+//! generation (FKW storage, filter-kernel reorder, load-redundancy
+//! elimination), deep reuse, a compiler-aware architecture/pruning co-search
+//! (CAPS/NPAS), and an AI-conscious heterogeneous runtime (XEngine).
+//!
+//! This crate is Layer 3 of a three-layer Rust + JAX + Pallas stack:
+//! Python/JAX/Pallas author and AOT-lower the demonstration models at build
+//! time (`make artifacts`), and everything at inference time — the compiler,
+//! the executors, the scheduler simulator, and the PJRT serving loop — is
+//! Rust. See `DESIGN.md` for the full system inventory and the
+//! per-experiment index mapping every paper table/figure to a bench target.
+//!
+//! ## Module map
+//!
+//! | layer | modules |
+//! |---|---|
+//! | substrates | [`util`], [`tensor`] |
+//! | graph IR + model zoo | [`graph`] |
+//! | high-level opt | [`rewrite`], [`fusion`] |
+//! | model opt | [`pruning`], [`fkw`] |
+//! | low-level opt | [`codegen`], [`deepreuse`], [`exec`] |
+//! | device models | [`cost`], [`baselines`] |
+//! | co-search | [`caps`] |
+//! | runtime | [`xengine`], [`runtime`], [`coordinator`] |
+
+pub mod util;
+pub mod tensor;
+pub mod graph;
+pub mod rewrite;
+pub mod fusion;
+pub mod pruning;
+pub mod fkw;
+pub mod codegen;
+pub mod deepreuse;
+pub mod exec;
+pub mod cost;
+pub mod baselines;
+pub mod caps;
+pub mod xengine;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate version string used by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

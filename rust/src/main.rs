@@ -1,0 +1,228 @@
+//! `xgen` CLI — the leader entrypoint over the whole stack.
+//!
+//! ```text
+//! xgen models                                   list the model zoo
+//! xgen compile --model resnet-50 [--scheme pattern|block|none]
+//! xgen sched [--variant ADy416] [--horizon 3000]    Table 5 simulation
+//! xgen caps [--budget 8.0]                      NPAS co-search
+//! xgen emit-kernel [--pattern 0] [--unroll 4]   generated pattern kernel
+//! xgen run --artifact cnn_dense_b1              one PJRT inference
+//! xgen serve [--requests 64]                    batched serving demo
+//! ```
+
+use anyhow::Result;
+
+use xgen::baselines::{DeviceClass, Framework};
+use xgen::caps::{search, CapsConfig};
+use xgen::coordinator::{compile, Server};
+use xgen::cost::devices;
+use xgen::graph::zoo::{all_models, by_name};
+use xgen::graph::WeightStore;
+use xgen::pruning::PruneScheme;
+use xgen::runtime::{default_artifact_dir, ModelRuntime};
+use xgen::util::cli::Args;
+use xgen::util::rng::Rng;
+use xgen::xengine::adapp::{modules, variants};
+use xgen::xengine::sim::simulate;
+use xgen::xengine::Policy;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_str() {
+        "models" => cmd_models(),
+        "compile" => cmd_compile(&args),
+        "sched" => cmd_sched(&args),
+        "caps" => cmd_caps(&args),
+        "emit-kernel" => cmd_emit(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "\
+xgen — CoCoPIE XGen reproduction (see DESIGN.md)
+  models        list the model zoo with params/MACs
+  compile       run the full pipeline on a zoo model
+  sched         XEngine Table-5 scheduler simulation
+  caps          NPAS architecture/pruning co-search
+  emit-kernel   print a generated branch-less pattern kernel
+  run           execute one AOT artifact via PJRT
+  serve         dynamic-batching serving demo over PJRT
+";
+
+fn cmd_models() -> Result<()> {
+    for name in all_models() {
+        println!("{}", by_name(name, 1).summary());
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "resnet-50");
+    let scheme = match args.opt_or("scheme", "pattern") {
+        "none" => PruneScheme::None,
+        "block" => PruneScheme::Block { block: 8, rate: 0.75 },
+        "structured" => PruneScheme::Structured { rate: 0.5 },
+        _ => PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 },
+    };
+    let g = by_name(model, args.opt_usize("batch", 1));
+    let ops = g.operator_count();
+    let mut rng = Rng::new(args.opt_u64("seed", 7));
+    let mut ws = WeightStore::init_random(&g, &mut rng);
+    let c = compile(g, Some(&mut ws), scheme);
+    println!("model: {}", c.graph.summary());
+    println!(
+        "rewrite: {} ops -> {} ({} rule hits)",
+        ops,
+        c.rewrite_stats.ops_after,
+        c.rewrite_stats.total_hits()
+    );
+    if let Some(r) = &c.prune_report {
+        println!(
+            "prune[{}]: sparsity {:.1}%, {} layers, effective MACs {:.2}G",
+            c.scheme.name(),
+            r.sparsity * 100.0,
+            r.layers_pruned,
+            r.effective_macs as f64 / 1e9
+        );
+    }
+    println!(
+        "fusion: {} fused layers (max group {}), {:.1} KB intermediate traffic saved",
+        c.plan.fused_layer_count(),
+        c.plan.max_group(),
+        c.plan.bytes_saved(&c.graph) as f64 / 1024.0
+    );
+    for (fw, class, dev) in [
+        (Framework::Mnn, DeviceClass::MobileCpu, devices::s10_cpu()),
+        (Framework::XGenFull, DeviceClass::MobileCpu, devices::s10_cpu()),
+        (Framework::XGenFull, DeviceClass::MobileGpu, devices::s10_gpu()),
+    ] {
+        if let Some(ms) = c.latency_ms(&dev, fw, class) {
+            println!("latency[{} on {}]: {:.1} ms", fw.name(), dev.name, ms);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sched(args: &Args) -> Result<()> {
+    let want = args.opt_or("variant", "all");
+    let horizon = args.opt_f64("horizon", 3000.0);
+    for v in variants() {
+        if want != "all" && v.name != want {
+            continue;
+        }
+        println!("== {} ==", v.name);
+        let mods = modules(v);
+        for p in Policy::all() {
+            let r = simulate(v.name, &mods, p, horizon, 0xCE01);
+            let worst = r.worst_miss_rate();
+            print!("{:45} miss {:>5.1}% |", p.name(), worst * 100.0);
+            for m in &r.modules {
+                if m.name == "percept_postproc" {
+                    continue;
+                }
+                if m.timed_out() {
+                    print!(" {}=∞", m.name);
+                } else {
+                    print!(" {}={:.0}±{:.0}", m.name, m.mean(), m.std());
+                }
+            }
+            println!();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_caps(args: &Args) -> Result<()> {
+    let cfg = CapsConfig {
+        latency_budget_ms: args.opt("budget").and_then(|b| b.parse().ok()),
+        iterations: args.opt_usize("iters", 12),
+        population: args.opt_usize("pop", 8),
+        seed: args.opt_u64("seed", 0xCA95),
+    };
+    let r = search(&cfg, &devices::s10_cpu());
+    println!("evaluated {} candidates; frontier:", r.evaluated);
+    for e in &r.frontier {
+        println!(
+            "  {:6.2} ms  acc {:5.2}%  {:.2}G MACs  [{} w={} d={}]",
+            e.latency_ms,
+            e.accuracy,
+            e.macs as f64 / 1e9,
+            e.cand.scheme.name(),
+            e.cand.width,
+            e.cand.depth
+        );
+    }
+    if let Some(best) = &r.best_in_budget {
+        println!("best in budget: {:.2} ms @ {:.2}%", best.latency_ms, best.accuracy);
+    }
+    Ok(())
+}
+
+fn cmd_emit(args: &Args) -> Result<()> {
+    use xgen::pruning::pattern::PatternSet;
+    let set = PatternSet::elite8();
+    let idx = args.opt_usize("pattern", 0).min(set.len() - 1);
+    let unroll = args.opt_usize("unroll", 4);
+    print!("{}", xgen::codegen::emit_kernel_source(set.patterns[idx], unroll));
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name = args.opt_or("artifact", "cnn_dense_b1");
+    let mut rt = ModelRuntime::open(default_artifact_dir())?;
+    println!("platform: {}", rt.platform());
+    let m = rt.load(name)?;
+    let n: usize = m.input_shape.iter().product();
+    let mut rng = Rng::new(args.opt_u64("seed", 1));
+    let x: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let t0 = std::time::Instant::now();
+    let y = m.run(&x)?;
+    println!(
+        "{name}: input {:?} -> {} outputs in {:.2} ms",
+        m.input_shape,
+        y.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!("head: {:?}", &y[..y.len().min(8)]);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.opt_usize("requests", 64);
+    let server = Server::start(
+        default_artifact_dir(),
+        "cnn_dense_b1",
+        "cnn_dense_b4",
+        std::time::Duration::from_millis(args.opt_u64("max-wait-ms", 2)),
+    )?;
+    let mut rng = Rng::new(9);
+    let per = 3 * 24 * 24;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| server.submit((0..per).map(|_| rng.f32()).collect()))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().map_err(anyhow::Error::msg)?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = server.stats();
+    let s = st.summary().unwrap();
+    println!(
+        "{n} requests in {:.1} ms: {:.0} req/s, mean batch {:.2}, p50 {:.2} ms, p95 {:.2} ms",
+        wall * 1e3,
+        n as f64 / wall,
+        st.mean_batch(),
+        s.p50,
+        s.p95
+    );
+    Ok(())
+}

@@ -1,0 +1,276 @@
+//! Block-based pruning (§2.1.2, Figs 5–7): partition a weight matrix (the
+//! GEMM form of any CONV/FC/attention layer) into `br×bc` blocks and apply
+//! *independent* column pruning and row pruning inside each block. Whole-
+//! matrix blocks degenerate to coarse structured pruning; tiny blocks
+//! approach non-structured pruning — Fig 6 sweeps exactly this knob.
+//! 3-D convolutions reduce to the same GEMM matrix (Fig 7), so this module
+//! covers them too.
+
+use crate::tensor::Tensor;
+
+/// Block pruning configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockPruneConfig {
+    /// Block height (rows per block); `usize::MAX` = whole matrix.
+    pub block_rows: usize,
+    /// Block width (columns per block); `usize::MAX` = whole matrix.
+    pub block_cols: usize,
+    /// Target fraction of weights removed (e.g. 6× pruning → 1 - 1/6).
+    pub prune_rate: f64,
+}
+
+impl BlockPruneConfig {
+    /// The paper's "uniform 6× pruning rate".
+    pub fn six_x(block: usize) -> BlockPruneConfig {
+        BlockPruneConfig { block_rows: block, block_cols: block, prune_rate: 1.0 - 1.0 / 6.0 }
+    }
+}
+
+/// The row/column keep-masks per block, from which both the pruned matrix
+/// and the compact execution format are derived.
+#[derive(Debug, Clone)]
+pub struct BlockMask {
+    pub rows: usize,
+    pub cols: usize,
+    pub block_rows: usize,
+    pub block_cols: usize,
+    /// keep[r][c] for the full matrix (expanded form).
+    keep: Vec<bool>,
+}
+
+impl BlockMask {
+    pub fn keeps(&self, r: usize, c: usize) -> bool {
+        self.keep[r * self.cols + c]
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        let kept = self.keep.iter().filter(|&&k| k).count();
+        1.0 - kept as f64 / self.keep.len() as f64
+    }
+
+    /// Apply to a matrix tensor `[rows, cols]`.
+    pub fn apply(&self, m: &Tensor) -> Tensor {
+        assert_eq!(m.shape(), &[self.rows, self.cols]);
+        let mut out = m.clone();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if !self.keeps(r, c) {
+                    out.set(&[r, c], 0.0);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Compute the block row/column pruning mask for matrix `m` ([rows, cols]):
+/// within each block, rows and columns are ranked by L2 norm and the
+/// weakest are dropped; the split between row- and column-pruning is chosen
+/// per block to maximize retained energy at the target rate.
+pub fn block_prune(m: &Tensor, cfg: &BlockPruneConfig) -> BlockMask {
+    assert_eq!(m.rank(), 2, "block pruning works on the GEMM matrix form");
+    let (rows, cols) = (m.shape()[0], m.shape()[1]);
+    let br = cfg.block_rows.min(rows).max(1);
+    let bc = cfg.block_cols.min(cols).max(1);
+    let mut keep = vec![true; rows * cols];
+
+    for r0 in (0..rows).step_by(br) {
+        for c0 in (0..cols).step_by(bc) {
+            let rh = br.min(rows - r0);
+            let cw = bc.min(cols - c0);
+            // Row and column energies within the block.
+            let mut row_e = vec![0.0f64; rh];
+            let mut col_e = vec![0.0f64; cw];
+            for r in 0..rh {
+                for c in 0..cw {
+                    let v = m.at(&[r0 + r, c0 + c]) as f64;
+                    row_e[r] += v * v;
+                    col_e[c] += v * v;
+                }
+            }
+            // Choose (#rows cut, #cols cut) maximizing retained energy under
+            // the rate constraint: kept_fraction = (1-ra)(1-ca) where ra,ca
+            // are the cut fractions. Enumerate row cuts; derive column cuts.
+            let target_keep = 1.0 - cfg.prune_rate;
+            let mut ranked_rows: Vec<usize> = (0..rh).collect();
+            ranked_rows.sort_by(|&a, &b| row_e[a].partial_cmp(&row_e[b]).unwrap());
+            let mut ranked_cols: Vec<usize> = (0..cw).collect();
+            ranked_cols.sort_by(|&a, &b| col_e[a].partial_cmp(&col_e[b]).unwrap());
+            let total_e: f64 = row_e.iter().sum();
+
+            let mut best = (f64::NEG_INFINITY, 0usize, 0usize);
+            for rcut in 0..rh {
+                let rows_kept = rh - rcut;
+                // Columns to cut so that kept fraction <= target.
+                let need_cols_kept =
+                    ((target_keep * (rh * cw) as f64) / rows_kept as f64).floor() as usize;
+                let cols_kept = need_cols_kept.min(cw);
+                if cols_kept == 0 {
+                    continue;
+                }
+                let ccut = cw - cols_kept;
+                // Retained energy estimate: energy of kept rows × fraction
+                // of kept column energy.
+                let kept_row_e: f64 = ranked_rows[rcut..].iter().map(|&r| row_e[r]).sum();
+                let kept_col_e: f64 = ranked_cols[ccut..].iter().map(|&c| col_e[c]).sum();
+                let score = if total_e > 0.0 {
+                    kept_row_e / total_e.max(1e-12) * (kept_col_e / total_e.max(1e-12))
+                } else {
+                    0.0
+                };
+                if score > best.0 {
+                    best = (score, rcut, ccut);
+                }
+            }
+            let (_, rcut, ccut) = best;
+            for &r in ranked_rows.iter().take(rcut) {
+                for c in 0..cw {
+                    keep[(r0 + r) * cols + (c0 + c)] = false;
+                }
+            }
+            for &c in ranked_cols.iter().take(ccut) {
+                for r in 0..rh {
+                    keep[(r0 + r) * cols + (c0 + c)] = false;
+                }
+            }
+        }
+    }
+    BlockMask { rows, cols, block_rows: br, block_cols: bc, keep }
+}
+
+/// Non-structured magnitude pruning baseline (Fig 6 leftmost point): keep
+/// the largest-magnitude `1-rate` fraction of individual weights.
+pub fn magnitude_prune(m: &Tensor, rate: f64) -> BlockMask {
+    assert_eq!(m.rank(), 2);
+    let (rows, cols) = (m.shape()[0], m.shape()[1]);
+    let mut idx: Vec<usize> = (0..rows * cols).collect();
+    idx.sort_by(|&a, &b| {
+        m.data()[a]
+            .abs()
+            .partial_cmp(&m.data()[b].abs())
+            .unwrap()
+    });
+    let cut = (idx.len() as f64 * rate).round() as usize;
+    let mut keep = vec![true; rows * cols];
+    for &i in idx.iter().take(cut) {
+        keep[i] = false;
+    }
+    BlockMask { rows, cols, block_rows: 1, block_cols: 1, keep }
+}
+
+/// Reshape an OIHW (or OIDHW) conv weight to its GEMM matrix [O, I*K...].
+pub fn conv_weight_as_matrix(w: &Tensor) -> Tensor {
+    assert!(w.rank() >= 2);
+    let o = w.shape()[0];
+    let rest: usize = w.shape()[1..].iter().product();
+    w.reshape(&[o, rest])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rate_respected_within_tolerance() {
+        forall("block prune hits target rate", 20, |rng| {
+            let rows = 8 + rng.below(32);
+            let cols = 8 + rng.below(32);
+            let m = Tensor::randn(&[rows, cols], 1.0, rng);
+            let block = *rng.choose(&[4usize, 8, 16]);
+            let cfg = BlockPruneConfig { block_rows: block, block_cols: block, prune_rate: 0.75 };
+            let mask = block_prune(&m, &cfg);
+            let s = mask.sparsity();
+            assert!(s >= 0.70 && s <= 0.95, "sparsity {s} for target 0.75");
+        });
+    }
+
+    #[test]
+    fn whole_matrix_block_prunes_full_rows_or_cols() {
+        let mut rng = Rng::new(7);
+        let m = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let cfg = BlockPruneConfig {
+            block_rows: usize::MAX,
+            block_cols: usize::MAX,
+            prune_rate: 0.5,
+        };
+        let mask = block_prune(&m, &cfg);
+        // The survivor set must be rectangular: keep = row_keep ⊗ col_keep.
+        let row_keep: Vec<bool> =
+            (0..16).map(|r| (0..16).any(|c| mask.keeps(r, c))).collect();
+        let col_keep: Vec<bool> =
+            (0..16).map(|c| (0..16).any(|r| mask.keeps(r, c))).collect();
+        for r in 0..16 {
+            for c in 0..16 {
+                assert_eq!(
+                    mask.keeps(r, c),
+                    row_keep[r] && col_keep[c],
+                    "non-rectangular survivors at ({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn magnitude_prune_keeps_largest() {
+        let m = Tensor::from_vec(&[2, 2], vec![0.1, -5.0, 3.0, 0.2]);
+        let mask = magnitude_prune(&m, 0.5);
+        assert!(!mask.keeps(0, 0));
+        assert!(mask.keeps(0, 1));
+        assert!(mask.keeps(1, 0));
+        assert!(!mask.keeps(1, 1));
+    }
+
+    #[test]
+    fn block_prune_retains_more_energy_than_structured() {
+        // Key Fig 6 mechanism: at equal rate, smaller blocks retain >= the
+        // energy of whole-matrix (structured) pruning.
+        forall("blocks retain >= structured energy", 12, |rng| {
+            let m = Tensor::randn(&[32, 32], 1.0, rng);
+            let rate = 1.0 - 1.0 / 6.0;
+            let fine = block_prune(&m, &BlockPruneConfig { block_rows: 4, block_cols: 4, prune_rate: rate });
+            let coarse = block_prune(
+                &m,
+                &BlockPruneConfig { block_rows: usize::MAX, block_cols: usize::MAX, prune_rate: rate },
+            );
+            let e = |mask: &BlockMask| -> f64 {
+                let t = mask.apply(&m);
+                t.data().iter().map(|&v| (v * v) as f64).sum()
+            };
+            assert!(
+                e(&fine) >= e(&coarse) * 0.98,
+                "fine {} < coarse {}",
+                e(&fine),
+                e(&coarse)
+            );
+        });
+    }
+
+    #[test]
+    fn conv_weight_matrix_shape() {
+        let w = Tensor::zeros(&[8, 4, 3, 3]);
+        let m = conv_weight_as_matrix(&w);
+        assert_eq!(m.shape(), &[8, 36]);
+        // 3-D conv weight reduces the same way (Fig 7).
+        let w3 = Tensor::zeros(&[8, 4, 3, 3, 3]);
+        assert_eq!(conv_weight_as_matrix(&w3).shape(), &[8, 108]);
+    }
+
+    #[test]
+    fn apply_zeroes_only_pruned() {
+        let mut rng = Rng::new(9);
+        let m = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let mask = block_prune(&m, &BlockPruneConfig::six_x(4));
+        let pruned = mask.apply(&m);
+        for r in 0..8 {
+            for c in 0..8 {
+                if mask.keeps(r, c) {
+                    assert_eq!(pruned.at(&[r, c]), m.at(&[r, c]));
+                } else {
+                    assert_eq!(pruned.at(&[r, c]), 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! Pattern-based pruning (§2.1.1, Fig 4): every 3×3 kernel keeps exactly 4
+//! weights, and the surviving positions must form one of a small set of
+//! pre-defined *patterns*. The fixed pattern vocabulary is what makes the
+//! sparsity compiler-friendly: the code generator emits one branch-less
+//! unrolled body per pattern (see [`crate::fkw`] and [`crate::codegen`]).
+
+use crate::tensor::Tensor;
+
+/// A 4-entry pattern over a 3×3 kernel: a 9-bit mask with popcount 4.
+/// Bit i corresponds to kernel position (i/3, i%3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Pattern(pub u16);
+
+impl Pattern {
+    pub const ENTRIES: usize = 4;
+
+    pub fn new(mask: u16) -> Pattern {
+        assert_eq!(mask & !0x1FF, 0, "mask beyond 9 bits");
+        assert_eq!(mask.count_ones(), Self::ENTRIES as u32, "pattern must keep 4 entries");
+        Pattern(mask)
+    }
+
+    pub fn keeps(&self, pos: usize) -> bool {
+        debug_assert!(pos < 9);
+        self.0 >> pos & 1 == 1
+    }
+
+    /// Kept positions in ascending order (always 4 of them).
+    pub fn positions(&self) -> [usize; 4] {
+        let mut out = [0usize; 4];
+        let mut j = 0;
+        for pos in 0..9 {
+            if self.keeps(pos) {
+                out[j] = pos;
+                j += 1;
+            }
+        }
+        debug_assert_eq!(j, 4);
+        out
+    }
+}
+
+/// The pattern vocabulary used by the compiler. PatDNN-style *elite*
+/// sets: all patterns keep the central weight (position 4) — consistent
+/// with the paper's observation that good patterns resemble Gaussian
+/// filters around the kernel center — plus 3 of the 8 surrounding
+/// positions.
+#[derive(Debug, Clone)]
+pub struct PatternSet {
+    pub patterns: Vec<Pattern>,
+}
+
+impl PatternSet {
+    /// The canonical 8-pattern elite set (center + 3 neighbours forming an
+    /// L/T around the center, one per orientation).
+    pub fn elite8() -> PatternSet {
+        // Positions: 0 1 2 / 3 4 5 / 6 7 8, center = 4.
+        let masks: [[usize; 4]; 8] = [
+            [1, 3, 4, 0], // top-left elbow
+            [1, 5, 4, 2], // top-right elbow
+            [3, 7, 4, 6], // bottom-left elbow
+            [5, 7, 4, 8], // bottom-right elbow
+            [1, 3, 4, 5], // T up
+            [3, 7, 4, 5], // T down... (orientations of a 3-neighbour tee)
+            [1, 4, 7, 3], // T left
+            [1, 4, 7, 5], // T right
+        ];
+        let patterns = masks
+            .iter()
+            .map(|ps| {
+                let mut m = 0u16;
+                for &p in ps {
+                    m |= 1 << p;
+                }
+                Pattern::new(m)
+            })
+            .collect();
+        PatternSet { patterns }
+    }
+
+    /// Smaller 4-pattern set (tighter vocabulary = more reorder benefit,
+    /// slightly worse accuracy; CAPS searches over this knob).
+    pub fn elite4() -> PatternSet {
+        PatternSet { patterns: PatternSet::elite8().patterns[..4].to_vec() }
+    }
+
+    /// Select the `n` most valuable patterns for a concrete weight tensor:
+    /// rank all 126 4-of-9 masks by total preserved magnitude over every
+    /// kernel, greedily keep the top `n` (the "extended ADMM-based
+    /// framework" searches this space; magnitude ranking is its first
+    /// phase).
+    pub fn select_for(weights: &Tensor, n: usize) -> PatternSet {
+        assert_eq!(weights.rank(), 4);
+        assert_eq!(weights.shape()[2], 3);
+        assert_eq!(weights.shape()[3], 3);
+        let mut scores: Vec<(f64, u16)> = all_4of9()
+            .into_iter()
+            .map(|m| (0.0f64, m))
+            .collect();
+        let (o, i) = (weights.shape()[0], weights.shape()[1]);
+        for f in 0..o {
+            for c in 0..i {
+                let k = kernel9(weights, f, c);
+                for (score, mask) in scores.iter_mut() {
+                    let mut s = 0.0;
+                    for pos in 0..9 {
+                        if *mask >> pos & 1 == 1 {
+                            s += (k[pos] * k[pos]) as f64;
+                        }
+                    }
+                    *score += s;
+                }
+            }
+        }
+        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        PatternSet {
+            patterns: scores.into_iter().take(n).map(|(_, m)| Pattern::new(m)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.patterns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.patterns.is_empty()
+    }
+}
+
+/// All C(9,4)=126 4-entry masks.
+pub fn all_4of9() -> Vec<u16> {
+    let mut v = Vec::with_capacity(126);
+    for m in 0u16..512 {
+        if m.count_ones() == 4 {
+            v.push(m);
+        }
+    }
+    v
+}
+
+/// Per-kernel pattern assignment for an OIHW conv weight (3×3 kernels):
+/// `assignment[f][c]` = index into the pattern set.
+#[derive(Debug, Clone)]
+pub struct PatternAssignment {
+    pub set: PatternSet,
+    pub assignment: Vec<Vec<usize>>,
+    /// Kernels removed entirely by connectivity pruning (f, c).
+    pub pruned_kernels: Vec<Vec<bool>>,
+}
+
+impl PatternAssignment {
+    /// Pattern of kernel (f, c).
+    pub fn pattern(&self, f: usize, c: usize) -> Pattern {
+        self.set.patterns[self.assignment[f][c]]
+    }
+
+    pub fn is_kernel_pruned(&self, f: usize, c: usize) -> bool {
+        self.pruned_kernels[f][c]
+    }
+
+    /// Overall weight sparsity achieved (fraction zeroed).
+    pub fn sparsity(&self) -> f64 {
+        let total: usize = self.assignment.iter().map(|r| r.len() * 9).sum();
+        let mut kept = 0usize;
+        for (f, row) in self.assignment.iter().enumerate() {
+            for (c, _) in row.iter().enumerate() {
+                if !self.pruned_kernels[f][c] {
+                    kept += 4;
+                }
+            }
+        }
+        1.0 - kept as f64 / total as f64
+    }
+}
+
+fn kernel9(w: &Tensor, f: usize, c: usize) -> [f32; 9] {
+    let mut k = [0.0f32; 9];
+    for y in 0..3 {
+        for x in 0..3 {
+            k[y * 3 + x] = w.at(&[f, c, y, x]);
+        }
+    }
+    k
+}
+
+/// Assign each kernel the pattern preserving the most energy (squared
+/// magnitude) — the projection step of the ADMM framework.
+pub fn assign_patterns(weights: &Tensor, set: &PatternSet) -> PatternAssignment {
+    assert_eq!(weights.rank(), 4, "OIHW expected");
+    assert_eq!(weights.shape()[2], 3, "pattern pruning needs 3x3 kernels");
+    assert_eq!(weights.shape()[3], 3);
+    let (o, i) = (weights.shape()[0], weights.shape()[1]);
+    let mut assignment = vec![vec![0usize; i]; o];
+    for f in 0..o {
+        for c in 0..i {
+            let k = kernel9(weights, f, c);
+            let mut best = (f64::NEG_INFINITY, 0usize);
+            for (pi, p) in set.patterns.iter().enumerate() {
+                let s: f64 = p
+                    .positions()
+                    .iter()
+                    .map(|&pos| (k[pos] * k[pos]) as f64)
+                    .sum();
+                if s > best.0 {
+                    best = (s, pi);
+                }
+            }
+            assignment[f][c] = best.1;
+        }
+    }
+    PatternAssignment {
+        set: set.clone(),
+        assignment,
+        pruned_kernels: vec![vec![false; i]; o],
+    }
+}
+
+/// Connectivity pruning (Fig 4b): additionally remove whole kernels with
+/// the smallest post-pattern energy until `rate` of kernels are cut.
+pub fn connectivity_prune(weights: &Tensor, asg: &mut PatternAssignment, rate: f64) {
+    assert!((0.0..1.0).contains(&rate));
+    let (o, i) = (weights.shape()[0], weights.shape()[1]);
+    let mut energies: Vec<(f64, usize, usize)> = Vec::with_capacity(o * i);
+    for f in 0..o {
+        for c in 0..i {
+            let k = kernel9(weights, f, c);
+            let p = asg.pattern(f, c);
+            let e: f64 = p.positions().iter().map(|&pos| (k[pos] * k[pos]) as f64).sum();
+            energies.push((e, f, c));
+        }
+    }
+    energies.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let cut = (energies.len() as f64 * rate).round() as usize;
+    for &(_, f, c) in energies.iter().take(cut) {
+        asg.pruned_kernels[f][c] = true;
+    }
+}
+
+/// Materialize the assignment: zero all weights outside their kernel's
+/// pattern (and whole kernels cut by connectivity pruning).
+pub fn apply_assignment(weights: &Tensor, asg: &PatternAssignment) -> Tensor {
+    let mut out = weights.clone();
+    let (o, i) = (weights.shape()[0], weights.shape()[1]);
+    for f in 0..o {
+        for c in 0..i {
+            let p = asg.pattern(f, c);
+            for pos in 0..9 {
+                let zero = asg.is_kernel_pruned(f, c) || !p.keeps(pos);
+                if zero {
+                    out.set(&[f, c, pos / 3, pos % 3], 0.0);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_4of9_has_126_masks() {
+        assert_eq!(all_4of9().len(), 126);
+    }
+
+    #[test]
+    fn elite_sets_keep_center() {
+        for p in PatternSet::elite8().patterns {
+            assert!(p.keeps(4), "pattern {:#b} drops the center", p.0);
+        }
+        assert_eq!(PatternSet::elite4().len(), 4);
+    }
+
+    #[test]
+    fn assignment_preserves_best_energy() {
+        forall("pattern choice maximizes preserved energy", 24, |rng| {
+            let w = Tensor::randn(&[2, 3, 3, 3], 1.0, rng);
+            let set = PatternSet::elite8();
+            let asg = assign_patterns(&w, &set);
+            let pruned = apply_assignment(&w, &asg);
+            // Chosen pattern's preserved energy >= any other pattern's.
+            for f in 0..2 {
+                for c in 0..3 {
+                    let kept: f64 = (0..9)
+                        .map(|pos| {
+                            let v = pruned.at(&[f, c, pos / 3, pos % 3]);
+                            (v * v) as f64
+                        })
+                        .sum();
+                    for p in &set.patterns {
+                        let alt: f64 = p
+                            .positions()
+                            .iter()
+                            .map(|&pos| {
+                                let v = w.at(&[f, c, pos / 3, pos % 3]);
+                                (v * v) as f64
+                            })
+                            .sum();
+                        assert!(kept >= alt - 1e-9, "suboptimal pattern chosen");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pattern_sparsity_is_5_of_9() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&[8, 4, 3, 3], 1.0, &mut rng);
+        let asg = assign_patterns(&w, &PatternSet::elite8());
+        let pruned = apply_assignment(&w, &asg);
+        let zf = pruned.zero_fraction();
+        assert!((zf - 5.0 / 9.0).abs() < 1e-6, "zero fraction {zf}");
+        assert!((asg.sparsity() - 5.0 / 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn connectivity_adds_sparsity() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[8, 8, 3, 3], 1.0, &mut rng);
+        let mut asg = assign_patterns(&w, &PatternSet::elite8());
+        connectivity_prune(&w, &mut asg, 0.5);
+        let pruned = apply_assignment(&w, &asg);
+        // 50% kernels fully cut: sparsity = 5/9 + 0.5*4/9 = 7/9.
+        assert!((pruned.zero_fraction() - 7.0 / 9.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn select_for_prefers_high_energy_positions() {
+        // Construct weights whose energy is concentrated in positions
+        // {0,1,3,4}; the top selected pattern must be exactly that mask.
+        let mut w = Tensor::zeros(&[4, 4, 3, 3]);
+        for f in 0..4 {
+            for c in 0..4 {
+                for &pos in &[0usize, 1, 3, 4] {
+                    w.set(&[f, c, pos / 3, pos % 3], 1.0);
+                }
+            }
+        }
+        let set = PatternSet::select_for(&w, 1);
+        let expect = Pattern::new(1 << 0 | 1 << 1 | 1 << 3 | 1 << 4);
+        assert_eq!(set.patterns[0], expect);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pattern_rejects_wrong_popcount() {
+        Pattern::new(0b111);
+    }
+}

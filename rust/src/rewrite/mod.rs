@@ -1,0 +1,211 @@
+//! Mathematical-property-based computational-graph rewriting (§2.2.1,
+//! Fig 9). Strength reduction lifted from scalars to tensor operators:
+//! the pass (1) removes unnecessary operations, (2) eliminates redundant
+//! intermediate copies, and (3) replaces costly operator combinations with
+//! cheaper ones, using associativity / distributivity / commutativity of
+//! the underlying linear algebra. Crucially (and unlike TASO-style
+//! superoptimizers) the rule set is chosen to *set up the subsequent
+//! fusion pass*: movement ops are commuted out of elementwise chains and
+//! constant subgraphs are folded so DNNFusion sees longer fusable spans.
+//!
+//! Rules are applied to fixpoint. When a [`WeightStore`] is supplied the
+//! weight-folding rules (BN→conv, dense·dense, conv+conv distributivity)
+//! also rewrite the concrete weights so numerics are preserved — the
+//! property tests in `rust/tests/pipeline_semantics.rs` check rewritten
+//! graphs against the originals on real tensors.
+
+pub mod rules;
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Graph, NodeId, OpKind, WeightStore};
+
+/// Statistics from one rewriting run (per-rule hit counts).
+#[derive(Debug, Clone, Default)]
+pub struct RewriteStats {
+    pub hits: BTreeMap<&'static str, usize>,
+    pub ops_before: usize,
+    pub ops_after: usize,
+}
+
+impl RewriteStats {
+    pub fn total_hits(&self) -> usize {
+        self.hits.values().sum()
+    }
+}
+
+/// Configuration: individual rule toggles (ablations flip these).
+#[derive(Debug, Clone)]
+pub struct RewriteConfig {
+    /// Identity elimination (reshape-to-same-shape, upsample ×1, scale-by-1
+    /// style no-ops) — "remove unnecessary operations".
+    pub eliminate_identity: bool,
+    /// Collapse movement-op chains (transpose∘transpose, reshape∘reshape) —
+    /// "eliminate redundant intermediate data copies".
+    pub collapse_movement: bool,
+    /// Associativity: fold adjacent weight-only linear ops (dense·dense,
+    /// bn/scale into conv) — "replace costly combinations with cheaper ones".
+    pub fold_linear: bool,
+    /// Distributivity: conv(x,W1)+conv(x,W2) → conv(x,W1+W2); shared
+    /// subexpression discovery on weight-side combos.
+    pub distribute: bool,
+    /// Commutativity: swap elementwise past movement ops so elementwise
+    /// chains stay adjacent to their Many-to-Many producer for fusion.
+    pub commute_movement: bool,
+    /// Constant subgraph folding (e.g. Sqrt over a weight scalar).
+    pub fold_constants: bool,
+    /// Maximum fixpoint iterations.
+    pub max_passes: usize,
+}
+
+impl Default for RewriteConfig {
+    fn default() -> Self {
+        RewriteConfig {
+            eliminate_identity: true,
+            collapse_movement: true,
+            fold_linear: true,
+            distribute: true,
+            commute_movement: true,
+            fold_constants: true,
+            max_passes: 12,
+        }
+    }
+}
+
+impl RewriteConfig {
+    /// Everything off — the "no rewriting" baseline.
+    pub fn disabled() -> Self {
+        RewriteConfig {
+            eliminate_identity: false,
+            collapse_movement: false,
+            fold_linear: false,
+            distribute: false,
+            commute_movement: false,
+            fold_constants: false,
+            max_passes: 0,
+        }
+    }
+}
+
+/// Run the rewriting pass over `g` to fixpoint. `ws` (optional) receives
+/// the weight-folding updates that keep numerics identical.
+pub fn rewrite(g: &mut Graph, mut ws: Option<&mut WeightStore>, cfg: &RewriteConfig) -> RewriteStats {
+    let mut stats = RewriteStats {
+        ops_before: g.operator_count(),
+        ..Default::default()
+    };
+    for _ in 0..cfg.max_passes {
+        let mut changed = 0usize;
+        if cfg.fold_constants {
+            changed += count(&mut stats, "fold_constants", rules::fold_constants(g, ws.as_deref_mut()));
+        }
+        if cfg.eliminate_identity {
+            changed += count(&mut stats, "eliminate_identity", rules::eliminate_identity(g));
+        }
+        if cfg.collapse_movement {
+            changed += count(&mut stats, "collapse_movement", rules::collapse_movement(g));
+        }
+        if cfg.commute_movement {
+            changed += count(&mut stats, "commute_movement", rules::commute_movement(g));
+        }
+        if cfg.fold_linear {
+            changed += count(&mut stats, "fold_linear", rules::fold_linear(g, ws.as_deref_mut()));
+        }
+        if cfg.distribute {
+            changed += count(&mut stats, "distribute", rules::distribute(g, ws.as_deref_mut()));
+        }
+        if changed == 0 {
+            break;
+        }
+        g.prune_dead();
+    }
+    g.prune_dead();
+    stats.ops_after = g.operator_count();
+    stats
+}
+
+fn count(stats: &mut RewriteStats, rule: &'static str, n: usize) -> usize {
+    if n > 0 {
+        *stats.hits.entry(rule).or_insert(0) += n;
+    }
+    n
+}
+
+/// Redirect every use of `old` to `new` (including graph outputs).
+pub(crate) fn replace_uses(g: &mut Graph, old: NodeId, new: NodeId) {
+    for n in g.nodes.iter_mut() {
+        for i in n.inputs.iter_mut() {
+            if *i == old {
+                *i = new;
+            }
+        }
+    }
+    for o in g.outputs.iter_mut() {
+        if *o == old {
+            *o = new;
+        }
+    }
+}
+
+/// True if `id` is a weight node.
+pub(crate) fn is_weight(g: &Graph, id: NodeId) -> bool {
+    matches!(g.node(id).op, OpKind::Weight)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo::{nlp, NetBuilder};
+    use crate::graph::Act;
+
+    #[test]
+    fn disabled_config_is_identity() {
+        let mut g = nlp::gpt2_frontend_layers(1, 1);
+        let before = g.operator_count();
+        let stats = rewrite(&mut g, None, &RewriteConfig::disabled());
+        assert_eq!(g.operator_count(), before);
+        assert_eq!(stats.total_hits(), 0);
+    }
+
+    #[test]
+    fn gpt2_frontend_shrinks_substantially() {
+        let mut g = nlp::gpt2_frontend_layers(1, 2);
+        let before = g.operator_count();
+        let stats = rewrite(&mut g, None, &RewriteConfig::default());
+        assert!(g.validate().is_ok(), "{:?}", g.validate());
+        assert!(
+            g.operator_count() < before,
+            "no shrink: {} -> {}",
+            before,
+            g.operator_count()
+        );
+        assert!(stats.total_hits() > 0);
+        // Output shape must be preserved.
+        let out = &g.node(g.outputs[0]).shape;
+        assert_eq!(out, &vec![1, 384, 768]);
+    }
+
+    #[test]
+    fn rewrite_reaches_fixpoint() {
+        let mut g = nlp::gpt2_frontend_layers(1, 1);
+        rewrite(&mut g, None, &RewriteConfig::default());
+        let after1 = g.operator_count();
+        let stats2 = rewrite(&mut g, None, &RewriteConfig::default());
+        assert_eq!(g.operator_count(), after1, "second run changed the graph");
+        assert_eq!(stats2.total_hits(), 0);
+    }
+
+    #[test]
+    fn plain_cnn_unharmed() {
+        // A graph with nothing to rewrite keeps its structure.
+        let mut b = NetBuilder::new("cnn", &[1, 3, 16, 16]);
+        b.conv(8, 3, 1, 1, 1);
+        b.act(Act::Relu);
+        b.conv(8, 3, 1, 1, 1);
+        let mut g = b.finish();
+        let before = g.operator_count();
+        rewrite(&mut g, None, &RewriteConfig::default());
+        assert_eq!(g.operator_count(), before);
+        assert!(g.validate().is_ok());
+    }
+}

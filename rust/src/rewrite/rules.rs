@@ -1,0 +1,541 @@
+//! The individual rewrite rules (Fig 9 of the paper). Each returns the
+//! number of sites rewritten in one sweep.
+//!
+//! All rules mutate nodes *in place* or redirect uses to an earlier node;
+//! they never append nodes, which keeps the graph's topological-id
+//! invariant intact. Dead nodes are swept by `Graph::prune_dead` between
+//! passes.
+//!
+//! Numerics: rules that fold weights take an optional [`WeightStore`]. With
+//! a store, folds update the concrete tensors so the rewritten graph is
+//! bit-compatible up to float reassociation; without one (structural mode,
+//! used by op-count benches) folds still apply but numeric equivalence is
+//! not claimed.
+
+use crate::graph::{Act, Graph, MappingType, NodeId, OpKind, WeightStore};
+
+use super::{is_weight, replace_uses};
+
+/// Rule 1 ("remove unnecessary operations"): bypass structural no-ops.
+pub fn eliminate_identity(g: &mut Graph) -> usize {
+    let mut hits = 0;
+    for id in 0..g.nodes.len() {
+        let n = &g.nodes[id];
+        let bypass = match &n.op {
+            OpKind::Reshape | OpKind::Flatten | OpKind::Pad | OpKind::Slice => {
+                n.inputs.len() == 1 && g.nodes[n.inputs[0]].shape == n.shape
+            }
+            OpKind::Upsample { r: 1 } => true,
+            OpKind::Scale { mul, add } => {
+                n.inputs.len() == 1 && *mul == 1.0 && *add == 0.0
+            }
+            OpKind::Pow { e } => n.inputs.len() == 1 && *e == 1.0,
+            _ => false,
+        };
+        if bypass {
+            let src = g.nodes[id].inputs[0];
+            replace_uses(g, id, src);
+            hits += 1;
+        }
+    }
+    hits
+}
+
+/// Rule 2 ("eliminate redundant intermediate copies"): collapse chains of
+/// movement ops. `transpose∘transpose` that restores the original shape is
+/// treated as identity; `reshape∘reshape` (and flatten variants) keep only
+/// the outer op.
+pub fn collapse_movement(g: &mut Graph) -> usize {
+    let mut hits = 0;
+    let users = g.users();
+    for id in 0..g.nodes.len() {
+        let n = &g.nodes[id];
+        if n.inputs.len() != 1 {
+            continue;
+        }
+        let p = n.inputs[0];
+        let parent = &g.nodes[p];
+        match (&parent.op, &n.op) {
+            // transpose(transpose(x)) == x when the shape round-trips.
+            (OpKind::Transpose, OpKind::Transpose)
+                if users[p].len() == 1 && g.nodes[parent.inputs[0]].shape == n.shape =>
+            {
+                let src = parent.inputs[0];
+                replace_uses(g, id, src);
+                hits += 1;
+            }
+            // reshape/flatten chains: retarget the outer one.
+            (
+                OpKind::Reshape | OpKind::Flatten,
+                OpKind::Reshape | OpKind::Flatten,
+            ) if users[p].len() == 1 => {
+                let src = parent.inputs[0];
+                g.nodes[id].inputs[0] = src;
+                hits += 1;
+            }
+            _ => {}
+        }
+    }
+    hits
+}
+
+/// Rule 3 (commutativity): swap a unary elementwise op below a movement op
+/// (`act(reorganize(x))` → `reorganize(act(x))`) so the elementwise op sits
+/// next to its Many-to-Many producer for the fusion pass.
+pub fn commute_movement(g: &mut Graph) -> usize {
+    let mut hits = 0;
+    let users = g.users();
+    for id in 0..g.nodes.len() {
+        // `id` is the elementwise op, its parent the movement op.
+        let n = &g.nodes[id];
+        let elementwise_unary = matches!(
+            n.op,
+            OpKind::Activation(_) | OpKind::Scale { .. } | OpKind::Pow { .. } | OpKind::Sqrt
+        ) && n.inputs.len() == 1;
+        if !elementwise_unary {
+            continue;
+        }
+        let p = n.inputs[0];
+        let parent = &g.nodes[p];
+        let movement_unary = matches!(
+            parent.op,
+            OpKind::Reshape | OpKind::Transpose | OpKind::Flatten
+        ) && parent.inputs.len() == 1;
+        if !movement_unary || users[p].len() != 1 {
+            continue;
+        }
+        // Only profitable when the movement op's producer is compute
+        // (ManyToMany or OneToOne) — then E lands adjacent to it.
+        let gp = parent.inputs[0];
+        let gp_map = g.nodes[gp].op.mapping();
+        if !matches!(gp_map, MappingType::ManyToMany | MappingType::OneToOne) {
+            continue;
+        }
+        // Swap: parent becomes E over gp (gp's shape); node becomes the
+        // movement op with the original output shape.
+        let e_op = g.nodes[id].op.clone();
+        let m_op = g.nodes[p].op.clone();
+        let gp_shape = g.nodes[gp].shape.clone();
+        g.nodes[p].op = e_op;
+        g.nodes[p].shape = gp_shape;
+        g.nodes[id].op = m_op;
+        hits += 1;
+    }
+    hits
+}
+
+/// Rule 4 (constant folding / strength reduction on constants):
+/// * unary math over a weight → folded into the weight;
+/// * `Div(x, c)` / `Mul(x, c)` with broadcast-constant `c` → `Scale` —
+///   the Fig 9(c) commutative example (division turned into a cheaper
+///   multiply whose constant is precomputed).
+pub fn fold_constants(g: &mut Graph, mut ws: Option<&mut WeightStore>) -> usize {
+    let mut hits = 0;
+    let users = g.users();
+    for id in 0..g.nodes.len() {
+        let n = g.nodes[id].clone();
+        match n.op {
+            // sqrt/pow/scale over a weight: fold into the weight tensor.
+            OpKind::Sqrt | OpKind::Pow { .. } | OpKind::Scale { .. }
+                if n.inputs.len() == 1
+                    && is_weight(g, n.inputs[0])
+                    && users[n.inputs[0]].len() == 1 =>
+            {
+                let wid = n.inputs[0];
+                if let Some(ws) = ws.as_deref_mut() {
+                    let wname = g.nodes[wid].name.clone();
+                    if let Some(t) = ws.get(&wname).cloned() {
+                        let f = |x: f32| -> f32 {
+                            match n.op {
+                                OpKind::Sqrt => x.max(0.0).sqrt(),
+                                OpKind::Pow { e } => x.powf(e as f32),
+                                OpKind::Scale { mul, add } => x * mul as f32 + add as f32,
+                                _ => unreachable!(),
+                            }
+                        };
+                        ws.set(&wname, t.map(f));
+                    }
+                }
+                replace_uses(g, id, wid);
+                hits += 1;
+            }
+            // Div/Mul by a (broadcast) scalar constant → Scale.
+            OpKind::Div | OpKind::Mul if n.inputs.len() == 2 => {
+                let (x, c) = (n.inputs[0], n.inputs[1]);
+                // Constant side: a weight, or a broadcast of a weight.
+                let const_scalar = resolve_scalar_const(g, c, ws.as_deref());
+                if let Some(v) = const_scalar {
+                    let mul = if matches!(n.op, OpKind::Div) {
+                        1.0 / v
+                    } else {
+                        v
+                    };
+                    g.nodes[id].op = OpKind::Scale { mul, add: 0.0 };
+                    g.nodes[id].inputs = vec![x];
+                    hits += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    hits
+}
+
+/// If `id` denotes a scalar constant (a 1-element weight, possibly behind a
+/// Broadcast), return its value (1.0 in structural mode without a store).
+fn resolve_scalar_const(g: &Graph, id: NodeId, ws: Option<&WeightStore>) -> Option<f64> {
+    let base = match &g.nodes[id].op {
+        OpKind::Broadcast => g.nodes[id].inputs.first().copied()?,
+        _ => id,
+    };
+    let n = &g.nodes[base];
+    if !matches!(n.op, OpKind::Weight) || n.out_elems() != 1 {
+        return None;
+    }
+    match ws {
+        Some(ws) => ws.get(&n.name).map(|t| t.data()[0] as f64),
+        // Structural mode: the value does not matter for op counting.
+        None => Some(1.0),
+    }
+}
+
+/// Rule 5 (associativity / "replace costly combinations with cheaper
+/// ones"):
+/// * `dense(dense(x, W1), W2)` → `dense(x, W1·W2)`;
+/// * `scale(conv/dense(x, W))` → conv/dense with scaled weights;
+/// * recognize the decomposed tanh-GELU subgraph and replace it with the
+///   fused `Activation(Gelu)` operator.
+pub fn fold_linear(g: &mut Graph, mut ws: Option<&mut WeightStore>) -> usize {
+    let mut hits = 0;
+    let users = g.users();
+
+    for id in 0..g.nodes.len() {
+        let n = g.nodes[id].clone();
+        match n.op {
+            // dense(dense(x)) fold.
+            OpKind::Dense => {
+                let Some(x) = g.data_input(id) else { continue };
+                let inner = &g.nodes[x];
+                if !matches!(inner.op, OpKind::Dense) || users[x].len() != 1 {
+                    continue;
+                }
+                let (Some(w2id), Some(w1id)) = (weight_input(g, id), weight_input(g, x)) else {
+                    continue;
+                };
+                if users[w2id].len() != 1 || users[w1id].len() != 1 {
+                    continue;
+                }
+                let Some(src) = g.data_input(x) else { continue };
+                let in_f = *g.nodes[src].shape.last().unwrap();
+                let out_f = *g.nodes[id].shape.last().unwrap();
+                if let Some(ws) = ws.as_deref_mut() {
+                    let n1 = g.nodes[w1id].name.clone();
+                    let n2 = g.nodes[w2id].name.clone();
+                    if let (Some(w1), Some(w2)) = (ws.get(&n1).cloned(), ws.get(&n2).cloned()) {
+                        ws.set(&n2, w1.matmul(&w2));
+                    }
+                }
+                g.nodes[w2id].shape = vec![in_f, out_f];
+                g.nodes[id].inputs = vec![src, w2id];
+                hits += 1;
+            }
+            // scale(conv|dense) fold into the producer's weights.
+            OpKind::Scale { mul, add } => {
+                if n.inputs.len() != 1 || add != 0.0 {
+                    continue;
+                }
+                let p = n.inputs[0];
+                let parent = &g.nodes[p];
+                let foldable = matches!(parent.op, OpKind::Conv2d { .. } | OpKind::Dense);
+                if !foldable || users[p].len() != 1 {
+                    continue;
+                }
+                let Some(wid) = weight_input(g, p) else { continue };
+                if users[wid].len() != 1 {
+                    continue;
+                }
+                if let Some(ws) = ws.as_deref_mut() {
+                    let wname = g.nodes[wid].name.clone();
+                    if let Some(t) = ws.get(&wname).cloned() {
+                        ws.set(&wname, t.scale(mul as f32));
+                    }
+                }
+                replace_uses(g, id, p);
+                hits += 1;
+            }
+            // GELU recognition: Scale{0.5}(Mul(x, Scale{1,+1}(Tanh(...x...)))).
+            OpKind::Mul if n.inputs.len() == 2 => {
+                if let Some(x) = match_decomposed_gelu(g, id, &users) {
+                    // The Mul's single user is the trailing Scale{0.5}; keep
+                    // that node's identity, morph it into Gelu over x...
+                    // unless the 0.5 sits elsewhere — we morph the Mul into
+                    // Gelu and let identity-elimination clean a trailing
+                    // Scale{1,0} if the caller folded 0.5 differently.
+                    let trailing = users[id]
+                        .iter()
+                        .copied()
+                        .find(|&u| matches!(g.nodes[u].op, OpKind::Scale { mul, add } if mul == 0.5 && add == 0.0));
+                    if let Some(tr) = trailing {
+                        let shape = g.nodes[x].shape.clone();
+                        g.nodes[tr].op = OpKind::Activation(Act::Gelu);
+                        g.nodes[tr].inputs = vec![x];
+                        g.nodes[tr].shape = shape;
+                        hits += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    hits
+}
+
+/// Match `Mul(x, Scale{1,+1}(Tanh(Scale{c1}(Add(x, Scale{c2}(Pow{3}(x)))))))`
+/// rooted at the Mul node `id`; returns `x` on success.
+fn match_decomposed_gelu(g: &Graph, id: NodeId, users: &[Vec<NodeId>]) -> Option<NodeId> {
+    let n = &g.nodes[id];
+    let (a, bnode) = (n.inputs[0], n.inputs[1]);
+    // One side is x, the other the gate chain ending in Scale{1,+1}.
+    for (x, gate) in [(a, bnode), (bnode, a)] {
+        let gn = &g.nodes[gate];
+        if !matches!(gn.op, OpKind::Scale { mul, add } if mul == 1.0 && add == 1.0) {
+            continue;
+        }
+        if users[gate].len() != 1 || gn.inputs.len() != 1 {
+            continue;
+        }
+        let tanh = gn.inputs[0];
+        if !matches!(g.nodes[tanh].op, OpKind::Activation(Act::Tanh)) {
+            continue;
+        }
+        let sc1 = g.nodes[tanh].inputs[0];
+        if !matches!(g.nodes[sc1].op, OpKind::Scale { .. }) {
+            continue;
+        }
+        let add = g.nodes[sc1].inputs[0];
+        if !matches!(g.nodes[add].op, OpKind::Add) {
+            continue;
+        }
+        let (u, v) = (g.nodes[add].inputs[0], g.nodes[add].inputs[1]);
+        for (xx, cubic_scaled) in [(u, v), (v, u)] {
+            if xx != x {
+                continue;
+            }
+            if !matches!(g.nodes[cubic_scaled].op, OpKind::Scale { .. }) {
+                continue;
+            }
+            let pow = g.nodes[cubic_scaled].inputs[0];
+            if matches!(g.nodes[pow].op, OpKind::Pow { e } if e == 3.0)
+                && g.nodes[pow].inputs[0] == x
+            {
+                return Some(x);
+            }
+        }
+    }
+    None
+}
+
+/// Rule 6 (distributivity, Fig 9(b)): `add(conv(x,W1), conv(x,W2))` with
+/// identical hyper-parameters → `conv(x, W1+W2)`; same for Dense.
+pub fn distribute(g: &mut Graph, mut ws: Option<&mut WeightStore>) -> usize {
+    let mut hits = 0;
+    let users = g.users();
+    for id in 0..g.nodes.len() {
+        let n = g.nodes[id].clone();
+        if !matches!(n.op, OpKind::Add) || n.inputs.len() != 2 {
+            continue;
+        }
+        let (l, r) = (n.inputs[0], n.inputs[1]);
+        if l == r {
+            continue;
+        }
+        let (ln, rn) = (&g.nodes[l], &g.nodes[r]);
+        let same_kind = match (&ln.op, &rn.op) {
+            (OpKind::Conv2d { .. }, OpKind::Conv2d { .. }) => ln.op == rn.op,
+            (OpKind::Dense, OpKind::Dense) => true,
+            _ => false,
+        };
+        if !same_kind || users[l].len() != 1 || users[r].len() != 1 {
+            continue;
+        }
+        let (Some(xl), Some(xr)) = (g.data_input(l), g.data_input(r)) else {
+            continue;
+        };
+        if xl != xr {
+            continue;
+        }
+        let (Some(w1), Some(w2)) = (weight_input(g, l), weight_input(g, r)) else {
+            continue;
+        };
+        if users[w1].len() != 1 || users[w2].len() != 1 {
+            continue;
+        }
+        if g.nodes[w1].shape != g.nodes[w2].shape {
+            continue;
+        }
+        if let Some(ws) = ws.as_deref_mut() {
+            let n1 = g.nodes[w1].name.clone();
+            let n2 = g.nodes[w2].name.clone();
+            if let (Some(t1), Some(t2)) = (ws.get(&n1).cloned(), ws.get(&n2)) {
+                let sum = t1.add(t2);
+                ws.set(&n1, sum);
+            }
+        }
+        replace_uses(g, id, l);
+        hits += 1;
+    }
+    hits
+}
+
+/// The weight input of node `id`, if any.
+fn weight_input(g: &Graph, id: NodeId) -> Option<NodeId> {
+    g.nodes[id]
+        .inputs
+        .iter()
+        .copied()
+        .find(|&i| matches!(g.nodes[i].op, OpKind::Weight))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo::NetBuilder;
+    use crate::tensor::Tensor;
+    use crate::graph::Act;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_reshape_removed() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[2, 8]);
+        let r = g.add("rs", OpKind::Reshape, vec![x], vec![2, 8]);
+        let s = g.add("sqrt", OpKind::Sqrt, vec![r], vec![2, 8]);
+        g.outputs = vec![s];
+        assert_eq!(eliminate_identity(&mut g), 1);
+        g.prune_dead();
+        assert_eq!(g.operator_count(), 1);
+    }
+
+    #[test]
+    fn double_transpose_removed() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[2, 3, 4]);
+        let t1 = g.add("t1", OpKind::Transpose, vec![x], vec![4, 3, 2]);
+        let t2 = g.add("t2", OpKind::Transpose, vec![t1], vec![2, 3, 4]);
+        let s = g.add("sqrt", OpKind::Sqrt, vec![t2], vec![2, 3, 4]);
+        g.outputs = vec![s];
+        assert_eq!(collapse_movement(&mut g), 1);
+        g.prune_dead();
+        assert_eq!(g.operator_count(), 1);
+    }
+
+    #[test]
+    fn reshape_chain_collapses() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[2, 12]);
+        let r1 = g.add("r1", OpKind::Reshape, vec![x], vec![2, 3, 4]);
+        let r2 = g.add("r2", OpKind::Reshape, vec![r1], vec![6, 4]);
+        g.outputs = vec![r2];
+        assert_eq!(collapse_movement(&mut g), 1);
+        g.prune_dead();
+        assert_eq!(g.operator_count(), 1);
+        assert_eq!(g.node(g.outputs[0]).shape, vec![6, 4]);
+    }
+
+    #[test]
+    fn commute_act_past_reshape() {
+        let mut b = NetBuilder::new("t", &[1, 4, 4, 4]);
+        b.conv(4, 3, 1, 1, 1);
+        b.flatten();
+        b.act(Act::Relu);
+        let mut g = b.finish();
+        assert_eq!(commute_movement(&mut g), 1);
+        // Now conv -> relu -> flatten.
+        let out = g.outputs[0];
+        assert!(matches!(g.node(out).op, OpKind::Flatten));
+        let relu = g.node(out).inputs[0];
+        assert!(matches!(g.node(relu).op, OpKind::Activation(Act::Relu)));
+        assert_eq!(g.node(relu).shape, vec![1, 4, 4, 4]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn div_by_broadcast_const_becomes_scale() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[2, 4]);
+        let c = g.weight("c", &[1]);
+        let bc = g.add("bc", OpKind::Broadcast, vec![c], vec![2, 4]);
+        let d = g.add("div", OpKind::Div, vec![x, bc], vec![2, 4]);
+        g.outputs = vec![d];
+        let mut ws = WeightStore::new();
+        ws.set("c", Tensor::from_vec(&[1], vec![4.0]));
+        assert_eq!(fold_constants(&mut g, Some(&mut ws)), 1);
+        g.prune_dead();
+        let out = g.node(g.outputs[0]);
+        match out.op {
+            OpKind::Scale { mul, add } => {
+                assert!((mul - 0.25).abs() < 1e-12);
+                assert_eq!(add, 0.0);
+            }
+            ref other => panic!("expected scale, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dense_dense_folds_with_weights() {
+        let mut b = NetBuilder::new("t", &[1, 8]);
+        b.dense(16);
+        b.dense(4);
+        let mut g = b.finish();
+        let mut rng = Rng::new(5);
+        let mut ws = WeightStore::init_random(&g, &mut rng);
+        assert_eq!(fold_linear(&mut g, Some(&mut ws)), 1);
+        g.prune_dead();
+        assert_eq!(g.operator_count(), 1);
+        // Folded weight has shape [8, 4].
+        let wnode = g.nodes.iter().find(|n| matches!(n.op, OpKind::Weight)).unwrap();
+        assert_eq!(wnode.shape, vec![8, 4]);
+        assert_eq!(ws.expect(&wnode.name).shape(), &[8, 4]);
+    }
+
+    #[test]
+    fn gelu_chain_recognized() {
+        use crate::graph::zoo::nlp;
+        let mut g = nlp::gpt2_frontend_layers(1, 1);
+        let before_gelu = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Activation(Act::Gelu)))
+            .count();
+        assert_eq!(before_gelu, 0);
+        fold_linear(&mut g, None);
+        g.prune_dead();
+        let after_gelu = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Activation(Act::Gelu)))
+            .count();
+        assert_eq!(after_gelu, 1, "decomposed GELU not recognized");
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn distribute_merges_sibling_convs() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[1, 3, 8, 8]);
+        let w1 = g.weight("w1", &[4, 3, 3, 3]);
+        let w2 = g.weight("w2", &[4, 3, 3, 3]);
+        let op = OpKind::Conv2d { k: 3, stride: 1, pad: 1, groups: 1 };
+        let c1 = g.add("c1", op.clone(), vec![x, w1], vec![1, 4, 8, 8]);
+        let c2 = g.add("c2", op, vec![x, w2], vec![1, 4, 8, 8]);
+        let a = g.add("add", OpKind::Add, vec![c1, c2], vec![1, 4, 8, 8]);
+        g.outputs = vec![a];
+        let mut ws = WeightStore::new();
+        ws.set("w1", Tensor::full(&[4, 3, 3, 3], 1.0));
+        ws.set("w2", Tensor::full(&[4, 3, 3, 3], 2.0));
+        assert_eq!(distribute(&mut g, Some(&mut ws)), 1);
+        g.prune_dead();
+        assert_eq!(g.operator_count(), 1);
+        assert_eq!(ws.expect("w1").data()[0], 3.0);
+    }
+}

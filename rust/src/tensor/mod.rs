@@ -1,0 +1,493 @@
+//! A minimal dense f32 tensor used by the host-side executors and the
+//! pruning transforms. Row-major (C order). This is deliberately not a
+//! general NDArray — it implements exactly what the XGen reproduction
+//! needs: shape bookkeeping, fills, elementwise maps, matmul, im2col
+//! convolution, and pooling, all with straightforward reference semantics
+//! so the optimized paths in [`crate::exec`] and [`crate::fkw`] have an
+//! oracle to be checked against.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Build from existing data; length must match the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Gaussian-initialized tensor (DNN weight init), deterministic per rng.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, 0.0, std) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len(), "reshape count mismatch");
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (d, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.shape[d], "index {i} out of bounds for dim {d}");
+            off = off * self.shape[d] + i;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Elementwise map (new tensor).
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise binary zip; shapes must match exactly.
+    pub fn zip<F: Fn(f32, f32) -> f32>(&self, other: &Tensor, f: F) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Mean absolute difference vs another tensor (shape-checked).
+    pub fn mad(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let s: f32 = self.data.iter().zip(&other.data).map(|(a, b)| (a - b).abs()).sum();
+        s / self.data.len() as f32
+    }
+
+    /// Max absolute difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Fraction of zero entries (sparsity probe used by pruning tests).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|&&x| x == 0.0).count();
+        z as f64 / self.data.len() as f64
+    }
+
+    /// Matrix multiply: `[m,k] x [k,n] -> [m,n]`. Reference semantics.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2, "matmul lhs rank");
+        assert_eq!(other.rank(), 2, "matmul rhs rank");
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &other.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(row) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// 2-D convolution, NCHW input `[n,c,h,w]`, OIHW weights `[o,i,kh,kw]`,
+    /// with stride and symmetric zero padding. Reference (naive) semantics —
+    /// the oracle for every optimized conv path in the crate.
+    pub fn conv2d(&self, weight: &Tensor, stride: usize, pad: usize) -> Tensor {
+        assert_eq!(self.rank(), 4, "conv2d input rank");
+        assert_eq!(weight.rank(), 4, "conv2d weight rank");
+        let (n, c, h, w) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let (o, i, kh, kw) = (weight.shape[0], weight.shape[1], weight.shape[2], weight.shape[3]);
+        assert_eq!(c, i, "conv2d channel mismatch");
+        let oh = (h + 2 * pad - kh) / stride + 1;
+        let ow = (w + 2 * pad - kw) / stride + 1;
+        let mut out = Tensor::zeros(&[n, o, oh, ow]);
+        for b in 0..n {
+            for f in 0..o {
+                for y in 0..oh {
+                    for x in 0..ow {
+                        let mut acc = 0.0f32;
+                        for ci in 0..c {
+                            for ky in 0..kh {
+                                let iy = (y * stride + ky) as isize - pad as isize;
+                                if iy < 0 || iy as usize >= h {
+                                    continue;
+                                }
+                                for kx in 0..kw {
+                                    let ix = (x * stride + kx) as isize - pad as isize;
+                                    if ix < 0 || ix as usize >= w {
+                                        continue;
+                                    }
+                                    acc += self.at(&[b, ci, iy as usize, ix as usize])
+                                        * weight.at(&[f, ci, ky, kx]);
+                                }
+                            }
+                        }
+                        out.set(&[b, f, y, x], acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// im2col: unfold `[n,c,h,w]` into `[n*oh*ow, c*kh*kw]` patches so conv
+    /// becomes GEMM (the transformation §2.1.2 relies on: "operations in
+    /// CONV layers can be transformed into GEMM").
+    pub fn im2col(&self, kh: usize, kw: usize, stride: usize, pad: usize) -> Tensor {
+        assert_eq!(self.rank(), 4);
+        let (n, c, h, w) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let oh = (h + 2 * pad - kh) / stride + 1;
+        let ow = (w + 2 * pad - kw) / stride + 1;
+        let cols = c * kh * kw;
+        let mut out = Tensor::zeros(&[n * oh * ow, cols]);
+        for b in 0..n {
+            for y in 0..oh {
+                for x in 0..ow {
+                    let row = (b * oh + y) * ow + x;
+                    for ci in 0..c {
+                        for ky in 0..kh {
+                            let iy = (y * stride + ky) as isize - pad as isize;
+                            for kx in 0..kw {
+                                let ix = (x * stride + kx) as isize - pad as isize;
+                                let col = (ci * kh + ky) * kw + kx;
+                                let v = if iy < 0 || ix < 0 || iy as usize >= h || ix as usize >= w
+                                {
+                                    0.0
+                                } else {
+                                    self.at(&[b, ci, iy as usize, ix as usize])
+                                };
+                                out.set(&[row, col], v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// 2x2 max pooling with stride 2 over NCHW (sufficient for the zoo).
+    pub fn maxpool2(&self) -> Tensor {
+        assert_eq!(self.rank(), 4);
+        let (n, c, h, w) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut out = Tensor::zeros(&[n, c, oh, ow]);
+        for b in 0..n {
+            for ci in 0..c {
+                for y in 0..oh {
+                    for x in 0..ow {
+                        let mut m = f32::NEG_INFINITY;
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                m = m.max(self.at(&[b, ci, 2 * y + dy, 2 * x + dx]));
+                            }
+                        }
+                        out.set(&[b, ci, y, x], m);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Global average pool `[n,c,h,w] -> [n,c]`.
+    pub fn global_avg_pool(&self) -> Tensor {
+        assert_eq!(self.rank(), 4);
+        let (n, c, h, w) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let mut out = Tensor::zeros(&[n, c]);
+        let denom = (h * w) as f32;
+        for b in 0..n {
+            for ci in 0..c {
+                let mut s = 0.0;
+                for y in 0..h {
+                    for x in 0..w {
+                        s += self.at(&[b, ci, y, x]);
+                    }
+                }
+                out.set(&[b, ci], s / denom);
+            }
+        }
+        out
+    }
+
+    /// Row-wise softmax over a 2-D tensor.
+    pub fn softmax_rows(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = self.clone();
+        for i in 0..m {
+            let row = &mut out.data[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut s = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                s += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= s;
+            }
+        }
+        out
+    }
+
+    /// Argmax per row of a 2-D tensor (classification readout).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        (0..m)
+            .map(|i| {
+                let row = &self.data[i * n..(i + 1) * n];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// conv2d via im2col + matmul; must agree with `Tensor::conv2d`. This is the
+/// GEMM formulation the pruning/compiler stack operates on.
+pub fn conv2d_gemm(input: &Tensor, weight: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let (n, _c, h, w) = (
+        input.shape()[0],
+        input.shape()[1],
+        input.shape()[2],
+        input.shape()[3],
+    );
+    let (o, i, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let patches = input.im2col(kh, kw, stride, pad); // [n*oh*ow, i*kh*kw]
+    let wmat = weight.reshape(&[o, i * kh * kw]);
+    // [n*oh*ow, o] = patches x wmat^T; compute as (wmat x patches^T)^T via loop.
+    let mut out = Tensor::zeros(&[n, o, oh, ow]);
+    let cols = i * kh * kw;
+    for row in 0..n * oh * ow {
+        let b = row / (oh * ow);
+        let rem = row % (oh * ow);
+        let (y, x) = (rem / ow, rem % ow);
+        let patch = &patches.data()[row * cols..(row + 1) * cols];
+        for f in 0..o {
+            let wrow = &wmat.data()[f * cols..(f + 1) * cols];
+            let mut acc = 0.0f32;
+            for (a, b_) in patch.iter().zip(wrow) {
+                acc += a * b_;
+            }
+            out.set(&[b, f, y, x], acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::forall;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let eye = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 kernel with weight 1 = identity.
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[1, 1, 4, 4], 1.0, &mut rng);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = x.conv2d(&w, 1, 0);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv2d_known_3x3() {
+        // All-ones 3x3 input, all-ones 3x3 kernel, pad 1: center = 9, corner = 4.
+        let x = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let y = x.conv2d(&w, 1, 1);
+        assert_eq!(y.shape(), &[1, 1, 3, 3]);
+        assert_eq!(y.at(&[0, 0, 1, 1]), 9.0);
+        assert_eq!(y.at(&[0, 0, 0, 0]), 4.0);
+        assert_eq!(y.at(&[0, 0, 0, 1]), 6.0);
+    }
+
+    #[test]
+    fn conv2d_gemm_matches_direct() {
+        forall("im2col-gemm conv == direct conv", 24, |rng| {
+            let n = 1 + rng.below(2);
+            let c = 1 + rng.below(3);
+            let o = 1 + rng.below(4);
+            let hw = 3 + rng.below(5);
+            let k = *rng.choose(&[1usize, 3]);
+            let stride = 1 + rng.below(2);
+            let pad = if k == 3 { rng.below(2) } else { 0 };
+            let x = Tensor::randn(&[n, c, hw, hw], 1.0, rng);
+            let w = Tensor::randn(&[o, c, k, k], 0.5, rng);
+            let a = x.conv2d(&w, stride, pad);
+            let b = conv2d_gemm(&x, &w, stride, pad);
+            assert!(a.max_abs_diff(&b) < 1e-4, "diff {}", a.max_abs_diff(&b));
+        });
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 5.0, 3.0, 2.0]);
+        let y = x.maxpool2();
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.at(&[0, 0, 0, 0]), 5.0);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        forall("softmax rows sum to 1", 16, |rng| {
+            let m = 1 + rng.below(4);
+            let n = 1 + rng.below(6);
+            let t = Tensor::randn(&[m, n], 3.0, rng);
+            let s = t.softmax_rows();
+            for i in 0..m {
+                let row_sum: f32 = s.data()[i * n..(i + 1) * n].iter().sum();
+                assert!((row_sum - 1.0).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn global_avg_pool_of_constant() {
+        let x = Tensor::full(&[2, 3, 4, 4], 2.5);
+        let y = x.global_avg_pool();
+        assert_eq!(y.shape(), &[2, 3]);
+        assert!(y.data().iter().all(|&v| (v - 2.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        let t = Tensor::from_vec(&[4], vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(t.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.0, 1.0, 0.2, 0.3]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        let _ = a.matmul(&b);
+    }
+}

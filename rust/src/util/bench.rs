@@ -1,0 +1,119 @@
+//! Hand-rolled micro-benchmark harness (replaces criterion in the offline
+//! build). Each `rust/benches/*.rs` target uses `harness = false` and calls
+//! into this module; results print as aligned tables and can be dumped as
+//! JSON for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Time `f` with `warmup` unmeasured runs and `samples` measured runs,
+/// returning a Summary in **milliseconds**.
+pub fn time_ms<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Summary {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        xs.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Summary::of(&xs)
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept behind one name so benches read uniformly).
+pub fn sink<T>(v: T) -> T {
+    std::hint::black_box(v)
+}
+
+/// A fixed-width table printer for bench output that mirrors the paper's
+/// table layout (rows = models/configs, columns = frameworks/devices).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for c in 0..ncol {
+            w[c] = self.headers[c].len();
+            for r in &self.rows {
+                w[c] = w[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], w: &[usize], out: &mut String| {
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(cell);
+                for _ in cell.len()..w[c] {
+                    out.push(' ');
+                }
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &w, &mut out);
+        let total: usize = w.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &w, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ms_counts_samples() {
+        let s = time_ms(1, 5, || {
+            sink(2u64.pow(10));
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Model", "ms"]);
+        t.row(vec!["ResNet-50".into(), "36".into()]);
+        t.row(vec!["VGG".into(), "117".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("Model"));
+        assert!(lines[2].starts_with("ResNet-50"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny argv parser (replaces `clap` in the offline build).
+//!
+//! Grammar: `xgen <command> [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, flags, key→value options, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.options.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    // Heuristic: `--key value` when the next token is not a flag.
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn command_and_options() {
+        // NOTE the documented ambiguity: `--verbose x.hlo` would bind x.hlo
+        // as the option value, so boolean flags go last or use `=`.
+        let a = parse(&["compile", "--model", "resnet50", "--opt=full", "x.hlo", "--verbose"]);
+        assert_eq!(a.command, "compile");
+        assert_eq!(a.opt("model"), Some("resnet50"));
+        assert_eq!(a.opt("opt"), Some("full"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["x.hlo"]);
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse(&["run", "--fast", "--batch", "8"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt_usize("batch", 1), 8);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["serve"]);
+        assert_eq!(a.opt_or("device", "cpu"), "cpu");
+        assert_eq!(a.opt_f64("rate", 2.5), 2.5);
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.command, "");
+        assert!(a.flag("help"));
+    }
+}

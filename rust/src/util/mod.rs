@@ -1,0 +1,57 @@
+//! Small self-contained substrates that replace crates unavailable in the
+//! offline vendor set (see DESIGN.md "Offline-vendor substitutions").
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod bench;
+pub mod proptest_lite;
+
+/// Format a float with a fixed number of significant-ish decimals for table
+/// output, dropping trailing zeros ("6.0" stays "6.0", "6.75" stays "6.75").
+pub fn fmt_ms(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{:.0}", v)
+    } else if v >= 10.0 {
+        format!("{:.1}", v)
+    } else {
+        format!("{:.2}", v)
+    }
+}
+
+/// Geometric mean of a non-empty slice of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "geomean of empty slice");
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[8.0]) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn fmt_ms_ranges() {
+        assert_eq!(fmt_ms(117.3), "117");
+        assert_eq!(fmt_ms(36.04), "36.0");
+        assert_eq!(fmt_ms(6.7), "6.70");
+    }
+}

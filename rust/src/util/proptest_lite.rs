@@ -1,0 +1,92 @@
+//! Minimal property-based testing helper (replaces `proptest`, unavailable
+//! offline). A property is a closure over a seeded [`Rng`](super::rng::Rng);
+//! the runner executes it for N deterministic cases and reports the failing
+//! seed so a case can be replayed as a plain unit test. No shrinking — cases
+//! are kept small by construction instead.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath)
+//! use xgen::util::proptest_lite::forall;
+//! forall("sort is idempotent", 64, |rng| {
+//!     let mut v: Vec<u32> = (0..rng.below(20)).map(|_| rng.next_u32() % 100).collect();
+//!     v.sort_unstable();
+//!     let w = { let mut w = v.clone(); w.sort_unstable(); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; change to re-explore the case space globally.
+pub const BASE_SEED: u64 = 0xC0C0_91E5_0000_0001;
+
+/// Run `prop` for `cases` deterministic seeds. On panic, re-raises with the
+/// case index and seed in the message.
+pub fn forall<F: FnMut(&mut Rng)>(name: &str, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let seed = BASE_SEED ^ ((case as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = r {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience generators used across module property tests.
+pub mod gen {
+    use super::Rng;
+
+    /// Random vec of f32 in [-scale, scale] with length in [min_len, max_len].
+    pub fn f32_vec(rng: &mut Rng, min_len: usize, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = min_len + rng.below(max_len - min_len + 1);
+        (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+    }
+
+    /// Random dims, each in [1, max_dim].
+    pub fn dims(rng: &mut Rng, rank: usize, max_dim: usize) -> Vec<usize> {
+        (0..rank).map(|_| 1 + rng.below(max_dim)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall("true", 16, |rng| {
+            let x = rng.below(10);
+            assert!(x < 10);
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always-fails", 4, |_rng| {
+                panic!("boom");
+            });
+        });
+        let e = r.unwrap_err();
+        let msg = e.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always-fails"), "{msg}");
+        assert!(msg.contains("case 0"), "{msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("gen bounds", 32, |rng| {
+            let v = gen::f32_vec(rng, 1, 8, 2.0);
+            assert!((1..=8).contains(&v.len()));
+            assert!(v.iter().all(|x| x.abs() <= 2.0));
+            let d = gen::dims(rng, 3, 5);
+            assert!(d.iter().all(|&x| (1..=5).contains(&x)));
+        });
+    }
+}

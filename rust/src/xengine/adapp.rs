@@ -1,0 +1,274 @@
+//! The Level-4 autonomous-driving application of Fig 16 / Table 5 (the
+//! "ADApp" workload): Sensing → {2D, 3D} Perception → Localization →
+//! Tracking → Prediction → Planning, in six variants — detector family
+//! {ADy = YOLO-based, ADs = SSD-based} × camera input size
+//! {288, 416, 608} — deployed on a Jetson-AGX-Xavier-like board.
+//!
+//! Perception service demands are **derived from the cost model**: the 2-D
+//! perceptor is the zoo's YOLO-v4 (or MobileNet-SSD) scaled to the input
+//! size across `CAMERAS` camera streams on the Jetson GPU; the 3-D
+//! perceptor is PointPillars. CPU-side module demands (sensing,
+//! localization, tracking, prediction, planning) are the paper's reported
+//! standalone values (they are conventional code, not DNNs).
+
+use crate::cost::{devices, estimate_latency, DensityMap};
+use crate::fusion::{fuse, FusionConfig};
+use crate::graph::zoo::by_name;
+
+use super::{ModuleSpec, Unit};
+
+/// Camera streams feeding 2-D perception (L4 rigs run 6–8 cameras).
+pub const CAMERAS: f64 = 6.0;
+
+/// DLA demand multiplier vs GPU (lower clocks, narrower datapath — and
+/// the DLA runs fp16 without the GPU's tensor-core paths).
+pub const DLA_FACTOR: f64 = 2.75;
+
+/// Compression factor model-schedule co-optimization achieves on the
+/// perception DNNs (block pruning at ~5× FLOP reduction with block-size
+/// chosen for the DLA/GPU — consistent with `cost::sparse_efficiency`
+/// for 32-wide blocks at rate 0.78: (1-0.78)/0.85 ≈ 0.26).
+pub const COOPT_COMPRESSION: f64 = 0.26;
+
+/// Application variants of Table 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Variant {
+    pub name: &'static str,
+    /// "y" = YOLO-based detector, "s" = SSD-based.
+    pub yolo: bool,
+    pub input: usize,
+}
+
+/// The six Table 5 variants.
+pub fn variants() -> [Variant; 6] {
+    [
+        Variant { name: "ADy288", yolo: true, input: 288 },
+        Variant { name: "ADy416", yolo: true, input: 416 },
+        Variant { name: "ADy608", yolo: true, input: 608 },
+        Variant { name: "ADs288", yolo: false, input: 288 },
+        Variant { name: "ADs416", yolo: false, input: 416 },
+        Variant { name: "ADs608", yolo: false, input: 608 },
+    ]
+}
+
+/// GPU service demand (ms) of the 2-D perception module for a variant:
+/// cost-model latency of the detector graph, scaled by input area and
+/// camera count.
+pub fn perception2d_demand_ms(v: Variant) -> f64 {
+    let (g, native) = if v.yolo {
+        (by_name("yolo-v4", 1), 416.0f64)
+    } else {
+        (by_name("mobilenet-v1-ssd", 1), 300.0f64)
+    };
+    let plan = fuse(&g, &FusionConfig::default());
+    let one = estimate_latency(&g, &plan, &devices::jetson_gpu(), &jetson_profile(), &DensityMap::new(), 1.0)
+        .total_ms();
+    // Latency grows sub-quadratically with input size (the deep tail of
+    // the detector is resolution-independent): use sqrt of the area ratio.
+    let area_scale = v.input as f64 / native;
+    // SSD is ~6× lighter per frame, but the ADs rig compensates with a
+    // higher frame rate per camera to match YOLO's detection coverage —
+    // the paper's ADs rows track the ADy rows closely; model that with a
+    // flat per-period demand factor.
+    let family = if v.yolo { 1.0 } else { 6.3 };
+    one * area_scale * family * CAMERAS
+}
+
+/// TensorRT-class runtime profile on the Jetson GPU.
+fn jetson_profile() -> crate::cost::ExecProfile {
+    crate::cost::ExecProfile {
+        name: "jetson-trt",
+        eff: 0.15,
+        per_group_overhead_ms: 0.03,
+        sparse_capable: true,
+    }
+}
+
+/// GPU service demand of 3-D (LiDAR) perception: PointPillars.
+pub fn perception3d_demand_ms() -> f64 {
+    let g = by_name("pointpillar", 1);
+    let plan = fuse(&g, &FusionConfig::default());
+    // PointPillars' big regular convs run closer to TensorRT peak than the
+    // branchy multi-camera detector pipeline.
+    let prof = crate::cost::ExecProfile { eff: 0.27, ..jetson_profile() };
+    estimate_latency(&g, &plan, &devices::jetson_gpu(), &prof, &DensityMap::new(), 1.0).total_ms()
+}
+
+/// Build the module set for a variant.
+pub fn modules(v: Variant) -> Vec<ModuleSpec> {
+    let p2d = perception2d_demand_ms(v);
+    let p3d = perception3d_demand_ms();
+    vec![
+        ModuleSpec {
+            name: "sensing",
+            unit: Unit::Cpu(0),
+            demand_ms: 8.5,
+            alt: None,
+            period_ms: 100.0,
+            expected_ms: 100.0,
+            priority: 90,
+            latency_critical: false,
+            jitter: 0.10,
+            is_dnn: false,
+        },
+        // 3-D percept releases first (module index parity drives the ROSCH
+        // lock order: 3D takes buffer→GPU, 2D takes GPU→buffer).
+        ModuleSpec {
+            name: "3d_percept",
+            unit: Unit::Gpu,
+            demand_ms: p3d,
+            alt: Some((Unit::Dla(0), p3d * DLA_FACTOR)),
+            period_ms: 100.0,
+            expected_ms: 100.0,
+            // The LiDAR path outranks the camera path (safety-critical
+            // obstacle detection) under the priority schedulers.
+            priority: 55,
+            latency_critical: false,
+            jitter: 0.12,
+            is_dnn: true,
+        },
+        ModuleSpec {
+            name: "2d_percept",
+            unit: Unit::Gpu,
+            demand_ms: p2d,
+            alt: None, // stays on GPU; migration moves 3-D off instead
+            period_ms: 100.0,
+            expected_ms: 100.0,
+            priority: 50,
+            latency_critical: false,
+            jitter: 0.07,
+            is_dnn: true,
+        },
+        // Localization contends on CPU core 1 with the perception pre/post
+        // thread below; JIT priority adjustment marks it latency-critical.
+        ModuleSpec {
+            name: "localization",
+            unit: Unit::Cpu(1),
+            demand_ms: 43.0,
+            alt: None,
+            period_ms: 100.0,
+            expected_ms: 100.0,
+            priority: 10,
+            latency_critical: true,
+            jitter: 0.22,
+            is_dnn: false,
+        },
+        ModuleSpec {
+            name: "percept_postproc",
+            unit: Unit::Cpu(1),
+            demand_ms: 45.0,
+            alt: None,
+            period_ms: 100.0,
+            // Pipeline-internal thread: its output feeds the *next* frame,
+            // so its effective deadline is two periods (not a Table 5 row).
+            expected_ms: 200.0,
+            priority: 20, // statically above localization: the starvation bug
+            latency_critical: false,
+            jitter: 0.10,
+            is_dnn: false,
+        },
+        ModuleSpec {
+            name: "tracking",
+            unit: Unit::Cpu(2),
+            demand_ms: 1.0,
+            alt: None,
+            period_ms: 100.0,
+            expected_ms: 100.0,
+            priority: 30,
+            latency_critical: false,
+            jitter: 0.6,
+            is_dnn: false,
+        },
+        ModuleSpec {
+            name: "prediction",
+            unit: Unit::Cpu(2),
+            demand_ms: 0.5,
+            alt: None,
+            period_ms: 100.0,
+            expected_ms: 100.0,
+            priority: 29,
+            latency_critical: false,
+            jitter: 0.8,
+            is_dnn: false,
+        },
+        ModuleSpec {
+            name: "planning",
+            unit: Unit::Cpu(3),
+            demand_ms: 1.1,
+            alt: None,
+            period_ms: 10.0,
+            expected_ms: 10.0,
+            priority: 95,
+            latency_critical: false,
+            jitter: 0.3,
+            is_dnn: false,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xengine::sim::simulate;
+    use crate::xengine::Policy;
+
+    #[test]
+    fn perception_demands_in_expected_band() {
+        // 2-D perception must exceed its 100 ms budget when dense (that is
+        // what Table 5 segments 2–4 show) and the 3-D perceptor must be
+        // comfortably smaller.
+        let p608 = perception2d_demand_ms(Variant { name: "ADy608", yolo: true, input: 608 });
+        let p288 = perception2d_demand_ms(Variant { name: "ADy288", yolo: true, input: 288 });
+        let p3d = perception3d_demand_ms();
+        assert!(p288 < p608, "{p288} !< {p608}");
+        assert!((250.0..480.0).contains(&p608), "2d@608 {p608}");
+        assert!((110.0..260.0).contains(&p288), "2d@288 {p288}");
+        assert!(p3d > 20.0 && p3d < 80.0, "3d {p3d}");
+    }
+
+    #[test]
+    fn table5_segment_shape() {
+        let v = variants()[1]; // ADy416
+        let mods = modules(v);
+        // Segment 1: ROSCH deadlocks perception.
+        let r1 = simulate(v.name, &mods, Policy::Rosch, 3000.0, 11);
+        assert!(r1.module("2d_percept").timed_out());
+        assert!(r1.module("3d_percept").timed_out());
+        assert!(!r1.module("sensing").timed_out());
+        assert!(!r1.module("planning").timed_out());
+        // Segment 2: Linux TS resolves the deadlock; 2-D percept misses.
+        let r2 = simulate(v.name, &mods, Policy::LinuxTs, 3000.0, 12);
+        assert!(!r2.module("2d_percept").timed_out());
+        assert!(r2.module("2d_percept").miss_rate() > 0.9);
+        assert!(r2.module("localization").mean() > 70.0, "{}", r2.module("localization").mean());
+        // Segment 3: JIT fixes localization, 2-D percept still misses.
+        let r3 = simulate(v.name, &mods, Policy::JitPriority, 3000.0, 13);
+        assert!(r3.module("localization").mean() < 60.0, "{}", r3.module("localization").mean());
+        assert!(r3.module("2d_percept").miss_rate() > 0.9);
+        // Segment 5: co-optimization meets all deadlines.
+        let r5 = simulate(v.name, &mods, Policy::CoOpt, 3000.0, 15);
+        assert!(
+            r5.worst_miss_rate() < 0.05,
+            "co-opt misses: {:?}",
+            r5.modules.iter().map(|m| (m.name, m.miss_rate())).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn migration_offloads_3d_to_dla() {
+        let v = variants()[0];
+        let mods = modules(v);
+        let r4 = simulate(v.name, &mods, Policy::JitMigration, 3000.0, 14);
+        // 3-D percept slower than on GPU (DLA factor) but 2-D percept
+        // improves relative to fair-shared GPU.
+        let r2 = simulate(v.name, &mods, Policy::LinuxTs, 3000.0, 14);
+        assert!(
+            r4.module("3d_percept").mean() > r2.module("3d_percept").mean(),
+            "DLA should be slower for 3D"
+        );
+        assert!(
+            r4.module("2d_percept").mean() < r2.module("2d_percept").mean(),
+            "2D should improve with sole GPU ownership"
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Plastic IR + synergistic adaptation (§2.5, Fig 15).
+//!
+//! XGen injects **knobs** into the DNNs it compiles — points where the
+//! runtime can cheaply change the executed computation: early exits
+//! (which layer to stop at on a multi-exit model), input resolution, and
+//! the sparsity variant to dispatch. XEngine's *synergistic adaptation*
+//! couples these knobs with scheduling: when a device is contended, the
+//! controller turns knobs down (cheaper variants) instead of letting
+//! deadlines slip; when pressure releases, it turns them back up —
+//! maximizing accuracy subject to the observed per-frame budget.
+
+use crate::pruning::AccuracyModel;
+use crate::pruning::PruneScheme;
+
+/// One selectable operating point of a compiled DNN (a knob setting).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KnobSetting {
+    pub name: &'static str,
+    /// Nominal latency at this setting on the target unit, ms.
+    pub latency_ms: f64,
+    /// Accuracy at this setting (model-quality proxy).
+    pub accuracy: f64,
+}
+
+/// A DNN with injected knobs (the "plastic IR" runtime view): settings
+/// sorted by increasing cost.
+#[derive(Debug, Clone)]
+pub struct PlasticModel {
+    pub name: String,
+    pub settings: Vec<KnobSetting>,
+}
+
+impl PlasticModel {
+    /// Build the standard knob ladder for a model with base latency/
+    /// accuracy: early exits at 1/3 and 2/3 depth, plus a pruned variant
+    /// per exit (the model-schedule co-optimization products).
+    pub fn standard_ladder(name: &str, base_latency_ms: f64, base_acc: f64) -> PlasticModel {
+        let am = AccuracyModel::default();
+        let pruned_acc = am.estimate(base_acc, &PruneScheme::Block { block: 8, rate: 0.75 });
+        let mut settings = vec![
+            KnobSetting {
+                name: "exit1/3+pruned",
+                latency_ms: base_latency_ms * 0.33 * 0.45,
+                accuracy: pruned_acc - 6.0,
+            },
+            KnobSetting {
+                name: "exit1/3",
+                latency_ms: base_latency_ms * 0.33,
+                accuracy: base_acc - 6.0,
+            },
+            KnobSetting {
+                name: "exit2/3+pruned",
+                latency_ms: base_latency_ms * 0.66 * 0.45,
+                accuracy: pruned_acc - 1.8,
+            },
+            KnobSetting {
+                name: "exit2/3",
+                latency_ms: base_latency_ms * 0.66,
+                accuracy: base_acc - 1.8,
+            },
+            KnobSetting {
+                name: "full+pruned",
+                latency_ms: base_latency_ms * 0.45,
+                accuracy: pruned_acc,
+            },
+            KnobSetting { name: "full", latency_ms: base_latency_ms, accuracy: base_acc },
+        ];
+        settings.sort_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap());
+        PlasticModel { name: name.to_string(), settings }
+    }
+
+    /// Best-accuracy setting within a latency budget (None if even the
+    /// cheapest setting exceeds it).
+    pub fn best_within(&self, budget_ms: f64) -> Option<&KnobSetting> {
+        self.settings
+            .iter()
+            .filter(|s| s.latency_ms <= budget_ms)
+            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+    }
+}
+
+/// The synergistic-adaptation controller: tracks the *observed* per-frame
+/// time (scheduling contention included) and picks knob settings so the
+/// deadline keeps being met, with hysteresis to avoid oscillation.
+#[derive(Debug)]
+pub struct AdaptationController {
+    pub deadline_ms: f64,
+    /// Exponential moving average of observed slowdown (observed/nominal).
+    slowdown_ema: f64,
+    alpha: f64,
+    /// Current setting index (into the model's ladder).
+    current: usize,
+}
+
+impl AdaptationController {
+    pub fn new(deadline_ms: f64) -> AdaptationController {
+        AdaptationController { deadline_ms, slowdown_ema: 1.0, alpha: 0.3, current: 0 }
+    }
+
+    pub fn slowdown(&self) -> f64 {
+        self.slowdown_ema
+    }
+
+    /// Report one observed frame time at the current setting; returns the
+    /// setting to use for the next frame.
+    pub fn observe<'m>(&mut self, model: &'m PlasticModel, observed_ms: f64) -> &'m KnobSetting {
+        let nominal = model.settings[self.current].latency_ms.max(1e-6);
+        let inst = observed_ms / nominal;
+        self.slowdown_ema = (1.0 - self.alpha) * self.slowdown_ema + self.alpha * inst;
+        // Choose the best setting whose *predicted* time (nominal × EMA
+        // slowdown) fits in 90% of the deadline (hysteresis margin).
+        let budget = self.deadline_ms * 0.9 / self.slowdown_ema.max(0.1);
+        let pick = model
+            .settings
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.latency_ms <= budget)
+            .max_by(|a, b| a.1.accuracy.partial_cmp(&b.1.accuracy).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0); // fall to the cheapest knob under extreme pressure
+        self.current = pick;
+        &model.settings[pick]
+    }
+
+    pub fn current_setting<'m>(&self, model: &'m PlasticModel) -> &'m KnobSetting {
+        &model.settings[self.current.min(model.settings.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PlasticModel {
+        PlasticModel::standard_ladder("det", 80.0, 76.0)
+    }
+
+    #[test]
+    fn ladder_is_monotone_in_cost_and_pareto_sane() {
+        let m = model();
+        assert_eq!(m.settings.len(), 6);
+        for w in m.settings.windows(2) {
+            assert!(w[0].latency_ms <= w[1].latency_ms);
+        }
+        // Full model is the most accurate; the cheapest knob is the least.
+        let best = m.settings.iter().map(|s| s.accuracy).fold(f64::MIN, f64::max);
+        assert_eq!(m.settings.last().unwrap().accuracy, best);
+    }
+
+    #[test]
+    fn best_within_budget() {
+        let m = model();
+        let s = m.best_within(100.0).unwrap();
+        assert_eq!(s.name, "full");
+        let s = m.best_within(45.0).unwrap();
+        assert!(s.latency_ms <= 45.0);
+        assert!(m.best_within(1.0).is_none());
+    }
+
+    #[test]
+    fn controller_downshifts_under_contention_and_recovers() {
+        let m = model();
+        let mut c = AdaptationController::new(100.0);
+        // Uncontended: settles on the full model.
+        for _ in 0..10 {
+            let s = c.current_setting(&m).latency_ms;
+            c.observe(&m, s); // observed == nominal
+        }
+        assert_eq!(c.current_setting(&m).name, "full");
+        // GPU contention triples observed times: controller must shift to a
+        // setting that still meets the 100 ms deadline at 3x slowdown.
+        for _ in 0..20 {
+            let s = c.current_setting(&m).latency_ms;
+            c.observe(&m, s * 3.0);
+        }
+        let s = c.current_setting(&m);
+        assert!(
+            s.latency_ms * 3.0 <= 100.0,
+            "setting '{}' misses under contention",
+            s.name
+        );
+        assert_ne!(s.name, "full");
+        // Pressure releases: upshifts back to full.
+        for _ in 0..30 {
+            let s = c.current_setting(&m).latency_ms;
+            c.observe(&m, s);
+        }
+        assert_eq!(c.current_setting(&m).name, "full");
+    }
+
+    #[test]
+    fn extreme_pressure_falls_to_cheapest_knob() {
+        let m = model();
+        let mut c = AdaptationController::new(100.0);
+        for _ in 0..30 {
+            let s = c.current_setting(&m).latency_ms;
+            c.observe(&m, s * 50.0);
+        }
+        assert_eq!(
+            c.current_setting(&m).latency_ms,
+            m.settings[0].latency_ms,
+            "should degrade to the cheapest setting"
+        );
+    }
+
+    #[test]
+    fn pruned_variants_dominate_unpruned_at_same_exit() {
+        let m = model();
+        let full = m.settings.iter().find(|s| s.name == "full").unwrap();
+        let full_pruned = m.settings.iter().find(|s| s.name == "full+pruned").unwrap();
+        assert!(full_pruned.latency_ms < full.latency_ms);
+        assert!(full.accuracy - full_pruned.accuracy < 2.0, "pruning cost too high");
+    }
+}

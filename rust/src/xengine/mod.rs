@@ -1,0 +1,193 @@
+//! XEngine — the AI-conscious co-optimizing runtime (§2.5).
+//!
+//! A processor-sharing discrete-event simulator over a heterogeneous
+//! device set (Jetson-AGX-like: CPU cores, one GPU, DLA accelerators)
+//! runs multi-DNN applications under five scheduling regimes, reproducing
+//! the Table 5 ablation:
+//!
+//! 1. [`Policy::Rosch`] — fixed-priority real-time scheduler whose
+//!    non-preemptive, inconsistently-ordered resource acquisition
+//!    deadlocks the perception DNNs (Table 5 segment 1: ∞);
+//! 2. [`Policy::LinuxTs`] — CFS-like fair time-sharing: no deadlock, but
+//!    the GPU is oversubscribed and latency-critical CPU modules starve
+//!    behind batch work (segment 2);
+//! 3. [`Policy::JitPriority`] — XEngine's just-in-time priority
+//!    adjustment fixes CPU-side starvation (segment 3);
+//! 4. [`Policy::JitMigration`] — + DAG-instantiating scheduling migrates
+//!    DNNs to the under-utilized DLA (segment 4);
+//! 5. [`Policy::CoOpt`] — + model-schedule co-optimization compresses the
+//!    models (via the [`crate::pruning`] machinery) until the whole DAG
+//!    meets its deadlines (segment 5: 0% miss).
+
+pub mod adapp;
+pub mod knobs;
+pub mod sim;
+
+/// Compute units of the simulated board.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Unit {
+    /// One of the CPU cores (index).
+    Cpu(u8),
+    Gpu,
+    Dla(u8),
+}
+
+/// Scheduling regimes (Table 5 segments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Rosch,
+    LinuxTs,
+    JitPriority,
+    JitMigration,
+    CoOpt,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Rosch => "ROSCH (default)",
+            Policy::LinuxTs => "Linux time sharing",
+            Policy::JitPriority => "JIT priority adjustment",
+            Policy::JitMigration => "JIT + migration to accelerators",
+            Policy::CoOpt => "JIT + migration + model-schedule co-opt",
+        }
+    }
+
+    /// All segments in Table 5 order.
+    pub fn all() -> [Policy; 5] {
+        [
+            Policy::Rosch,
+            Policy::LinuxTs,
+            Policy::JitPriority,
+            Policy::JitMigration,
+            Policy::CoOpt,
+        ]
+    }
+}
+
+/// A periodic task (one application module).
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: &'static str,
+    /// Preferred unit and service demand there (ms of dedicated time).
+    pub unit: Unit,
+    pub demand_ms: f64,
+    /// Alternative unit (accelerator) and the demand there, if migratable.
+    pub alt: Option<(Unit, f64)>,
+    pub period_ms: f64,
+    /// Expected (deadline) latency; Table 5 brackets.
+    pub expected_ms: f64,
+    /// Static priority (higher = more important) used by priority policies.
+    pub priority: i32,
+    /// Is this a latency-critical module for JIT priority adjustment?
+    pub latency_critical: bool,
+    /// Demand noise (std, fraction of demand).
+    pub jitter: f64,
+    /// DNN modules participate in the ROSCH lock-order deadlock and are
+    /// eligible for migration / model co-optimization.
+    pub is_dnn: bool,
+}
+
+/// Per-module simulation outcome.
+#[derive(Debug, Clone)]
+pub struct ModuleResult {
+    pub name: &'static str,
+    /// Completed-instance latencies (ms). Empty ⇒ no instance ever
+    /// finished (deadlock/timeout: the Table 5 "∞").
+    pub latencies: Vec<f64>,
+    pub released: usize,
+    pub expected_ms: f64,
+}
+
+impl ModuleResult {
+    pub fn timed_out(&self) -> bool {
+        self.latencies.is_empty() && self.released > 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.latencies.is_empty() {
+            f64::INFINITY
+        } else {
+            self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.latencies.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.latencies.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.latencies.len() as f64)
+            .sqrt()
+    }
+
+    /// Miss rate vs expected latency (10% slack per Table 5 caption),
+    /// counting never-finished releases as misses.
+    pub fn miss_rate(&self) -> f64 {
+        if self.released == 0 {
+            return 0.0;
+        }
+        let finished_misses = self
+            .latencies
+            .iter()
+            .filter(|&&l| l > self.expected_ms * 1.1)
+            .count();
+        let unfinished = self.released - self.latencies.len();
+        (finished_misses + unfinished) as f64 / self.released as f64
+    }
+}
+
+/// Whole-application outcome for one policy.
+#[derive(Debug, Clone)]
+pub struct AppResult {
+    pub policy: Policy,
+    pub variant: &'static str,
+    pub modules: Vec<ModuleResult>,
+}
+
+impl AppResult {
+    pub fn module(&self, name: &str) -> &ModuleResult {
+        self.modules
+            .iter()
+            .find(|m| m.name == name)
+            .unwrap_or_else(|| panic!("no module '{name}'"))
+    }
+
+    /// The application's miss rate: that of its worst module (the paper's
+    /// "most sluggish module" column).
+    pub fn worst_miss_rate(&self) -> f64 {
+        self.modules
+            .iter()
+            .map(|m| m.miss_rate())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_result_stats() {
+        let r = ModuleResult {
+            name: "m",
+            latencies: vec![90.0, 110.0, 100.0],
+            released: 4,
+            expected_ms: 100.0,
+        };
+        assert!((r.mean() - 100.0).abs() < 1e-9);
+        assert!(r.std() > 0.0);
+        // 110 <= 110 (within 10% slack) → only the unfinished release misses.
+        assert!((r.miss_rate() - 0.25).abs() < 1e-9);
+        assert!(!r.timed_out());
+    }
+
+    #[test]
+    fn timeout_detection() {
+        let r = ModuleResult { name: "m", latencies: vec![], released: 10, expected_ms: 100.0 };
+        assert!(r.timed_out());
+        assert_eq!(r.mean(), f64::INFINITY);
+        assert_eq!(r.miss_rate(), 1.0);
+    }
+}

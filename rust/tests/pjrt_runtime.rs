@@ -1,0 +1,110 @@
+//! Integration tests over the real PJRT runtime: load the AOT artifacts,
+//! execute, and check numerics against expectations. Skipped (cleanly)
+//! when `make artifacts` has not been run.
+
+use std::time::Duration;
+
+use xgen::coordinator::Server;
+use xgen::runtime::{artifacts_present, default_artifact_dir, ModelRuntime};
+use xgen::util::rng::Rng;
+
+fn skip() -> bool {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn load_and_run_cnn_dense() {
+    if skip() {
+        return;
+    }
+    let mut rt = ModelRuntime::open(default_artifact_dir()).unwrap();
+    assert!(rt.available().contains(&"cnn_dense_b1"));
+    let m = rt.load("cnn_dense_b1").unwrap();
+    let n: usize = m.input_shape.iter().product();
+    let mut rng = Rng::new(301);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let y = m.run(&x).unwrap();
+    assert_eq!(y.len(), 8, "8-class logits");
+    assert!(y.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pattern_artifact_close_to_dense_on_logit_ranking() {
+    // The pattern artifact was fine-tuned after pruning, so logits differ;
+    // but both must be finite and produce a valid argmax.
+    if skip() {
+        return;
+    }
+    let mut rt = ModelRuntime::open(default_artifact_dir()).unwrap();
+    let mut rng = Rng::new(302);
+    let x: Vec<f32> = (0..3 * 24 * 24).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let d = rt.load("cnn_dense_b1").unwrap().run(&x).unwrap();
+    let p = rt.load("cnn_pattern_b1").unwrap().run(&x).unwrap();
+    assert_eq!(d.len(), p.len());
+    assert!(p.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn batch_artifact_matches_singles() {
+    if skip() {
+        return;
+    }
+    let mut rt = ModelRuntime::open(default_artifact_dir()).unwrap();
+    let mut rng = Rng::new(303);
+    let per = 3 * 24 * 24;
+    let inputs: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..per).map(|_| rng.f32() * 2.0 - 1.0).collect())
+        .collect();
+    let batched = rt.load("cnn_dense_b4").unwrap().run_batch(&inputs).unwrap();
+    for (i, input) in inputs.iter().enumerate() {
+        let single = rt.load("cnn_dense_b1").unwrap().run(input).unwrap();
+        for (a, b) in batched[i].iter().zip(&single) {
+            assert!((a - b).abs() < 1e-4, "batch/single divergence {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn wdsr_artifact_upscales() {
+    if skip() {
+        return;
+    }
+    let mut rt = ModelRuntime::open(default_artifact_dir()).unwrap();
+    let m = rt.load("wdsr_b1").unwrap();
+    let n: usize = m.input_shape.iter().product();
+    let x = vec![0.5f32; n];
+    let y = m.run(&x).unwrap();
+    assert_eq!(y.len(), 3 * 64 * 64, "x2 upscale of 3x32x32");
+}
+
+#[test]
+fn server_batches_and_answers_all() {
+    if skip() {
+        return;
+    }
+    let server = Server::start(
+        default_artifact_dir(),
+        "cnn_dense_b1",
+        "cnn_dense_b4",
+        Duration::from_millis(4),
+    )
+    .unwrap();
+    let mut rng = Rng::new(304);
+    let per = 3 * 24 * 24;
+    let mut rxs = Vec::new();
+    for _ in 0..13 {
+        let x: Vec<f32> = (0..per).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        rxs.push(server.submit(x));
+    }
+    for rx in rxs {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), 8);
+    }
+    let st = server.stats();
+    assert_eq!(st.completed, 13);
+    assert!(st.batches < 13, "no batching happened: {} batches", st.batches);
+}

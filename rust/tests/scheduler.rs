@@ -1,0 +1,102 @@
+//! Integration test: the full Table 5 sweep — six application variants ×
+//! five runtime regimes — checking the paper's qualitative results:
+//! deadlock under ROSCH, 100% miss under the intermediate regimes, 0%
+//! miss with the full XEngine stack.
+
+use xgen::xengine::adapp::{modules, variants};
+use xgen::xengine::sim::simulate;
+use xgen::xengine::Policy;
+
+#[test]
+fn table5_full_sweep() {
+    for v in variants() {
+        let mods = modules(v);
+        // Segment 1: ROSCH — perception deadlocks (∞), app misses 100%.
+        let r1 = simulate(v.name, &mods, Policy::Rosch, 3000.0, 0xAD01);
+        assert!(r1.module("2d_percept").timed_out(), "{}: no deadlock", v.name);
+        assert!(r1.worst_miss_rate() > 0.99, "{}: rosch miss {}", v.name, r1.worst_miss_rate());
+
+        // Segments 2–4: progress but the most sluggish module still misses.
+        for (policy, seed) in [
+            (Policy::LinuxTs, 0xAD02u64),
+            (Policy::JitPriority, 0xAD03),
+            (Policy::JitMigration, 0xAD04),
+        ] {
+            let r = simulate(v.name, &mods, policy, 3000.0, seed);
+            assert!(
+                !r.module("2d_percept").timed_out(),
+                "{} {:?}: still deadlocked",
+                v.name,
+                policy
+            );
+            assert!(
+                r.module("2d_percept").miss_rate() > 0.9,
+                "{} {:?}: 2d miss only {}",
+                v.name,
+                policy,
+                r.module("2d_percept").miss_rate()
+            );
+        }
+
+        // Segment 5: co-optimization meets the deadlines (0% in the paper;
+        // allow a little simulator noise).
+        let r5 = simulate(v.name, &mods, Policy::CoOpt, 3000.0, 0xAD05);
+        assert!(
+            r5.worst_miss_rate() < 0.05,
+            "{}: co-opt misses {:?}",
+            v.name,
+            r5.modules
+                .iter()
+                .map(|m| (m.name, m.miss_rate()))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn jit_fixes_localization_starvation_in_every_variant() {
+    for v in variants() {
+        let mods = modules(v);
+        let ts = simulate(v.name, &mods, Policy::LinuxTs, 3000.0, 0xBD01);
+        let jit = simulate(v.name, &mods, Policy::JitPriority, 3000.0, 0xBD02);
+        let loc_ts = ts.module("localization").mean();
+        let loc_jit = jit.module("localization").mean();
+        assert!(
+            loc_jit < loc_ts * 0.7,
+            "{}: localization {} -> {} (no JIT win)",
+            v.name,
+            loc_ts,
+            loc_jit
+        );
+        assert!(loc_jit < 60.0, "{}: jit localization {}", v.name, loc_jit);
+    }
+}
+
+#[test]
+fn planning_meets_10ms_deadline_under_all_policies() {
+    // Planning is tiny and runs on its own core — it must never miss
+    // (Table 5 shows ~1.1ms under every segment).
+    let v = variants()[2];
+    let mods = modules(v);
+    for p in Policy::all() {
+        let r = simulate(v.name, &mods, p, 2000.0, 0xCD01);
+        assert!(
+            r.module("planning").miss_rate() < 0.02,
+            "{:?}: planning miss {}",
+            p,
+            r.module("planning").miss_rate()
+        );
+        assert!(r.module("planning").mean() < 3.0);
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let v = variants()[0];
+    let mods = modules(v);
+    let a = simulate(v.name, &mods, Policy::LinuxTs, 1500.0, 42);
+    let b = simulate(v.name, &mods, Policy::LinuxTs, 1500.0, 42);
+    for (ma, mb) in a.modules.iter().zip(&b.modules) {
+        assert_eq!(ma.latencies, mb.latencies);
+    }
+}
