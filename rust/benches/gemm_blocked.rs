@@ -1,0 +1,127 @@
+//! E15 — the generated-code hot path (§2.3): naive triple-loop GEMM vs the
+//! cache-blocked micro-kernel engine vs blocked+parallel, with the memory
+//! planner's pooling stats on the demo CNN. Acceptance: blocked+parallel
+//! ≥ 3x over naive at M=N=K=512 with max abs error ≤ 1e-3 vs the naive
+//! oracle. Writes machine-local numbers to `BENCH_gemm.json` at the repo
+//! root (the checked-in file is a placeholder until this bench runs).
+
+use xgen::exec::FusedExecutor;
+use xgen::fusion::{fuse, FusionConfig};
+use xgen::graph::zoo::NetBuilder;
+use xgen::graph::{Act, WeightStore};
+use xgen::tensor::gemm::{gemm, gemm_naive, GemmConfig};
+use xgen::util::bench::{sink, time_ms, Table};
+use xgen::util::json::Json;
+use xgen::util::rng::Rng;
+
+fn max_abs_diff(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+}
+
+fn main() {
+    let mut rng = Rng::new(0x6E44);
+    let mut t = Table::new(&[
+        "M=N=K",
+        "naive (ms)",
+        "blocked (ms)",
+        "+parallel (ms)",
+        "blk x",
+        "par x",
+        "GFLOP/s",
+        "max err",
+    ]);
+    let single = GemmConfig { threads: 1, ..Default::default() };
+    let parallel = GemmConfig { threads: 0, ..Default::default() };
+    let mut results = Vec::new();
+    for &d in &[128usize, 256, 512] {
+        let a = rng.normal_vec(d * d, 0.0, 1.0);
+        let b = rng.normal_vec(d * d, 0.0, 1.0);
+        let mut want = vec![0.0f32; d * d];
+        gemm_naive(d, d, d, &a, &b, &mut want);
+        let (warm, samples) = if d >= 512 { (1, 3) } else { (1, 5) };
+        let naive_t = time_ms(warm, samples, || {
+            let mut c = vec![0.0f32; d * d];
+            gemm_naive(d, d, d, &a, &b, &mut c);
+            sink(c);
+        });
+        let mut got_blocked = vec![0.0f32; d * d];
+        let blocked_t = time_ms(warm, samples, || {
+            gemm(d, d, d, &a, &b, &mut got_blocked, &single);
+        });
+        let mut got_par = vec![0.0f32; d * d];
+        let par_t = time_ms(warm, samples, || {
+            gemm(d, d, d, &a, &b, &mut got_par, &parallel);
+        });
+        let err = max_abs_diff(&want, &got_blocked).max(max_abs_diff(&want, &got_par));
+        let gflops = 2.0 * (d as f64).powi(3) / (par_t.mean * 1e-3) / 1e9;
+        t.row(vec![
+            d.to_string(),
+            format!("{:.2}", naive_t.mean),
+            format!("{:.2}", blocked_t.mean),
+            format!("{:.2}", par_t.mean),
+            format!("{:.2}x", naive_t.mean / blocked_t.mean),
+            format!("{:.2}x", naive_t.mean / par_t.mean),
+            format!("{gflops:.1}"),
+            format!("{err:.1e}"),
+        ]);
+        results.push(Json::obj(vec![
+            ("size", Json::num(d as f64)),
+            ("naive_ms", Json::num(naive_t.mean)),
+            ("blocked_ms", Json::num(blocked_t.mean)),
+            ("parallel_ms", Json::num(par_t.mean)),
+            ("speedup_blocked", Json::num(naive_t.mean / blocked_t.mean)),
+            ("speedup_parallel", Json::num(naive_t.mean / par_t.mean)),
+            ("gflops_parallel", Json::num(gflops)),
+            ("max_abs_err", Json::num(err as f64)),
+        ]));
+    }
+    t.print("blocked+parallel GEMM vs naive triple loop (f32, square)");
+
+    // Memory planner: peak live allocations on the demo CNN, fused path.
+    let mut b = NetBuilder::new("demo", &[1, 3, 32, 32]);
+    b.conv_bn_act(16, 3, 1, 1, Act::Relu);
+    b.conv_bn_act(16, 3, 1, 1, Act::Relu);
+    b.conv_bn_act(32, 3, 2, 1, Act::Relu);
+    b.gap();
+    b.dense(10);
+    let g = b.finish();
+    let ws = WeightStore::init_random(&g, &mut rng);
+    let x = xgen::tensor::Tensor::randn(&[1, 3, 32, 32], 1.0, &mut rng);
+    let plan = fuse(&g, &FusionConfig::default());
+    let (_, stats) = FusedExecutor::new(&g, &ws, &plan).run_with_stats(&[x]).unwrap();
+    println!(
+        "\nmemory planner (demo CNN): {} materialized values -> {} pooled slots \
+         (peak live {}), buffer bytes {} -> {} ({:.0}% saved)",
+        stats.planned_values,
+        stats.slots,
+        stats.peak_live,
+        stats.bytes_one_per_node,
+        stats.bytes_pooled,
+        stats.bytes_saved_frac() * 100.0
+    );
+
+    // Dump machine-local numbers next to the repo root for EXPERIMENTS.md.
+    let json = Json::obj(vec![
+        ("bench", Json::str("gemm_blocked")),
+        ("results", Json::Arr(results)),
+        (
+            "planner",
+            Json::obj(vec![
+                ("planned_values", Json::num(stats.planned_values as f64)),
+                ("slots", Json::num(stats.slots as f64)),
+                ("peak_live", Json::num(stats.peak_live as f64)),
+                ("bytes_one_per_node", Json::num(stats.bytes_one_per_node as f64)),
+                ("bytes_pooled", Json::num(stats.bytes_pooled as f64)),
+            ]),
+        ),
+    ]);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_gemm.json"
+    } else {
+        "BENCH_gemm.json"
+    };
+    match std::fs::write(path, json.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -249,6 +249,49 @@ pub fn energy_mj(device: &Device, latency_ms: f64) -> f64 {
     device.power_w * latency_ms
 }
 
+/// Main-memory traffic (bytes) of a cache-blocked `[m,k] x [k,n]` f32 GEMM
+/// at panel sizes `mc/kc/nc` — the analytic model behind the block-size
+/// knob ([`crate::xengine::knobs::gemm_ladder`]):
+///
+/// * each packed B panel (`kc x nc`) is loaded once per K-panel per column
+///   block → `k*n` total;
+/// * each packed A panel (`mc x kc`) is reloaded for every column block →
+///   `m*k*ceil(n/nc)`;
+/// * C is read+written once per K panel → `2*m*n*ceil(k/kc)`.
+///
+/// Bigger panels cut the A and C reload factors until the working set
+/// spills the cache — which is exactly the trade `fig6_blocksize`
+/// measures against wall-clock.
+///
+/// The model describes ONE worker band: the engine's row-band parallelism
+/// re-packs B per band, so for a `threads = T` run the B term scales by
+/// `T` (the knob-sweep bench only quotes predictions for single-thread
+/// settings for this reason).
+pub fn gemm_blocked_traffic_bytes(
+    m: usize,
+    k: usize,
+    n: usize,
+    mc: usize,
+    kc: usize,
+    nc: usize,
+) -> u64 {
+    let ceil_div = |a: usize, b: usize| ((a + b - 1) / b.max(1)) as u64;
+    let (m64, k64, n64) = (m as u64, k as u64, n as u64);
+    let b_loads = k64 * n64;
+    let a_loads = m64 * k64 * ceil_div(n, nc);
+    let c_moves = 2 * m64 * n64 * ceil_div(k, kc);
+    let _ = mc; // row-panel height bounds the packing buffer, not DRAM traffic
+    4 * (a_loads + b_loads + c_moves)
+}
+
+/// Traffic of the unblocked triple loop for comparison: the whole of B is
+/// re-streamed for every output row (no cross-row reuse), A is read once,
+/// and each C row is written once.
+pub fn gemm_naive_traffic_bytes(m: usize, k: usize, n: usize) -> u64 {
+    let (m64, k64, n64) = (m as u64, k as u64, n as u64);
+    4 * (m64 * k64 + m64 * k64 * n64 + 2 * m64 * n64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +367,22 @@ mod tests {
     fn energy_scales_with_power_and_time() {
         let d = devices::tpu_v2();
         assert!((energy_mj(&d, 10.0) - 2800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blocked_gemm_traffic_far_below_naive() {
+        let (m, k, n) = (512, 512, 512);
+        let blocked = gemm_blocked_traffic_bytes(m, k, n, 64, 256, 256);
+        let naive = gemm_naive_traffic_bytes(m, k, n);
+        assert!(blocked * 10 < naive, "blocked {blocked} vs naive {naive}");
+        // Wider column panels cut the A reload factor.
+        let narrow = gemm_blocked_traffic_bytes(m, k, n, 64, 256, 64);
+        let wide = gemm_blocked_traffic_bytes(m, k, n, 64, 256, 512);
+        assert!(wide < narrow);
+        // Deeper K panels cut the C read-modify-write factor.
+        let shallow = gemm_blocked_traffic_bytes(m, k, n, 64, 64, 256);
+        let deep = gemm_blocked_traffic_bytes(m, k, n, 64, 512, 256);
+        assert!(deep < shallow);
     }
 
     #[test]

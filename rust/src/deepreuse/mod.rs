@@ -16,6 +16,7 @@
 //! reuse ratio `rows/clusters` is the paper's knob: ~2× savings at <5e-4
 //! accuracy loss (benchmarked in `benches/deepreuse.rs`).
 
+use crate::tensor::gemm::{gemm, GemmConfig};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -113,36 +114,40 @@ pub fn reuse_gemm(x: &Tensor, w: &Tensor, cfg: &ReuseConfig) -> (Tensor, ReuseSt
             buckets.entry(sig).or_default().push(r);
         }
         stats.clusters += buckets.len();
-        // Centroid per bucket; centroid GEMM; scatter (outliers exact).
-        for (_, members) in buckets {
-            let mut centroid = vec![0.0f32; cw];
+        // Centroid per bucket, then ONE blocked GEMM over all centroids of
+        // the chunk — [clusters, cw] x [cw, n] through the tiled engine —
+        // instead of a scalar loop per centroid. The weight panel
+        // w[c0..c0+cw, :] is already contiguous in the row-major store.
+        let nb = buckets.len();
+        let mut centroids = vec![0.0f32; nb * cw];
+        let mut member_lists: Vec<Vec<usize>> = Vec::with_capacity(nb);
+        for (bi, (_, members)) in buckets.into_iter().enumerate() {
+            let cent = &mut centroids[bi * cw..(bi + 1) * cw];
             for &r in &members {
                 let seg = &x.data()[r * cols + c0..r * cols + c0 + cw];
-                for (c, &v) in centroid.iter_mut().zip(seg) {
+                for (c, &v) in cent.iter_mut().zip(seg) {
                     *c += v;
                 }
             }
             let inv = 1.0 / members.len() as f32;
-            for c in centroid.iter_mut() {
+            for c in cent.iter_mut() {
                 *c *= inv;
             }
-            // partial = centroid · w[c0..c0+cw, :]
-            let mut partial = vec![0.0f32; n];
-            for (i, &cv) in centroid.iter().enumerate() {
-                if cv == 0.0 {
-                    continue;
-                }
-                let wrow = &w.data()[(c0 + i) * n..(c0 + i + 1) * n];
-                for (p, &wv) in partial.iter_mut().zip(wrow) {
-                    *p += cv * wv;
-                }
-            }
-            stats.macs_done += (cw * n) as u64;
-            for &r in &members {
+            member_lists.push(members);
+        }
+        let wpanel = &w.data()[c0 * n..(c0 + cw) * n];
+        let mut partials = vec![0.0f32; nb * n];
+        gemm(nb, cw, n, &centroids, wpanel, &mut partials, &GemmConfig::default());
+        stats.macs_done += (nb * cw * n) as u64;
+        // Scatter centroid results to members (outliers computed exactly).
+        for (bi, members) in member_lists.iter().enumerate() {
+            let centroid = &centroids[bi * cw..(bi + 1) * cw];
+            let partial = &partials[bi * n..(bi + 1) * n];
+            for &r in members {
                 let seg = &x.data()[r * cols + c0..r * cols + c0 + cw];
                 // Adaptive outlier check: exact compute for far members.
                 let (mut d2, mut s2) = (0.0f32, 0.0f32);
-                for (&v, &c) in seg.iter().zip(&centroid) {
+                for (&v, &c) in seg.iter().zip(centroid) {
                     d2 += (v - c) * (v - c);
                     s2 += v * v;
                 }
@@ -161,7 +166,7 @@ pub fn reuse_gemm(x: &Tensor, w: &Tensor, cfg: &ReuseConfig) -> (Tensor, ReuseSt
                     }
                     stats.macs_done += (cw * n) as u64;
                 } else {
-                    for (o, &p) in orow.iter_mut().zip(&partial) {
+                    for (o, &p) in orow.iter_mut().zip(partial) {
                         *o += p;
                     }
                 }

@@ -17,9 +17,13 @@
 //! Gather, Embedding) are intentionally out of scope and return an error —
 //! the structural zoo models are cost-modeled, not CPU-executed.
 
+pub mod planner;
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
+
+pub use planner::{MemoryPlan, PlanStats};
 
 use crate::fkw::FkwLayer;
 use crate::fusion::FusionPlan;
@@ -72,12 +76,18 @@ impl<'g> Executor<'g> {
             };
             vals[n.id] = Some(v);
         }
-        Ok(self
-            .g
-            .outputs
-            .iter()
-            .map(|&o| vals[o].clone().expect("output computed"))
-            .collect())
+        // Move outputs out of the value table instead of cloning them —
+        // for image-sized outputs (super-resolution, segmentation) the
+        // clone used to double the output footprint for nothing.
+        let mut outs = Vec::with_capacity(self.g.outputs.len());
+        for &o in &self.g.outputs {
+            outs.push(
+                vals[o]
+                    .take()
+                    .ok_or_else(|| anyhow!("output {o} not computed (or listed twice)"))?,
+            );
+        }
+        Ok(outs)
     }
 }
 
@@ -436,14 +446,40 @@ fn broadcast_to(x: &Tensor, shape: &[usize]) -> Result<Tensor> {
 pub struct FusedExecutor<'g> {
     g: &'g Graph,
     ws: &'g WeightStore,
-    plan: &'g FusionPlan,
+    /// Fused groups in execution order (sorted by first member; the plan
+    /// preserves topological order within and across groups by
+    /// construction).
+    groups: Vec<&'g crate::fusion::FusedGroup>,
+    /// Which values materialize into pooled slots: group tails and members
+    /// whose value escapes their group. Derived once from users() here
+    /// (§Perf iteration 1: users() used to be recomputed per node, costing
+    /// O(V·E) on deep graphs).
+    materialize: Vec<bool>,
+    /// Buffer pool plan over the flattened group order (§Perf iteration 3:
+    /// computed once here, not per run).
+    mplan: MemoryPlan,
     /// conv node id -> FKW-encoded layer.
     fkw: BTreeMap<NodeId, FkwLayer>,
 }
 
 impl<'g> FusedExecutor<'g> {
     pub fn new(g: &'g Graph, ws: &'g WeightStore, plan: &'g FusionPlan) -> FusedExecutor<'g> {
-        FusedExecutor { g, ws, plan, fkw: BTreeMap::new() }
+        let users = g.users();
+        let mut groups: Vec<&'g crate::fusion::FusedGroup> = plan.groups.iter().collect();
+        groups.sort_by_key(|gr| gr.nodes[0]);
+        let order: Vec<NodeId> = groups.iter().flat_map(|gr| gr.nodes.iter().copied()).collect();
+        let mut materialize = vec![false; g.nodes.len()];
+        for gr in &groups {
+            for &id in &gr.nodes {
+                let escapes = users[id].iter().any(|&u| !gr.nodes.contains(&u))
+                    || g.outputs.contains(&id);
+                if id == *gr.nodes.last().unwrap() || escapes {
+                    materialize[id] = true;
+                }
+            }
+        }
+        let mplan = MemoryPlan::new(g, &order, &materialize);
+        FusedExecutor { g, ws, groups, materialize, mplan, fkw: BTreeMap::new() }
     }
 
     /// Register a pattern assignment for a conv node: it will execute via
@@ -466,41 +502,52 @@ impl<'g> FusedExecutor<'g> {
     }
 
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let mut vals: Vec<Option<Tensor>> = vec![None; self.g.nodes.len()];
+        self.run_with_stats(inputs).map(|(y, _)| y)
+    }
+
+    /// Run and also return the memory planner's pool statistics —
+    /// `benches/gemm_blocked.rs` and the e2e tests report `slots` vs
+    /// `planned_values` as the peak-live-allocation reduction.
+    pub fn run_with_stats(&self, inputs: &[Tensor]) -> Result<(Vec<Tensor>, PlanStats)> {
+        // Sources are *referenced* from the caller's inputs and the weight
+        // store — the per-run clone of every weight tensor is gone.
+        let mut src: Vec<Option<&Tensor>> = vec![None; self.g.nodes.len()];
         let mut next_input = 0usize;
-        // Seed sources.
         for n in &self.g.nodes {
             match &n.op {
                 OpKind::Input => {
-                    vals[n.id] = Some(inputs[next_input].clone());
+                    let t = inputs
+                        .get(next_input)
+                        .ok_or_else(|| anyhow!("missing input {next_input}"))?;
+                    src[n.id] = Some(t);
                     next_input += 1;
                 }
                 OpKind::Weight => {
-                    vals[n.id] = Some(
+                    src[n.id] = Some(
                         self.ws
                             .get(&n.name)
-                            .ok_or_else(|| anyhow!("weight '{}' missing", n.name))?
-                            .clone(),
+                            .ok_or_else(|| anyhow!("weight '{}' missing", n.name))?,
                     );
                 }
                 _ => {}
             }
         }
-        // Execute groups in order of their first node (plan preserves
-        // topological order within and across groups by construction).
-        // users() hoisted out of the hot loop (§Perf iteration 1: it was
-        // recomputed per node, costing O(V·E) on deep graphs).
-        let users = self.g.users();
-        let mut groups: Vec<&crate::fusion::FusedGroup> = self.plan.groups.iter().collect();
-        groups.sort_by_key(|gr| gr.nodes[0]);
-        for gr in groups {
+        // Materialized values live in a planned pool of reusable slots
+        // instead of one entry per node; a value's buffer is dropped as
+        // soon as its last consumer has run.
+        let mut slots: Vec<Option<Tensor>> = (0..self.mplan.num_slots).map(|_| None).collect();
+
+        let mut p = 0usize; // position in the flattened group order
+        for gr in &self.groups {
             // Fused evaluation: walk members; elementwise unary members
             // mutate the running buffer in place.
             let mut buf: Option<Tensor> = None;
+            let mut prev_id: Option<NodeId> = None;
             for &id in &gr.nodes {
                 let n = self.g.node(id);
                 let in_place = buf.is_some()
                     && n.inputs.len() == 1
+                    && prev_id == Some(n.inputs[0])
                     && matches!(
                         n.op,
                         OpKind::Activation(_)
@@ -513,50 +560,87 @@ impl<'g> FusedExecutor<'g> {
                     apply_unary_inplace(&n.op, &mut t);
                     t
                 } else if let Some(fkw) = self.fkw.get(&id) {
-                    let x = n
+                    let xid = n
                         .inputs
                         .iter()
-                        .map(|&i| vals[i].as_ref())
-                        .find(|v| v.is_some())
-                        .flatten()
-                        .ok_or_else(|| anyhow!("missing conv input"))?;
+                        .copied()
+                        .find(|&i| !matches!(self.g.node(i).op, OpKind::Weight))
+                        .ok_or_else(|| anyhow!("conv without data input"))?;
+                    let x = planned_value(&self.mplan, &slots, &src, xid)
+                        .ok_or_else(|| anyhow!("missing conv input {xid}"))?;
                     fkw.conv2d(x)
                 } else {
                     let prev = buf.take();
-                    let args: Vec<&Tensor> = n
-                        .inputs
-                        .iter()
-                        .map(|&i| {
-                            vals[i]
-                                .as_ref()
-                                .or(prev.as_ref())
-                                .expect("fused input available")
-                        })
-                        .collect();
+                    let mut args: Vec<&Tensor> = Vec::with_capacity(n.inputs.len());
+                    for &i in &n.inputs {
+                        // The running buffer stands in only for the
+                        // *immediately preceding* member; anything else
+                        // must be materialized, and a miss is a loud
+                        // error, not a silent wrong-tensor substitution.
+                        let v = planned_value(&self.mplan, &slots, &src, i)
+                            .or(if prev_id == Some(i) { prev.as_ref() } else { None })
+                            .ok_or_else(|| {
+                                anyhow!(
+                                    "input {i} of node {id} not materialized — \
+                                     fusion order is not topological"
+                                )
+                            })?;
+                        args.push(v);
+                    }
                     eval_op(self.g, id, &args)?
                 };
                 // Tail of group keeps the buffer; intermediates whose value
-                // escapes the group are materialized into vals.
+                // escapes the group are materialized into their slot.
                 buf = Some(out);
-                let escapes = users[id].iter().any(|&uu| !gr.nodes.contains(&uu))
-                    || self.g.outputs.contains(&id);
                 if id == *gr.nodes.last().unwrap() {
                     // Tail: the buffer's last stop — move, don't clone
                     // (§Perf iteration 2: the clone here copied every
                     // group-boundary tensor twice).
-                    vals[id] = buf.take();
-                } else if escapes {
-                    vals[id] = buf.clone();
+                    let slot = self.mplan.slot_of[id].expect("tail has a slot");
+                    slots[slot] = buf.take();
+                } else if self.materialize[id] {
+                    let slot = self.mplan.slot_of[id].expect("escaping value has a slot");
+                    slots[slot] = buf.clone();
                 }
+                // Recycle buffers whose last consumer just ran.
+                for &d in &self.mplan.expire[p] {
+                    if let Some(s) = self.mplan.slot_of[d] {
+                        slots[s] = None;
+                    }
+                }
+                p += 1;
+                prev_id = Some(id);
             }
         }
-        Ok(self
-            .g
-            .outputs
-            .iter()
-            .map(|&o| vals[o].clone().expect("output computed"))
-            .collect())
+        let mut outs = Vec::with_capacity(self.g.outputs.len());
+        for &o in &self.g.outputs {
+            let t = if let Some(t) = src[o] {
+                t.clone()
+            } else {
+                let s = self.mplan.slot_of[o].ok_or_else(|| anyhow!("output {o} not planned"))?;
+                slots[s]
+                    .take()
+                    .ok_or_else(|| anyhow!("output {o} not computed (or listed twice)"))?
+            };
+            outs.push(t);
+        }
+        Ok((outs, self.mplan.stats.clone()))
     }
+}
+
+/// Look up a node's current value: sources come from their backing
+/// storage (caller inputs / weight store), compute nodes from their
+/// planned slot.
+fn planned_value<'a>(
+    mplan: &MemoryPlan,
+    slots: &'a [Option<Tensor>],
+    src: &[Option<&'a Tensor>],
+    id: NodeId,
+) -> Option<&'a Tensor> {
+    if let Some(t) = src[id] {
+        return Some(t);
+    }
+    mplan.slot_of[id].and_then(|s| slots[s].as_ref())
 }
 
 fn apply_unary_inplace(op: &OpKind, t: &mut Tensor) {
@@ -637,6 +721,27 @@ mod tests {
                 a[0].max_abs_diff(&b[0])
             );
         });
+    }
+
+    #[test]
+    fn memory_planner_pools_buffers_without_changing_results() {
+        let g = demo_cnn();
+        let mut rng = Rng::new(57);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let x = Tensor::randn(&[1, 3, 16, 16], 1.0, &mut rng);
+        let reference = Executor::new(&g, &ws).run(&[x.clone()]).unwrap();
+        let plan = fuse(&g, &FusionConfig::default());
+        let (fused, stats) = FusedExecutor::new(&g, &ws, &plan)
+            .run_with_stats(&[x])
+            .unwrap();
+        assert!(reference[0].max_abs_diff(&fused[0]) < 1e-4);
+        assert!(
+            stats.slots < stats.planned_values,
+            "planner did not pool: {} slots for {} materialized values",
+            stats.slots,
+            stats.planned_values
+        );
+        assert!(stats.bytes_pooled < stats.bytes_one_per_node);
     }
 
     #[test]

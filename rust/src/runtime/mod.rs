@@ -4,124 +4,182 @@
 //! upstream (compiler, pruning, scheduling) is plain Rust, and Python is
 //! never on this path.
 //!
-//! Artifacts are compiled once per process and cached in the
-//! [`ModelRuntime`] registry; the serving hot loop in
-//! [`crate::coordinator`] only calls [`LoadedModel::run_batch`].
+//! The `xla` crate is not part of the offline dependency set, so the real
+//! client lives behind the `xla` cargo feature. Without it (the default)
+//! this module compiles a stub with the same API whose `open` reports PJRT
+//! as unavailable — the serving loop in [`crate::coordinator`] and the
+//! PJRT integration tests degrade gracefully (tests skip when no
+//! artifacts/runtime are present).
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
 
-use crate::util::json::Json;
+    use anyhow::{anyhow, bail, Context, Result};
 
-/// A compiled artifact ready to execute.
-pub struct LoadedModel {
-    pub name: String,
-    pub input_shape: Vec<usize>,
-    exe: xla::PjRtLoadedExecutable,
-}
+    use crate::util::json::Json;
 
-impl LoadedModel {
-    /// Execute on one input tensor (row-major f32 matching `input_shape`).
-    /// Returns the flattened first output.
-    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
-        let elems: usize = self.input_shape.iter().product();
-        if input.len() != elems {
-            bail!("input length {} != shape {:?}", input.len(), self.input_shape);
-        }
-        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+    /// A compiled artifact ready to execute.
+    pub struct LoadedModel {
+        pub name: String,
+        pub input_shape: Vec<usize>,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Batch of inputs, each `input_shape[1..]`-shaped; the artifact's
-    /// leading dim must equal `inputs.len()`.
-    pub fn run_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let batch = self.input_shape[0];
-        if inputs.len() != batch {
-            bail!("artifact batch {} != {} requests", batch, inputs.len());
-        }
-        let per: usize = self.input_shape[1..].iter().product();
-        let mut flat = Vec::with_capacity(batch * per);
-        for i in inputs {
-            if i.len() != per {
-                bail!("request length {} != {}", i.len(), per);
+    impl LoadedModel {
+        /// Execute on one input tensor (row-major f32 matching
+        /// `input_shape`). Returns the flattened first output.
+        pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+            let elems: usize = self.input_shape.iter().product();
+            if input.len() != elems {
+                bail!("input length {} != shape {:?}", input.len(), self.input_shape);
             }
-            flat.extend_from_slice(i);
+            let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(input).reshape(&dims)?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
         }
-        let out = self.run(&flat)?;
-        let out_per = out.len() / batch;
-        Ok(out.chunks(out_per).map(|c| c.to_vec()).collect())
+
+        /// Batch of inputs, each `input_shape[1..]`-shaped; the artifact's
+        /// leading dim must equal `inputs.len()`.
+        pub fn run_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            let batch = self.input_shape[0];
+            if inputs.len() != batch {
+                bail!("artifact batch {} != {} requests", batch, inputs.len());
+            }
+            let per: usize = self.input_shape[1..].iter().product();
+            let mut flat = Vec::with_capacity(batch * per);
+            for i in inputs {
+                if i.len() != per {
+                    bail!("request length {} != {}", i.len(), per);
+                }
+                flat.extend_from_slice(i);
+            }
+            let out = self.run(&flat)?;
+            let out_per = out.len() / batch;
+            Ok(out.chunks(out_per).map(|c| c.to_vec()).collect())
+        }
+    }
+
+    /// Registry of compiled artifacts over one PJRT client.
+    pub struct ModelRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        meta: BTreeMap<String, Vec<usize>>,
+        models: BTreeMap<String, LoadedModel>,
+    }
+
+    impl ModelRuntime {
+        /// Open the artifact directory (reads `meta.json`).
+        pub fn open<P: AsRef<Path>>(dir: P) -> Result<ModelRuntime> {
+            let dir = dir.as_ref().to_path_buf();
+            let meta_path = dir.join("meta.json");
+            let text = std::fs::read_to_string(&meta_path)
+                .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+            let parsed = Json::parse(&text).map_err(|e| anyhow!("bad meta.json: {e}"))?;
+            let mut meta = BTreeMap::new();
+            for (name, entry) in parsed.as_obj().ok_or_else(|| anyhow!("meta.json not an object"))? {
+                let shape: Vec<usize> = entry
+                    .get("input")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("artifact {name} missing input shape"))?
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .map(|v| v as usize)
+                    .collect();
+                meta.insert(name.clone(), shape);
+            }
+            let client = xla::PjRtClient::cpu()?;
+            Ok(ModelRuntime { client, dir, meta, models: BTreeMap::new() })
+        }
+
+        /// Artifact names available in meta.json.
+        pub fn available(&self) -> Vec<&str> {
+            self.meta.keys().map(|s| s.as_str()).collect()
+        }
+
+        /// Compile (or fetch cached) an artifact.
+        pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+            if !self.models.contains_key(name) {
+                let shape = self
+                    .meta
+                    .get(name)
+                    .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+                    .clone();
+                let path = self.dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp)?;
+                self.models.insert(
+                    name.to_string(),
+                    LoadedModel { name: name.to_string(), input_shape: shape, exe },
+                );
+            }
+            Ok(&self.models[name])
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
     }
 }
 
-/// Registry of compiled artifacts over one PJRT client.
-pub struct ModelRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    meta: BTreeMap<String, Vec<usize>>,
-    models: BTreeMap<String, LoadedModel>,
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    /// Stub artifact handle — the `xla` feature is off, so nothing can
+    /// actually execute; the type exists so callers compile unchanged.
+    pub struct LoadedModel {
+        pub name: String,
+        pub input_shape: Vec<usize>,
+    }
+
+    impl LoadedModel {
+        pub fn run(&self, _input: &[f32]) -> Result<Vec<f32>> {
+            bail!("built without the `xla` feature — PJRT execution unavailable")
+        }
+
+        pub fn run_batch(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            bail!("built without the `xla` feature — PJRT execution unavailable")
+        }
+    }
+
+    /// Stub registry: `open` always fails with a clear message, which the
+    /// serving loop and integration tests treat as "runtime absent".
+    pub struct ModelRuntime {
+        _priv: (),
+    }
+
+    impl ModelRuntime {
+        pub fn open<P: AsRef<Path>>(_dir: P) -> Result<ModelRuntime> {
+            bail!("built without the `xla` feature — enable it (with the vendored xla crate) to load PJRT artifacts")
+        }
+
+        pub fn available(&self) -> Vec<&str> {
+            Vec::new()
+        }
+
+        pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+            bail!("built without the `xla` feature — cannot load '{name}'")
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (no xla feature)".to_string()
+        }
+    }
 }
 
-impl ModelRuntime {
-    /// Open the artifact directory (reads `meta.json`).
-    pub fn open<P: AsRef<Path>>(dir: P) -> Result<ModelRuntime> {
-        let dir = dir.as_ref().to_path_buf();
-        let meta_path = dir.join("meta.json");
-        let text = std::fs::read_to_string(&meta_path)
-            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
-        let parsed = Json::parse(&text).map_err(|e| anyhow!("bad meta.json: {e}"))?;
-        let mut meta = BTreeMap::new();
-        for (name, entry) in parsed.as_obj().ok_or_else(|| anyhow!("meta.json not an object"))? {
-            let shape: Vec<usize> = entry
-                .get("input")
-                .and_then(|v| v.as_arr())
-                .ok_or_else(|| anyhow!("artifact {name} missing input shape"))?
-                .iter()
-                .filter_map(|v| v.as_f64())
-                .map(|v| v as usize)
-                .collect();
-            meta.insert(name.clone(), shape);
-        }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(ModelRuntime { client, dir, meta, models: BTreeMap::new() })
-    }
-
-    /// Artifact names available in meta.json.
-    pub fn available(&self) -> Vec<&str> {
-        self.meta.keys().map(|s| s.as_str()).collect()
-    }
-
-    /// Compile (or fetch cached) an artifact.
-    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
-        if !self.models.contains_key(name) {
-            let shape = self
-                .meta
-                .get(name)
-                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
-                .clone();
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.models.insert(
-                name.to_string(),
-                LoadedModel { name: name.to_string(), input_shape: shape, exe },
-            );
-        }
-        Ok(&self.models[name])
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
+pub use pjrt::{LoadedModel, ModelRuntime};
 
 /// Locate the repo's artifact dir relative to CWD (tests/examples run from
 /// the workspace root; benches sometimes from target/).
@@ -135,7 +193,8 @@ pub fn default_artifact_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
-/// True when AOT artifacts exist (tests skip gracefully otherwise).
+/// True when AOT artifacts exist AND the runtime can execute them (tests
+/// skip gracefully otherwise).
 pub fn artifacts_present() -> bool {
-    default_artifact_dir().join("meta.json").exists()
+    cfg!(feature = "xla") && default_artifact_dir().join("meta.json").exists()
 }

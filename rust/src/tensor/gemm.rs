@@ -1,0 +1,384 @@
+//! Cache-blocked, multi-threaded f32 GEMM — the generated-code hot path of
+//! the reproduction (§2.3 of the paper: loop tiling, unrolling and
+//! pack-based data layout are what make XGen's kernels "several times"
+//! faster than naive loops; CoCoPIE/PatDNN make the same tiled/packed GEMM
+//! micro-kernel the centerpiece of their mobile code generators).
+//!
+//! Structure is the classic three-level blocking (BLIS/GotoBLAS):
+//!
+//! ```text
+//! for jc in 0..n step NC          // B panel column block   (L3 resident)
+//!   for pc in 0..k step KC        // K panel                (packed B: L2)
+//!     pack B[pc..pc+KC, jc..jc+NC] into NR-column slivers
+//!     for ic in 0..m step MC      // A panel row block      (packed A: L1/L2)
+//!       pack A[ic..ic+MC, pc..pc+KC] into MR-row slivers
+//!       for jr, ir: micro-kernel on an MR x NR register tile
+//! ```
+//!
+//! The micro-kernel is written over fixed-size array refs (`&[f32; NR]`)
+//! with a fully unrolled `MR x NR` accumulator so LLVM auto-vectorizes it —
+//! no intrinsics, no unsafe, no dependencies. Parallelism splits the M
+//! dimension across `std::thread::scope` workers (each thread owns a
+//! disjoint row band of C, so there is no sharing to synchronize).
+//!
+//! Unlike the old `Tensor::matmul` triple loop, the dense path has **no
+//! per-element sparsity branch** (`if a == 0.0 { continue }`): exploiting
+//! zeros belongs to the FKW pattern kernels ([`crate::fkw`]), not the dense
+//! micro-kernel, where the branch defeats vectorization (this is exactly
+//! the paper's Fig 6 argument about irregular sparsity).
+
+/// Register-tile height of the micro-kernel (rows of C per invocation).
+pub const MR: usize = 4;
+
+/// Tunable blocking parameters of the engine. The `xengine` knob layer
+/// ([`crate::xengine::knobs::gemm_ladder`]) exposes named settings of this
+/// struct, and `benches/fig6_blocksize.rs` sweeps them against the cost
+/// model's traffic predictions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmConfig {
+    /// Row-panel height of packed A (MC).
+    pub mc: usize,
+    /// Depth of the K panel shared by packed A and B (KC).
+    pub kc: usize,
+    /// Column-panel width of packed B (NC).
+    pub nc: usize,
+    /// Register-tile width NR; supported values are 4 and 8 (anything else
+    /// falls back to 8).
+    pub nr: usize,
+    /// Worker threads over the M dimension; 0 = auto-detect.
+    pub threads: usize,
+}
+
+impl Default for GemmConfig {
+    fn default() -> Self {
+        GemmConfig { mc: 64, kc: 256, nc: 256, nr: 8, threads: 0 }
+    }
+}
+
+impl GemmConfig {
+    /// Resolve `threads == 0` to the machine's parallelism, bounded by the
+    /// number of MR-row bands so tiny matrices never over-spawn.
+    fn effective_threads(&self, m: usize, k: usize, n: usize) -> usize {
+        let hw = if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        // Below ~1 MFLOP the spawn/join overhead dominates any speedup.
+        if (m * k).saturating_mul(n) < 1 << 19 {
+            return 1;
+        }
+        hw.min((m + MR - 1) / MR).max(1)
+    }
+}
+
+/// `C = A * B` for row-major `A [m, k]`, `B [k, n]`, `C [m, n]`.
+/// `c` is overwritten (not accumulated into). Panics on slice-length
+/// mismatches.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], cfg: &GemmConfig) {
+    assert_eq!(a.len(), m * k, "gemm: A length");
+    assert_eq!(b.len(), k * n, "gemm: B length");
+    assert_eq!(c.len(), m * n, "gemm: C length");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let threads = cfg.effective_threads(m, k, n);
+    if threads <= 1 {
+        gemm_band(m, k, n, a, b, c, cfg);
+        return;
+    }
+    // Split C (and the matching rows of A) into contiguous row bands, one
+    // per worker. Bands are multiples of MR so no band ends mid-tile.
+    // Tradeoff: each band independently re-packs the B panels it visits
+    // (B traffic scales with the worker count). That keeps the workers
+    // fully unsynchronized — no shared pack buffer, no barrier — at the
+    // cost of extra bandwidth; `cost::gemm_blocked_traffic_bytes` models
+    // the single-band case, so its B term is per-band here.
+    let rows_per = {
+        let per = (m + threads - 1) / threads;
+        ((per + MR - 1) / MR) * MR
+    };
+    std::thread::scope(|scope| {
+        for (t, c_band) in c.chunks_mut(rows_per * n).enumerate() {
+            let row0 = t * rows_per;
+            let rows = c_band.len() / n;
+            let a_band = &a[row0 * k..(row0 + rows) * k];
+            scope.spawn(move || {
+                gemm_band(rows, k, n, a_band, b, c_band, cfg);
+            });
+        }
+    });
+}
+
+/// Single-threaded blocked GEMM over one row band of C.
+fn gemm_band(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], cfg: &GemmConfig) {
+    let mc = cfg.mc.max(MR);
+    let kc = cfg.kc.max(1);
+    let nc = cfg.nc.max(1);
+    let nr = if cfg.nr == 4 { 4 } else { 8 };
+
+    c.fill(0.0);
+    // Pack buffers sized for the largest panel; pack routines rewrite the
+    // full used prefix (zero padding included) on every refill.
+    let mut a_pack = vec![0.0f32; padded(mc, MR) * kc];
+    let mut b_pack = vec![0.0f32; padded(nc.min(n), nr) * kc];
+
+    let mut jc = 0;
+    while jc < n {
+        let ncb = nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kcb = kc.min(k - pc);
+            pack_b(b, n, pc, jc, kcb, ncb, nr, &mut b_pack);
+            let mut ic = 0;
+            while ic < m {
+                let mcb = mc.min(m - ic);
+                pack_a(a, k, ic, pc, mcb, kcb, &mut a_pack);
+                // Micro loops over the packed panels.
+                let mut jr = 0;
+                while jr < ncb {
+                    let nrb = nr.min(ncb - jr);
+                    let b_sliver = &b_pack[(jr / nr) * kcb * nr..(jr / nr + 1) * kcb * nr];
+                    let mut ir = 0;
+                    while ir < mcb {
+                        let mrb = MR.min(mcb - ir);
+                        let a_sliver = &a_pack[(ir / MR) * kcb * MR..(ir / MR + 1) * kcb * MR];
+                        if nr == 8 {
+                            let mut acc = [[0.0f32; 8]; MR];
+                            microkernel_8(kcb, a_sliver, b_sliver, &mut acc);
+                            for i in 0..mrb {
+                                let crow = (ic + ir + i) * n + jc + jr;
+                                for j in 0..nrb {
+                                    c[crow + j] += acc[i][j];
+                                }
+                            }
+                        } else {
+                            let mut acc = [[0.0f32; 4]; MR];
+                            microkernel_4(kcb, a_sliver, b_sliver, &mut acc);
+                            for i in 0..mrb {
+                                let crow = (ic + ir + i) * n + jc + jr;
+                                for j in 0..nrb {
+                                    c[crow + j] += acc[i][j];
+                                }
+                            }
+                        }
+                        ir += MR;
+                    }
+                    jr += nr;
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Round `x` up to a multiple of `to`.
+fn padded(x: usize, to: usize) -> usize {
+    ((x + to - 1) / to) * to
+}
+
+/// Pack `A[ic..ic+mcb, pc..pc+kcb]` into MR-row slivers: sliver `s` holds
+/// rows `ic+s*MR..` in column-major order (`a_pack[s*kcb*MR + p*MR + i]`),
+/// zero-padded to a full MR in the last sliver.
+fn pack_a(a: &[f32], k: usize, ic: usize, pc: usize, mcb: usize, kcb: usize, a_pack: &mut [f32]) {
+    let slivers = (mcb + MR - 1) / MR;
+    for s in 0..slivers {
+        let base = s * kcb * MR;
+        for p in 0..kcb {
+            for i in 0..MR {
+                let row = s * MR + i;
+                a_pack[base + p * MR + i] = if row < mcb {
+                    a[(ic + row) * k + pc + p]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack `B[pc..pc+kcb, jc..jc+ncb]` into NR-column slivers: sliver `t`
+/// holds columns `jc+t*nr..` row-major within the sliver
+/// (`b_pack[t*kcb*nr + p*nr + j]`), zero-padded to a full NR.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: &[f32],
+    n: usize,
+    pc: usize,
+    jc: usize,
+    kcb: usize,
+    ncb: usize,
+    nr: usize,
+    b_pack: &mut [f32],
+) {
+    let slivers = (ncb + nr - 1) / nr;
+    for t in 0..slivers {
+        let base = t * kcb * nr;
+        for p in 0..kcb {
+            let brow = (pc + p) * n + jc;
+            for j in 0..nr {
+                let col = t * nr + j;
+                b_pack[base + p * nr + j] = if col < ncb { b[brow + col] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// MR x 8 register-tile micro-kernel over a K-depth of `kc`. The fixed-size
+/// array refs give LLVM exact trip counts, so the inner two loops unroll
+/// and vectorize.
+#[inline(always)]
+fn microkernel_8(kc: usize, a: &[f32], b: &[f32], acc: &mut [[f32; 8]; MR]) {
+    for p in 0..kc {
+        let ap: &[f32; MR] = (&a[p * MR..p * MR + MR]).try_into().unwrap();
+        let bp: &[f32; 8] = (&b[p * 8..p * 8 + 8]).try_into().unwrap();
+        for i in 0..MR {
+            let ai = ap[i];
+            for j in 0..8 {
+                acc[i][j] += ai * bp[j];
+            }
+        }
+    }
+}
+
+/// MR x 4 variant for the narrow-register knob setting.
+#[inline(always)]
+fn microkernel_4(kc: usize, a: &[f32], b: &[f32], acc: &mut [[f32; 4]; MR]) {
+    for p in 0..kc {
+        let ap: &[f32; MR] = (&a[p * MR..p * MR + MR]).try_into().unwrap();
+        let bp: &[f32; 4] = (&b[p * 4..p * 4 + 4]).try_into().unwrap();
+        for i in 0..MR {
+            let ai = ap[i];
+            for j in 0..4 {
+                acc[i][j] += ai * bp[j];
+            }
+        }
+    }
+}
+
+/// Reference triple-loop GEMM — the oracle every blocked/parallel result is
+/// property-tested against (and the "naive" baseline of
+/// `benches/gemm_blocked.rs`).
+pub fn gemm_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::forall;
+    use crate::util::rng::Rng;
+
+    fn max_abs_diff(x: &[f32], y: &[f32]) -> f32 {
+        x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+
+    /// Satellite acceptance: blocked/parallel results match the naive
+    /// oracle within 1e-3 on shapes that are NOT multiples of any tile
+    /// size (M/N/K drawn from {1, 7, 33, 129}).
+    #[test]
+    fn blocked_matches_naive_on_odd_shapes() {
+        let dims = [1usize, 7, 33, 129];
+        forall("blocked gemm == naive oracle", 32, |rng| {
+            let m = *rng.choose(&dims);
+            let k = *rng.choose(&dims);
+            let n = *rng.choose(&dims);
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            gemm_naive(m, k, n, &a, &b, &mut want);
+            // Deliberately awkward tile sizes so every edge path runs.
+            let cfg = GemmConfig {
+                mc: 4 + rng.below(3) * 17,
+                kc: 1 + rng.below(60),
+                nc: 1 + rng.below(60),
+                nr: *rng.choose(&[4usize, 8]),
+                threads: 1 + rng.below(3),
+            };
+            let mut got = vec![0.0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut got, &cfg);
+            let d = max_abs_diff(&want, &got);
+            assert!(d <= 1e-3, "diff {d} at m={m} k={k} n={n} cfg={cfg:?}");
+        });
+    }
+
+    #[test]
+    fn parallel_matches_single_thread() {
+        forall("parallel gemm == 1-thread gemm", 8, |rng| {
+            // Sizes above the serial cutoff (m*k*n >= 1<<19) so the
+            // thread::scope band split actually runs for `threads: 4`.
+            let (m, k, n) = (128 + rng.below(64), 64 + rng.below(32), 128 + rng.below(64));
+            assert!(m * k * n >= 1 << 19);
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let one = GemmConfig { threads: 1, ..Default::default() };
+            let many = GemmConfig { threads: 4, ..Default::default() };
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c4 = vec![0.0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut c1, &one);
+            gemm(m, k, n, &a, &b, &mut c4, &many);
+            // Same band-internal association; only the band split differs,
+            // and bands never split a row's accumulation.
+            assert!(max_abs_diff(&c1, &c4) <= 1e-5);
+        });
+    }
+
+    #[test]
+    fn identity_is_exact() {
+        let mut rng = Rng::new(7);
+        let m = 13;
+        let a = rng.normal_vec(m * m, 0.0, 1.0);
+        let mut eye = vec![0.0f32; m * m];
+        for i in 0..m {
+            eye[i * m + i] = 1.0;
+        }
+        let mut c = vec![0.0f32; m * m];
+        gemm(m, m, m, &a, &eye, &mut c, &GemmConfig::default());
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn degenerate_dims_are_safe() {
+        let cfg = GemmConfig::default();
+        let mut c = vec![1.0f32; 0];
+        gemm(0, 3, 0, &[], &[0.0; 0], &mut c, &cfg);
+        // k == 0: C must be zeroed, not left stale.
+        let mut c = vec![7.0f32; 4];
+        gemm(2, 0, 2, &[], &[], &mut c, &cfg);
+        assert_eq!(c, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn large_k_accumulates_accurately() {
+        // K spanning several KC panels: panel-wise accumulation into C must
+        // agree with the oracle.
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (5, 700, 6);
+        let a = rng.normal_vec(m * k, 0.0, 0.5);
+        let b = rng.normal_vec(k * n, 0.0, 0.5);
+        let mut want = vec![0.0f32; m * n];
+        gemm_naive(m, k, n, &a, &b, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut got, &GemmConfig { kc: 128, threads: 1, ..Default::default() });
+        assert!(max_abs_diff(&want, &got) < 1e-3);
+    }
+}

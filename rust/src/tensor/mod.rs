@@ -6,7 +6,11 @@
 //! so the optimized paths in [`crate::exec`] and [`crate::fkw`] have an
 //! oracle to be checked against.
 
+pub mod gemm;
+
 use crate::util::rng::Rng;
+
+use gemm::GemmConfig;
 
 /// Dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -160,27 +164,37 @@ impl Tensor {
         z as f64 / self.data.len() as f64
     }
 
-    /// Matrix multiply: `[m,k] x [k,n] -> [m,n]`. Reference semantics.
+    /// Matrix multiply: `[m,k] x [k,n] -> [m,n]`, routed through the
+    /// cache-blocked, multi-threaded engine in [`gemm`]. The dense path has
+    /// no per-element sparsity branch — zero exploitation lives in the FKW
+    /// pattern kernels where the structure is known at compile time.
     pub fn matmul(&self, other: &Tensor) -> Tensor {
+        self.matmul_with(other, &GemmConfig::default())
+    }
+
+    /// [`Tensor::matmul`] with explicit blocking parameters (the knob the
+    /// `xengine` ladder and `benches/gemm_blocked.rs` turn).
+    pub fn matmul_with(&self, other: &Tensor, cfg: &GemmConfig) -> Tensor {
         assert_eq!(self.rank(), 2, "matmul lhs rank");
         assert_eq!(other.rank(), 2, "matmul rhs rank");
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (other.shape[0], other.shape[1]);
         assert_eq!(k, k2, "matmul inner dim mismatch");
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
-                }
-                let row = &other.data[p * n..(p + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(row) {
-                    *o += a * b;
-                }
-            }
-        }
+        gemm::gemm(m, k, n, &self.data, &other.data, &mut out, cfg);
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// Reference triple-loop matmul — the oracle the blocked engine is
+    /// checked against, and the naive baseline of the GEMM benches.
+    pub fn matmul_naive(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2, "matmul lhs rank");
+        assert_eq!(other.rank(), 2, "matmul rhs rank");
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        gemm::gemm_naive(m, k, n, &self.data, &other.data, &mut out);
         Tensor { shape: vec![m, n], data: out }
     }
 
@@ -360,22 +374,28 @@ pub fn conv2d_gemm(input: &Tensor, weight: &Tensor, stride: usize, pad: usize) -
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (w + 2 * pad - kw) / stride + 1;
     let patches = input.im2col(kh, kw, stride, pad); // [n*oh*ow, i*kh*kw]
-    let wmat = weight.reshape(&[o, i * kh * kw]);
-    // [n*oh*ow, o] = patches x wmat^T; compute as (wmat x patches^T)^T via loop.
-    let mut out = Tensor::zeros(&[n, o, oh, ow]);
     let cols = i * kh * kw;
-    for row in 0..n * oh * ow {
+    // Transpose the OIHW weight matrix once so the whole conv is a single
+    // blocked GEMM: [n*oh*ow, cols] x [cols, o].
+    let wmat = weight.reshape(&[o, cols]);
+    let mut wt = vec![0.0f32; cols * o];
+    for f in 0..o {
+        let wrow = &wmat.data()[f * cols..(f + 1) * cols];
+        for (c, &v) in wrow.iter().enumerate() {
+            wt[c * o + f] = v;
+        }
+    }
+    let rows = n * oh * ow;
+    let mut y = vec![0.0f32; rows * o];
+    gemm::gemm(rows, cols, o, patches.data(), &wt, &mut y, &GemmConfig::default());
+    // Scatter [n*oh*ow, o] back to NCHW.
+    let mut out = Tensor::zeros(&[n, o, oh, ow]);
+    let od = out.data_mut();
+    for row in 0..rows {
         let b = row / (oh * ow);
         let rem = row % (oh * ow);
-        let (y, x) = (rem / ow, rem % ow);
-        let patch = &patches.data()[row * cols..(row + 1) * cols];
         for f in 0..o {
-            let wrow = &wmat.data()[f * cols..(f + 1) * cols];
-            let mut acc = 0.0f32;
-            for (a, b_) in patch.iter().zip(wrow) {
-                acc += a * b_;
-            }
-            out.set(&[b, f, y, x], acc);
+            od[((b * o + f) * oh * ow) + rem] = y[row * o + f];
         }
     }
     out
@@ -481,6 +501,22 @@ mod tests {
     fn argmax_rows_basic() {
         let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.0, 1.0, 0.2, 0.3]);
         assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_oracle() {
+        forall("Tensor::matmul == naive oracle", 24, |rng| {
+            let dims = [1usize, 7, 33, 129];
+            let m = *rng.choose(&dims);
+            let k = *rng.choose(&dims);
+            let n = *rng.choose(&dims);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let fast = a.matmul(&b);
+            let slow = a.matmul_naive(&b);
+            let d = fast.max_abs_diff(&slow);
+            assert!(d <= 1e-3, "diff {d} at [{m},{k}]x[{k},{n}]");
+        });
     }
 
     #[test]

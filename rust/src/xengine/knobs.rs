@@ -11,6 +11,40 @@
 
 use crate::pruning::AccuracyModel;
 use crate::pruning::PruneScheme;
+use crate::tensor::gemm::GemmConfig;
+
+/// A named GEMM tiling — the code-generation block-size knob (§2.3: tile
+/// sizes are tuning-decided per layer/device). The runtime can dispatch a
+/// different tiling per deployment target exactly like it dispatches a
+/// sparsity variant; `benches/fig6_blocksize.rs` sweeps this ladder against
+/// the cost model's traffic predictions and real wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmKnob {
+    pub name: &'static str,
+    pub cfg: GemmConfig,
+}
+
+/// The standard tiling ladder, ordered from cache-starved to parallel:
+/// panel footprints sized for L1-class, L2-class and L3-class working
+/// sets, plus the default multi-threaded setting.
+pub fn gemm_ladder() -> Vec<GemmKnob> {
+    let knob = |name, mc, kc, nc, nr, threads| GemmKnob {
+        name,
+        cfg: GemmConfig { mc, kc, nc, nr, threads },
+    };
+    vec![
+        knob("tiny-cache", 16, 64, 64, 4, 1),
+        knob("l1-resident", 32, 128, 128, 8, 1),
+        knob("l2-resident", 64, 256, 256, 8, 1),
+        knob("l3-resident", 128, 512, 512, 8, 1),
+        knob("parallel", 64, 256, 256, 8, 0),
+    ]
+}
+
+/// Look up a ladder entry by name.
+pub fn gemm_knob(name: &str) -> Option<GemmKnob> {
+    gemm_ladder().into_iter().find(|k| k.name == name)
+}
 
 /// One selectable operating point of a compiled DNN (a knob setting).
 #[derive(Debug, Clone, PartialEq)]
@@ -201,6 +235,42 @@ mod tests {
             m.settings[0].latency_ms,
             "should degrade to the cheapest setting"
         );
+    }
+
+    #[test]
+    fn gemm_ladder_settings_are_valid_and_distinct() {
+        let ladder = gemm_ladder();
+        assert!(ladder.len() >= 4);
+        for k in &ladder {
+            assert!(k.cfg.mc >= 1 && k.cfg.kc >= 1 && k.cfg.nc >= 1, "{}", k.name);
+            assert!(k.cfg.nr == 4 || k.cfg.nr == 8, "{}", k.name);
+        }
+        // Panel working sets grow monotonically along the cache ladder.
+        let foot = |k: &GemmKnob| k.cfg.kc * (k.cfg.mc + k.cfg.nc);
+        assert!(foot(&ladder[0]) < foot(&ladder[1]));
+        assert!(foot(&ladder[1]) < foot(&ladder[2]));
+        assert!(foot(&ladder[2]) < foot(&ladder[3]));
+        assert_eq!(gemm_knob("l2-resident").unwrap().cfg.mc, 64);
+        assert!(gemm_knob("nope").is_none());
+    }
+
+    #[test]
+    fn ladder_configs_compute_correct_results() {
+        use crate::tensor::Tensor;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x6E0B);
+        let a = Tensor::randn(&[37, 41], 1.0, &mut rng);
+        let b = Tensor::randn(&[41, 29], 1.0, &mut rng);
+        let want = a.matmul_naive(&b);
+        for k in gemm_ladder() {
+            let got = a.matmul_with(&b, &k.cfg);
+            assert!(
+                want.max_abs_diff(&got) <= 1e-3,
+                "knob '{}' diverges by {}",
+                k.name,
+                want.max_abs_diff(&got)
+            );
+        }
     }
 
     #[test]

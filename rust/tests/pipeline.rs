@@ -107,6 +107,47 @@ fn optimized_execution_matches_reference_numerically() {
     assert!(y_ref[0].max_abs_diff(&y_opt[0]) < 1e-4);
 }
 
+/// E2E for the memory planner: a residual CNN (zoo-style topology with
+/// fan-out, pooling and a dense head) run through the fused executor with
+/// buffer pooling must match the straight-line reference exactly, while
+/// using far fewer live buffers than one-per-node.
+#[test]
+fn fused_with_memory_planner_matches_straight_line() {
+    let mut rng = Rng::new(104);
+    let mut b = NetBuilder::new("planner-e2e", &[2, 3, 24, 24]);
+    b.conv_bn_act(12, 3, 1, 1, Act::Relu);
+    let skip = b.cur();
+    b.conv_bn_act(12, 3, 1, 1, Act::Relu);
+    b.conv_bn_act(12, 3, 1, 1, Act::Relu);
+    let t = b.cur();
+    b.add_residual(skip, t);
+    b.maxpool(2, 2);
+    b.conv_bn_act(24, 3, 2, 1, Act::Relu);
+    b.gap();
+    b.dense(10);
+    let g = b.finish();
+    let ws = WeightStore::init_random(&g, &mut rng);
+    let x = Tensor::randn(&[2, 3, 24, 24], 1.0, &mut rng);
+
+    let straight = Executor::new(&g, &ws).run(&[x.clone()]).unwrap();
+    let plan = fuse(&g, &FusionConfig::default());
+    let (fused, stats) = FusedExecutor::new(&g, &ws, &plan)
+        .run_with_stats(&[x])
+        .unwrap();
+    assert!(
+        straight[0].max_abs_diff(&fused[0]) < 1e-4,
+        "planner path diverges by {}",
+        straight[0].max_abs_diff(&fused[0])
+    );
+    assert!(
+        stats.slots * 2 <= stats.planned_values,
+        "peak live allocations not reduced: {} slots for {} materialized values",
+        stats.slots,
+        stats.planned_values
+    );
+    assert!(stats.peak_live <= stats.slots);
+}
+
 /// Pruning a graph then estimating latency: the Fig 6 frontier — finer
 /// blocks cost latency vs coarse, non-structured costs the most.
 #[test]
