@@ -1,16 +1,34 @@
 //! §3.2.3: Level-4 autonomous driving on a $700 Jetson-class board — the
 //! XEngine runtime demo. Simulates the Fig 16 application under all five
 //! scheduling regimes of Table 5 and prints the per-module latency table.
+//! The perception workload the scheduler places is sized by compiling the
+//! detection model through the session API and asking the cost model.
 //!
 //! ```bash
 //! cargo run --release --example autonomous_driving [ADy416]
 //! ```
 
+use xgen::api::Compiler;
+use xgen::baselines::{DeviceClass, Framework};
+use xgen::cost::devices;
+use xgen::pruning::PruneScheme;
 use xgen::xengine::adapp::{modules, variants};
 use xgen::xengine::sim::simulate;
 use xgen::xengine::Policy;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    // The detection backbone the perception module runs: one compiled
+    // session, estimated on the board's GPU-class unit.
+    let det = Compiler::for_model("yolo-v4", 1)?
+        .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 })
+        .target(devices::jetson_gpu())
+        .compile()?;
+    if let Some(ms) = det.estimate_target(Framework::XGenFull, DeviceClass::MobileGpu) {
+        println!(
+            "perception backbone (YOLO-v4, pattern-pruned, cost model on jetson-gpu): {ms:.1} ms/frame\n"
+        );
+    }
+
     let want = std::env::args().nth(1);
     for v in variants() {
         if let Some(w) = &want {
@@ -48,4 +66,5 @@ fn main() {
         }
     }
     println!("(compare against Table 5 in EXPERIMENTS.md; `xgen sched --variant all` sweeps everything)");
+    Ok(())
 }

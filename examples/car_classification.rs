@@ -1,73 +1,79 @@
 //! Use case I (§5): real-time car-model classification in a smartphone
 //! app. Cost-model comparison vs the mainstream frameworks (paper: 2×–
-//! 3.33× at unchanged accuracy), plus — with artifacts built — real
-//! batched classification through the PJRT runtime using the demo CNN as
-//! the deployed classifier.
+//! 3.33× at unchanged accuracy), plus a **real** batched classification
+//! stream served from compiled sessions — no AOT artifacts needed: the
+//! session API executes the demo CNN in-process behind the
+//! dynamic-batching `Server`.
 
 use std::time::Duration;
 
+use xgen::api::Compiler;
 use xgen::baselines::{DeviceClass, Framework};
-use xgen::coordinator::{compile, Server};
+use xgen::coordinator::Server;
 use xgen::cost::devices;
-use xgen::graph::zoo::by_name;
-use xgen::graph::WeightStore;
 use xgen::pruning::PruneScheme;
-use xgen::runtime::{artifacts_present, default_artifact_dir};
 use xgen::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     println!("car classification (EfficientNet-B0 class backbone) on mobile GPU\n");
     let dev = devices::s10_gpu();
+    // One dense session answers every baseline estimate.
+    let dense = Compiler::for_model("efficientnet-b0", 1)?.compile()?;
     let mut rows = Vec::new();
     for fw in [Framework::Mnn, Framework::TfLite, Framework::Tvm] {
-        let lat = compile(by_name("efficientnet-b0", 1), None, PruneScheme::None)
-            .latency_ms(&dev, fw, DeviceClass::MobileGpu);
-        if let Some(ms) = lat {
+        if let Some(ms) = dense.estimate(&dev, fw, DeviceClass::MobileGpu) {
             rows.push((fw.name(), ms));
         }
     }
-    let mut rng = Rng::new(5);
-    let g = by_name("efficientnet-b0", 1);
-    let mut ws = WeightStore::init_random(&g, &mut rng);
-    let xg = compile(g, Some(&mut ws), PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.35 });
-    let x_ms = xg.latency_ms(&dev, Framework::XGenFull, DeviceClass::MobileGpu).unwrap();
+    let xg = Compiler::for_model("efficientnet-b0", 1)?
+        .random_weights(5)
+        .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.35 })
+        .target(devices::s10_gpu())
+        .compile()?;
+    let x_ms = xg.estimate_target(Framework::XGenFull, DeviceClass::MobileGpu).unwrap();
     for (name, ms) in &rows {
         println!("  {name:>8}: {ms:6.1} ms   ({:.2}x vs XGen)", ms / x_ms);
     }
     println!("  {:>8}: {x_ms:6.1} ms   paper band: 2x-3.33x", "XGen");
 
-    if artifacts_present() {
-        println!("\nreal on-device classification stream (PJRT, demo CNN):");
-        let server = Server::start(
-            default_artifact_dir(),
-            "cnn_dense_b1",
-            "cnn_dense_b4",
-            Duration::from_millis(2),
-        )?;
-        let per = 3 * 24 * 24;
-        let frames = 64;
-        let t0 = std::time::Instant::now();
-        let rxs: Vec<_> = (0..frames)
-            .map(|_| server.submit((0..per).map(|_| rng.f32()).collect()))
-            .collect();
-        let mut counts = [0usize; 8];
-        for rx in rxs {
-            let logits = rx.recv().unwrap().map_err(anyhow::Error::msg)?;
-            let cls = logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            counts[cls] += 1;
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "  {frames} frames in {:.1} ms ({:.0} FPS), class histogram {:?}",
-            wall * 1e3,
-            frames as f64 / wall,
-            counts
-        );
+    // Real on-device classification stream: the deployed classifier is a
+    // compiled session pair (batch-1 + batch-4), served with dynamic
+    // batching entirely in Rust.
+    println!("\nreal classification stream (compiled sessions, demo CNN):");
+    let build = |batch: usize| -> anyhow::Result<xgen::api::CompiledModel> {
+        Compiler::for_model("demo-cnn", batch)?
+            .random_weights(5)
+            .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.35 })
+            .compile()
+    };
+    let single = build(1)?;
+    let per: usize = single.input_shapes()[0].iter().product();
+    let server = Server::start_compiled(single, build(4)?, Duration::from_millis(2))?;
+    let mut rng = Rng::new(5);
+    let frames = 64;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..frames)
+        .map(|_| server.submit((0..per).map(|_| rng.f32()).collect()))
+        .collect();
+    let mut counts = [0usize; 8];
+    for rx in rxs {
+        let logits = rx.recv().unwrap().map_err(anyhow::Error::msg)?;
+        let cls = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        counts[cls] += 1;
     }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = server.stats();
+    println!(
+        "  {frames} frames in {:.1} ms ({:.0} FPS, mean batch {:.2}), class histogram {:?}",
+        wall * 1e3,
+        frames as f64 / wall,
+        st.mean_batch(),
+        counts
+    );
     Ok(())
 }

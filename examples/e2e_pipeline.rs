@@ -1,23 +1,28 @@
 //! **End-to-end validation driver** (recorded in EXPERIMENTS.md §E13):
-//! proves all three layers compose on a real small workload.
+//! proves the layers compose on a real small workload.
 //!
-//! * L1/L2 (build time): `make artifacts` trained the demo CNN on the
-//!   synthetic shape corpus, pattern-pruned + fine-tuned it, and AOT-lowered
-//!   dense + pattern variants (the pattern variant goes through the Pallas
-//!   pattern-GEMM kernel) to HLO text.
-//! * L3 (this binary): loads both artifacts through the PJRT CPU client and
-//!   serves a batched request stream with the dynamic-batching coordinator,
-//!   reporting throughput, latency percentiles, batch occupancy, and
-//!   dense-vs-pattern prediction agreement, plus the measured training
-//!   accuracies from artifacts/accuracy.json.
+//! Always runs (pure Rust, no artifacts needed):
+//! * compiles the demo CNN **dense** and **pattern-pruned** through the
+//!   session API (`xgen::api::Compiler`) from one weight seed,
+//! * reports dense-vs-pattern top-1 agreement on random probes (the
+//!   pruned session executes its convs on auto-attached FKW kernels),
+//! * serves both variants through the dynamic-batching coordinator
+//!   backed by compiled sessions, reporting throughput, latency
+//!   percentiles and batch occupancy.
+//!
+//! With `make artifacts` built, additionally replays the same protocol
+//! over the AOT artifacts through the PJRT runtime (L1/L2: python
+//! trained, pruned and AOT-lowered the demo CNN at build time).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_pipeline
+//! cargo run --release --example e2e_pipeline
 //! ```
 
 use std::time::{Duration, Instant};
 
+use xgen::api::{CompiledModel, Compiler};
 use xgen::coordinator::Server;
+use xgen::pruning::PruneScheme;
 use xgen::runtime::{artifacts_present, default_artifact_dir, ModelRuntime};
 use xgen::util::json::Json;
 use xgen::util::rng::Rng;
@@ -32,17 +37,82 @@ fn argmax(v: &[f32]) -> usize {
         .unwrap()
 }
 
-fn main() -> anyhow::Result<()> {
-    if !artifacts_present() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
-    let dir = default_artifact_dir();
+fn build(batch: usize, scheme: PruneScheme) -> anyhow::Result<CompiledModel> {
+    Compiler::for_model("demo-cnn", batch)?
+        .random_weights(7)
+        .scheme(scheme)
+        .compile()
+}
 
-    // Measured training accuracies (python/compile/train.py).
+fn main() -> anyhow::Result<()> {
+    // Dense vs pattern agreement on a fixed input set (direct sessions).
+    let dense = build(1, PruneScheme::None)?;
+    let pattern = build(1, PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 })?;
+    println!(
+        "compiled demo-cnn: dense + pattern ({} FKW conv layers, {:.0}% sparsity)",
+        pattern.report().fkw_layers,
+        pattern.report().prune.as_ref().map(|p| p.sparsity * 100.0).unwrap_or(0.0)
+    );
+    let per: usize = dense.input_shapes()[0].iter().product();
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..per).map(|_| rng.f32() * 2.0 - 1.0).collect())
+        .collect();
+    let mut agree = 0;
+    for x in &inputs {
+        if argmax(&dense.infer_flat(x)?) == argmax(&pattern.infer_flat(x)?) {
+            agree += 1;
+        }
+    }
+    println!(
+        "dense vs pattern top-1 agreement on random probes: {}/{}",
+        agree,
+        inputs.len()
+    );
+
+    // Batched serving of both variants through compiled sessions.
+    for (label, scheme) in [
+        ("dense", PruneScheme::None),
+        ("pattern", PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 }),
+    ] {
+        let server = Server::start_compiled(
+            build(1, scheme.clone())?,
+            build(4, scheme)?,
+            Duration::from_millis(2),
+        )?;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..REQUESTS)
+            .map(|_| server.submit((0..per).map(|_| rng.f32() * 2.0 - 1.0).collect()))
+            .collect();
+        let mut ok = 0;
+        for rx in rxs {
+            if rx.recv().unwrap().is_ok() {
+                ok += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let st = server.stats();
+        let s = st.summary().expect("latencies recorded");
+        println!(
+            "[{label:>7}] {ok}/{REQUESTS} ok in {:6.1} ms | {:7.0} req/s | mean batch {:4.2} | p50 {:6.2} ms | p95 {:6.2} ms",
+            wall * 1e3,
+            ok as f64 / wall,
+            st.mean_batch(),
+            s.p50,
+            s.p95
+        );
+    }
+
+    if !artifacts_present() {
+        println!("\ne2e OK (compiled sessions). Run `make artifacts` for the PJRT replay.");
+        return Ok(());
+    }
+
+    // PJRT replay over the AOT artifacts.
+    let dir = default_artifact_dir();
     if let Ok(text) = std::fs::read_to_string(dir.join("accuracy.json")) {
         if let Ok(acc) = Json::parse(&text) {
-            println!("measured accuracy (python training, synthetic 8-class corpus):");
+            println!("\nmeasured accuracy (python training, synthetic 8-class corpus):");
             if let Some(obj) = acc.as_obj() {
                 for (k, v) in obj {
                     println!("  {:>15}: {:.3}", k, v.as_f64().unwrap_or(0.0));
@@ -50,16 +120,13 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
-
-    // Dense vs pattern agreement on a fixed input set (direct runtime).
     let mut rt = ModelRuntime::open(&dir)?;
     let per: usize = rt.load("cnn_dense_b1")?.input_shape[1..].iter().product();
-    let mut rng = Rng::new(7);
-    let inputs: Vec<Vec<f32>> = (0..64)
+    let mut agree = 0;
+    let probes: Vec<Vec<f32>> = (0..64)
         .map(|_| (0..per).map(|_| rng.f32() * 2.0 - 1.0).collect())
         .collect();
-    let mut agree = 0;
-    for x in &inputs {
+    for x in &probes {
         let d = rt.load("cnn_dense_b1")?.run(x)?;
         let p = rt.load("cnn_pattern_b1")?.run(x)?;
         if argmax(&d) == argmax(&p) {
@@ -67,13 +134,11 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!(
-        "\ndense vs pattern top-1 agreement on random probes: {}/{}",
+        "\nPJRT dense vs pattern top-1 agreement: {}/{}",
         agree,
-        inputs.len()
+        probes.len()
     );
     drop(rt);
-
-    // Batched serving of both variants.
     for artifact in ["cnn_dense", "cnn_pattern"] {
         let server = Server::start(
             dir.clone(),
@@ -95,7 +160,7 @@ fn main() -> anyhow::Result<()> {
         let st = server.stats();
         let s = st.summary().expect("latencies recorded");
         println!(
-            "\n[{artifact}] {ok}/{REQUESTS} ok in {:6.1} ms | {:7.0} req/s | mean batch {:4.2} | p50 {:6.2} ms | p95 {:6.2} ms",
+            "[PJRT {artifact}] {ok}/{REQUESTS} ok in {:6.1} ms | {:7.0} req/s | mean batch {:4.2} | p50 {:6.2} ms | p95 {:6.2} ms",
             wall * 1e3,
             ok as f64 / wall,
             st.mean_batch(),
@@ -103,6 +168,6 @@ fn main() -> anyhow::Result<()> {
             s.p95
         );
     }
-    println!("\ne2e OK: python built the artifacts once; Rust served everything.");
+    println!("\ne2e OK: compiled sessions and AOT artifacts both served.");
     Ok(())
 }

@@ -2,18 +2,17 @@
 //! with S3D (3-D convolutions). Only PyTorch Mobile could run this among
 //! the baselines; XGen's block-pruning generalization to 3-D convolutions
 //! (§2.1.2, Fig 7) plus fusion makes it real-time (paper: 22.6× speedup,
-//! 18.31 ms/frame).
+//! 18.31 ms/frame). All estimates go through one compiled session per
+//! configuration.
 
+use xgen::api::Compiler;
 use xgen::baselines::{DeviceClass, Framework};
-use xgen::coordinator::compile;
 use xgen::cost::devices;
 use xgen::graph::zoo::by_name;
-use xgen::graph::WeightStore;
 use xgen::pruning::PruneScheme;
-use xgen::util::rng::Rng;
 
-fn main() {
-    let dev = devices::s10_gpu();
+fn main() -> anyhow::Result<()> {
+    let gpu = devices::s10_gpu();
     let cpu = devices::s10_cpu();
     println!("S3D activity recognition (16-frame clips) on Galaxy-S10-class device\n");
 
@@ -29,17 +28,18 @@ fn main() {
     }
 
     // PyTorch Mobile (the only working baseline) vs XGen.
-    let pt = compile(by_name("s3d", 1), None, PruneScheme::None)
-        .latency_ms(&cpu, Framework::PyTorchMobile, DeviceClass::MobileCpu)
+    let pt = Compiler::for_model("s3d", 1)?
+        .compile()?
+        .estimate(&cpu, Framework::PyTorchMobile, DeviceClass::MobileCpu)
         .unwrap();
     // XGen: block pruning (the 3-D generalization) + universal fusion.
-    let mut rng = Rng::new(3);
-    let g = by_name("s3d", 1);
-    let mut ws = WeightStore::init_random(&g, &mut rng);
-    let xc = compile(g, Some(&mut ws), PruneScheme::Block { block: 8, rate: 0.8 });
-    let x_cpu = xc.latency_ms(&cpu, Framework::XGenFull, DeviceClass::MobileCpu).unwrap();
-    let x_gpu = xc.latency_ms(&dev, Framework::XGenFull, DeviceClass::MobileGpu).unwrap();
-    if let Some(r) = &xc.prune_report {
+    let xc = Compiler::for_model("s3d", 1)?
+        .random_weights(3)
+        .scheme(PruneScheme::Block { block: 8, rate: 0.8 })
+        .compile()?;
+    let x_cpu = xc.estimate(&cpu, Framework::XGenFull, DeviceClass::MobileCpu).unwrap();
+    let x_gpu = xc.estimate(&gpu, Framework::XGenFull, DeviceClass::MobileGpu).unwrap();
+    if let Some(r) = &xc.report().prune {
         println!(
             "\n  XGen 3-D block pruning: {:.0}% sparsity, effective {:.1} GMACs",
             r.sparsity * 100.0,
@@ -64,4 +64,5 @@ fn main() {
             "not real-time"
         }
     );
+    Ok(())
 }

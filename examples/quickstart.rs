@@ -1,65 +1,70 @@
-//! Quickstart: the XGen pipeline on one model, end to end.
+//! Quickstart: the XGen **session API** on two models, end to end.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! 1. builds ResNet-50 from the zoo,
-//! 2. runs graph rewriting → pattern pruning (ADMM projection) → DNNFusion,
-//! 3. prints latency estimates on the Galaxy-S10-class device vs baselines,
-//! 4. if `make artifacts` has been run, executes the real AOT demo CNN
+//! 1. compiles the small demo CNN through [`xgen::api::Compiler`] with
+//!    pattern pruning — rewrite → prune → DNNFusion → memory planning,
+//!    FKW kernels auto-attached from the prune report — and runs **real
+//!    inference** on the resulting [`xgen::api::CompiledModel`],
+//! 2. compiles ResNet-50 the same way and prints cost-model latency on
+//!    the Galaxy-S10-class device vs the baseline frameworks,
+//! 3. if `make artifacts` has been run, also executes the AOT demo CNN
 //!    through the PJRT runtime.
+//!
+//! The one object answers both questions: `infer()` executes for real,
+//! `estimate()` consults the analytical cost model, `report()` shows what
+//! every stage did.
 
+use xgen::api::Compiler;
 use xgen::baselines::{DeviceClass, Framework};
-use xgen::coordinator::compile;
 use xgen::cost::devices;
-use xgen::graph::zoo::by_name;
-use xgen::graph::WeightStore;
 use xgen::pruning::PruneScheme;
 use xgen::runtime::{artifacts_present, default_artifact_dir, ModelRuntime};
 use xgen::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let mut rng = Rng::new(42);
-    let g = by_name("resnet-50", 1);
-    println!("model:   {}", g.summary());
-    let ops = g.operator_count();
-
-    let mut ws = WeightStore::init_random(&g, &mut rng);
     let scheme = PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.4 };
-    let c = compile(g, Some(&mut ws), scheme);
 
+    // 1. Compile the demo CNN and run real inference through the session.
+    let model = Compiler::for_model("demo-cnn", 1)?
+        .random_weights(42)
+        .scheme(scheme.clone())
+        .compile()?;
+    print!("{}", model.report().summary());
+
+    let shape = model.input_shapes()[0].clone();
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let t0 = std::time::Instant::now();
+    let logits = model.infer_flat(&x)?;
     println!(
-        "rewrite: {} -> {} ops   fusion: {} fused layers (was {} ops)",
-        ops,
-        c.rewrite_stats.ops_after,
-        c.plan.fused_layer_count(),
-        c.rewrite_stats.ops_after,
+        "real inference (FKW kernels on pruned convs): {:?} -> {} logits in {:.2} ms\n",
+        shape,
+        logits.len(),
+        t0.elapsed().as_secs_f64() * 1e3
     );
-    if let Some(r) = &c.prune_report {
-        println!(
-            "prune:   {:.1}% sparsity over {} layers, effective {:.2} GMACs",
-            r.sparsity * 100.0,
-            r.layers_pruned,
-            r.effective_macs as f64 / 1e9
-        );
-    }
+
+    // 2. Same pipeline on ResNet-50; cost-model comparison vs baselines.
+    let big = Compiler::for_model("resnet-50", 1)?
+        .random_weights(42)
+        .scheme(scheme)
+        .compile()?;
     let dev = devices::s10_cpu();
-    println!("\nlatency on {} (cost model):", dev.name);
+    // Baselines run the dense model with their own fusion — one dense
+    // session answers all three baseline estimates.
+    let dense = Compiler::for_model("resnet-50", 1)?.compile()?;
+    println!("ResNet-50 latency on {} (cost model):", dev.name);
     for fw in [Framework::Mnn, Framework::Tvm, Framework::TfLite, Framework::XGenFull] {
-        // Baselines run the dense model with their own fusion.
-        let lat = if fw == Framework::XGenFull {
-            c.latency_ms(&dev, fw, DeviceClass::MobileCpu)
-        } else {
-            let dense = by_name("resnet-50", 1);
-            let dc = compile(dense, None, PruneScheme::None);
-            dc.latency_ms(&dev, fw, DeviceClass::MobileCpu)
-        };
-        if let Some(ms) = lat {
+        let session = if fw == Framework::XGenFull { &big } else { &dense };
+        if let Some(ms) = session.estimate(&dev, fw, DeviceClass::MobileCpu) {
             println!("  {:>14}: {:7.1} ms", fw.name(), ms);
         }
     }
 
+    // 3. Optional: the AOT artifact path through PJRT.
     if artifacts_present() {
         println!("\nPJRT demo (real execution of the AOT CNN):");
         let mut rt = ModelRuntime::open(default_artifact_dir())?;

@@ -1,33 +1,46 @@
-//! Use case III (§5): real-time super resolution. A WDSR-style ×2
-//! upscaler runs through the PJRT runtime in dense and pattern-pruned
-//! forms; we report FPS and the PSNR between the two outputs, plus the
-//! paper-scale WDSR-b cost-model comparison vs TFLite (paper: 1.9×
-//! compiler-only, 7.2× with pruning; 5 → 36 FPS).
+//! Use case III (§5): real-time super resolution. Paper-scale WDSR-b
+//! cost-model comparison vs TFLite (paper: 1.9× compiler-only, 7.2× with
+//! pruning; 5 → 36 FPS), plus **real execution**: a WDSR-style ×2
+//! upscaler compiled dense and pattern-pruned through the session API —
+//! the pruned session runs its convs on auto-attached FKW kernels — with
+//! FPS and the PSNR between the two outputs.
 
+use xgen::api::Compiler;
 use xgen::baselines::{DeviceClass, Framework};
-use xgen::coordinator::compile;
 use xgen::cost::devices;
-use xgen::graph::zoo::by_name;
+use xgen::graph::zoo::NetBuilder;
+use xgen::graph::{Act, Graph};
 use xgen::pruning::PruneScheme;
-use xgen::runtime::{artifacts_present, default_artifact_dir, ModelRuntime};
-use xgen::util::rng::Rng;
+use xgen::tensor::Tensor;
+
+/// Tiny WDSR-style ×2 upscaler (32×32 → 64×64) for real execution.
+fn sr_mini() -> Graph {
+    let mut b = NetBuilder::new("sr-mini", &[1, 3, 32, 32]);
+    b.conv(16, 3, 1, 1, 1);
+    b.act(Act::Relu);
+    b.conv(16, 3, 1, 1, 1);
+    b.act(Act::Relu);
+    b.conv(12, 3, 1, 1, 1); // 3 * r^2 channels, r = 2
+    b.pixel_shuffle(2);
+    b.finish()
+}
 
 fn main() -> anyhow::Result<()> {
     // Paper-scale comparison on the cost model (Galaxy S10 GPU).
     let dev = devices::s10_gpu();
-    let tflite = compile(by_name("wdsr-b", 1), None, PruneScheme::None)
-        .latency_ms(&dev, Framework::TfLite, DeviceClass::MobileGpu)
+    let tflite = Compiler::for_model("wdsr-b", 1)?
+        .compile()?
+        .estimate(&dev, Framework::TfLite, DeviceClass::MobileGpu)
         .unwrap();
-    let xgen_dense = compile(by_name("wdsr-b", 1), None, PruneScheme::None)
-        .latency_ms(&dev, Framework::XGenFull, DeviceClass::MobileGpu)
+    let xgen_dense = Compiler::for_model("wdsr-b", 1)?
+        .compile()?
+        .estimate(&dev, Framework::XGenFull, DeviceClass::MobileGpu)
         .unwrap();
-    let xgen_pruned = compile(
-        by_name("wdsr-b", 1),
-        None,
-        PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.4 },
-    )
-    .latency_ms(&dev, Framework::XGenFull, DeviceClass::MobileGpu)
-    .unwrap();
+    let xgen_pruned = Compiler::for_model("wdsr-b", 1)?
+        .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.4 })
+        .compile()?
+        .estimate(&dev, Framework::XGenFull, DeviceClass::MobileGpu)
+        .unwrap();
     println!("WDSR-b on mobile GPU (cost model, 360p -> 720p):");
     println!("  TFLite            : {:6.1} ms  ({:.1} FPS)", tflite, 1000.0 / tflite);
     println!(
@@ -43,42 +56,56 @@ fn main() -> anyhow::Result<()> {
         tflite / xgen_pruned
     );
 
-    if !artifacts_present() {
-        println!("\n(run `make artifacts` for the real PJRT upscaling demo)");
-        return Ok(());
+    // Real execution: compile the mini upscaler dense and pattern-pruned
+    // (same weight seed, so the pruned session is the dense one minus the
+    // pattern-cut weights) and upscale a synthetic 32×32 image.
+    let dense = Compiler::new(sr_mini()).random_weights(11).compile()?;
+    let pruned = Compiler::new(sr_mini())
+        .random_weights(11)
+        .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 })
+        .compile()?;
+    println!(
+        "\nreal execution (session API, 32x32 -> 64x64): {} FKW conv layers on the pruned session",
+        pruned.report().fkw_layers
+    );
+    // Smooth "image": sinusoids, channel-shifted.
+    let mut x = Tensor::zeros(&[1, 3, 32, 32]);
+    for c in 0..3 {
+        for y in 0..32 {
+            for xx in 0..32 {
+                let v = ((y as f32) / 5.0).sin() * 0.4 + ((xx as f32) / 7.0).cos() * 0.3 + 0.5
+                    + c as f32 * 0.1;
+                x.set(&[0, c, y, xx], v);
+            }
+        }
     }
-    // Real execution: upscale a synthetic 32x32 image.
-    let mut rt = ModelRuntime::open(default_artifact_dir())?;
-    let mut rng = Rng::new(11);
-    let n: usize = rt.load("wdsr_b1")?.input_shape.iter().product();
-    // Smooth "image": sinusoids + noise.
-    let x: Vec<f32> = (0..n)
-        .map(|i| ((i % 32) as f32 / 5.0).sin() * 0.4 + 0.5 + rng.f32() * 0.05)
-        .collect();
     let reps = 20;
     let t0 = std::time::Instant::now();
     let mut dense_out = Vec::new();
     for _ in 0..reps {
-        dense_out = rt.load("wdsr_b1")?.run(&x)?;
+        dense_out = dense.infer(std::slice::from_ref(&x))?;
     }
     let dense_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
     let t0 = std::time::Instant::now();
     let mut pruned_out = Vec::new();
     for _ in 0..reps {
-        pruned_out = rt.load("wdsr_pattern_b1")?.run(&x)?;
+        pruned_out = pruned.infer(std::slice::from_ref(&x))?;
     }
     let pruned_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
     // PSNR between dense and pruned upscales.
-    let mse: f64 = dense_out
+    let mse: f64 = dense_out[0]
+        .data()
         .iter()
-        .zip(&pruned_out)
+        .zip(pruned_out[0].data())
         .map(|(a, b)| ((a - b) as f64).powi(2))
         .sum::<f64>()
-        / dense_out.len() as f64;
+        / dense_out[0].len() as f64;
     let psnr = 10.0 * (1.0 / mse.max(1e-12)).log10();
-    println!("\nreal PJRT execution (32x32 -> 64x64, CPU):");
     println!("  dense  : {dense_ms:.2} ms/frame ({:.0} FPS)", 1000.0 / dense_ms);
     println!("  pattern: {pruned_ms:.2} ms/frame ({:.0} FPS)", 1000.0 / pruned_ms);
-    println!("  dense-vs-pattern PSNR: {psnr:.1} dB over {} px", dense_out.len());
+    println!(
+        "  dense-vs-pattern PSNR: {psnr:.1} dB over {} px",
+        dense_out[0].len()
+    );
     Ok(())
 }

@@ -1,31 +1,48 @@
 //! E8 — Fig 21: the three product use cases — car classification (2–3.3×),
 //! home safety monitor / S3D (22.6× vs PyTorch), super-resolution / WDSR
-//! (1.9× compiler-only, 7.2× with pruning).
+//! (1.9× compiler-only, 7.2× with pruning). All sessions are built through
+//! `xgen::api::Compiler`; baselines estimate from a dense compile, XGen
+//! from a pruned one.
 
+use xgen::api::Compiler;
 use xgen::baselines::{DeviceClass, Framework};
-use xgen::coordinator::compile;
 use xgen::cost::devices;
-use xgen::graph::zoo::by_name;
-use xgen::graph::WeightStore;
 use xgen::pruning::PruneScheme;
 use xgen::util::bench::Table;
-use xgen::util::rng::Rng;
+
+fn dense_ms(model: &str, fw: Framework, class: DeviceClass, dev: &xgen::cost::Device) -> f64 {
+    Compiler::for_model(model, 1)
+        .unwrap()
+        .compile()
+        .unwrap()
+        .estimate(dev, fw, class)
+        .unwrap()
+}
+
+fn xgen_ms(model: &str, scheme: PruneScheme, class: DeviceClass, dev: &xgen::cost::Device) -> f64 {
+    Compiler::for_model(model, 1)
+        .unwrap()
+        .random_weights(21)
+        .scheme(scheme)
+        .compile()
+        .unwrap()
+        .estimate(dev, Framework::XGenFull, class)
+        .unwrap()
+}
 
 fn main() {
     let gpu = devices::s10_gpu();
     let cpu = devices::s10_cpu();
-    let mut rng = Rng::new(21);
     let mut t = Table::new(&["Use case", "Baseline", "Base (ms)", "XGen (ms)", "Speedup", "Paper"]);
 
     // I: car classification (EfficientNet-B0 class).
-    let base = compile(by_name("efficientnet-b0", 1), None, PruneScheme::None)
-        .latency_ms(&gpu, Framework::Mnn, DeviceClass::MobileGpu)
-        .unwrap();
-    let g = by_name("efficientnet-b0", 1);
-    let mut ws = WeightStore::init_random(&g, &mut rng);
-    let x = compile(g, Some(&mut ws), PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.35 })
-        .latency_ms(&gpu, Framework::XGenFull, DeviceClass::MobileGpu)
-        .unwrap();
+    let base = dense_ms("efficientnet-b0", Framework::Mnn, DeviceClass::MobileGpu, &gpu);
+    let x = xgen_ms(
+        "efficientnet-b0",
+        PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.35 },
+        DeviceClass::MobileGpu,
+        &gpu,
+    );
     t.row(vec![
         "car classification".into(),
         "MNN".into(),
@@ -36,14 +53,13 @@ fn main() {
     ]);
 
     // II: home monitor (S3D), vs PyTorch Mobile (the only baseline that runs it).
-    let base = compile(by_name("s3d", 1), None, PruneScheme::None)
-        .latency_ms(&cpu, Framework::PyTorchMobile, DeviceClass::MobileCpu)
-        .unwrap();
-    let g = by_name("s3d", 1);
-    let mut ws = WeightStore::init_random(&g, &mut rng);
-    let x = compile(g, Some(&mut ws), PruneScheme::Block { block: 8, rate: 0.8 })
-        .latency_ms(&gpu, Framework::XGenFull, DeviceClass::MobileGpu)
-        .unwrap();
+    let base = dense_ms("s3d", Framework::PyTorchMobile, DeviceClass::MobileCpu, &cpu);
+    let x = xgen_ms(
+        "s3d",
+        PruneScheme::Block { block: 8, rate: 0.8 },
+        DeviceClass::MobileGpu,
+        &gpu,
+    );
     t.row(vec![
         "home monitor (S3D)".into(),
         "PyTorch".into(),
@@ -54,17 +70,14 @@ fn main() {
     ]);
 
     // III: super resolution (WDSR) vs TFLite: compiler-only, then +pruning.
-    let base = compile(by_name("wdsr-b", 1), None, PruneScheme::None)
-        .latency_ms(&gpu, Framework::TfLite, DeviceClass::MobileGpu)
-        .unwrap();
-    let comp_only = compile(by_name("wdsr-b", 1), None, PruneScheme::None)
-        .latency_ms(&gpu, Framework::XGenFull, DeviceClass::MobileGpu)
-        .unwrap();
-    let g = by_name("wdsr-b", 1);
-    let mut ws = WeightStore::init_random(&g, &mut rng);
-    let pruned = compile(g, Some(&mut ws), PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.4 })
-        .latency_ms(&gpu, Framework::XGenFull, DeviceClass::MobileGpu)
-        .unwrap();
+    let base = dense_ms("wdsr-b", Framework::TfLite, DeviceClass::MobileGpu, &gpu);
+    let comp_only = dense_ms("wdsr-b", Framework::XGenFull, DeviceClass::MobileGpu, &gpu);
+    let pruned = xgen_ms(
+        "wdsr-b",
+        PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.4 },
+        DeviceClass::MobileGpu,
+        &gpu,
+    );
     t.row(vec![
         "super res (compiler)".into(),
         "TFLite".into(),

@@ -5,8 +5,7 @@
 //! oracle. Writes machine-local numbers to `BENCH_gemm.json` at the repo
 //! root (the checked-in file is a placeholder until this bench runs).
 
-use xgen::exec::FusedExecutor;
-use xgen::fusion::{fuse, FusionConfig};
+use xgen::api::Compiler;
 use xgen::graph::zoo::NetBuilder;
 use xgen::graph::{Act, WeightStore};
 use xgen::tensor::gemm::{gemm, gemm_naive, GemmConfig};
@@ -87,8 +86,8 @@ fn main() {
     let g = b.finish();
     let ws = WeightStore::init_random(&g, &mut rng);
     let x = xgen::tensor::Tensor::randn(&[1, 3, 32, 32], 1.0, &mut rng);
-    let plan = fuse(&g, &FusionConfig::default());
-    let (_, stats) = FusedExecutor::new(&g, &ws, &plan).run_with_stats(&[x]).unwrap();
+    let cm = Compiler::new(g).weights(ws).compile().unwrap();
+    let (_, stats) = cm.infer_with_stats(&[x]).unwrap();
     println!(
         "\nmemory planner (demo CNN): {} materialized values -> {} pooled slots \
          (peak live {}), buffer bytes {} -> {} ({:.0}% saved)",

@@ -2,14 +2,18 @@
 //! 1. dense reference conv vs the FKW pattern-specialized sparse kernel
 //!    (with and without filter-kernel reorder) — §2.3.1's generated-code
 //!    story on the Rust substrate;
-//! 2. straight-line executor vs the fused executor on the demo CNN;
-//! 3. (artifacts present) PJRT single vs batched serving throughput.
+//! 2. straight-line executor vs a compiled session (`xgen::api`) on the
+//!    demo CNN — the fused executor with the memory planner behind
+//!    `CompiledModel::infer`;
+//! 3. serving throughput, single vs dynamically batched, over compiled
+//!    sessions (plus the PJRT artifact loop when artifacts are present).
 
 use std::time::Duration;
 
-use xgen::exec::{Executor, FusedExecutor};
+use xgen::api::Compiler;
+use xgen::coordinator::Server;
+use xgen::exec::Executor;
 use xgen::fkw::FkwLayer;
-use xgen::fusion::{fuse, FusionConfig};
 use xgen::graph::zoo::NetBuilder;
 use xgen::graph::{Act, WeightStore};
 use xgen::pruning::pattern::{apply_assignment, assign_patterns, connectivity_prune, PatternSet};
@@ -57,7 +61,7 @@ fn main() {
         fkw_reord.pattern_switches()
     ));
 
-    // 2. straight-line vs fused executor on the demo CNN.
+    // 2. straight-line executor vs the compiled session on the demo CNN.
     let mut b = NetBuilder::new("demo", &[1, 3, 32, 32]);
     b.conv_bn_act(16, 3, 1, 1, Act::Relu);
     b.conv_bn_act(16, 3, 1, 1, Act::Relu);
@@ -67,29 +71,61 @@ fn main() {
     let g = b.finish();
     let ws = WeightStore::init_random(&g, &mut rng);
     let xin = Tensor::randn(&[1, 3, 32, 32], 1.0, &mut rng);
-    let plan = fuse(&g, &FusionConfig::default());
+    // One compiled session; the straight-line oracle runs the *same*
+    // rewritten graph + weights, so the gap is purely the execution
+    // engine (fusion + in-place elementwise + buffer pooling).
+    let cm = Compiler::new(g).weights(ws).compile().unwrap();
     let straight = time_ms(2, 10, || {
-        sink(Executor::new(&g, &ws).run(std::slice::from_ref(&xin)).unwrap());
-    });
-    let fused = time_ms(2, 10, || {
         sink(
-            FusedExecutor::new(&g, &ws, &plan)
+            Executor::new(cm.graph(), cm.weights().unwrap())
                 .run(std::slice::from_ref(&xin))
                 .unwrap(),
         );
     });
+    let fused = time_ms(2, 10, || {
+        sink(cm.infer(std::slice::from_ref(&xin)).unwrap());
+    });
     let mut t = Table::new(&["Executor", "ms/run", "speedup"]);
     t.row(vec!["straight-line".into(), format!("{:.2}", straight.mean), "1.00x".into()]);
     t.row(vec![
-        "fused (in-place elementwise)".into(),
+        "compiled session (fused + planner)".into(),
         format!("{:.2}", fused.mean),
         format!("{:.2}x", straight.mean / fused.mean),
     ]);
     t.print("executor hot path (demo CNN)");
 
-    // 3. PJRT serving loop, single vs batched.
+    // 3. Serving loop over compiled sessions, single vs batched.
+    let build = |batch: usize| {
+        Compiler::for_model("demo-cnn", batch)
+            .unwrap()
+            .random_weights(0xBEEF)
+            .compile()
+            .unwrap()
+    };
+    let per: usize = build(1).input_shapes()[0].iter().product();
+    let mut results = Vec::new();
+    for (label, wait_ms) in [("single (no batching)", 0u64), ("dynamic batch (<=4)", 2u64)] {
+        let server =
+            Server::start_compiled(build(1), build(4), Duration::from_millis(wait_ms)).unwrap();
+        let n = 128;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.submit((0..per).map(|_| rng.f32()).collect()))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        results.push((label, n as f64 / wall, server.stats().mean_batch()));
+    }
+    let mut t = Table::new(&["Serving mode", "req/s", "mean batch"]);
+    for (label, rps, mb) in results {
+        t.row(vec![label.into(), format!("{rps:.0}"), format!("{mb:.2}")]);
+    }
+    t.print("serving loop (compiled sessions, real execution)");
+
+    // 3b. PJRT artifact serving, when artifacts are present.
     if xgen::runtime::artifacts_present() {
-        use xgen::coordinator::Server;
         let per = 3 * 24 * 24;
         let mut results = Vec::new();
         for (label, wait_ms) in [("single (no batching)", 0u64), ("dynamic batch (<=4)", 2u64)] {
@@ -115,7 +151,7 @@ fn main() {
         for (label, rps, mb) in results {
             t.row(vec![label.into(), format!("{rps:.0}"), format!("{mb:.2}")]);
         }
-        t.print("PJRT serving loop (real execution)");
+        t.print("PJRT serving loop (AOT artifacts)");
     } else {
         println!("\n(PJRT serving bench skipped: run `make artifacts`)");
     }

@@ -1,0 +1,589 @@
+//! The XGen session API: one coherent entry point from model to
+//! executable (§2's Fig 2 co-design flow as a *single object*).
+//!
+//! The paper's core claim is that compression (pattern/block pruning),
+//! compilation (rewriting, fusion, FKW storage, code generation) and
+//! execution are one cooperative pipeline. [`Compiler`] is that pipeline
+//! as a builder: pick a model, a [`PruneScheme`], an [`OptLevel`], a
+//! target [`Device`] and the feature toggles (FKW kernels, deep reuse,
+//! memory planner), then [`Compiler::compile`] runs
+//! rewrite → prune → fuse → plan **once** and hands back a
+//! [`CompiledModel`] that owns everything the run needs:
+//!
+//! * [`CompiledModel::infer`] — real execution through the fused executor
+//!   with the buffer-pool memory planner; FKW kernels are auto-attached to
+//!   every pattern-pruned 3×3 conv from the prune report's
+//!   [`PatternAssignment`](crate::pruning::pattern::PatternAssignment)s,
+//!   and deep-reuse GEMM routing is applied when enabled.
+//! * [`CompiledModel::estimate`] — the analytical cost model, with the
+//!   [`DensityMap`] cached at compile time instead of rebuilt per call.
+//! * [`CompiledModel::report`] — per-stage statistics (rewrite, prune,
+//!   fusion, planner slots, FKW layer count, compile wall-time).
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use xgen::api::Compiler;
+//! use xgen::pruning::PruneScheme;
+//!
+//! let model = Compiler::for_model("demo-cnn", 1)?
+//!     .random_weights(42)
+//!     .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 })
+//!     .compile()?;
+//! let y = model.infer(&[xgen::tensor::Tensor::zeros(&[1, 3, 24, 24])])?;
+//! # let _ = y;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Every example, bench, CLI command and the serving
+//! [`Server`](crate::coordinator::Server) goes through this seam; future
+//! backends (sharding, multi-device XEngine dispatch) plug in here.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::baselines::{no_fusion, DeviceClass, Framework};
+use crate::cost::{
+    devices, estimate_latency, scheme_density_map, sparse_efficiency, DensityMap, Device,
+};
+use crate::deepreuse::ReuseConfig;
+use crate::exec::{ExecState, Executor, FusedExecutor, PlanStats};
+use crate::fusion::{fuse, FusionConfig, FusionPlan};
+use crate::graph::zoo::{all_models, by_name};
+use crate::graph::{Graph, OpKind, WeightStore};
+use crate::pruning::{prune_graph, PruneReport, PruneScheme};
+use crate::rewrite::{rewrite, RewriteConfig, RewriteStats};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// How hard the graph-level compiler works.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// No graph transformations: straight per-op execution order.
+    O0,
+    /// Graph rewriting only (identity elimination, BN folding, movement
+    /// collapse) — no operator fusion.
+    O1,
+    /// Rewriting + DNNFusion with the default profile thresholds.
+    O2,
+    /// Rewriting + aggressive fusion (lower profile threshold, larger
+    /// fused groups).
+    O3,
+}
+
+impl OptLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptLevel::O0 => "O0",
+            OptLevel::O1 => "O1",
+            OptLevel::O2 => "O2",
+            OptLevel::O3 => "O3",
+        }
+    }
+
+    /// Parse a CLI spelling (`0`..`3`, `O0`..`O3`).
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s {
+            "0" | "O0" | "o0" => Some(OptLevel::O0),
+            "1" | "O1" | "o1" => Some(OptLevel::O1),
+            "2" | "O2" | "o2" => Some(OptLevel::O2),
+            "3" | "O3" | "o3" => Some(OptLevel::O3),
+            _ => None,
+        }
+    }
+}
+
+/// Summary of the pruning stage (the full
+/// [`PruneReport`] — including per-layer pattern assignments — is on
+/// [`CompiledModel::prune_report`]).
+#[derive(Debug, Clone)]
+pub struct PruneStats {
+    pub sparsity: f64,
+    pub layers_pruned: usize,
+    pub effective_macs: u64,
+}
+
+/// Per-stage statistics of one [`Compiler::compile`] run.
+#[derive(Debug, Clone)]
+pub struct CompileReport {
+    pub model: String,
+    pub opt: OptLevel,
+    pub scheme: PruneScheme,
+    /// Name of the target device the session was compiled for.
+    pub target: &'static str,
+    pub rewrite: RewriteStats,
+    pub prune: Option<PruneStats>,
+    pub fusion_groups: usize,
+    pub fusion_max_group: usize,
+    pub fusion_bytes_saved: u64,
+    /// Memory-planner pool statistics (present when weights were attached
+    /// and an executor was built).
+    pub plan: Option<PlanStats>,
+    /// Conv layers auto-attached to FKW kernels from the prune report.
+    pub fkw_layers: usize,
+    pub reuse_enabled: bool,
+    pub planner_enabled: bool,
+    pub compile_ms: f64,
+}
+
+impl CompileReport {
+    /// Human-readable multi-line summary (what `xgen compile` prints).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "compiled {} [{}] for {} in {:.1} ms\n",
+            self.model,
+            self.opt.name(),
+            self.target,
+            self.compile_ms
+        );
+        s += &format!(
+            "  rewrite: {} -> {} ops ({} rule hits)\n",
+            self.rewrite.ops_before,
+            self.rewrite.ops_after,
+            self.rewrite.total_hits()
+        );
+        if let Some(p) = &self.prune {
+            s += &format!(
+                "  prune[{}]: {:.1}% sparsity over {} layers, effective {:.2} GMACs\n",
+                self.scheme.name(),
+                p.sparsity * 100.0,
+                p.layers_pruned,
+                p.effective_macs as f64 / 1e9
+            );
+        }
+        s += &format!(
+            "  fusion: {} fused layers (max group {}), {:.1} KB intermediate traffic saved\n",
+            self.fusion_groups,
+            self.fusion_max_group,
+            self.fusion_bytes_saved as f64 / 1024.0
+        );
+        if let Some(pl) = &self.plan {
+            s += &format!(
+                "  plan: {} buffer slots for {} values ({:.0}% buffer bytes pooled away)\n",
+                pl.slots,
+                pl.planned_values,
+                pl.bytes_saved_frac() * 100.0
+            );
+        }
+        s += &format!(
+            "  kernels: {} FKW conv layers, deep reuse {}, memory planner {}\n",
+            self.fkw_layers,
+            if self.reuse_enabled { "on" } else { "off" },
+            if self.planner_enabled { "on" } else { "off" }
+        );
+        s
+    }
+}
+
+/// Builder for one compile session. See the [module docs](self).
+pub struct Compiler {
+    graph: Graph,
+    weights: Option<WeightStore>,
+    scheme: PruneScheme,
+    opt: OptLevel,
+    target: Device,
+    fkw: bool,
+    reuse: Option<ReuseConfig>,
+    planner: bool,
+}
+
+impl Compiler {
+    /// Start a session from an already-built graph.
+    pub fn new(graph: Graph) -> Compiler {
+        Compiler {
+            graph,
+            weights: None,
+            scheme: PruneScheme::None,
+            opt: OptLevel::O2,
+            target: devices::s10_cpu(),
+            fkw: true,
+            reuse: None,
+            planner: true,
+        }
+    }
+
+    /// Start a session from a model-zoo name at a batch size; errors on an
+    /// unknown name instead of panicking.
+    pub fn for_model(name: &str, batch: usize) -> Result<Compiler> {
+        if !all_models().contains(&name) {
+            bail!("unknown zoo model '{name}' (see `xgen models`)");
+        }
+        Ok(Compiler::new(by_name(name, batch)))
+    }
+
+    /// Attach a weight store (required for [`CompiledModel::infer`] and
+    /// for pruning to have an effect).
+    pub fn weights(mut self, ws: WeightStore) -> Self {
+        self.weights = Some(ws);
+        self
+    }
+
+    /// Attach randomly-initialized weights (deterministic per seed).
+    pub fn random_weights(mut self, seed: u64) -> Self {
+        let ws = WeightStore::init_random(&self.graph, &mut Rng::new(seed));
+        self.weights = Some(ws);
+        self
+    }
+
+    /// Pruning scheme applied by the model optimizer.
+    pub fn scheme(mut self, scheme: PruneScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Graph-compiler effort level (default [`OptLevel::O2`]).
+    pub fn opt_level(mut self, opt: OptLevel) -> Self {
+        self.opt = opt;
+        self
+    }
+
+    /// Target device recorded in the session and used by
+    /// [`CompiledModel::estimate_target`].
+    pub fn target(mut self, device: Device) -> Self {
+        self.target = device;
+        self
+    }
+
+    /// Auto-attach FKW kernels to pattern-pruned 3×3 convs (default on;
+    /// only takes effect under [`PruneScheme::Pattern`]).
+    pub fn fkw(mut self, on: bool) -> Self {
+        self.fkw = on;
+        self
+    }
+
+    /// Route eligible GEMM-backed ops through deep reuse with the default
+    /// [`ReuseConfig`] (default off).
+    pub fn deep_reuse(mut self, on: bool) -> Self {
+        self.reuse = if on { Some(ReuseConfig::default()) } else { None };
+        self
+    }
+
+    /// Route through deep reuse with an explicit config.
+    pub fn reuse_config(mut self, cfg: ReuseConfig) -> Self {
+        self.reuse = Some(cfg);
+        self
+    }
+
+    /// Use the fused executor with the buffer-pool memory planner
+    /// (default on). Turning this off executes through the straight-line
+    /// reference [`Executor`] — the numeric oracle, useful for debugging;
+    /// FKW and deep-reuse toggles do not apply on that engine.
+    pub fn memory_planner(mut self, on: bool) -> Self {
+        self.planner = on;
+        self
+    }
+
+    /// Run the pipeline: rewrite → prune → fuse → plan (+ FKW encode).
+    pub fn compile(mut self) -> Result<CompiledModel> {
+        let t0 = Instant::now();
+        let ops_before = self.graph.operator_count();
+        let rewrite_stats = if self.opt >= OptLevel::O1 {
+            rewrite(&mut self.graph, self.weights.as_mut(), &RewriteConfig::default())
+        } else {
+            RewriteStats {
+                hits: Default::default(),
+                ops_before,
+                ops_after: ops_before,
+            }
+        };
+        let prune_report = match (&mut self.weights, &self.scheme) {
+            (Some(ws), s) if !matches!(s, PruneScheme::None) => {
+                Some(prune_graph(&self.graph, ws, s))
+            }
+            _ => None,
+        };
+        let plan = match self.opt {
+            OptLevel::O0 | OptLevel::O1 => no_fusion(&self.graph),
+            OptLevel::O2 => fuse(&self.graph, &FusionConfig::default()),
+            OptLevel::O3 => fuse(
+                &self.graph,
+                &FusionConfig { profile_threshold_bytes: 4 * 1024, max_group_size: 32 },
+            ),
+        };
+        // Cached at compile time — estimate() no longer rebuilds the
+        // density map on every call.
+        let density = scheme_density_map(&self.graph, &self.scheme);
+        let sparse_eff = sparse_efficiency(&self.scheme);
+
+        // With the planner off, infer() runs the straight-line reference
+        // executor — don't build (or report) executor state that would
+        // never be used.
+        let mut fkw_layers = 0usize;
+        let state = if let (Some(ws), true) = (&self.weights, self.planner) {
+            let mut st = ExecState::new(&self.graph, &plan);
+            if self.fkw {
+                if let Some(rep) = &prune_report {
+                    for n in &self.graph.nodes {
+                        let OpKind::Conv2d { k: 3, groups: 1, .. } = n.op else {
+                            continue;
+                        };
+                        let Some(wid) = n
+                            .inputs
+                            .iter()
+                            .copied()
+                            .find(|&i| matches!(self.graph.node(i).op, OpKind::Weight))
+                        else {
+                            continue;
+                        };
+                        if let Some(asg) =
+                            rep.pattern_assignments.get(&self.graph.node(wid).name)
+                        {
+                            st.attach_fkw(&self.graph, ws, n.id, asg)?;
+                            fkw_layers += 1;
+                        }
+                    }
+                }
+            }
+            st.set_reuse(self.reuse);
+            Some(st)
+        } else {
+            None
+        };
+
+        let report = CompileReport {
+            model: self.graph.name.clone(),
+            opt: self.opt,
+            scheme: self.scheme.clone(),
+            target: self.target.name,
+            rewrite: rewrite_stats,
+            prune: prune_report.as_ref().map(|r| PruneStats {
+                sparsity: r.sparsity,
+                layers_pruned: r.layers_pruned,
+                effective_macs: r.effective_macs,
+            }),
+            fusion_groups: plan.fused_layer_count(),
+            fusion_max_group: plan.max_group(),
+            fusion_bytes_saved: plan.bytes_saved(&self.graph),
+            plan: state.as_ref().map(|s| s.plan_stats().clone()),
+            fkw_layers,
+            // Deep reuse only applies on the fused engine; with the
+            // planner off the reference executor ignores it.
+            reuse_enabled: self.reuse.is_some() && self.planner,
+            planner_enabled: self.planner,
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        Ok(CompiledModel {
+            graph: self.graph,
+            weights: self.weights,
+            plan,
+            scheme: self.scheme,
+            target: self.target,
+            density,
+            sparse_eff,
+            state,
+            planner: self.planner,
+            prune_report,
+            report,
+        })
+    }
+}
+
+/// A compiled session: owns the (rewritten) graph, the (pruned) weights,
+/// the fusion plan and the pre-built executor state; answers both real
+/// inference and cost-model estimation.
+pub struct CompiledModel {
+    graph: Graph,
+    weights: Option<WeightStore>,
+    plan: FusionPlan,
+    scheme: PruneScheme,
+    target: Device,
+    density: DensityMap,
+    sparse_eff: f64,
+    state: Option<ExecState>,
+    planner: bool,
+    prune_report: Option<PruneReport>,
+    report: CompileReport,
+}
+
+impl CompiledModel {
+    /// The rewritten graph the session executes.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The (pruned) weights, when attached.
+    pub fn weights(&self) -> Option<&WeightStore> {
+        self.weights.as_ref()
+    }
+
+    /// The fusion plan.
+    pub fn plan(&self) -> &FusionPlan {
+        &self.plan
+    }
+
+    /// The pruning scheme the session was compiled under.
+    pub fn scheme(&self) -> &PruneScheme {
+        &self.scheme
+    }
+
+    /// The full prune report (per-layer pattern assignments included).
+    pub fn prune_report(&self) -> Option<&PruneReport> {
+        self.prune_report.as_ref()
+    }
+
+    /// Per-stage compile statistics.
+    pub fn report(&self) -> &CompileReport {
+        &self.report
+    }
+
+    /// Shapes of the graph's Input nodes, in execution order.
+    pub fn input_shapes(&self) -> Vec<Vec<usize>> {
+        self.graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Input))
+            .map(|n| n.shape.clone())
+            .collect()
+    }
+
+    /// Shapes of the graph outputs.
+    pub fn output_shapes(&self) -> Vec<Vec<usize>> {
+        self.graph
+            .outputs
+            .iter()
+            .map(|&o| self.graph.node(o).shape.clone())
+            .collect()
+    }
+
+    /// Leading dimension of the first input — the compiled batch size.
+    pub fn batch_size(&self) -> usize {
+        self.input_shapes()
+            .first()
+            .and_then(|s| s.first().copied())
+            .unwrap_or(1)
+    }
+
+    /// Real execution: one tensor per Input node, outputs in graph order.
+    pub fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.infer_with_stats(inputs).map(|(y, _)| y)
+    }
+
+    /// Real execution, also returning the memory planner's pool stats.
+    pub fn infer_with_stats(&self, inputs: &[Tensor]) -> Result<(Vec<Tensor>, PlanStats)> {
+        let ws = self
+            .weights
+            .as_ref()
+            .ok_or_else(|| anyhow!("model was compiled without weights — cannot infer"))?;
+        if !self.planner {
+            let y = Executor::new(&self.graph, ws).run(inputs)?;
+            return Ok((y, PlanStats::default()));
+        }
+        let state = self
+            .state
+            .as_ref()
+            .expect("executor state exists when weights are attached and the planner is on");
+        FusedExecutor::with_state(&self.graph, ws, &self.plan, state).run_with_stats(inputs)
+    }
+
+    /// Single-input convenience over flat `f32` data (the serving path).
+    pub fn infer_flat(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let shape = self
+            .input_shapes()
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("model has no input node"))?;
+        let n: usize = shape.iter().product();
+        if x.len() != n {
+            bail!("input length {} != expected {} for shape {:?}", x.len(), n, shape);
+        }
+        let mut out = self.infer(&[Tensor::from_vec(&shape, x.to_vec())])?;
+        if out.is_empty() {
+            bail!("model produced no outputs");
+        }
+        Ok(out.remove(0).into_vec())
+    }
+
+    /// Batched convenience: stack `batch_size()` flat inputs along dim 0,
+    /// run once, split the first output back per request.
+    pub fn infer_flat_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let shape = self
+            .input_shapes()
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("model has no input node"))?;
+        let b = *shape.first().unwrap_or(&1);
+        if xs.len() != b {
+            bail!("got {} inputs for compiled batch size {b}", xs.len());
+        }
+        let per: usize = shape[1..].iter().product();
+        let mut flat = Vec::with_capacity(b * per);
+        for x in xs {
+            if x.len() != per {
+                bail!("input length {} != expected {per}", x.len());
+            }
+            flat.extend_from_slice(x);
+        }
+        let out = self.infer(&[Tensor::from_vec(&shape, flat)])?;
+        let y = &out[0];
+        let bper = y.len() / b;
+        Ok((0..b)
+            .map(|i| y.data()[i * bper..(i + 1) * bper].to_vec())
+            .collect())
+    }
+
+    /// Cost-model latency on an arbitrary device under a framework
+    /// profile, using the density map cached at compile time.
+    pub fn estimate(&self, device: &Device, fw: Framework, class: DeviceClass) -> Option<f64> {
+        let prof = fw.profile(class)?;
+        Some(
+            estimate_latency(&self.graph, &self.plan, device, &prof, &self.density, self.sparse_eff)
+                .total_ms(),
+        )
+    }
+
+    /// Cost-model latency on the session's target device.
+    pub fn estimate_target(&self, fw: Framework, class: DeviceClass) -> Option<f64> {
+        self.estimate(&self.target, fw, class)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_compiles_zoo_model_and_estimates() {
+        let m = Compiler::for_model("mobilenet-v2", 1)
+            .unwrap()
+            .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 })
+            .compile()
+            .unwrap();
+        // Weightless session: estimate works, infer errors cleanly.
+        let ms = m
+            .estimate(&devices::s10_cpu(), Framework::XGenFull, DeviceClass::MobileCpu)
+            .unwrap();
+        assert!(ms > 0.0 && ms < 1000.0, "latency {ms}");
+        assert!(m.infer(&[]).is_err());
+        assert!(m.report().fusion_groups > 0);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_not_a_panic() {
+        assert!(Compiler::for_model("no-such-net", 1).is_err());
+    }
+
+    #[test]
+    fn fkw_layers_auto_attached_under_pattern_scheme() {
+        let m = Compiler::for_model("demo-cnn", 1)
+            .unwrap()
+            .random_weights(7)
+            .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 })
+            .compile()
+            .unwrap();
+        assert!(m.report().fkw_layers > 0, "no FKW kernels attached");
+        assert!(m.prune_report().unwrap().pattern_assignments.len() >= m.report().fkw_layers);
+        let shape = m.input_shapes()[0].clone();
+        let y = m.infer(&[Tensor::zeros(&shape)]).unwrap();
+        assert_eq!(y[0].shape(), &m.output_shapes()[0][..]);
+    }
+
+    #[test]
+    fn opt_level_parse_round_trips() {
+        for (s, o) in [("0", OptLevel::O0), ("1", OptLevel::O1), ("2", OptLevel::O2), ("3", OptLevel::O3)] {
+            assert_eq!(OptLevel::parse(s), Some(o));
+            assert_eq!(OptLevel::parse(o.name()), Some(o));
+        }
+        assert_eq!(OptLevel::parse("max"), None);
+    }
+}

@@ -1,14 +1,18 @@
-//! The XGen coordinator: (a) the compilation pipeline driver tying the
-//! model optimizer, graph rewriting, DNNFusion and the cost model together
-//! (§2's Fig 2 flow, and the Fig 20 "Usage II/III" service path), and
-//! (b) a serving loop that batches requests over the PJRT runtime with
-//! Python never on the request path.
+//! The XGen coordinator: the serving loop — dynamic batching with Python
+//! never on the request path (§2's Fig 20 "Usage II/III" service path).
+//! A [`Server`] dispatches onto either backend of the same bucketed
+//! scheme: AOT artifacts over the PJRT runtime ([`Server::start`]) or
+//! compiled sessions from [`crate::api::Compiler`] executing in-process
+//! ([`Server::start_compiled`]).
 //!
 //! The serving loop uses std threads + mpsc channels (tokio is not in the
 //! offline vendor set — see DESIGN.md): one dispatcher thread drains a
-//! request queue, forms batches (up to the artifact's batch size, bounded
-//! wait), executes on [`ModelRuntime`], and completes per-request
+//! request queue, forms batches (up to the engine's batch size, bounded
+//! wait), executes on a [`BatchEngine`], and completes per-request
 //! responses through per-request channels.
+//!
+//! The old pipeline driver ([`compile`]/[`Compiled`]) is a deprecated
+//! shim over [`crate::api::Compiler`]; it stays for one release.
 
 pub mod service;
 
@@ -16,8 +20,9 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::api::CompiledModel;
 use crate::baselines::{DeviceClass, Framework};
 use crate::cost::{estimate_latency, scheme_density_map, sparse_efficiency, DensityMap, Device};
 use crate::fusion::FusionPlan;
@@ -27,32 +32,42 @@ use crate::rewrite::{rewrite, RewriteConfig, RewriteStats};
 use crate::runtime::ModelRuntime;
 use crate::util::stats::Summary;
 
-/// Everything the pipeline produced for one model.
+/// Everything the pipeline produced for one model (legacy shape; the
+/// session API's `CompiledModel` supersedes it).
 pub struct Compiled {
     pub graph: Graph,
     pub plan: FusionPlan,
     pub rewrite_stats: RewriteStats,
     pub prune_report: Option<PruneReport>,
     pub scheme: PruneScheme,
+    /// Density map cached at compile time (used to be rebuilt on every
+    /// `latency_ms` call).
+    pub density: DensityMap,
 }
 
 impl Compiled {
     /// Cost-model latency on a device under a framework profile.
     pub fn latency_ms(&self, device: &Device, fw: Framework, class: DeviceClass) -> Option<f64> {
         let prof = fw.profile(class)?;
-        let dm = if matches!(self.scheme, PruneScheme::None) {
-            DensityMap::new()
-        } else {
-            scheme_density_map(&self.graph, &self.scheme)
-        };
         Some(
-            estimate_latency(&self.graph, &self.plan, device, &prof, &dm, sparse_efficiency(&self.scheme))
-                .total_ms(),
+            estimate_latency(
+                &self.graph,
+                &self.plan,
+                device,
+                &prof,
+                &self.density,
+                sparse_efficiency(&self.scheme),
+            )
+            .total_ms(),
         )
     }
 }
 
 /// Run the full XGen pipeline: rewrite → prune → fuse.
+#[deprecated(
+    since = "0.2.0",
+    note = "use xgen::api::Compiler — the session API that also builds the executor state"
+)]
 pub fn compile(
     mut graph: Graph,
     mut ws: Option<&mut WeightStore>,
@@ -63,7 +78,8 @@ pub fn compile(
         .filter(|_| !matches!(scheme, PruneScheme::None))
         .map(|ws| prune_graph(&graph, ws, &scheme));
     let plan = crate::fusion::fuse(&graph, &crate::fusion::FusionConfig::default());
-    Compiled { graph, plan, rewrite_stats, prune_report, scheme }
+    let density = scheme_density_map(&graph, &scheme);
+    Compiled { graph, plan, rewrite_stats, prune_report, scheme, density }
 }
 
 /// A single inference request: input tensor + response channel.
@@ -99,11 +115,53 @@ impl ServeStats {
     }
 }
 
-/// Dynamic-batching server over one artifact family.
+/// An inference engine the [`Server`] dispatcher batches onto: a
+/// single-request variant plus a full-batch variant of the same model —
+/// the classic bucketed-batching scheme.
+trait BatchEngine {
+    fn run_single(&mut self, x: &[f32]) -> Result<Vec<f32>>;
+    fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// AOT artifacts executed through the PJRT runtime.
+struct PjrtEngine {
+    rt: ModelRuntime,
+    single: String,
+    batched: String,
+}
+
+impl BatchEngine for PjrtEngine {
+    fn run_single(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        self.rt.load(&self.single)?.run(x)
+    }
+
+    fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.rt.load(&self.batched)?.run_batch(xs)
+    }
+}
+
+/// Compiled sessions from [`crate::api::Compiler`] executing in-process —
+/// serving with no AOT artifacts and no Python anywhere.
+struct CompiledEngine {
+    single: CompiledModel,
+    batched: CompiledModel,
+}
+
+impl BatchEngine for CompiledEngine {
+    fn run_single(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        self.single.infer_flat(x)
+    }
+
+    fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.batched.infer_flat_batch(xs)
+    }
+}
+
+/// Dynamic-batching server over one model family (either PJRT artifacts
+/// or compiled sessions).
 ///
-/// `batch_artifact` (e.g. `cnn_dense_b4`) serves full batches;
-/// `single_artifact` (`cnn_dense_b1`) serves the remainder — the classic
-/// bucketed-batching scheme.
+/// The batch variant (e.g. `cnn_dense_b4`) serves full batches; the
+/// single variant (`cnn_dense_b1`) serves the remainder.
 pub struct Server {
     tx: mpsc::Sender<Request>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -111,9 +169,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the dispatcher thread. The PJRT client is **created inside**
-    /// the thread (the xla crate's client is not `Send`); artifacts are
-    /// compiled there before the call returns.
+    /// Spawn the dispatcher thread over PJRT artifacts. The PJRT client is
+    /// **created inside** the thread (the xla crate's client is not
+    /// `Send`); artifacts are compiled there before the call returns.
     pub fn start(
         artifact_dir: std::path::PathBuf,
         single_artifact: &str,
@@ -146,12 +204,47 @@ impl Server {
                 }
             };
             let _ = ready_tx.send(Ok(()));
-            dispatcher(rt, rx, &single, &batched, batch_size, max_wait, stats2);
+            dispatcher(PjrtEngine { rt, single, batched }, rx, batch_size, max_wait, stats2);
         });
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server thread died"))?
             .map_err(anyhow::Error::msg)?;
+        Ok(Server { tx, handle: Some(handle), stats })
+    }
+
+    /// Spawn the dispatcher over a pair of compiled sessions (batch-1 and
+    /// batch-N variants of the same model, both built via
+    /// [`crate::api::Compiler`] with weights attached). Pure-Rust real
+    /// execution — no AOT artifacts required.
+    pub fn start_compiled(
+        single: CompiledModel,
+        batched: CompiledModel,
+        max_wait: Duration,
+    ) -> Result<Server> {
+        if single.weights().is_none() || batched.weights().is_none() {
+            bail!("serving requires sessions compiled with weights");
+        }
+        if single.batch_size() != 1 {
+            bail!("single-request session must be compiled at batch 1");
+        }
+        // Both sessions must be variants of the same model: identical
+        // per-sample input shape, or the two serving paths would return
+        // different results depending on arrival timing.
+        let (ss, bs) = (single.input_shapes(), batched.input_shapes());
+        match (ss.first(), bs.first()) {
+            (Some(s), Some(b)) if !s.is_empty() && !b.is_empty() && s[1..] == b[1..] => {}
+            _ => bail!(
+                "single/batched sessions disagree on per-sample input shape: {ss:?} vs {bs:?}"
+            ),
+        }
+        let batch_size = batched.batch_size().max(1);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+        let stats2 = stats.clone();
+        let handle = std::thread::spawn(move || {
+            dispatcher(CompiledEngine { single, batched }, rx, batch_size, max_wait, stats2);
+        });
         Ok(Server { tx, handle: Some(handle), stats })
     }
 
@@ -186,11 +279,9 @@ impl Drop for Server {
     }
 }
 
-fn dispatcher(
-    mut rt: ModelRuntime,
+fn dispatcher<E: BatchEngine>(
+    mut engine: E,
     rx: mpsc::Receiver<Request>,
-    single: &str,
-    batched: &str,
     batch_size: usize,
     max_wait: Duration,
     stats: Arc<Mutex<ServeStats>>,
@@ -212,15 +303,16 @@ fn dispatcher(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        // Serve: full batches through the batch artifact, remainder 1-by-1.
+        // Serve: full batches through the batch variant, remainder 1-by-1.
         while !pending.is_empty() {
             let take = if pending.len() >= batch_size { batch_size } else { 1 };
             let chunk: Vec<Request> = pending.drain(..take).collect();
-            let artifact = if take == batch_size { batched } else { single };
             let inputs: Vec<Vec<f32>> = chunk.iter().map(|r| r.input.clone()).collect();
-            let result = rt
-                .load(artifact)
-                .and_then(|m| if take == 1 { m.run(&inputs[0]).map(|o| vec![o]) } else { m.run_batch(&inputs) });
+            let result = if take == 1 {
+                engine.run_single(&inputs[0]).map(|o| vec![o])
+            } else {
+                engine.run_batch(&inputs)
+            };
             let mut st = stats.lock().unwrap();
             st.batches += 1;
             match result {
@@ -243,10 +335,49 @@ fn dispatcher(
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::zoo::by_name;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn compiled_server_round_trips_requests() {
+        use crate::api::Compiler;
+        let single = Compiler::for_model("demo-cnn", 1)
+            .unwrap()
+            .random_weights(11)
+            .compile()
+            .unwrap();
+        let batched = Compiler::for_model("demo-cnn", 4)
+            .unwrap()
+            .random_weights(11)
+            .compile()
+            .unwrap();
+        let server =
+            Server::start_compiled(single, batched, Duration::from_millis(2)).unwrap();
+        let per = 3 * 24 * 24;
+        let mut rng = Rng::new(1);
+        let rxs: Vec<_> = (0..9)
+            .map(|_| server.submit((0..per).map(|_| rng.f32()).collect()))
+            .collect();
+        for rx in rxs {
+            let y = rx.recv().unwrap().unwrap();
+            assert_eq!(y.len(), 8);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+        let st = server.stats();
+        assert_eq!(st.completed, 9);
+        assert!(st.batches >= 3);
+    }
+
+    #[test]
+    fn compiled_server_rejects_weightless_sessions() {
+        use crate::api::Compiler;
+        let single = Compiler::for_model("demo-cnn", 1).unwrap().compile().unwrap();
+        let batched = Compiler::for_model("demo-cnn", 4).unwrap().compile().unwrap();
+        assert!(Server::start_compiled(single, batched, Duration::from_millis(1)).is_err());
+    }
 
     #[test]
     fn pipeline_compile_produces_report() {

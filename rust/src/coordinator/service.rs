@@ -12,8 +12,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::api::Compiler;
 use crate::baselines::{DeviceClass, Framework};
-use crate::coordinator::compile;
 use crate::cost::Device;
 use crate::graph::zoo::by_name;
 use crate::graph::Graph;
@@ -144,8 +144,8 @@ impl XGenService {
         ];
         let mut best: Option<StoredModel> = None;
         for scheme in schemes {
-            let c = compile(graph_builder(), None, scheme.clone());
-            let lat = c.latency_ms(&self.device, Framework::XGenFull, DeviceClass::MobileCpu)?;
+            let c = Compiler::new(graph_builder()).scheme(scheme.clone()).compile().ok()?;
+            let lat = c.estimate(&self.device, Framework::XGenFull, DeviceClass::MobileCpu)?;
             let acc = am.estimate(base_acc, &scheme);
             if lat <= req.max_latency_ms && acc >= req.min_accuracy {
                 let better = best.as_ref().map(|b| acc > b.accuracy).unwrap_or(true);

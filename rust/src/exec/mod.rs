@@ -7,10 +7,17 @@
 //! * [`FusedExecutor`] — consumes a [`FusionPlan`]; elementwise members of
 //!   a group are applied **in place** on the producer's buffer (no
 //!   allocation, no extra traversal), conv layers with a pattern
-//!   assignment run through the compact [`FkwLayer`] kernel, and GEMMs can
-//!   be routed through [`crate::deepreuse`]. `benches/hotpath_exec.rs`
-//!   measures the gap between the two — the Rust-side stand-in for the
-//!   paper's generated mobile code vs naive execution.
+//!   assignment run through the compact [`FkwLayer`] kernel
+//!   ([`FusedExecutor::attach_fkw`]), and eligible GEMM-backed ops can be
+//!   routed through [`crate::deepreuse`] ([`FusedExecutor::set_reuse`]).
+//!   `benches/hotpath_exec.rs` measures the gap between the two — the
+//!   Rust-side stand-in for the paper's generated mobile code vs naive
+//!   execution.
+//!
+//! The expensive per-construction analysis (group ordering, liveness,
+//! buffer-pool planning, FKW encoding) lives in [`ExecState`], which
+//! [`crate::api::CompiledModel`] builds once at compile time and shares
+//! across runs via [`FusedExecutor::with_state`].
 //!
 //! Supported op subset: everything the demo CNNs / WDSR / MLP graphs use.
 //! Transformer-specific movement ops (Transpose with implicit perms,
@@ -19,12 +26,14 @@
 
 pub mod planner;
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
 pub use planner::{MemoryPlan, PlanStats};
 
+use crate::deepreuse::{reuse_conv2d, reuse_gemm, ReuseConfig};
 use crate::fkw::FkwLayer;
 use crate::fusion::FusionPlan;
 use crate::graph::{Act, Graph, NodeId, OpKind, WeightStore};
@@ -441,15 +450,21 @@ fn broadcast_to(x: &Tensor, shape: &[usize]) -> Result<Tensor> {
     bail!("unsupported broadcast {:?} -> {:?}", x.shape(), shape)
 }
 
-/// Optimized executor: in-place elementwise within fused groups + FKW
-/// sparse conv kernels for layers with a pattern assignment.
-pub struct FusedExecutor<'g> {
-    g: &'g Graph,
-    ws: &'g WeightStore,
-    /// Fused groups in execution order (sorted by first member; the plan
-    /// preserves topological order within and across groups by
-    /// construction).
-    groups: Vec<&'g crate::fusion::FusedGroup>,
+/// Precomputed execution state for one graph under one fusion plan: the
+/// flattened group order, the materialization mask, the buffer-pool memory
+/// plan, FKW-encoded conv layers, and the optional deep-reuse routing
+/// config.
+///
+/// Building this is the expensive part of constructing a [`FusedExecutor`]
+/// (a liveness pass over the whole graph). The [`crate::api`] compiler
+/// builds it **once** at compile time and reuses it across every
+/// `CompiledModel::infer` call via [`FusedExecutor::with_state`].
+#[derive(Debug, Clone)]
+pub struct ExecState {
+    /// Indices into `plan.groups` in execution order (sorted by first
+    /// member; the plan preserves topological order within and across
+    /// groups by construction).
+    group_order: Vec<usize>,
     /// Which values materialize into pooled slots: group tails and members
     /// whose value escapes their group. Derived once from users() here
     /// (§Perf iteration 1: users() used to be recomputed per node, costing
@@ -460,16 +475,25 @@ pub struct FusedExecutor<'g> {
     mplan: MemoryPlan,
     /// conv node id -> FKW-encoded layer.
     fkw: BTreeMap<NodeId, FkwLayer>,
+    /// When set, eligible GEMM-backed ops — groups=1 `Conv2d` of any
+    /// kernel size (via im2col) and `Dense` — without an FKW kernel route
+    /// through [`crate::deepreuse`].
+    reuse: Option<ReuseConfig>,
 }
 
-impl<'g> FusedExecutor<'g> {
-    pub fn new(g: &'g Graph, ws: &'g WeightStore, plan: &'g FusionPlan) -> FusedExecutor<'g> {
+impl ExecState {
+    /// Run the ordering + liveness analysis for `g` under `plan`.
+    pub fn new(g: &Graph, plan: &FusionPlan) -> ExecState {
         let users = g.users();
-        let mut groups: Vec<&'g crate::fusion::FusedGroup> = plan.groups.iter().collect();
-        groups.sort_by_key(|gr| gr.nodes[0]);
-        let order: Vec<NodeId> = groups.iter().flat_map(|gr| gr.nodes.iter().copied()).collect();
+        let mut group_order: Vec<usize> = (0..plan.groups.len()).collect();
+        group_order.sort_by_key(|&gi| plan.groups[gi].nodes[0]);
+        let order: Vec<NodeId> = group_order
+            .iter()
+            .flat_map(|&gi| plan.groups[gi].nodes.iter().copied())
+            .collect();
         let mut materialize = vec![false; g.nodes.len()];
-        for gr in &groups {
+        for &gi in &group_order {
+            let gr = &plan.groups[gi];
             for &id in &gr.nodes {
                 let escapes = users[id].iter().any(|&u| !gr.nodes.contains(&u))
                     || g.outputs.contains(&id);
@@ -479,26 +503,97 @@ impl<'g> FusedExecutor<'g> {
             }
         }
         let mplan = MemoryPlan::new(g, &order, &materialize);
-        FusedExecutor { g, ws, groups, materialize, mplan, fkw: BTreeMap::new() }
+        ExecState { group_order, materialize, mplan, fkw: BTreeMap::new(), reuse: None }
     }
 
     /// Register a pattern assignment for a conv node: it will execute via
     /// the compact FKW kernel.
-    pub fn with_fkw(mut self, node: NodeId, asg: &PatternAssignment) -> Result<Self> {
-        let n = self.g.node(node);
+    pub fn attach_fkw(
+        &mut self,
+        g: &Graph,
+        ws: &WeightStore,
+        node: NodeId,
+        asg: &PatternAssignment,
+    ) -> Result<()> {
+        let n = g.node(node);
         let OpKind::Conv2d { stride, pad, groups: 1, k: 3 } = n.op else {
             bail!("FKW applies to 3x3 groups=1 conv nodes");
         };
-        let wname = &self.g.node(
-            *n.inputs
-                .iter()
-                .find(|&&i| matches!(self.g.node(i).op, OpKind::Weight))
-                .ok_or_else(|| anyhow!("conv without weight"))?,
-        )
-        .name;
-        let w = self.ws.get(wname).ok_or_else(|| anyhow!("weight missing"))?;
+        let wname = &g
+            .node(
+                *n.inputs
+                    .iter()
+                    .find(|&&i| matches!(g.node(i).op, OpKind::Weight))
+                    .ok_or_else(|| anyhow!("conv without weight"))?,
+            )
+            .name;
+        let w = ws.get(wname).ok_or_else(|| anyhow!("weight missing"))?;
         self.fkw.insert(node, FkwLayer::encode(w, asg, stride, pad, true));
+        Ok(())
+    }
+
+    /// Route eligible ops through deep reuse (`None` disables).
+    pub fn set_reuse(&mut self, cfg: Option<ReuseConfig>) {
+        self.reuse = cfg;
+    }
+
+    /// Number of conv nodes with an attached FKW kernel.
+    pub fn fkw_count(&self) -> usize {
+        self.fkw.len()
+    }
+
+    /// The memory planner's pool statistics.
+    pub fn plan_stats(&self) -> &PlanStats {
+        &self.mplan.stats
+    }
+}
+
+/// Optimized executor: in-place elementwise within fused groups + FKW
+/// sparse conv kernels for layers with a pattern assignment + optional
+/// deep-reuse GEMM routing.
+pub struct FusedExecutor<'g> {
+    g: &'g Graph,
+    ws: &'g WeightStore,
+    plan: &'g FusionPlan,
+    state: Cow<'g, ExecState>,
+}
+
+impl<'g> FusedExecutor<'g> {
+    /// Build an executor, computing a fresh [`ExecState`].
+    pub fn new(g: &'g Graph, ws: &'g WeightStore, plan: &'g FusionPlan) -> FusedExecutor<'g> {
+        FusedExecutor { g, ws, plan, state: Cow::Owned(ExecState::new(g, plan)) }
+    }
+
+    /// Build an executor over a prebuilt state — no per-construction
+    /// liveness analysis. This is the `xgen::api::CompiledModel` hot path:
+    /// compile once, infer many times.
+    pub fn with_state(
+        g: &'g Graph,
+        ws: &'g WeightStore,
+        plan: &'g FusionPlan,
+        state: &'g ExecState,
+    ) -> FusedExecutor<'g> {
+        FusedExecutor { g, ws, plan, state: Cow::Borrowed(state) }
+    }
+
+    /// Register a pattern assignment for a conv node (attach-style, so
+    /// conditional attachment composes without rebinding `self`).
+    pub fn attach_fkw(&mut self, node: NodeId, asg: &PatternAssignment) -> Result<()> {
+        let (g, ws) = (self.g, self.ws);
+        self.state.to_mut().attach_fkw(g, ws, node, asg)
+    }
+
+    /// Consuming form of [`FusedExecutor::attach_fkw`], kept for one
+    /// release for source compatibility.
+    #[deprecated(note = "use attach_fkw (&mut self) instead")]
+    pub fn with_fkw(mut self, node: NodeId, asg: &PatternAssignment) -> Result<Self> {
+        self.attach_fkw(node, asg)?;
         Ok(self)
+    }
+
+    /// Route eligible GEMM-backed ops through deep reuse.
+    pub fn set_reuse(&mut self, cfg: Option<ReuseConfig>) {
+        self.state.to_mut().set_reuse(cfg);
     }
 
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -535,10 +630,12 @@ impl<'g> FusedExecutor<'g> {
         // Materialized values live in a planned pool of reusable slots
         // instead of one entry per node; a value's buffer is dropped as
         // soon as its last consumer has run.
-        let mut slots: Vec<Option<Tensor>> = (0..self.mplan.num_slots).map(|_| None).collect();
+        let state: &ExecState = &self.state;
+        let mut slots: Vec<Option<Tensor>> = (0..state.mplan.num_slots).map(|_| None).collect();
 
         let mut p = 0usize; // position in the flattened group order
-        for gr in &self.groups {
+        for &gi in &state.group_order {
+            let gr = &self.plan.groups[gi];
             // Fused evaluation: walk members; elementwise unary members
             // mutate the running buffer in place.
             let mut buf: Option<Tensor> = None;
@@ -559,14 +656,14 @@ impl<'g> FusedExecutor<'g> {
                     let mut t = buf.take().unwrap();
                     apply_unary_inplace(&n.op, &mut t);
                     t
-                } else if let Some(fkw) = self.fkw.get(&id) {
+                } else if let Some(fkw) = state.fkw.get(&id) {
                     let xid = n
                         .inputs
                         .iter()
                         .copied()
                         .find(|&i| !matches!(self.g.node(i).op, OpKind::Weight))
                         .ok_or_else(|| anyhow!("conv without data input"))?;
-                    let x = planned_value(&self.mplan, &slots, &src, xid)
+                    let x = planned_value(&state.mplan, &slots, &src, xid)
                         .ok_or_else(|| anyhow!("missing conv input {xid}"))?;
                     fkw.conv2d(x)
                 } else {
@@ -577,7 +674,7 @@ impl<'g> FusedExecutor<'g> {
                         // *immediately preceding* member; anything else
                         // must be materialized, and a miss is a loud
                         // error, not a silent wrong-tensor substitution.
-                        let v = planned_value(&self.mplan, &slots, &src, i)
+                        let v = planned_value(&state.mplan, &slots, &src, i)
                             .or(if prev_id == Some(i) { prev.as_ref() } else { None })
                             .ok_or_else(|| {
                                 anyhow!(
@@ -587,7 +684,20 @@ impl<'g> FusedExecutor<'g> {
                             })?;
                         args.push(v);
                     }
-                    eval_op(self.g, id, &args)?
+                    // Deep-reuse routing: eligible GEMM-backed ops go
+                    // through the LSH-clustered engine when enabled.
+                    match (&n.op, state.reuse) {
+                        (OpKind::Conv2d { stride, pad, groups: 1, .. }, Some(cfg)) => {
+                            reuse_conv2d(args[0], args[1], *stride, *pad, &cfg).0
+                        }
+                        (OpKind::Dense, Some(cfg)) => {
+                            let in_f = *args[0].shape().last().unwrap();
+                            let rows = args[0].len() / in_f;
+                            let xm = args[0].reshape(&[rows, in_f]);
+                            reuse_gemm(&xm, args[1], &cfg).0.reshape(&n.shape)
+                        }
+                        _ => eval_op(self.g, id, &args)?,
+                    }
                 };
                 // Tail of group keeps the buffer; intermediates whose value
                 // escapes the group are materialized into their slot.
@@ -596,15 +706,15 @@ impl<'g> FusedExecutor<'g> {
                     // Tail: the buffer's last stop — move, don't clone
                     // (§Perf iteration 2: the clone here copied every
                     // group-boundary tensor twice).
-                    let slot = self.mplan.slot_of[id].expect("tail has a slot");
+                    let slot = state.mplan.slot_of[id].expect("tail has a slot");
                     slots[slot] = buf.take();
-                } else if self.materialize[id] {
-                    let slot = self.mplan.slot_of[id].expect("escaping value has a slot");
+                } else if state.materialize[id] {
+                    let slot = state.mplan.slot_of[id].expect("escaping value has a slot");
                     slots[slot] = buf.clone();
                 }
                 // Recycle buffers whose last consumer just ran.
-                for &d in &self.mplan.expire[p] {
-                    if let Some(s) = self.mplan.slot_of[d] {
+                for &d in &state.mplan.expire[p] {
+                    if let Some(s) = state.mplan.slot_of[d] {
                         slots[s] = None;
                     }
                 }
@@ -617,14 +727,14 @@ impl<'g> FusedExecutor<'g> {
             let t = if let Some(t) = src[o] {
                 t.clone()
             } else {
-                let s = self.mplan.slot_of[o].ok_or_else(|| anyhow!("output {o} not planned"))?;
+                let s = state.mplan.slot_of[o].ok_or_else(|| anyhow!("output {o} not planned"))?;
                 slots[s]
                     .take()
                     .ok_or_else(|| anyhow!("output {o} not computed (or listed twice)"))?
             };
             outs.push(t);
         }
-        Ok((outs, self.mplan.stats.clone()))
+        Ok((outs, state.mplan.stats.clone()))
     }
 }
 
@@ -766,12 +876,45 @@ mod tests {
         let x = Tensor::randn(&[1, 4, 12, 12], 1.0, &mut rng);
         let dense = Executor::new(&g, &ws).run(&[x.clone()]).unwrap();
         let plan = fuse(&g, &FusionConfig::default());
-        let fused = FusedExecutor::new(&g, &ws, &plan)
-            .with_fkw(conv_id, &asg)
-            .unwrap()
+        let mut fx = FusedExecutor::new(&g, &ws, &plan);
+        fx.attach_fkw(conv_id, &asg).unwrap();
+        let fused = fx.run(&[x]).unwrap();
+        assert!(dense[0].max_abs_diff(&fused[0]) < 1e-4);
+    }
+
+    #[test]
+    fn prebuilt_state_matches_fresh_construction() {
+        let g = demo_cnn();
+        let mut rng = Rng::new(58);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let plan = fuse(&g, &FusionConfig::default());
+        let state = ExecState::new(&g, &plan);
+        let x = Tensor::randn(&[1, 3, 16, 16], 1.0, &mut rng);
+        let a = FusedExecutor::new(&g, &ws, &plan).run(&[x.clone()]).unwrap();
+        let b = FusedExecutor::with_state(&g, &ws, &plan, &state)
             .run(&[x])
             .unwrap();
-        assert!(dense[0].max_abs_diff(&fused[0]) < 1e-4);
+        assert_eq!(a[0].data(), b[0].data());
+        assert!(state.plan_stats().slots <= state.plan_stats().planned_values);
+    }
+
+    #[test]
+    fn deep_reuse_routing_stays_close_to_exact() {
+        use crate::deepreuse::ReuseConfig;
+        let g = demo_cnn();
+        let mut rng = Rng::new(59);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let plan = fuse(&g, &FusionConfig::default());
+        let x = Tensor::randn(&[1, 3, 16, 16], 1.0, &mut rng);
+        let exact = FusedExecutor::new(&g, &ws, &plan).run(&[x.clone()]).unwrap();
+        let mut fx = FusedExecutor::new(&g, &ws, &plan);
+        // Tight clustering so the LSH approximation is near-exact.
+        fx.set_reuse(Some(ReuseConfig { hash_bits: 12, max_rel_dev: 0.02, ..Default::default() }));
+        let approx = fx.run(&[x]).unwrap();
+        let scale = exact[0].data().iter().map(|v| v.abs()).sum::<f32>()
+            / exact[0].len() as f32;
+        let rel = approx[0].mad(&exact[0]) / scale.max(1e-6);
+        assert!(rel < 0.05, "deep-reuse routing diverges: rel err {rel}");
     }
 
     #[test]

@@ -5,6 +5,26 @@ use super::NetBuilder;
 use crate::graph::ir::Graph;
 use crate::graph::ops::Act;
 
+/// The small 8-class demo CNN (mirrors `python/compile/model.py`'s
+/// trained artifact: 3×24×24 input, conv stack with a residual block,
+/// 8-way classifier head). Small enough to CPU-execute in tests and to
+/// serve through `coordinator::Server` without AOT artifacts — the
+/// default model of `xgen serve` and the `api` test matrix.
+pub fn demo_cnn(batch: usize) -> Graph {
+    let mut b = NetBuilder::new("demo-cnn", &[batch, 3, 24, 24]);
+    b.conv_bn_act(16, 3, 1, 1, Act::Relu);
+    let skip = b.cur();
+    b.conv_bn_act(16, 3, 1, 1, Act::Relu);
+    let t = b.cur();
+    b.add_residual(skip, t);
+    b.maxpool(2, 2);
+    b.conv_bn_act(32, 3, 1, 1, Act::Relu);
+    b.maxpool(2, 2);
+    b.gap();
+    b.dense(8);
+    b.finish()
+}
+
 /// Slim U-Net (paper row: 2.1M params / 15 GFLOPs — a mobile variant, so
 /// base width 22 rather than the classic 64).
 pub fn unet(batch: usize) -> Graph {

@@ -397,6 +397,7 @@ impl NetBuilder {
 /// Panics on unknown name (callers enumerate via [`all_models`]).
 pub fn by_name(name: &str, batch: usize) -> Graph {
     match name {
+        "demo-cnn" => misc::demo_cnn(batch),
         "efficientnet-b0" => cnn::efficientnet_b0(batch),
         "resnet-50" => cnn::resnet50(batch),
         "vgg-16" => cnn::vgg16(batch),
@@ -430,6 +431,7 @@ pub fn by_name(name: &str, batch: usize) -> Graph {
 /// All registry names (stable order).
 pub fn all_models() -> Vec<&'static str> {
     vec![
+        "demo-cnn",
         "efficientnet-b0",
         "resnet-50",
         "vgg-16",

@@ -15,10 +15,23 @@
 //! Rust. See `DESIGN.md` for the full system inventory and the
 //! per-experiment index mapping every paper table/figure to a bench target.
 //!
+//! ## Start here: the session API
+//!
+//! [`api::Compiler`] is the single entry point from model to executable —
+//! a builder over the whole Fig 2 pipeline (rewrite → prune → fuse →
+//! plan) whose [`api::Compiler::compile`] returns an
+//! [`api::CompiledModel`] answering real inference
+//! ([`infer`](api::CompiledModel::infer)), cost-model estimation
+//! ([`estimate`](api::CompiledModel::estimate)) and per-stage statistics
+//! ([`report`](api::CompiledModel::report)). Every example, bench, CLI
+//! command and the serving [`coordinator::Server`] goes through it; the
+//! modules below are the pipeline's stages.
+//!
 //! ## Module map
 //!
 //! | layer | modules |
 //! |---|---|
+//! | **session API** | [`api`] |
 //! | substrates | [`util`], [`tensor`] |
 //! | graph IR + model zoo | [`graph`] |
 //! | high-level opt | [`rewrite`], [`fusion`] |
@@ -28,6 +41,7 @@
 //! | co-search | [`caps`] |
 //! | runtime | [`xengine`], [`runtime`], [`coordinator`] |
 
+pub mod api;
 pub mod util;
 pub mod tensor;
 pub mod graph;

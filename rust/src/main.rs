@@ -1,23 +1,27 @@
-//! `xgen` CLI — the leader entrypoint over the whole stack.
+//! `xgen` CLI — the leader entrypoint over the whole stack. `compile` and
+//! `serve` construct inference exclusively through the
+//! [`xgen::api::Compiler`] session API.
 //!
 //! ```text
 //! xgen models                                   list the model zoo
 //! xgen compile --model resnet-50 [--scheme pattern|block|none]
+//!              [--opt 0..3] [--reuse] [--no-fkw] [--infer]
 //! xgen sched [--variant ADy416] [--horizon 3000]    Table 5 simulation
 //! xgen caps [--budget 8.0]                      NPAS co-search
 //! xgen emit-kernel [--pattern 0] [--unroll 4]   generated pattern kernel
 //! xgen run --artifact cnn_dense_b1              one PJRT inference
-//! xgen serve [--requests 64]                    batched serving demo
+//! xgen serve [--model demo-cnn] [--requests 64] [--opt 0..3]
+//!            [--scheme none|pattern|...] [--reuse] [--no-fkw] [--pjrt]
 //! ```
 
 use anyhow::Result;
 
+use xgen::api::{CompiledModel, Compiler, OptLevel};
 use xgen::baselines::{DeviceClass, Framework};
 use xgen::caps::{search, CapsConfig};
-use xgen::coordinator::{compile, Server};
+use xgen::coordinator::Server;
 use xgen::cost::devices;
 use xgen::graph::zoo::{all_models, by_name};
-use xgen::graph::WeightStore;
 use xgen::pruning::PruneScheme;
 use xgen::runtime::{default_artifact_dir, ModelRuntime};
 use xgen::util::cli::Args;
@@ -50,13 +54,42 @@ fn main() -> Result<()> {
 const HELP: &str = "\
 xgen — CoCoPIE XGen reproduction (see DESIGN.md)
   models        list the model zoo with params/MACs
-  compile       run the full pipeline on a zoo model
+  compile       compile a zoo model through the session API
+                (--scheme, --opt 0..3, --reuse, --no-fkw, --infer)
   sched         XEngine Table-5 scheduler simulation
   caps          NPAS architecture/pruning co-search
   emit-kernel   print a generated branch-less pattern kernel
   run           execute one AOT artifact via PJRT
-  serve         dynamic-batching serving demo over PJRT
+  serve         dynamic-batching serving demo (compiled sessions by
+                default; --pjrt for the AOT artifact path)
 ";
+
+/// CLI spelling of a pruning scheme; unknown spellings are a loud error,
+/// not a silent default.
+fn parse_scheme(s: &str) -> Result<PruneScheme> {
+    Ok(match s {
+        "none" => PruneScheme::None,
+        "pattern" => PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 },
+        "block" => PruneScheme::Block { block: 8, rate: 0.75 },
+        "structured" => PruneScheme::Structured { rate: 0.5 },
+        "nonstructured" => PruneScheme::NonStructured { rate: 0.8 },
+        other => anyhow::bail!(
+            "unknown --scheme '{other}' (use none|pattern|block|structured|nonstructured)"
+        ),
+    })
+}
+
+/// Shared `--opt/--reuse/--no-fkw` handling for `compile` and `serve`.
+fn session(args: &Args, model: &str, batch: usize) -> Result<Compiler> {
+    let opt = OptLevel::parse(args.opt_or("opt", "2"))
+        .ok_or_else(|| anyhow::anyhow!("bad --opt level (use 0..3)"))?;
+    Ok(Compiler::for_model(model, batch)?
+        .random_weights(args.opt_u64("seed", 7))
+        .scheme(parse_scheme(args.opt_or("scheme", "pattern"))?)
+        .opt_level(opt)
+        .fkw(!args.flag("no-fkw"))
+        .deep_reuse(args.flag("reuse")))
+}
 
 fn cmd_models() -> Result<()> {
     for name in all_models() {
@@ -67,47 +100,31 @@ fn cmd_models() -> Result<()> {
 
 fn cmd_compile(args: &Args) -> Result<()> {
     let model = args.opt_or("model", "resnet-50");
-    let scheme = match args.opt_or("scheme", "pattern") {
-        "none" => PruneScheme::None,
-        "block" => PruneScheme::Block { block: 8, rate: 0.75 },
-        "structured" => PruneScheme::Structured { rate: 0.5 },
-        _ => PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 },
-    };
-    let g = by_name(model, args.opt_usize("batch", 1));
-    let ops = g.operator_count();
-    let mut rng = Rng::new(args.opt_u64("seed", 7));
-    let mut ws = WeightStore::init_random(&g, &mut rng);
-    let c = compile(g, Some(&mut ws), scheme);
-    println!("model: {}", c.graph.summary());
-    println!(
-        "rewrite: {} ops -> {} ({} rule hits)",
-        ops,
-        c.rewrite_stats.ops_after,
-        c.rewrite_stats.total_hits()
-    );
-    if let Some(r) = &c.prune_report {
-        println!(
-            "prune[{}]: sparsity {:.1}%, {} layers, effective MACs {:.2}G",
-            c.scheme.name(),
-            r.sparsity * 100.0,
-            r.layers_pruned,
-            r.effective_macs as f64 / 1e9
-        );
-    }
-    println!(
-        "fusion: {} fused layers (max group {}), {:.1} KB intermediate traffic saved",
-        c.plan.fused_layer_count(),
-        c.plan.max_group(),
-        c.plan.bytes_saved(&c.graph) as f64 / 1024.0
-    );
+    let cm = session(args, model, args.opt_usize("batch", 1))?.compile()?;
+    println!("model: {}", cm.graph().summary());
+    print!("{}", cm.report().summary());
     for (fw, class, dev) in [
         (Framework::Mnn, DeviceClass::MobileCpu, devices::s10_cpu()),
         (Framework::XGenFull, DeviceClass::MobileCpu, devices::s10_cpu()),
         (Framework::XGenFull, DeviceClass::MobileGpu, devices::s10_gpu()),
     ] {
-        if let Some(ms) = c.latency_ms(&dev, fw, class) {
+        if let Some(ms) = cm.estimate(&dev, fw, class) {
             println!("latency[{} on {}]: {:.1} ms", fw.name(), dev.name, ms);
         }
+    }
+    if args.flag("infer") {
+        let shape = cm.input_shapes()[0].clone();
+        let n: usize = shape.iter().product();
+        let mut rng = Rng::new(args.opt_u64("seed", 7));
+        let x: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let t0 = std::time::Instant::now();
+        let y = cm.infer_flat(&x)?;
+        println!(
+            "real inference: {:?} -> {} outputs in {:.2} ms",
+            shape,
+            y.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
     }
     Ok(())
 }
@@ -198,14 +215,27 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.opt_usize("requests", 64);
-    let server = Server::start(
-        default_artifact_dir(),
-        "cnn_dense_b1",
-        "cnn_dense_b4",
-        std::time::Duration::from_millis(args.opt_u64("max-wait-ms", 2)),
-    )?;
+    let max_wait = std::time::Duration::from_millis(args.opt_u64("max-wait-ms", 2));
+    let (server, per) = if args.flag("pjrt") {
+        // Legacy path: AOT artifacts over the PJRT runtime.
+        let server =
+            Server::start(default_artifact_dir(), "cnn_dense_b1", "cnn_dense_b4", max_wait)?;
+        (server, 3 * 24 * 24)
+    } else {
+        // Default path: compiled sessions executing in-process.
+        let model = args.opt_or("model", "demo-cnn");
+        let single: CompiledModel = session(args, model, 1)?.compile()?;
+        let batched = session(args, model, args.opt_usize("batch", 4))?.compile()?;
+        let per: usize = single.input_shapes()[0].iter().product();
+        println!(
+            "serving {} [{}], batch {} + remainder singles",
+            model,
+            single.report().opt.name(),
+            batched.batch_size()
+        );
+        (Server::start_compiled(single, batched, max_wait)?, per)
+    };
     let mut rng = Rng::new(9);
-    let per = 3 * 24 * 24;
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)
         .map(|_| server.submit((0..per).map(|_| rng.f32()).collect()))

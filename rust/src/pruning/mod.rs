@@ -14,11 +14,13 @@ pub mod block;
 pub mod pattern;
 pub mod quant;
 
+use std::collections::BTreeMap;
+
 use crate::graph::{Graph, OpKind, WeightStore};
 use crate::tensor::Tensor;
 
 use block::{block_prune, magnitude_prune, BlockPruneConfig};
-use pattern::{apply_assignment, assign_patterns, connectivity_prune, PatternSet};
+use pattern::{apply_assignment, assign_patterns, connectivity_prune, PatternAssignment, PatternSet};
 
 /// A pruning scheme, as CAPS selects per layer or uniformly.
 #[derive(Debug, Clone, PartialEq)]
@@ -73,6 +75,12 @@ pub struct PruneReport {
     pub layers_pruned: usize,
     /// Effective MACs remaining (graph MACs × layer-wise density).
     pub effective_macs: u64,
+    /// Per-layer pattern assignments, keyed by weight-node name. Populated
+    /// only for 3×3 conv kernels pruned under [`PruneScheme::Pattern`] —
+    /// this is what lets the compiler auto-attach FKW kernels to the
+    /// corresponding conv nodes instead of forcing every call site to
+    /// re-run `assign_patterns` by hand.
+    pub pattern_assignments: BTreeMap<String, PatternAssignment>,
 }
 
 /// Apply `scheme` to every prunable weight of `g` in `ws` (conv kernels and
@@ -83,6 +91,7 @@ pub fn prune_graph(g: &Graph, ws: &mut WeightStore, scheme: &PruneScheme) -> Pru
     let mut zeros = 0usize;
     let mut layers = 0usize;
     let mut eff_macs = 0u64;
+    let mut assignments = BTreeMap::new();
 
     // Map weight-node name -> consumer op (to know how to prune it).
     for n in &g.nodes {
@@ -105,7 +114,10 @@ pub fn prune_graph(g: &Graph, ws: &mut WeightStore, scheme: &PruneScheme) -> Pru
             if !prunable || matches!(scheme, PruneScheme::None) {
                 continue;
             }
-            let pruned = prune_tensor(&t, scheme);
+            let (pruned, asg) = prune_tensor_detailed(&t, scheme);
+            if let Some(asg) = asg {
+                assignments.insert(w.name.clone(), asg);
+            }
             let z = pruned.data().iter().filter(|&&v| v == 0.0).count();
             zeros += z;
             density = 1.0 - z as f64 / t.len() as f64;
@@ -118,16 +130,24 @@ pub fn prune_graph(g: &Graph, ws: &mut WeightStore, scheme: &PruneScheme) -> Pru
         sparsity: if total > 0 { zeros as f64 / total as f64 } else { 0.0 },
         layers_pruned: layers,
         effective_macs: eff_macs,
+        pattern_assignments: assignments,
     }
 }
 
 /// Prune a single weight tensor under a scheme.
 pub fn prune_tensor(t: &Tensor, scheme: &PruneScheme) -> Tensor {
+    prune_tensor_detailed(t, scheme).0
+}
+
+/// Prune a single weight tensor, also returning the [`PatternAssignment`]
+/// when the pattern path was taken (3×3 conv kernel under
+/// [`PruneScheme::Pattern`]) — the assignment is what FKW encoding needs.
+pub fn prune_tensor_detailed(t: &Tensor, scheme: &PruneScheme) -> (Tensor, Option<PatternAssignment>) {
     match scheme {
-        PruneScheme::None => t.clone(),
+        PruneScheme::None => (t.clone(), None),
         PruneScheme::NonStructured { rate } => {
             let m = block::conv_weight_as_matrix(t);
-            magnitude_prune(&m, *rate).apply(&m).reshape(t.shape())
+            (magnitude_prune(&m, *rate).apply(&m).reshape(t.shape()), None)
         }
         PruneScheme::Pattern { set_size, connectivity_rate } => {
             // Pattern pruning applies to 3x3 conv kernels; other tensors
@@ -139,7 +159,8 @@ pub fn prune_tensor(t: &Tensor, scheme: &PruneScheme) -> Tensor {
                 if *connectivity_rate > 0.0 {
                     connectivity_prune(t, &mut asg, *connectivity_rate);
                 }
-                apply_assignment(t, &asg)
+                let pruned = apply_assignment(t, &asg);
+                (pruned, Some(asg))
             } else {
                 let rate = PruneScheme::Pattern {
                     set_size: *set_size,
@@ -147,23 +168,28 @@ pub fn prune_tensor(t: &Tensor, scheme: &PruneScheme) -> Tensor {
                 }
                 .rate();
                 let m = block::conv_weight_as_matrix(t);
-                block_prune(&m, &BlockPruneConfig { block_rows: 8, block_cols: 8, prune_rate: rate })
-                    .apply(&m)
-                    .reshape(t.shape())
+                let pruned = block_prune(
+                    &m,
+                    &BlockPruneConfig { block_rows: 8, block_cols: 8, prune_rate: rate },
+                )
+                .apply(&m)
+                .reshape(t.shape());
+                (pruned, None)
             }
         }
         PruneScheme::Block { block, rate } => {
             let m = block::conv_weight_as_matrix(t);
-            block_prune(
+            let pruned = block_prune(
                 &m,
                 &BlockPruneConfig { block_rows: *block, block_cols: *block, prune_rate: *rate },
             )
             .apply(&m)
-            .reshape(t.shape())
+            .reshape(t.shape());
+            (pruned, None)
         }
         PruneScheme::Structured { rate } => {
             let m = block::conv_weight_as_matrix(t);
-            block_prune(
+            let pruned = block_prune(
                 &m,
                 &BlockPruneConfig {
                     block_rows: usize::MAX,
@@ -172,7 +198,8 @@ pub fn prune_tensor(t: &Tensor, scheme: &PruneScheme) -> Tensor {
                 },
             )
             .apply(&m)
-            .reshape(t.shape())
+            .reshape(t.shape());
+            (pruned, None)
         }
     }
 }
@@ -296,6 +323,31 @@ mod tests {
         assert!((p.rate() - 5.0 / 9.0).abs() < 1e-9);
         let pc = PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.5 };
         assert!((pc.rate() - 7.0 / 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pattern_assignments_recorded_for_fkw() {
+        use crate::graph::zoo::NetBuilder;
+        use crate::graph::Act;
+        let mut b = NetBuilder::new("pa", &[1, 8, 8, 8]);
+        b.conv(16, 3, 1, 1, 1);
+        b.act(Act::Relu);
+        let g = b.finish();
+        let mut rng = Rng::new(35);
+        let mut ws = WeightStore::init_random(&g, &mut rng);
+        let r = prune_graph(
+            &g,
+            &mut ws,
+            &PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.2 },
+        );
+        assert_eq!(r.pattern_assignments.len(), 1);
+        let (name, asg) = r.pattern_assignments.iter().next().unwrap();
+        assert!(ws.get(name).unwrap().zero_fraction() > 0.5);
+        assert!(asg.sparsity() > 0.5);
+        // Non-pattern schemes record no assignments.
+        let mut ws2 = WeightStore::init_random(&g, &mut Rng::new(35));
+        let r2 = prune_graph(&g, &mut ws2, &PruneScheme::Block { block: 4, rate: 0.5 });
+        assert!(r2.pattern_assignments.is_empty());
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Integration tests for the `xgen::api` session API (the ISSUE-2
+//! acceptance matrix): every `PruneScheme` × {FKW on/off} × {deep reuse
+//! on/off} compiled on the small demo-cnn zoo model must match the plain
+//! `Executor` oracle running the *same* rewritten graph + pruned weights.
+
+use xgen::api::{Compiler, OptLevel};
+use xgen::deepreuse::ReuseConfig;
+use xgen::exec::Executor;
+use xgen::pruning::PruneScheme;
+use xgen::tensor::Tensor;
+use xgen::util::rng::Rng;
+
+fn schemes() -> Vec<PruneScheme> {
+    vec![
+        PruneScheme::None,
+        PruneScheme::NonStructured { rate: 0.7 },
+        PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 },
+        PruneScheme::Pattern { set_size: 4, connectivity_rate: 0.0 },
+        PruneScheme::Block { block: 4, rate: 0.6 },
+        PruneScheme::Structured { rate: 0.5 },
+    ]
+}
+
+/// The tentpole acceptance test: scheme × fkw × reuse against the oracle.
+#[test]
+fn compiled_model_matches_executor_oracle_across_matrix() {
+    for scheme in schemes() {
+        for fkw in [false, true] {
+            for reuse in [false, true] {
+                let mut c = Compiler::for_model("demo-cnn", 1)
+                    .unwrap()
+                    .random_weights(1234)
+                    .scheme(scheme.clone())
+                    .fkw(fkw);
+                if reuse {
+                    // Tight LSH config so the oracle comparison stays
+                    // meaningful: fine buckets + 2% outlier bound.
+                    c = c.reuse_config(ReuseConfig {
+                        hash_bits: 12,
+                        max_rel_dev: 0.02,
+                        ..Default::default()
+                    });
+                }
+                let m = c.compile().unwrap();
+                if fkw && matches!(scheme, PruneScheme::Pattern { .. }) {
+                    assert!(
+                        m.report().fkw_layers > 0,
+                        "{scheme:?}: pattern scheme attached no FKW kernels"
+                    );
+                }
+                let shape = m.input_shapes()[0].clone();
+                let x = Tensor::randn(&shape, 1.0, &mut Rng::new(99));
+                let y = m.infer(&[x.clone()]).unwrap();
+                // Oracle: same rewritten graph + pruned weights through the
+                // straight-line reference executor.
+                let oracle = Executor::new(m.graph(), m.weights().unwrap())
+                    .run(&[x])
+                    .unwrap();
+                assert_eq!(y[0].shape(), oracle[0].shape());
+                if reuse {
+                    let scale = oracle[0].data().iter().map(|v| v.abs()).sum::<f32>()
+                        / oracle[0].len() as f32;
+                    let rel = y[0].mad(&oracle[0]) / scale.max(1e-6);
+                    assert!(
+                        rel < 0.05,
+                        "{scheme:?} fkw={fkw} reuse=on: rel err {rel}"
+                    );
+                } else {
+                    let d = y[0].max_abs_diff(&oracle[0]);
+                    assert!(d < 1e-4, "{scheme:?} fkw={fkw}: max abs diff {d}");
+                }
+            }
+        }
+    }
+}
+
+/// All four opt levels agree numerically; fusion (O2) actually reduces the
+/// kernel count vs the unfused plan (O0).
+#[test]
+fn opt_levels_preserve_numerics_and_o2_fuses() {
+    let mut outs = Vec::new();
+    for opt in [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3] {
+        let m = Compiler::for_model("demo-cnn", 1)
+            .unwrap()
+            .random_weights(6)
+            .opt_level(opt)
+            .compile()
+            .unwrap();
+        let x = Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(8));
+        outs.push((opt, m.report().fusion_groups, m.infer(&[x]).unwrap()));
+    }
+    for w in outs.windows(2) {
+        let d = w[0].2[0].max_abs_diff(&w[1].2[0]);
+        assert!(d < 1e-4, "{:?} vs {:?}: diff {d}", w[0].0, w[1].0);
+    }
+    assert!(
+        outs[2].1 < outs[0].1,
+        "fusion did not reduce kernel count: {} !< {}",
+        outs[2].1,
+        outs[0].1
+    );
+}
+
+/// The planner toggle swaps the engine without changing numerics.
+#[test]
+fn planner_toggle_is_numerically_invisible() {
+    let on = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(5)
+        .compile()
+        .unwrap();
+    let off = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(5)
+        .memory_planner(false)
+        .compile()
+        .unwrap();
+    let x = Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(4));
+    let a = on.infer(&[x.clone()]).unwrap();
+    let b = off.infer(&[x]).unwrap();
+    assert!(a[0].max_abs_diff(&b[0]) < 1e-4);
+    // The planner path actually pools buffers.
+    let (_, stats) = on.infer_with_stats(&[Tensor::zeros(&[1, 3, 24, 24])]).unwrap();
+    assert!(stats.slots > 0 && stats.slots < stats.planned_values);
+}
+
+/// `estimate` uses the density map cached at compile time and stays
+/// deterministic across calls; batched flat inference round-trips.
+#[test]
+fn estimate_is_cached_and_flat_batch_round_trips() {
+    use xgen::baselines::{DeviceClass, Framework};
+    use xgen::cost::devices;
+    let m = Compiler::for_model("demo-cnn", 2)
+        .unwrap()
+        .random_weights(3)
+        .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.2 })
+        .compile()
+        .unwrap();
+    let dev = devices::s10_cpu();
+    let a = m.estimate(&dev, Framework::XGenFull, DeviceClass::MobileCpu).unwrap();
+    let b = m.estimate(&dev, Framework::XGenFull, DeviceClass::MobileCpu).unwrap();
+    assert!(a > 0.0);
+    assert_eq!(a, b);
+
+    assert_eq!(m.batch_size(), 2);
+    let per: usize = m.input_shapes()[0][1..].iter().product();
+    let mut rng = Rng::new(17);
+    let xs: Vec<Vec<f32>> = (0..2)
+        .map(|_| (0..per).map(|_| rng.f32() * 2.0 - 1.0).collect())
+        .collect();
+    let ys = m.infer_flat_batch(&xs).unwrap();
+    assert_eq!(ys.len(), 2);
+    assert_eq!(ys[0].len(), 8);
+    // Wrong batch size is a loud error.
+    assert!(m.infer_flat_batch(&xs[..1]).is_err());
+}
