@@ -32,7 +32,14 @@ fn main() {
     let single = GemmConfig { threads: 1, ..Default::default() };
     let parallel = GemmConfig { threads: 0, ..Default::default() };
     let mut results = Vec::new();
-    for &d in &[128usize, 256, 512] {
+    // CI smoke mode: small sizes only, so the job produces a real (if
+    // noisy) BENCH_gemm.json in seconds.
+    let sizes: &[usize] = if std::env::var("XGEN_BENCH_QUICK").is_ok() {
+        &[128, 256]
+    } else {
+        &[128, 256, 512]
+    };
+    for &d in sizes {
         let a = rng.normal_vec(d * d, 0.0, 1.0);
         let b = rng.normal_vec(d * d, 0.0, 1.0);
         let mut want = vec![0.0f32; d * d];

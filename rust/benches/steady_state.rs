@@ -1,0 +1,116 @@
+//! Steady-state inference bench — the ISSUE-3 acceptance artifact.
+//!
+//! Sweeps the `xengine::knobs::steady_knobs()` toggle matrix
+//! ({weight pre-packing, workspace arena, worker pool}) over end-to-end
+//! `CompiledModel::infer()` on the demo CNN, verifying every configuration
+//! against the all-off baseline, and writes `BENCH_steady.json` at the
+//! repo root (fields documented in EXPERIMENTS.md §Steady-state).
+//!
+//! `XGEN_BENCH_QUICK=1` shrinks iteration counts for the CI smoke job;
+//! `XGEN_THREADS` sizes the worker pool.
+
+use xgen::api::Compiler;
+use xgen::tensor::gemm::GemmConfig;
+use xgen::tensor::Tensor;
+use xgen::util::bench::{sink, time_ms, Table};
+use xgen::util::json::Json;
+use xgen::util::rng::Rng;
+use xgen::xengine::knobs::steady_knobs;
+
+fn main() {
+    let quick = std::env::var("XGEN_BENCH_QUICK").is_ok();
+    let (warm, samples, iters) = if quick { (1, 2, 3) } else { (2, 5, 20) };
+    let mut rng = Rng::new(0x57EA);
+    let x = Tensor::randn(&[1, 3, 24, 24], 1.0, &mut rng);
+
+    let mut t = Table::new(&[
+        "config",
+        "prepack",
+        "workspace",
+        "pool",
+        "ms/infer",
+        "p95",
+        "speedup",
+        "packed KB",
+        "arena KB",
+    ]);
+    let mut results = Vec::new();
+    let mut baseline_ms = 0.0f64;
+    let mut reference: Option<Tensor> = None;
+    for k in steady_knobs() {
+        let m = Compiler::for_model("demo-cnn", 1)
+            .unwrap()
+            .random_weights(42)
+            .prepack(k.prepack)
+            .workspace(k.workspace)
+            .gemm_config(GemmConfig {
+                threads: if k.pool { 0 } else { 1 },
+                ..Default::default()
+            })
+            .compile()
+            .unwrap();
+        // Correctness guard: every knob config must agree with the first
+        // (all-off) configuration.
+        let y = m.infer(&[x.clone()]).unwrap();
+        match &reference {
+            None => reference = Some(y[0].clone()),
+            Some(r) => {
+                let d = r.max_abs_diff(&y[0]);
+                assert!(d < 1e-4, "knob '{}' diverges from baseline by {d}", k.name);
+            }
+        }
+        let s = time_ms(warm, samples, || {
+            for _ in 0..iters {
+                sink(m.infer(&[x.clone()]).unwrap());
+            }
+        });
+        let per = s.mean / iters as f64;
+        let p95 = s.p95 / iters as f64;
+        if k.name == "legacy" {
+            baseline_ms = per;
+        }
+        let speedup = if per > 0.0 { baseline_ms / per } else { 0.0 };
+        let r = m.report();
+        t.row(vec![
+            k.name.to_string(),
+            k.prepack.to_string(),
+            k.workspace.to_string(),
+            k.pool.to_string(),
+            format!("{per:.3}"),
+            format!("{p95:.3}"),
+            format!("{speedup:.2}x"),
+            format!("{:.1}", r.prepacked_bytes as f64 / 1024.0),
+            format!("{:.1}", r.workspace_bytes as f64 / 1024.0),
+        ]);
+        results.push(Json::obj(vec![
+            ("config", Json::str(k.name)),
+            ("prepack", Json::num(k.prepack as u8 as f64)),
+            ("workspace", Json::num(k.workspace as u8 as f64)),
+            ("pool", Json::num(k.pool as u8 as f64)),
+            ("ms_per_infer", Json::num(per)),
+            ("p95_ms_per_infer", Json::num(p95)),
+            ("speedup_vs_legacy", Json::num(speedup)),
+            ("prepacked_operands", Json::num(r.prepacked_operands as f64)),
+            ("prepacked_bytes", Json::num(r.prepacked_bytes as f64)),
+            ("workspace_bytes", Json::num(r.workspace_bytes as f64)),
+            ("pool_threads", Json::num(r.pool_threads as f64)),
+        ]));
+    }
+    t.print("steady-state infer: {prepack, workspace, pool} toggle matrix (demo-cnn)");
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("steady_state")),
+        ("model", Json::str("demo-cnn")),
+        ("iters_per_sample", Json::num(iters as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_steady.json"
+    } else {
+        "BENCH_steady.json"
+    };
+    match std::fs::write(path, json.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

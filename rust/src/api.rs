@@ -39,6 +39,7 @@
 //! [`Server`](crate::coordinator::Server) goes through this seam; future
 //! backends (sharding, multi-device XEngine dispatch) plug in here.
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -48,8 +49,9 @@ use crate::cost::{
     devices, estimate_latency, scheme_density_map, sparse_efficiency, DensityMap, Device,
 };
 use crate::deepreuse::ReuseConfig;
-use crate::exec::{ExecState, Executor, FusedExecutor, PlanStats};
+use crate::exec::{ExecState, Executor, FusedExecutor, PlanStats, Workspace};
 use crate::fusion::{fuse, FusionConfig, FusionPlan};
+use crate::tensor::gemm::GemmConfig;
 use crate::graph::zoo::{all_models, by_name};
 use crate::graph::{Graph, OpKind, WeightStore};
 use crate::pruning::{prune_graph, PruneReport, PruneScheme};
@@ -124,6 +126,17 @@ pub struct CompileReport {
     pub fkw_layers: usize,
     pub reuse_enabled: bool,
     pub planner_enabled: bool,
+    /// Constant GEMM operands pre-packed at compile time (0 when
+    /// pre-packing is off or no executor was built).
+    pub prepack_enabled: bool,
+    pub prepacked_operands: usize,
+    pub prepacked_bytes: u64,
+    /// Steady-state workspace arena (allocated once; `infer` borrows it).
+    pub workspace_enabled: bool,
+    pub workspace_bytes: u64,
+    /// Resolved worker-pool size the steady-state engine runs with
+    /// (`XGEN_THREADS`, read once per process).
+    pub pool_threads: usize,
     pub compile_ms: f64,
 }
 
@@ -172,6 +185,14 @@ impl CompileReport {
             if self.reuse_enabled { "on" } else { "off" },
             if self.planner_enabled { "on" } else { "off" }
         );
+        s += &format!(
+            "  steady: {} prepacked operands ({:.1} KB), workspace {} ({:.1} KB), pool {} threads\n",
+            self.prepacked_operands,
+            self.prepacked_bytes as f64 / 1024.0,
+            if self.workspace_enabled { "on" } else { "off" },
+            self.workspace_bytes as f64 / 1024.0,
+            self.pool_threads
+        );
         s
     }
 }
@@ -186,6 +207,9 @@ pub struct Compiler {
     fkw: bool,
     reuse: Option<ReuseConfig>,
     planner: bool,
+    prepack: bool,
+    workspace: bool,
+    gemm: GemmConfig,
 }
 
 impl Compiler {
@@ -200,6 +224,9 @@ impl Compiler {
             fkw: true,
             reuse: None,
             planner: true,
+            prepack: true,
+            workspace: true,
+            gemm: GemmConfig::default(),
         }
     }
 
@@ -268,9 +295,37 @@ impl Compiler {
     /// Use the fused executor with the buffer-pool memory planner
     /// (default on). Turning this off executes through the straight-line
     /// reference [`Executor`] — the numeric oracle, useful for debugging;
-    /// FKW and deep-reuse toggles do not apply on that engine.
+    /// FKW, deep-reuse, pre-packing and workspace toggles do not apply on
+    /// that engine.
     pub fn memory_planner(mut self, on: bool) -> Self {
         self.planner = on;
+        self
+    }
+
+    /// Pre-pack every constant GEMM operand (Dense weights, transposed
+    /// conv weight matrices, deep-reuse weight transposes) at compile time
+    /// (default on). Off: weights pack/transpose per call — the PR-1
+    /// behavior, kept as a bench baseline.
+    pub fn prepack(mut self, on: bool) -> Self {
+        self.prepack = on;
+        self
+    }
+
+    /// Execute through the steady-state workspace engine: a per-model
+    /// arena sized by the planner that `infer` borrows mutably, making
+    /// steady-state inference allocation-free (default on). Off: the
+    /// fused Tensor engine allocates per call — kept as the oracle and
+    /// bench baseline.
+    pub fn workspace(mut self, on: bool) -> Self {
+        self.workspace = on;
+        self
+    }
+
+    /// GEMM blocking/thread config of the compiled engine (default
+    /// [`GemmConfig::default`]; `threads: 1` disables the worker pool for
+    /// this session — the bench's pool-off arm).
+    pub fn gemm_config(mut self, cfg: GemmConfig) -> Self {
+        self.gemm = cfg;
         self
     }
 
@@ -336,10 +391,28 @@ impl Compiler {
                 }
             }
             st.set_reuse(self.reuse);
+            st.set_gemm_config(self.gemm);
+            if self.prepack {
+                // After FKW attachment and reuse routing, so each conv
+                // packs for the kernel that will actually run it.
+                st.prepack(&self.graph, ws)?;
+            }
             Some(st)
         } else {
             None
         };
+        // The steady-state arena: allocated once here, borrowed by every
+        // infer. Sized by the planner's extended liveness pass.
+        let workspace = match (&state, self.workspace) {
+            (Some(st), true) => Some(Mutex::new(st.workspace())),
+            _ => None,
+        };
+        let (prepacked_operands, prepacked_bytes) =
+            state.as_ref().map(|s| s.packed_stats()).unwrap_or((0, 0));
+        let workspace_bytes = workspace
+            .as_ref()
+            .map(|w| w.lock().unwrap().bytes())
+            .unwrap_or(0);
 
         let report = CompileReport {
             model: self.graph.name.clone(),
@@ -361,6 +434,12 @@ impl Compiler {
             // planner off the reference executor ignores it.
             reuse_enabled: self.reuse.is_some() && self.planner,
             planner_enabled: self.planner,
+            prepack_enabled: self.prepack && state.is_some(),
+            prepacked_operands,
+            prepacked_bytes,
+            workspace_enabled: workspace.is_some(),
+            workspace_bytes,
+            pool_threads: self.gemm.resolved_threads(),
             compile_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
         Ok(CompiledModel {
@@ -372,6 +451,7 @@ impl Compiler {
             density,
             sparse_eff,
             state,
+            workspace,
             planner: self.planner,
             prune_report,
             report,
@@ -391,6 +471,10 @@ pub struct CompiledModel {
     density: DensityMap,
     sparse_eff: f64,
     state: Option<ExecState>,
+    /// The steady-state arena, allocated once at compile time; `infer`
+    /// borrows it mutably (behind a mutex so `CompiledModel` stays
+    /// `Sync` for the serving layer).
+    workspace: Option<Mutex<Workspace>>,
     planner: bool,
     prune_report: Option<PruneReport>,
     report: CompileReport,
@@ -460,6 +544,11 @@ impl CompiledModel {
     }
 
     /// Real execution, also returning the memory planner's pool stats.
+    /// With the workspace engine on (the default) this runs the
+    /// steady-state path: all intermediates live in the compile-time
+    /// arena, GEMMs hit pre-packed weights, and only the returned output
+    /// tensors are allocated. [`CompiledModel::infer_into`] removes even
+    /// that allocation.
     pub fn infer_with_stats(&self, inputs: &[Tensor]) -> Result<(Vec<Tensor>, PlanStats)> {
         let ws = self
             .weights
@@ -473,7 +562,103 @@ impl CompiledModel {
             .state
             .as_ref()
             .expect("executor state exists when weights are attached and the planner is on");
+        if let Some(arena) = &self.workspace {
+            let mut arena = arena.lock().unwrap();
+            FusedExecutor::with_state(&self.graph, ws, &self.plan, state)
+                .run_steady(inputs, &mut arena)?;
+            let outs = self.steady_outputs(inputs, &arena)?;
+            return Ok((outs, state.plan_stats().clone()));
+        }
         FusedExecutor::with_state(&self.graph, ws, &self.plan, state).run_with_stats(inputs)
+    }
+
+    /// Zero-allocation steady-state inference: runs the workspace engine
+    /// and copies each output into the caller's pre-allocated tensors
+    /// (shapes must match [`CompiledModel::output_shapes`]). After the
+    /// first (warm-up) call, this path performs **no heap allocation**
+    /// on the calling thread and spawns no threads — the acceptance
+    /// property `tests/steady.rs` pins with a counting allocator.
+    pub fn infer_into(&self, inputs: &[Tensor], outs: &mut [Tensor]) -> Result<()> {
+        let ws = self
+            .weights
+            .as_ref()
+            .ok_or_else(|| anyhow!("model was compiled without weights — cannot infer"))?;
+        let (Some(state), Some(arena)) = (&self.state, &self.workspace) else {
+            bail!("infer_into requires the workspace engine (planner + workspace on)");
+        };
+        if outs.len() != self.graph.outputs.len() {
+            bail!(
+                "got {} output tensors for {} graph outputs",
+                outs.len(),
+                self.graph.outputs.len()
+            );
+        }
+        let mut arena = arena.lock().unwrap();
+        FusedExecutor::with_state(&self.graph, ws, &self.plan, state)
+            .run_steady(inputs, &mut arena)?;
+        for (oi, &o) in self.graph.outputs.iter().enumerate() {
+            let n = self.graph.node(o);
+            if outs[oi].shape() != &n.shape[..] {
+                bail!("output {oi} tensor shape {:?} != {:?}", outs[oi].shape(), n.shape);
+            }
+            if matches!(n.op, OpKind::Input | OpKind::Weight) {
+                let t = self.steady_output_tensor(inputs, &arena, o)?;
+                outs[oi].data_mut().copy_from_slice(t.data());
+            } else {
+                let elems = n.out_elems() as usize;
+                let s = state
+                    .planned_slice(&arena, o, elems)
+                    .ok_or_else(|| anyhow!("output {o} not planned"))?;
+                outs[oi].data_mut().copy_from_slice(s);
+            }
+        }
+        Ok(())
+    }
+
+    /// Build output tensors from the arena after a steady run.
+    fn steady_outputs(&self, inputs: &[Tensor], arena: &Workspace) -> Result<Vec<Tensor>> {
+        let mut outs = Vec::with_capacity(self.graph.outputs.len());
+        for &o in &self.graph.outputs {
+            outs.push(self.steady_output_tensor(inputs, arena, o)?);
+        }
+        Ok(outs)
+    }
+
+    fn steady_output_tensor(
+        &self,
+        inputs: &[Tensor],
+        arena: &Workspace,
+        o: usize,
+    ) -> Result<Tensor> {
+        let n = self.graph.node(o);
+        match &n.op {
+            OpKind::Input => {
+                let idx = self
+                    .state
+                    .as_ref()
+                    .expect("steady run implies state")
+                    .input_position(o)
+                    .ok_or_else(|| anyhow!("node {o} is not an input"))?;
+                inputs
+                    .get(idx)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("missing input {idx}"))
+            }
+            OpKind::Weight => self
+                .weights
+                .as_ref()
+                .and_then(|w| w.get(&n.name))
+                .cloned()
+                .ok_or_else(|| anyhow!("weight '{}' missing", n.name)),
+            _ => {
+                let elems = n.out_elems() as usize;
+                let state = self.state.as_ref().expect("steady run implies state");
+                let s = state
+                    .planned_slice(arena, o, elems)
+                    .ok_or_else(|| anyhow!("output {o} not planned"))?;
+                Ok(Tensor::from_vec(&n.shape, s.to_vec()))
+            }
+        }
     }
 
     /// Single-input convenience over flat `f32` data (the serving path).
@@ -576,6 +761,61 @@ mod tests {
         let shape = m.input_shapes()[0].clone();
         let y = m.infer(&[Tensor::zeros(&shape)]).unwrap();
         assert_eq!(y[0].shape(), &m.output_shapes()[0][..]);
+    }
+
+    /// The steady-state toggles {prepack, workspace, pool} never change
+    /// numerics (vs the default all-on engine), `infer_into` matches
+    /// `infer` bitwise, and the report exposes the new steady-state
+    /// statistics.
+    #[test]
+    fn steady_toggles_are_numerically_invisible() {
+        use crate::tensor::gemm::GemmConfig;
+        use crate::util::rng::Rng;
+        let x = Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(21));
+        let base = Compiler::for_model("demo-cnn", 1)
+            .unwrap()
+            .random_weights(9)
+            .compile()
+            .unwrap();
+        let want = base.infer(&[x.clone()]).unwrap();
+        for (pp, wsp) in [(false, false), (false, true), (true, false)] {
+            let m = Compiler::for_model("demo-cnn", 1)
+                .unwrap()
+                .random_weights(9)
+                .prepack(pp)
+                .workspace(wsp)
+                .compile()
+                .unwrap();
+            let y = m.infer(&[x.clone()]).unwrap();
+            let d = want[0].max_abs_diff(&y[0]);
+            assert!(d < 1e-4, "prepack={pp} workspace={wsp}: diff {d}");
+        }
+        let serial = Compiler::for_model("demo-cnn", 1)
+            .unwrap()
+            .random_weights(9)
+            .gemm_config(GemmConfig { threads: 1, ..Default::default() })
+            .compile()
+            .unwrap();
+        let y = serial.infer(&[x.clone()]).unwrap();
+        assert!(want[0].max_abs_diff(&y[0]) < 1e-4, "pool-off diverges");
+
+        let mut outs = vec![Tensor::zeros(&base.output_shapes()[0])];
+        base.infer_into(&[x.clone()], &mut outs).unwrap();
+        assert_eq!(outs[0].data(), want[0].data(), "infer_into != infer");
+
+        let r = base.report();
+        assert!(r.prepack_enabled && r.prepacked_operands > 0);
+        assert!(r.workspace_enabled && r.workspace_bytes > 0);
+        assert!(r.pool_threads >= 1);
+        assert!(r.summary().contains("prepacked operands"));
+        // infer_into without the workspace engine is a clean error.
+        let off = Compiler::for_model("demo-cnn", 1)
+            .unwrap()
+            .random_weights(9)
+            .workspace(false)
+            .compile()
+            .unwrap();
+        assert!(off.infer_into(&[x], &mut outs).is_err());
     }
 
     #[test]

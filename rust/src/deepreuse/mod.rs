@@ -180,6 +180,8 @@ pub fn reuse_gemm(x: &Tensor, w: &Tensor, cfg: &ReuseConfig) -> (Tensor, ReuseSt
 }
 
 /// Deep-reuse convolution: im2col + [`reuse_gemm`] (the paper's CNN use).
+/// Thin wrapper over [`reuse_conv2d_pre`] that transposes the OIHW weight
+/// per call; the compiled path caches the transpose at compile time.
 pub fn reuse_conv2d(
     input: &Tensor,
     weight: &Tensor,
@@ -187,30 +189,36 @@ pub fn reuse_conv2d(
     pad: usize,
     cfg: &ReuseConfig,
 ) -> (Tensor, ReuseStats) {
-    let (n, _c, h, w) = (
+    let (kh, kw) = (weight.shape()[2], weight.shape()[3]);
+    let wt = crate::tensor::conv_weight_matrix(weight); // [i*kh*kw, o]
+    reuse_conv2d_pre(input, &wt, kh, kw, stride, pad, cfg)
+}
+
+/// [`reuse_conv2d`] with the transposed weight matrix `wt = [i*kh*kw, o]`
+/// supplied by the caller — the `PackedWeights` side table builds it once
+/// at `Compiler::compile` time, removing the per-call OIHW re-transpose
+/// from the deep-reuse inference path.
+pub fn reuse_conv2d_pre(
+    input: &Tensor,
+    wt: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    cfg: &ReuseConfig,
+) -> (Tensor, ReuseStats) {
+    let (n, c, h, w) = (
         input.shape()[0],
         input.shape()[1],
         input.shape()[2],
         input.shape()[3],
     );
-    let (o, i, kh, kw) = (
-        weight.shape()[0],
-        weight.shape()[1],
-        weight.shape()[2],
-        weight.shape()[3],
-    );
+    assert_eq!(wt.shape()[0], c * kh * kw, "reuse conv weight matrix mismatch");
+    let o = wt.shape()[1];
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (w + 2 * pad - kw) / stride + 1;
     let patches = input.im2col(kh, kw, stride, pad); // [n*oh*ow, i*kh*kw]
-    // wmat^T: [i*kh*kw, o]
-    let mut wt = Tensor::zeros(&[i * kh * kw, o]);
-    let wm = weight.reshape(&[o, i * kh * kw]);
-    for f in 0..o {
-        for c in 0..i * kh * kw {
-            wt.set(&[c, f], wm.at(&[f, c]));
-        }
-    }
-    let (y, stats) = reuse_gemm(&patches, &wt, cfg);
+    let (y, stats) = reuse_gemm(&patches, wt, cfg);
     // [n*oh*ow, o] -> [n, o, oh, ow]
     let mut out = Tensor::zeros(&[n, o, oh, ow]);
     for b in 0..n {

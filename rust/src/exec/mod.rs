@@ -31,14 +31,18 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-pub use planner::{MemoryPlan, PlanStats};
+pub use planner::{MemoryPlan, PlanStats, Workspace, WorkspaceSpec};
 
-use crate::deepreuse::{reuse_conv2d, reuse_gemm, ReuseConfig};
+use crate::deepreuse::{reuse_conv2d, reuse_conv2d_pre, reuse_gemm, ReuseConfig};
 use crate::fkw::FkwLayer;
 use crate::fusion::FusionPlan;
 use crate::graph::{Act, Graph, NodeId, OpKind, WeightStore};
 use crate::pruning::pattern::PatternAssignment;
-use crate::tensor::Tensor;
+use crate::tensor::gemm::{gemm, gemm_prepacked, GemmConfig, PackedB};
+use crate::tensor::{
+    conv2d_gemm_prepacked_into, conv2d_gemm_wt_into, conv_weight_matrix, conv_weight_matrix_into,
+    Tensor,
+};
 
 /// Straight-line reference executor.
 pub struct Executor<'g> {
@@ -479,6 +483,51 @@ pub struct ExecState {
     /// kernel size (via im2col) and `Dense` — without an FKW kernel route
     /// through [`crate::deepreuse`].
     reuse: Option<ReuseConfig>,
+    /// Constant GEMM operands pre-packed at compile time
+    /// ([`ExecState::prepack`]).
+    packed: PackedWeights,
+    /// Blocking/thread config of the steady-state engine (packs and runs
+    /// must agree, so it lives here).
+    gemm_cfg: GemmConfig,
+    /// Workspace arena sizing from the extended liveness pass.
+    wspec: WorkspaceSpec,
+    /// node id -> Input position, for allocation-free source lookup in
+    /// the steady engine (usize::MAX for non-Input nodes).
+    input_pos: Vec<usize>,
+}
+
+/// Constant GEMM operands packed once at `Compiler::compile` time and
+/// carried by [`ExecState`]: Dense weights and transposed conv weight
+/// matrices in the panel layout [`gemm_prepacked`] consumes, plus
+/// pre-transposed weight matrices for deep-reuse-routed convs. Steady-state
+/// inference never re-packs or re-transposes a weight.
+#[derive(Debug, Clone, Default)]
+pub struct PackedWeights {
+    /// Dense node id -> packed `[in_f, out_f]` operand.
+    dense: BTreeMap<NodeId, PackedB>,
+    /// groups=1 conv node id -> packed transposed `[i*kh*kw, o]` operand.
+    conv: BTreeMap<NodeId, PackedB>,
+    /// Deep-reuse-routed conv node id -> transposed `[i*kh*kw, o]` weight
+    /// matrix (reuse clusters per call, so only the transpose is cached).
+    reuse_wt: BTreeMap<NodeId, Tensor>,
+}
+
+impl PackedWeights {
+    /// Number of pre-packed operands.
+    pub fn len(&self) -> usize {
+        self.dense.len() + self.conv.len() + self.reuse_wt.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the side table.
+    pub fn bytes(&self) -> u64 {
+        self.dense.values().map(|p| p.bytes()).sum::<u64>()
+            + self.conv.values().map(|p| p.bytes()).sum::<u64>()
+            + self.reuse_wt.values().map(|t| t.len() as u64 * 4).sum::<u64>()
+    }
 }
 
 impl ExecState {
@@ -503,7 +552,26 @@ impl ExecState {
             }
         }
         let mplan = MemoryPlan::new(g, &order, &materialize);
-        ExecState { group_order, materialize, mplan, fkw: BTreeMap::new(), reuse: None }
+        let wspec = WorkspaceSpec::for_graph(g, &mplan, &materialize);
+        let mut input_pos = vec![usize::MAX; g.nodes.len()];
+        let mut next_input = 0usize;
+        for n in &g.nodes {
+            if matches!(n.op, OpKind::Input) {
+                input_pos[n.id] = next_input;
+                next_input += 1;
+            }
+        }
+        ExecState {
+            group_order,
+            materialize,
+            mplan,
+            fkw: BTreeMap::new(),
+            reuse: None,
+            packed: PackedWeights::default(),
+            gemm_cfg: GemmConfig::default(),
+            wspec,
+            input_pos,
+        }
     }
 
     /// Register a pattern assignment for a conv node: it will execute via
@@ -545,6 +613,101 @@ impl ExecState {
     /// The memory planner's pool statistics.
     pub fn plan_stats(&self) -> &PlanStats {
         &self.mplan.stats
+    }
+
+    /// Set the GEMM blocking/thread config of the steady-state engine
+    /// (pack-time and run-time blocking must agree, so change it before
+    /// [`ExecState::prepack`]).
+    pub fn set_gemm_config(&mut self, cfg: GemmConfig) {
+        self.gemm_cfg = cfg;
+    }
+
+    pub fn gemm_config(&self) -> &GemmConfig {
+        &self.gemm_cfg
+    }
+
+    /// Pre-pack every constant GEMM operand: Dense weights and transposed
+    /// conv weight matrices into [`PackedB`] panels, pre-transposed weight
+    /// matrices for deep-reuse-routed convs. Call **after** FKW attachment
+    /// and reuse routing are final — FKW convs keep their compact kernels
+    /// and are skipped here. Returns the number of operands packed.
+    pub fn prepack(&mut self, g: &Graph, ws: &WeightStore) -> Result<usize> {
+        self.packed = PackedWeights::default();
+        for n in &g.nodes {
+            let wid = match n.op {
+                OpKind::Dense | OpKind::Conv2d { groups: 1, .. } => n
+                    .inputs
+                    .iter()
+                    .copied()
+                    .find(|&i| matches!(g.node(i).op, OpKind::Weight)),
+                _ => None,
+            };
+            let Some(wid) = wid else { continue };
+            let w = ws
+                .get(&g.node(wid).name)
+                .ok_or_else(|| anyhow!("weight '{}' missing", g.node(wid).name))?;
+            match n.op {
+                OpKind::Dense => {
+                    if self.reuse.is_some() {
+                        // Deep reuse multiplies centroids against the raw
+                        // [in, out] weight — nothing to pre-pack.
+                        continue;
+                    }
+                    let (in_f, out_f) = (w.shape()[0], w.shape()[1]);
+                    self.packed
+                        .dense
+                        .insert(n.id, PackedB::pack(in_f, out_f, w.data(), &self.gemm_cfg));
+                }
+                OpKind::Conv2d { groups: 1, .. } => {
+                    if self.fkw.contains_key(&n.id) {
+                        continue;
+                    }
+                    let wt = conv_weight_matrix(w); // [i*kh*kw, o]
+                    if self.reuse.is_some() {
+                        self.packed.reuse_wt.insert(n.id, wt);
+                    } else {
+                        let (cols, o) = (wt.shape()[0], wt.shape()[1]);
+                        self.packed
+                            .conv
+                            .insert(n.id, PackedB::pack(cols, o, wt.data(), &self.gemm_cfg));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(self.packed.len())
+    }
+
+    /// Pre-packed operand count and resident bytes.
+    pub fn packed_stats(&self) -> (usize, u64) {
+        (self.packed.len(), self.packed.bytes())
+    }
+
+    /// The workspace arena sizing of this state.
+    pub fn workspace_spec(&self) -> &WorkspaceSpec {
+        &self.wspec
+    }
+
+    /// Allocate a fresh workspace arena sized for this state — done once
+    /// at compile time; every steady-state `infer` borrows it mutably.
+    pub fn workspace(&self) -> Workspace {
+        Workspace::new(&self.wspec, &self.gemm_cfg)
+    }
+
+    /// Flat view of a planned value inside `ws` (used by the API layer to
+    /// read outputs after a `run_steady`).
+    pub fn planned_slice<'w>(&self, ws: &'w Workspace, id: NodeId, elems: usize) -> Option<&'w [f32]> {
+        self.mplan.slot_of[id].map(|s| &ws.slots[s][..elems])
+    }
+
+    /// Ordinal of an `Input` node among the graph's inputs (`None` for
+    /// any other node) — the single source of the "input position =
+    /// count of Input nodes before it" rule.
+    pub fn input_position(&self, id: NodeId) -> Option<usize> {
+        match self.input_pos.get(id) {
+            Some(&p) if p != usize::MAX => Some(p),
+            _ => None,
+        }
     }
 }
 
@@ -665,7 +828,20 @@ impl<'g> FusedExecutor<'g> {
                         .ok_or_else(|| anyhow!("conv without data input"))?;
                     let x = planned_value(&state.mplan, &slots, &src, xid)
                         .ok_or_else(|| anyhow!("missing conv input {xid}"))?;
-                    fkw.conv2d(x)
+                    // Honor the session's thread config (`threads: 1`
+                    // must disable the pool on this engine too, not just
+                    // on the steady path).
+                    let xs = x.shape();
+                    let mut out = Tensor::zeros(&n.shape);
+                    fkw.conv2d_into(
+                        x.data(),
+                        xs[0],
+                        xs[2],
+                        xs[3],
+                        state.gemm_cfg.resolved_threads(),
+                        out.data_mut(),
+                    );
+                    out
                 } else {
                     let prev = buf.take();
                     let mut args: Vec<&Tensor> = Vec::with_capacity(n.inputs.len());
@@ -736,6 +912,560 @@ impl<'g> FusedExecutor<'g> {
         }
         Ok((outs, state.mplan.stats.clone()))
     }
+
+    /// Steady-state execution: every value lands in the pre-sized
+    /// [`Workspace`] arena — planned slots for materialized values,
+    /// ping-pong buffers for intra-group intermediates, dedicated scratch
+    /// for im2col/GEMM staging. With pre-packed weights attached
+    /// ([`ExecState::prepack`]) the hot loop performs **no heap
+    /// allocation and spawns no threads**: GEMM row bands and FKW filter
+    /// bands run on the persistent pool. Outputs stay in the arena; read
+    /// them through [`ExecState::planned_slice`].
+    ///
+    /// Ops outside the steady kernel set (movement/broadcast exotics,
+    /// grouped conv, batched matmul) fall back to the allocating
+    /// [`eval_op`] oracle and copy into their slot — numerically
+    /// identical, just not allocation-free.
+    pub fn run_steady(&self, inputs: &[Tensor], ws: &mut Workspace) -> Result<()> {
+        let state: &ExecState = &self.state;
+        // Validate sources up front (allocation-free on the success path).
+        let mut next_input = 0usize;
+        for n in &self.g.nodes {
+            match &n.op {
+                OpKind::Input => {
+                    let t = inputs
+                        .get(next_input)
+                        .ok_or_else(|| anyhow!("missing input {next_input}"))?;
+                    if t.shape() != &n.shape[..] {
+                        bail!("input {} shape {:?} != {:?}", next_input, t.shape(), n.shape);
+                    }
+                    next_input += 1;
+                }
+                OpKind::Weight => {
+                    if self.ws.get(&n.name).is_none() {
+                        bail!("weight '{}' missing", n.name);
+                    }
+                }
+                _ => {}
+            }
+        }
+        for &gi in &state.group_order {
+            let gr = &self.plan.groups[gi];
+            // The running intra-group value lives in one of the two
+            // ping-pong buffers; `prev` tracks (node, Some(buf)) for a
+            // group-buffer resident, (node, None) for a slot resident.
+            let mut prev: Option<(NodeId, Option<usize>)> = None;
+            for &id in &gr.nodes {
+                let node = self.g.node(id);
+                let elems = node.out_elems() as usize;
+                let mat = state.materialize[id];
+                let inplace = !mat
+                    && node.inputs.len() == 1
+                    && matches!(prev, Some((pid, Some(_))) if pid == node.inputs[0])
+                    && is_inplace_unary(&node.op);
+                if inplace {
+                    let j = match prev {
+                        Some((_, Some(j))) => j,
+                        _ => unreachable!(),
+                    };
+                    apply_unary_slice_inplace(&node.op, &mut ws.group[j][..elems]);
+                    prev = Some((id, Some(j)));
+                    continue;
+                }
+                // Take the output buffer out of the arena so its slot can
+                // be written while sibling slots are read as arguments.
+                let out_place: Option<usize> = if mat {
+                    None
+                } else {
+                    Some(match prev {
+                        Some((_, Some(j))) => 1 - j,
+                        _ => 0,
+                    })
+                };
+                let mut out_buf = match out_place {
+                    None => {
+                        let s = state.mplan.slot_of[id]
+                            .ok_or_else(|| anyhow!("materialized value {id} has no slot"))?;
+                        std::mem::take(&mut ws.slots[s])
+                    }
+                    Some(j) => std::mem::take(&mut ws.group[j]),
+                };
+                let res = self.steady_op(
+                    id,
+                    inputs,
+                    &ws.slots,
+                    &ws.group,
+                    prev,
+                    &mut out_buf[..elems],
+                    &mut ws.patches,
+                    &mut ws.gemm_out,
+                    &mut ws.wt,
+                    &mut ws.gemm_scratch,
+                );
+                // Reinstall the buffer before propagating any error so the
+                // arena stays structurally intact.
+                match out_place {
+                    None => {
+                        let s = state.mplan.slot_of[id].unwrap();
+                        ws.slots[s] = out_buf;
+                        prev = Some((id, None));
+                    }
+                    Some(j) => {
+                        ws.group[j] = out_buf;
+                        prev = Some((id, Some(j)));
+                    }
+                }
+                res?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate one node into `out` (length = the node's element count),
+    /// reading arguments from sources, planned slots or the group
+    /// buffers.
+    #[allow(clippy::too_many_arguments)]
+    fn steady_op(
+        &self,
+        id: NodeId,
+        inputs: &[Tensor],
+        slots: &[Vec<f32>],
+        group: &[Vec<f32>; 2],
+        prev: Option<(NodeId, Option<usize>)>,
+        out: &mut [f32],
+        patches: &mut [f32],
+        gemm_out: &mut [f32],
+        wt: &mut [f32],
+        gemm_scratch: &mut [f32],
+    ) -> Result<()> {
+        let state: &ExecState = &self.state;
+        let g = self.g;
+        let node = g.node(id);
+        let elems = out.len();
+        match &node.op {
+            OpKind::Conv2d { stride, pad, groups: 1, .. } => {
+                let (stride, pad) = (*stride, *pad);
+                let xid = node
+                    .inputs
+                    .iter()
+                    .copied()
+                    .find(|&i| !matches!(g.node(i).op, OpKind::Weight))
+                    .ok_or_else(|| anyhow!("conv without data input"))?;
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, xid)?;
+                let xs = &g.node(xid).shape;
+                let (nb, c, h, w) = (xs[0], xs[1], xs[2], xs[3]);
+                if let Some(fkw) = state.fkw.get(&id) {
+                    fkw.conv2d_into(x, nb, h, w, state.gemm_cfg.resolved_threads(), out);
+                    return Ok(());
+                }
+                let wid = node
+                    .inputs
+                    .iter()
+                    .copied()
+                    .find(|&i| matches!(g.node(i).op, OpKind::Weight))
+                    .ok_or_else(|| anyhow!("conv without weight"))?;
+                let wshape = &g.node(wid).shape; // [o, i, kh, kw]
+                let (o, kh, kw) = (wshape[0], wshape[2], wshape[3]);
+                if let Some(rcfg) = state.reuse {
+                    let xt = Tensor::from_vec(xs, x.to_vec());
+                    let y = if let Some(wtm) = state.packed.reuse_wt.get(&id) {
+                        reuse_conv2d_pre(&xt, wtm, kh, kw, stride, pad, &rcfg).0
+                    } else {
+                        let wten = self
+                            .ws
+                            .get(&g.node(wid).name)
+                            .ok_or_else(|| anyhow!("weight missing"))?;
+                        reuse_conv2d(&xt, wten, stride, pad, &rcfg).0
+                    };
+                    out.copy_from_slice(y.data());
+                    return Ok(());
+                }
+                if let Some(pb) = state.packed.conv.get(&id) {
+                    conv2d_gemm_prepacked_into(
+                        x, nb, c, h, w, pb, kh, kw, stride, pad, &state.gemm_cfg, patches,
+                        gemm_out, gemm_scratch, out,
+                    );
+                } else {
+                    let wslice =
+                        steady_arg(g, self.ws, state, inputs, slots, group, prev, wid)?;
+                    let cols = c * kh * kw;
+                    conv_weight_matrix_into(wslice, o, cols, wt);
+                    conv2d_gemm_wt_into(
+                        x,
+                        nb,
+                        c,
+                        h,
+                        w,
+                        &wt[..cols * o],
+                        o,
+                        kh,
+                        kw,
+                        stride,
+                        pad,
+                        &state.gemm_cfg,
+                        patches,
+                        gemm_out,
+                        out,
+                    );
+                }
+                Ok(())
+            }
+            OpKind::Dense => {
+                let xid = node
+                    .inputs
+                    .iter()
+                    .copied()
+                    .find(|&i| !matches!(g.node(i).op, OpKind::Weight))
+                    .ok_or_else(|| anyhow!("dense without data input"))?;
+                let wid = node
+                    .inputs
+                    .iter()
+                    .copied()
+                    .find(|&i| matches!(g.node(i).op, OpKind::Weight))
+                    .ok_or_else(|| anyhow!("dense without weight"))?;
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, xid)?;
+                let wshape = &g.node(wid).shape; // [in_f, out_f]
+                let (in_f, out_f) = (wshape[0], wshape[1]);
+                let rows = x.len() / in_f;
+                if let Some(rcfg) = state.reuse {
+                    let xt = Tensor::from_vec(&[rows, in_f], x.to_vec());
+                    let wten = self
+                        .ws
+                        .get(&g.node(wid).name)
+                        .ok_or_else(|| anyhow!("weight missing"))?;
+                    let y = reuse_gemm(&xt, wten, &rcfg).0;
+                    out.copy_from_slice(y.data());
+                    return Ok(());
+                }
+                if let Some(pb) = state.packed.dense.get(&id) {
+                    gemm_prepacked(rows, x, pb, &mut out[..rows * out_f], &state.gemm_cfg, gemm_scratch);
+                } else {
+                    let w = steady_arg(g, self.ws, state, inputs, slots, group, prev, wid)?;
+                    gemm(rows, in_f, out_f, x, w, &mut out[..rows * out_f], &state.gemm_cfg);
+                }
+                Ok(())
+            }
+            OpKind::BatchNorm => {
+                let (xid, wid) = split_data_weight(g, id)?;
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, xid)?;
+                let w = steady_arg(g, self.ws, state, inputs, slots, group, prev, wid)?;
+                let c = g.node(wid).shape[1];
+                bn_into(x, w, c, &g.node(xid).shape, out);
+                Ok(())
+            }
+            OpKind::Bias => {
+                let (xid, wid) = split_data_weight(g, id)?;
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, xid)?;
+                let w = steady_arg(g, self.ws, state, inputs, slots, group, prev, wid)?;
+                let c = w.len();
+                let per = per_channel_stride(&g.node(xid).shape, c).0;
+                for (i, v) in out.iter_mut().enumerate() {
+                    let ch = (i / per) % c;
+                    *v = x[i] + w[ch];
+                }
+                Ok(())
+            }
+            OpKind::Scale { mul, add } => {
+                if node.inputs.len() > 1 {
+                    // Per-channel scale via weight (BN inference form).
+                    let (xid, wid) = split_data_weight(g, id)?;
+                    let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, xid)?;
+                    let w = steady_arg(g, self.ws, state, inputs, slots, group, prev, wid)?;
+                    let c = g.node(wid).shape[1];
+                    bn_into(x, w, c, &g.node(xid).shape, out);
+                } else {
+                    let x =
+                        steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                    let (m, a) = (*mul as f32, *add as f32);
+                    for (v, &xv) in out.iter_mut().zip(x) {
+                        *v = xv * m + a;
+                    }
+                }
+                Ok(())
+            }
+            OpKind::Activation(_) | OpKind::Pow { .. } | OpKind::Sqrt => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                out.copy_from_slice(&x[..elems]);
+                apply_unary_slice_inplace(&node.op, out);
+                Ok(())
+            }
+            OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div => {
+                let a = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                let b = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[1])?;
+                if a.len() != elems || b.len() != elems {
+                    bail!("elementwise shape mismatch at node {id}");
+                }
+                match node.op {
+                    OpKind::Add => {
+                        for ((v, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+                            *v = av + bv;
+                        }
+                    }
+                    OpKind::Sub => {
+                        for ((v, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+                            *v = av - bv;
+                        }
+                    }
+                    OpKind::Mul => {
+                        for ((v, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+                            *v = av * bv;
+                        }
+                    }
+                    _ => {
+                        for ((v, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+                            *v = av / bv;
+                        }
+                    }
+                }
+                Ok(())
+            }
+            OpKind::Softmax => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                let last = *node.shape.last().unwrap();
+                let rows = elems / last;
+                out.copy_from_slice(&x[..elems]);
+                for r in 0..rows {
+                    let row = &mut out[r * last..(r + 1) * last];
+                    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut s = 0.0;
+                    for v in row.iter_mut() {
+                        *v = (*v - mx).exp();
+                        s += *v;
+                    }
+                    for v in row.iter_mut() {
+                        *v /= s;
+                    }
+                }
+                Ok(())
+            }
+            OpKind::LayerNorm => {
+                let (xid, wid) = split_data_weight(g, id)?;
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, xid)?;
+                let w = steady_arg(g, self.ws, state, inputs, slots, group, prev, wid)?;
+                let d = *node.shape.last().unwrap();
+                let rows = elems / d;
+                out.copy_from_slice(&x[..elems]);
+                for r in 0..rows {
+                    let row = &mut out[r * d..(r + 1) * d];
+                    let mean: f32 = row.iter().sum::<f32>() / d as f32;
+                    let var: f32 =
+                        row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+                    let inv = 1.0 / (var + 1e-5).sqrt();
+                    for (i, v) in row.iter_mut().enumerate() {
+                        *v = (*v - mean) * inv * w[i] + w[d + i];
+                    }
+                }
+                Ok(())
+            }
+            OpKind::MaxPool { k: 2, stride: 2 } => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                let xs = &g.node(node.inputs[0]).shape;
+                maxpool2_into(x, xs[0], xs[1], xs[2], xs[3], out);
+                Ok(())
+            }
+            OpKind::AvgPool { k, stride } => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                let xs = &g.node(node.inputs[0]).shape;
+                avg_pool_into(x, xs[0], xs[1], xs[2], xs[3], *k, *stride, out);
+                Ok(())
+            }
+            OpKind::GlobalAvgPool => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                let xs = &g.node(node.inputs[0]).shape;
+                gap_into(x, xs[0], xs[1], xs[2], xs[3], out);
+                Ok(())
+            }
+            OpKind::Reshape | OpKind::Flatten => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                out.copy_from_slice(&x[..elems]);
+                Ok(())
+            }
+            _ => self.steady_fallback(id, inputs, slots, group, prev, out),
+        }
+    }
+
+    /// Allocating fallback for ops outside the steady kernel set: rebuild
+    /// argument tensors, run the reference [`eval_op`], copy the result
+    /// into the arena. Correct for every supported op, just not
+    /// allocation-free.
+    fn steady_fallback(
+        &self,
+        id: NodeId,
+        inputs: &[Tensor],
+        slots: &[Vec<f32>],
+        group: &[Vec<f32>; 2],
+        prev: Option<(NodeId, Option<usize>)>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let g = self.g;
+        let node = g.node(id);
+        let mut argts: Vec<Tensor> = Vec::with_capacity(node.inputs.len());
+        for &i in &node.inputs {
+            let s = steady_arg(g, self.ws, &self.state, inputs, slots, group, prev, i)?;
+            argts.push(Tensor::from_vec(&g.node(i).shape, s.to_vec()));
+        }
+        let refs: Vec<&Tensor> = argts.iter().collect();
+        let y = eval_op(g, id, &refs)?;
+        out.copy_from_slice(y.data());
+        Ok(())
+    }
+}
+
+/// Resolve one argument of a steady-state op to a flat slice: Input nodes
+/// from the caller's tensors, Weight nodes from the store, materialized
+/// compute values from their planned slot, the running intra-group value
+/// from its ping-pong buffer.
+#[allow(clippy::too_many_arguments)]
+fn steady_arg<'a>(
+    g: &Graph,
+    wstore: &'a WeightStore,
+    state: &ExecState,
+    inputs: &'a [Tensor],
+    slots: &'a [Vec<f32>],
+    group: &'a [Vec<f32>; 2],
+    prev: Option<(NodeId, Option<usize>)>,
+    i: NodeId,
+) -> Result<&'a [f32]> {
+    let n = g.node(i);
+    match &n.op {
+        OpKind::Input => {
+            let idx = state.input_pos[i];
+            inputs
+                .get(idx)
+                .map(|t| t.data())
+                .ok_or_else(|| anyhow!("missing input {idx}"))
+        }
+        OpKind::Weight => wstore
+            .get(&n.name)
+            .map(|t| t.data())
+            .ok_or_else(|| anyhow!("weight '{}' missing", n.name)),
+        _ => {
+            let elems = n.out_elems() as usize;
+            if state.materialize[i] {
+                if let Some(s) = state.mplan.slot_of[i] {
+                    return Ok(&slots[s][..elems]);
+                }
+            }
+            if let Some((pid, Some(j))) = prev {
+                if pid == i {
+                    return Ok(&group[j][..elems]);
+                }
+            }
+            bail!("input {i} not materialized — fusion order is not topological")
+        }
+    }
+}
+
+/// The unary ops the fused engines apply in place on the running buffer.
+fn is_inplace_unary(op: &OpKind) -> bool {
+    matches!(
+        op,
+        OpKind::Activation(_) | OpKind::Scale { .. } | OpKind::Pow { .. } | OpKind::Sqrt
+    )
+}
+
+/// Per-channel scale+shift into `out` (BatchNorm inference form;
+/// `w = [2, c]` flattened).
+fn bn_into(x: &[f32], w: &[f32], c: usize, xshape: &[usize], out: &mut [f32]) {
+    let per = per_channel_stride(xshape, c).0;
+    for (i, v) in out.iter_mut().enumerate() {
+        let ch = (i / per) % c;
+        *v = x[i] * w[ch] + w[c + ch];
+    }
+}
+
+/// 2x2/2 max pool over flat NCHW into `out`.
+fn maxpool2_into(x: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f32]) {
+    let (oh, ow) = (h / 2, w / 2);
+    for b in 0..n {
+        for ci in 0..c {
+            let in_base = (b * c + ci) * h * w;
+            let out_base = (b * c + ci) * oh * ow;
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let i0 = in_base + (2 * y) * w + 2 * xx;
+                    let i1 = in_base + (2 * y + 1) * w + 2 * xx;
+                    let m = x[i0].max(x[i0 + 1]).max(x[i1]).max(x[i1 + 1]);
+                    out[out_base + y * ow + xx] = m;
+                }
+            }
+        }
+    }
+}
+
+/// k×k/stride average pool over flat NCHW into `out` (partial windows
+/// average over in-bounds taps, matching [`eval_op`]).
+#[allow(clippy::too_many_arguments)]
+fn avg_pool_into(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    let (oh, ow) = (h / stride, w / stride);
+    for b in 0..n {
+        for ci in 0..c {
+            let in_base = (b * c + ci) * h * w;
+            let out_base = (b * c + ci) * oh * ow;
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut s = 0.0;
+                    let mut cnt = 0;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let iy = y * stride + dy;
+                            let ix = xx * stride + dx;
+                            if iy < h && ix < w {
+                                s += x[in_base + iy * w + ix];
+                                cnt += 1;
+                            }
+                        }
+                    }
+                    out[out_base + y * ow + xx] = s / cnt as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Global average pool `[n,c,h,w] -> [n,c]` into `out`.
+fn gap_into(x: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f32]) {
+    let denom = (h * w) as f32;
+    for b in 0..n {
+        for ci in 0..c {
+            let in_base = (b * c + ci) * h * w;
+            let mut s = 0.0;
+            for y in 0..h {
+                for xx in 0..w {
+                    s += x[in_base + y * w + xx];
+                }
+            }
+            out[b * c + ci] = s / denom;
+        }
+    }
+}
+
+/// Both data+weight binary forms (BN, Bias, per-channel Scale, LayerNorm)
+/// share this input split.
+fn split_data_weight(g: &Graph, id: NodeId) -> Result<(NodeId, NodeId)> {
+    let n = g.node(id);
+    let xid = n
+        .inputs
+        .iter()
+        .copied()
+        .find(|&i| !matches!(g.node(i).op, OpKind::Weight))
+        .ok_or_else(|| anyhow!("op '{}' without data input", n.op.name()))?;
+    let wid = n
+        .inputs
+        .iter()
+        .copied()
+        .find(|&i| matches!(g.node(i).op, OpKind::Weight))
+        .ok_or_else(|| anyhow!("op '{}' without weight input", n.op.name()))?;
+    Ok((xid, wid))
 }
 
 /// Look up a node's current value: sources come from their backing
@@ -754,27 +1484,31 @@ fn planned_value<'a>(
 }
 
 fn apply_unary_inplace(op: &OpKind, t: &mut Tensor) {
+    apply_unary_slice_inplace(op, t.data_mut());
+}
+
+fn apply_unary_slice_inplace(op: &OpKind, s: &mut [f32]) {
     match op {
         OpKind::Activation(a) => {
             let f = act_fn(*a);
-            for v in t.data_mut() {
+            for v in s {
                 *v = f(*v);
             }
         }
         OpKind::Scale { mul, add } => {
             let (m, a) = (*mul as f32, *add as f32);
-            for v in t.data_mut() {
+            for v in s {
                 *v = *v * m + a;
             }
         }
         OpKind::Pow { e } => {
             let e = *e as f32;
-            for v in t.data_mut() {
+            for v in s {
                 *v = v.powf(e);
             }
         }
         OpKind::Sqrt => {
-            for v in t.data_mut() {
+            for v in s {
                 *v = v.max(0.0).sqrt();
             }
         }
@@ -915,6 +1649,114 @@ mod tests {
             / exact[0].len() as f32;
         let rel = approx[0].mad(&exact[0]) / scale.max(1e-6);
         assert!(rel < 0.05, "deep-reuse routing diverges: rel err {rel}");
+    }
+
+    /// The steady-state workspace engine matches the Tensor engine (and
+    /// thus the reference executor) on the demo CNN, with and without
+    /// pre-packed weights, and is bitwise-stable across repeated runs of
+    /// the same arena.
+    #[test]
+    fn steady_engine_matches_tensor_engine() {
+        let g = demo_cnn();
+        let mut rng = Rng::new(71);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let plan = fuse(&g, &FusionConfig::default());
+        let x = Tensor::randn(&[1, 3, 16, 16], 1.0, &mut rng);
+        let out_id = g.outputs[0];
+        let elems = g.node(out_id).out_elems() as usize;
+        for prepack in [false, true] {
+            let mut state = ExecState::new(&g, &plan);
+            if prepack {
+                let packed = state.prepack(&g, &ws).unwrap();
+                assert!(packed > 0, "nothing prepacked on demo CNN");
+                assert!(state.packed_stats().1 > 0);
+            }
+            let fx = FusedExecutor::with_state(&g, &ws, &plan, &state);
+            let want = fx.run(&[x.clone()]).unwrap();
+            let mut arena = state.workspace();
+            fx.run_steady(&[x.clone()], &mut arena).unwrap();
+            let got = state.planned_slice(&arena, out_id, elems).unwrap().to_vec();
+            let d = want[0]
+                .data()
+                .iter()
+                .zip(&got)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d < 1e-4, "steady (prepack={prepack}) diverges by {d}");
+            // Steady state is deterministic: re-running over the same
+            // arena reproduces the output bitwise.
+            fx.run_steady(&[x.clone()], &mut arena).unwrap();
+            let again = state.planned_slice(&arena, out_id, elems).unwrap();
+            assert_eq!(&got[..], again, "steady engine not bitwise-stable");
+        }
+    }
+
+    /// FKW and deep-reuse routing work inside the steady engine too.
+    #[test]
+    fn steady_engine_routes_fkw_and_reuse() {
+        use crate::deepreuse::ReuseConfig;
+        let mut rng = Rng::new(72);
+        let mut b = NetBuilder::new("p", &[1, 4, 12, 12]);
+        let conv_id = b.conv(8, 3, 1, 1, 1);
+        b.act(Act::Relu);
+        let g = b.finish();
+        let mut ws = WeightStore::init_random(&g, &mut rng);
+        let wname = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, OpKind::Weight))
+            .unwrap()
+            .name
+            .clone();
+        let w = ws.get(&wname).unwrap().clone();
+        let asg = assign_patterns(&w, &PatternSet::elite8());
+        ws.set(&wname, apply_assignment(&w, &asg));
+        let x = Tensor::randn(&[1, 4, 12, 12], 1.0, &mut rng);
+        let plan = fuse(&g, &FusionConfig::default());
+        let out_id = g.outputs[0];
+        let elems = g.node(out_id).out_elems() as usize;
+
+        // FKW route.
+        let mut state = ExecState::new(&g, &plan);
+        state.attach_fkw(&g, &ws, conv_id, &asg).unwrap();
+        state.prepack(&g, &ws).unwrap();
+        let fx = FusedExecutor::with_state(&g, &ws, &plan, &state);
+        let want = fx.run(&[x.clone()]).unwrap();
+        let mut arena = state.workspace();
+        fx.run_steady(&[x.clone()], &mut arena).unwrap();
+        let got = state.planned_slice(&arena, out_id, elems).unwrap();
+        let d = want[0]
+            .data()
+            .iter()
+            .zip(got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d < 1e-4, "steady fkw route diverges by {d}");
+
+        // Deep-reuse route (tight clustering ≈ exact), with the transposed
+        // weight cached at prepack time.
+        let mut state = ExecState::new(&g, &plan);
+        state.set_reuse(Some(ReuseConfig {
+            hash_bits: 12,
+            max_rel_dev: 0.02,
+            ..Default::default()
+        }));
+        state.prepack(&g, &ws).unwrap();
+        let fx = FusedExecutor::with_state(&g, &ws, &plan, &state);
+        let want = fx.run(&[x.clone()]).unwrap();
+        let mut arena = state.workspace();
+        fx.run_steady(&[x], &mut arena).unwrap();
+        let got = state.planned_slice(&arena, out_id, elems).unwrap();
+        let scale =
+            want[0].data().iter().map(|v| v.abs()).sum::<f32>() / want[0].len() as f32;
+        let mad = want[0]
+            .data()
+            .iter()
+            .zip(got)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / want[0].len() as f32;
+        assert!(mad / scale.max(1e-6) < 0.05, "steady reuse route diverges");
     }
 
     #[test]

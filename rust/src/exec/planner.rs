@@ -18,7 +18,8 @@
 //! byte counters compare pooled high-water memory against the
 //! one-buffer-per-value baseline.
 
-use crate::graph::{Graph, NodeId};
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::tensor::gemm::{prepacked_scratch_elems, GemmConfig};
 
 /// Size statistics of a memory plan.
 #[derive(Debug, Clone, Default)]
@@ -58,6 +59,9 @@ pub struct MemoryPlan {
     /// `p` (their slot may be reused from position `p+1` on). Graph
     /// outputs never appear here.
     pub expire: Vec<Vec<NodeId>>,
+    /// Per-slot capacity in f32 elements (the largest value the slot ever
+    /// holds) — what sizes the steady-state [`Workspace`] arena.
+    pub slot_elems: Vec<usize>,
     pub stats: PlanStats,
 }
 
@@ -99,6 +103,7 @@ impl MemoryPlan {
         let mut peak = 0usize;
         let mut planned_values = 0usize;
         let mut bytes_one = 0u64;
+        let mut slot_elems: Vec<usize> = Vec::new();
         for (p, &id) in order.iter().enumerate() {
             if materialize[id] {
                 let bytes = g.node(id).out_elems() * 4;
@@ -108,11 +113,13 @@ impl MemoryPlan {
                     Some(s) => s,
                     None => {
                         slot_bytes.push(0);
+                        slot_elems.push(0);
                         slot_bytes.len() - 1
                     }
                 };
                 slot_of[id] = Some(s);
                 slot_bytes[s] = slot_bytes[s].max(bytes);
+                slot_elems[s] = slot_elems[s].max(g.node(id).out_elems() as usize);
                 live += 1;
                 peak = peak.max(live);
             }
@@ -149,7 +156,7 @@ impl MemoryPlan {
             bytes_one_per_node: bytes_one,
             bytes_pooled: slot_bytes.iter().sum(),
         };
-        MemoryPlan { slot_of, num_slots: slot_bytes.len(), expire, stats }
+        MemoryPlan { slot_of, num_slots: slot_bytes.len(), expire, slot_elems, stats }
     }
 
     /// Plan for the straight-line (node-id) execution order, where every
@@ -158,6 +165,132 @@ impl MemoryPlan {
         let order: Vec<NodeId> = g.compute_nodes();
         let materialize = vec![true; g.nodes.len()];
         MemoryPlan::new(g, &order, &materialize)
+    }
+}
+
+/// Compile-time sizing of every scratch buffer the steady-state engine
+/// needs — the liveness pass extended from "how many value slots" to "how
+/// big is the whole per-model arena": im2col patch matrices, GEMM staging
+/// and A-pack scratch, scatter staging, and the intra-group running
+/// buffers. Computed once per `Compiler::compile`; [`Workspace::new`]
+/// turns it into real buffers that `infer()` borrows mutably on every
+/// call, so steady state allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct WorkspaceSpec {
+    /// Per-slot f32 capacity (from [`MemoryPlan::slot_elems`]).
+    pub slot_elems: Vec<usize>,
+    /// Capacity of each of the two ping-pong buffers holding
+    /// intra-group intermediates that never materialize into a slot.
+    pub group_elems: usize,
+    /// Largest im2col patch matrix (`n*oh*ow × i*kh*kw`) of any
+    /// groups=1 conv.
+    pub patches_elems: usize,
+    /// Largest GEMM conv staging buffer (`n*oh*ow × o`) before the NCHW
+    /// scatter.
+    pub gemm_out_elems: usize,
+    /// Largest transposed conv weight matrix (`i*kh*kw × o`) — used only
+    /// when pre-packing is off and the transpose happens per call.
+    pub wt_elems: usize,
+}
+
+impl WorkspaceSpec {
+    /// Size the arena for executing `g` under `plan` (`materialize` as in
+    /// [`MemoryPlan::new`]). Conv buffers are sized over every groups=1
+    /// conv so the spec stays valid whether a layer later runs FKW,
+    /// deep-reuse or plain GEMM.
+    pub fn for_graph(g: &Graph, plan: &MemoryPlan, materialize: &[bool]) -> WorkspaceSpec {
+        let mut spec = WorkspaceSpec { slot_elems: plan.slot_elems.clone(), ..Default::default() };
+        for n in &g.nodes {
+            if n.op.is_source() {
+                continue;
+            }
+            if !materialize[n.id] {
+                spec.group_elems = spec.group_elems.max(n.out_elems() as usize);
+            }
+            if let OpKind::Conv2d { groups: 1, .. } = n.op {
+                let Some(wid) = n
+                    .inputs
+                    .iter()
+                    .copied()
+                    .find(|&i| matches!(g.node(i).op, OpKind::Weight))
+                else {
+                    continue;
+                };
+                let ws = &g.node(wid).shape;
+                let (o, i, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+                let (nb, oh, ow) = (n.shape[0], n.shape[2], n.shape[3]);
+                let rows = nb * oh * ow;
+                let cols = i * kh * kw;
+                spec.patches_elems = spec.patches_elems.max(rows * cols);
+                spec.gemm_out_elems = spec.gemm_out_elems.max(rows * o);
+                spec.wt_elems = spec.wt_elems.max(cols * o);
+            }
+        }
+        spec
+    }
+
+    /// Total arena footprint in bytes under `cfg` (reported by
+    /// `CompiledModel::report`).
+    pub fn bytes(&self, cfg: &GemmConfig) -> u64 {
+        let slots: usize = self.slot_elems.iter().sum();
+        let scratch = prepacked_scratch_elems(cfg) * cfg.resolved_threads();
+        (slots
+            + 2 * self.group_elems
+            + self.patches_elems
+            + self.gemm_out_elems
+            + self.wt_elems
+            + scratch) as u64
+            * 4
+    }
+}
+
+/// The per-model scratch arena of the steady-state engine: every buffer
+/// `infer()` needs, allocated **once** from a [`WorkspaceSpec`] and reused
+/// across calls. `CompiledModel` keeps one behind a mutex and lends it to
+/// each inference; after warm-up the hot loop touches only this memory.
+#[derive(Debug)]
+pub struct Workspace {
+    /// Planned value slots (capacity from the liveness pass).
+    pub slots: Vec<Vec<f32>>,
+    /// Ping-pong buffers for intra-group intermediates.
+    pub group: [Vec<f32>; 2],
+    /// im2col patch matrix staging.
+    pub patches: Vec<f32>,
+    /// GEMM conv output staging (pre-scatter).
+    pub gemm_out: Vec<f32>,
+    /// Per-call transposed conv weight (pre-packing off only).
+    pub wt: Vec<f32>,
+    /// A-panel pack scratch for `gemm_prepacked`, one band per pool
+    /// thread.
+    pub gemm_scratch: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new(spec: &WorkspaceSpec, cfg: &GemmConfig) -> Workspace {
+        Workspace {
+            slots: spec.slot_elems.iter().map(|&e| vec![0.0; e]).collect(),
+            group: [vec![0.0; spec.group_elems], vec![0.0; spec.group_elems]],
+            patches: vec![0.0; spec.patches_elems],
+            gemm_out: vec![0.0; spec.gemm_out_elems],
+            wt: vec![0.0; spec.wt_elems],
+            gemm_scratch: vec![
+                0.0;
+                prepacked_scratch_elems(cfg) * cfg.resolved_threads()
+            ],
+        }
+    }
+
+    /// Resident bytes of the arena.
+    pub fn bytes(&self) -> u64 {
+        let slots: usize = self.slots.iter().map(|s| s.len()).sum();
+        (slots
+            + self.group[0].len()
+            + self.group[1].len()
+            + self.patches.len()
+            + self.gemm_out.len()
+            + self.wt.len()
+            + self.gemm_scratch.len()) as u64
+            * 4
     }
 }
 

@@ -47,6 +47,12 @@ pub struct FkwLayer {
     pub weights: Vec<f32>,
     pub stride: usize,
     pub pad: usize,
+    /// Per-pattern `(dy, dx)` position tables, resolved **once at encode
+    /// time** — the conv hot loop no longer rebuilds them per call.
+    pos_tab: Vec<[(usize, usize); 4]>,
+    /// Start offset of each filter's weights (4 per kernel), enabling
+    /// independent filter bands on the worker pool.
+    filter_off: Vec<usize>,
 }
 
 impl FkwLayer {
@@ -101,6 +107,26 @@ impl FkwLayer {
                 }
             }
         }
+        let pos_tab = asg
+            .set
+            .patterns
+            .iter()
+            .map(|p| {
+                let pos = p.positions();
+                [
+                    (pos[0] / 3, pos[0] % 3),
+                    (pos[1] / 3, pos[1] % 3),
+                    (pos[2] / 3, pos[2] % 3),
+                    (pos[3] / 3, pos[3] % 3),
+                ]
+            })
+            .collect();
+        let mut filter_off = Vec::with_capacity(filters.len());
+        let mut off = 0usize;
+        for fr in &filters {
+            filter_off.push(off);
+            off += 4 * fr.kernels.len();
+        }
         FkwLayer {
             out_channels: o,
             in_channels: i,
@@ -109,6 +135,8 @@ impl FkwLayer {
             weights,
             stride,
             pad,
+            pos_tab,
+            filter_off,
         }
     }
 
@@ -155,11 +183,8 @@ impl FkwLayer {
     }
 
     /// Execute the layer on an NCHW input, directly from compact form.
-    ///
-    /// The inner loop is branch-less per kernel group: pattern offsets are
-    /// resolved once per kernel into 4 static (dy,dx) pairs, and the 4
-    /// multiply-adds are unrolled. This is the hot path that
-    /// `benches/hotpath_exec.rs` profiles.
+    /// Allocating wrapper over [`FkwLayer::conv2d_into`] — the steady-state
+    /// engine calls the `_into` form against the workspace arena.
     pub fn conv2d(&self, input: &Tensor) -> Tensor {
         assert_eq!(input.rank(), 4);
         let (n, c, h, w) = (
@@ -172,31 +197,93 @@ impl FkwLayer {
         let oh = (h + 2 * self.pad - 3) / self.stride + 1;
         let ow = (w + 2 * self.pad - 3) / self.stride + 1;
         let mut out = Tensor::zeros(&[n, self.out_channels, oh, ow]);
-        // Precompute per-pattern position tables.
-        let ptab: Vec<[(usize, usize); 4]> = self
-            .patterns
-            .iter()
-            .map(|p| {
-                let pos = p.positions();
-                [
-                    (pos[0] / 3, pos[0] % 3),
-                    (pos[1] / 3, pos[1] % 3),
-                    (pos[2] / 3, pos[2] % 3),
-                    (pos[3] / 3, pos[3] % 3),
-                ]
-            })
-            .collect();
-        let in_data = input.data();
+        self.conv2d_into(
+            input.data(),
+            n,
+            h,
+            w,
+            crate::runtime::pool::configured_threads(),
+            out.data_mut(),
+        );
+        out
+    }
+
+    /// Execute the layer on a flat NCHW input, writing the NCHW output
+    /// into `out` — allocation-free, with **filter bands** dispatched on
+    /// the persistent worker pool (`threads`; pass 1 to force serial).
+    ///
+    /// The inner loop is branch-less per kernel group: pattern offsets
+    /// come from the encode-time table, and the 4 multiply-adds are
+    /// unrolled. Filter bands are race-free by construction — every
+    /// `(batch, filter)` output plane is owned by exactly one band. This
+    /// is the hot path that `benches/hotpath_exec.rs` profiles.
+    pub fn conv2d_into(
+        &self,
+        x: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        threads: usize,
+        out: &mut [f32],
+    ) {
+        let c = self.in_channels;
+        assert_eq!(x.len(), n * c * h * w, "fkw conv input length");
+        let oh = (h + 2 * self.pad - 3) / self.stride + 1;
+        let ow = (w + 2 * self.pad - 3) / self.stride + 1;
+        let out_len = n * self.out_channels * oh * ow;
+        let out = &mut out[..out_len];
+        out.fill(0.0);
+        let nf = self.filters.len();
+        if nf == 0 {
+            return;
+        }
+        let work = n * oh * ow * self.kernel_count();
+        let t = if work < (1 << 14) { 1 } else { threads.max(1).min(nf) };
+        let out_sh = crate::runtime::pool::SharedSlice::new(out);
+        if t <= 1 {
+            self.conv_filter_band(x, n, h, w, oh, ow, 0, nf, &out_sh);
+            return;
+        }
+        let per = (nf + t - 1) / t;
+        let bands = (nf + per - 1) / per;
+        crate::runtime::pool::global().parallel_for(bands, |bi| {
+            let f0 = bi * per;
+            let f1 = nf.min(f0 + per);
+            self.conv_filter_band(x, n, h, w, oh, ow, f0, f1, &out_sh);
+        });
+    }
+
+    /// Run filters `[f0, f1)` over every batch entry, accumulating into
+    /// the shared output. Each `(batch, filter)` plane is touched by
+    /// exactly one band, so concurrent bands never alias.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_filter_band(
+        &self,
+        x: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        oh: usize,
+        ow: usize,
+        f0: usize,
+        f1: usize,
+        out: &crate::runtime::pool::SharedSlice,
+    ) {
+        let c = self.in_channels;
         let (pad, stride) = (self.pad as isize, self.stride);
         for b in 0..n {
-            let mut wi = 0usize;
-            for fr in &self.filters {
+            for fi in f0..f1 {
+                let fr = &self.filters[fi];
                 let f = fr.original_index as usize;
-                let out_base = ((b * self.out_channels) + f) * oh * ow;
+                // SAFETY: plane (b, f) belongs to this band alone.
+                let plane = unsafe {
+                    out.slice_mut(((b * self.out_channels) + f) * oh * ow, oh * ow)
+                };
+                let mut wi = self.filter_off[fi];
                 for kr in &fr.kernels {
                     let ci = kr.channel as usize;
                     let in_base = ((b * c) + ci) * h * w;
-                    let tab = &ptab[kr.pattern as usize];
+                    let tab = &self.pos_tab[kr.pattern as usize];
                     let wk = [
                         self.weights[wi],
                         self.weights[wi + 1],
@@ -205,27 +292,24 @@ impl FkwLayer {
                     ];
                     wi += 4;
                     for y in 0..oh {
-                        let row_out = out_base + y * ow;
-                        for x in 0..ow {
+                        let row_out = y * ow;
+                        for xx in 0..ow {
                             let mut acc = 0.0f32;
                             // Unrolled 4-entry pattern body.
                             for t in 0..4 {
                                 let (ky, kx) = tab[t];
                                 let iy = (y * stride + ky) as isize - pad;
-                                let ix = (x * stride + kx) as isize - pad;
+                                let ix = (xx * stride + kx) as isize - pad;
                                 if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
-                                    acc += wk[t]
-                                        * in_data[in_base + iy as usize * w + ix as usize];
+                                    acc += wk[t] * x[in_base + iy as usize * w + ix as usize];
                                 }
                             }
-                            let od = out.data_mut();
-                            od[row_out + x] += acc;
+                            plane[row_out + xx] += acc;
                         }
                     }
                 }
             }
         }
-        out
     }
 }
 
@@ -325,6 +409,23 @@ mod tests {
         // ~50% of 64 kernels cut.
         assert!(fkw.kernel_count() <= 36, "kernels {}", fkw.kernel_count());
         assert_eq!(fkw.weights.len(), fkw.kernel_count() * 4);
+    }
+
+    /// Pool-dispatched filter bands write disjoint output planes, so the
+    /// parallel result is bitwise equal to the serial one (and to the
+    /// allocating wrapper).
+    #[test]
+    fn parallel_filter_bands_match_serial() {
+        let mut rng = Rng::new(45);
+        let (wp, asg) = pruned_layer(&mut rng, 16, 8, 0.2);
+        let fkw = FkwLayer::encode(&wp, &asg, 1, 1, true);
+        let x = Tensor::randn(&[2, 8, 16, 16], 1.0, &mut rng);
+        let mut serial = Tensor::zeros(&[2, 16, 16, 16]);
+        fkw.conv2d_into(x.data(), 2, 16, 16, 1, serial.data_mut());
+        let mut par = Tensor::zeros(&[2, 16, 16, 16]);
+        fkw.conv2d_into(x.data(), 2, 16, 16, 4, par.data_mut());
+        assert_eq!(serial.data(), par.data());
+        assert_eq!(serial.data(), fkw.conv2d(&x).data());
     }
 
     #[test]

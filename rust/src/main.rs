@@ -14,6 +14,17 @@
 //!            [--scheme none|pattern|...] [--reuse] [--no-fkw] [--pjrt]
 //! ```
 
+// Same lint policy as lib.rs (CI gates `cargo clippy -- -D warnings`).
+#![allow(unknown_lints)]
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::uninlined_format_args,
+    clippy::collapsible_else_if,
+    clippy::collapsible_if
+)]
+
 use anyhow::Result;
 
 use xgen::api::{CompiledModel, Compiler, OptLevel};

@@ -13,6 +13,8 @@
 
 use std::path::PathBuf;
 
+pub mod pool;
+
 #[cfg(feature = "xla")]
 mod pjrt {
     use std::collections::BTreeMap;

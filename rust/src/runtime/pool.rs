@@ -1,0 +1,368 @@
+//! Persistent worker pool — the spawn-free substrate of steady-state
+//! inference (§2.3: the paper's generated code does *all* expensive setup
+//! at compile time; per-call `std::thread::scope` spawn/join is exactly the
+//! kind of steady-state overhead XGen compiles away).
+//!
+//! One process-wide pool is lazily built on first use ([`global`]) with
+//! `XGEN_THREADS` workers (default: the machine's available parallelism,
+//! resolved **once** through a `OnceLock` — see [`configured_threads`]).
+//! [`ThreadPool::parallel_for`] distributes `tasks` closure invocations
+//! over the persistent workers; the submitting thread participates, so a
+//! 1-thread pool degenerates to a plain serial loop and nothing is ever
+//! spawned per call.
+//!
+//! Design constraints, in order:
+//! * **std-only** — no rayon/crossbeam; a `Mutex` + two `Condvar`s.
+//! * **allocation-free submission** — a job is a raw fat pointer to the
+//!   caller's closure plus three counters written into a pre-existing
+//!   slot; nothing is boxed, queued or cloned per call.
+//! * **never deadlocks** — nested `parallel_for` calls (from inside a pool
+//!   task) and concurrent submissions from other threads fall back to
+//!   inline serial execution instead of waiting on the busy pool.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Worker-thread count resolved once per process: `XGEN_THREADS` if set to
+/// a positive integer, else `std::thread::available_parallelism()`. Every
+/// thread-count decision in the crate (GEMM band split, FKW filter bands,
+/// workspace scratch sizing) goes through this single cached read — the
+/// per-call `available_parallelism` lookups of the PR-1 engine are gone.
+pub fn configured_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("XGEN_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// The process-wide pool (size [`configured_threads`]), built on first use.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(configured_threads()))
+}
+
+thread_local! {
+    /// True while this thread is executing inside a pool task (or is a
+    /// pool worker): nested submissions run inline instead of deadlocking
+    /// on the single job slot.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Lifetime-erased pointer to the submitted closure. Valid strictly while
+/// the owning `parallel_for` frame is blocked waiting for the job to
+/// drain, which is the only time workers dereference it.
+#[derive(Clone, Copy)]
+struct JobFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (bound on submission) and the pointer is
+// only dereferenced between job installation and the final `pending == 0`
+// handshake, during which the submitting stack frame keeps it alive.
+unsafe impl Send for JobFn {}
+unsafe impl Sync for JobFn {}
+
+#[derive(Clone, Copy)]
+struct Job {
+    f: JobFn,
+    tasks: usize,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Tasks claimed but not yet finished + tasks unclaimed.
+    pending: usize,
+    /// Set when any task panicked (the panic is caught on the executing
+    /// thread so the job still drains); the submitter re-raises it.
+    panicked: bool,
+}
+
+#[derive(Default)]
+struct State {
+    job: Option<Job>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signaled when a job with unclaimed tasks is installed.
+    work: Condvar,
+    /// Signaled when a job's last task finishes.
+    done: Condvar,
+}
+
+/// A persistent worker pool. See the [module docs](self); normally
+/// accessed through [`global`] rather than constructed directly.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Spawned worker threads (the submitter is the +1th participant).
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `size` total participants: `size - 1` persistent workers
+    /// plus the submitting thread.
+    pub fn new(size: usize) -> ThreadPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = size.max(1) - 1;
+        for w in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("xgen-pool-{w}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+        }
+        ThreadPool { shared, workers }
+    }
+
+    /// Total participants (spawned workers + the submitting thread).
+    pub fn size(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Run `f(0..tasks)` across the pool; returns when every invocation
+    /// has finished. The submitting thread executes tasks too. Falls back
+    /// to an inline serial loop when the pool is busy, the call is nested
+    /// inside another pool task, or there is nothing to parallelize —
+    /// so it is always safe to call, never deadlocks, and performs no
+    /// heap allocation.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if tasks == 0 {
+            return;
+        }
+        if tasks == 1 || self.workers == 0 || IN_POOL.with(|c| c.get()) {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let fobj: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: erases the closure's lifetime (fat-pointer layout is
+        // identical); see `JobFn` for the validity argument.
+        let fptr = JobFn(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(fobj)
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.job.is_some() {
+                // Another thread owns the pool right now: run inline
+                // rather than queueing (keeps submission allocation-free
+                // and deadlock-free).
+                drop(st);
+                for i in 0..tasks {
+                    f(i);
+                }
+                return;
+            }
+            st.job = Some(Job { f: fptr, tasks, next: 0, pending: tasks, panicked: false });
+        }
+        PARALLEL_JOBS.fetch_add(1, Ordering::Relaxed);
+        self.shared.work.notify_all();
+        // Participate: claim tasks alongside the workers.
+        IN_POOL.with(|c| c.set(true));
+        drain(&self.shared);
+        IN_POOL.with(|c| c.set(false));
+        // Wait for stragglers, then clear the slot for the next job.
+        let mut st = self.shared.state.lock().unwrap();
+        while st.job.map(|j| j.pending > 0).unwrap_or(false) {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        let panicked = st.job.map(|j| j.panicked).unwrap_or(false);
+        st.job = None;
+        drop(st);
+        if panicked {
+            // Propagate like the `thread::scope` this pool replaced: the
+            // caller observes the failure, and the pool stays usable (the
+            // worker caught the panic and the job slot is cleared).
+            panic!("a pool task panicked (see worker output above)");
+        }
+    }
+}
+
+/// Claim and run tasks from the current job until none are unclaimed.
+/// Must be called with the state lock **not** held.
+fn drain(shared: &Shared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let Some(job) = st.job.as_mut() else { return };
+        if job.next >= job.tasks {
+            return;
+        }
+        let i = job.next;
+        job.next += 1;
+        let f = job.f;
+        drop(st);
+        // SAFETY: pending > 0 keeps the submitter (and thus the closure)
+        // alive until after we decrement below. The catch_unwind keeps a
+        // panicking task from wedging the job (pending would never reach
+        // 0) or killing a persistent worker; the submitter re-raises.
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (unsafe { &*f.0 })(i);
+        }))
+        .is_ok();
+        st = shared.state.lock().unwrap();
+        let job = st.job.as_mut().expect("job cleared while tasks pending");
+        job.pending -= 1;
+        if !ok {
+            job.panicked = true;
+        }
+        if job.pending == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_POOL.with(|c| c.set(true));
+    loop {
+        {
+            let mut st = shared.state.lock().unwrap();
+            while !st.job.map(|j| j.next < j.tasks).unwrap_or(false) {
+                st = shared.work.wait(st).unwrap();
+            }
+        }
+        drain(shared);
+    }
+}
+
+/// A mutable `f32` buffer shared across pool tasks that each write a
+/// **disjoint** region — the zero-allocation alternative to
+/// `chunks_mut`-per-spawn under `thread::scope`.
+#[derive(Clone, Copy)]
+pub struct SharedSlice {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: disjointness of the regions handed to concurrent tasks is the
+// caller's obligation (documented on `slice_mut`).
+unsafe impl Send for SharedSlice {}
+unsafe impl Sync for SharedSlice {}
+
+impl SharedSlice {
+    pub fn new(s: &mut [f32]) -> SharedSlice {
+        SharedSlice { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reborrow `[start, start+len)` mutably.
+    ///
+    /// # Safety
+    /// Concurrent callers must slice **disjoint** ranges, and the backing
+    /// buffer must outlive every use (guaranteed when used inside a
+    /// `parallel_for` over a buffer borrowed by the submitting frame).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.len, "SharedSlice range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+/// Allocation-free observable counter for tests/benches: how many jobs
+/// have actually been **installed in the pool's job slot** (incremented
+/// inside [`ThreadPool::parallel_for`] only after installation — inline
+/// fallbacks, nested calls and busy-pool rejections do not count). The
+/// steady-state acceptance tests use it to assert GEMM/FKW bands really
+/// dispatch on the pool.
+pub static PARALLEL_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for tasks in [0usize, 1, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for(tasks, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_serial_and_correct() {
+        let pool = ThreadPool::new(1);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(100, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        let pool = ThreadPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.parallel_for(8, |_| {
+            // Nested call must run inline on whichever thread executes it.
+            global().parallel_for(4, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn concurrent_submitters_fall_back_inline() {
+        // Many user threads hammering the single global pool: every task
+        // must still run exactly once per submission, with losers of the
+        // job slot running inline.
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..16 {
+                        global().parallel_for(10, |_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 16 * 10);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes() {
+        let mut buf = vec![0.0f32; 64];
+        let ss = SharedSlice::new(&mut buf);
+        let pool = ThreadPool::new(4);
+        pool.parallel_for(8, |t| {
+            let chunk = unsafe { ss.slice_mut(t * 8, 8) };
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (t * 8 + j) as f32;
+            }
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn configured_threads_is_positive_and_stable() {
+        let a = configured_threads();
+        let b = configured_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b);
+        assert_eq!(global().size().max(1), global().size());
+    }
+}

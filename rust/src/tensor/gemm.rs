@@ -17,9 +17,13 @@
 //!
 //! The micro-kernel is written over fixed-size array refs (`&[f32; NR]`)
 //! with a fully unrolled `MR x NR` accumulator so LLVM auto-vectorizes it —
-//! no intrinsics, no unsafe, no dependencies. Parallelism splits the M
-//! dimension across `std::thread::scope` workers (each thread owns a
-//! disjoint row band of C, so there is no sharing to synchronize).
+//! no intrinsics, no dependencies. Parallelism splits the M dimension into
+//! disjoint row bands of C dispatched on the **persistent worker pool**
+//! ([`crate::runtime::pool`]) — nothing is spawned or joined per call.
+//! Constant operands can be packed once at compile time ([`PackedB`]) and
+//! multiplied through [`gemm_prepacked`], which with caller-provided A
+//! scratch performs no heap allocation at all — the steady-state
+//! inference configuration.
 //!
 //! Unlike the old `Tensor::matmul` triple loop, the dense path has **no
 //! per-element sparsity branch** (`if a == 0.0 { continue }`): exploiting
@@ -56,19 +60,25 @@ impl Default for GemmConfig {
 }
 
 impl GemmConfig {
-    /// Resolve `threads == 0` to the machine's parallelism, bounded by the
-    /// number of MR-row bands so tiny matrices never over-spawn.
-    fn effective_threads(&self, m: usize, k: usize, n: usize) -> usize {
-        let hw = if self.threads == 0 {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    /// `threads` with 0 resolved to the pool size — a single cached env
+    /// read ([`crate::runtime::pool::configured_threads`], `XGEN_THREADS`),
+    /// not a per-call `available_parallelism` lookup.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::runtime::pool::configured_threads()
         } else {
             self.threads
-        };
-        // Below ~1 MFLOP the spawn/join overhead dominates any speedup.
+        }
+    }
+
+    /// [`GemmConfig::resolved_threads`] bounded by the number of MR-row
+    /// bands so tiny matrices never over-split.
+    fn effective_threads(&self, m: usize, k: usize, n: usize) -> usize {
+        // Below ~1 MFLOP the handoff overhead dominates any speedup.
         if (m * k).saturating_mul(n) < 1 << 19 {
             return 1;
         }
-        hw.min((m + MR - 1) / MR).max(1)
+        self.resolved_threads().min((m + MR - 1) / MR).max(1)
     }
 }
 
@@ -98,20 +108,27 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], c
     // fully unsynchronized — no shared pack buffer, no barrier — at the
     // cost of extra bandwidth; `cost::gemm_blocked_traffic_bytes` models
     // the single-band case, so its B term is per-band here.
-    let rows_per = {
-        let per = (m + threads - 1) / threads;
-        ((per + MR - 1) / MR) * MR
-    };
-    std::thread::scope(|scope| {
-        for (t, c_band) in c.chunks_mut(rows_per * n).enumerate() {
-            let row0 = t * rows_per;
-            let rows = c_band.len() / n;
-            let a_band = &a[row0 * k..(row0 + rows) * k];
-            scope.spawn(move || {
-                gemm_band(rows, k, n, a_band, b, c_band, cfg);
-            });
-        }
+    //
+    // Bands run on the persistent worker pool — nothing is spawned per
+    // call (the PR-1 `thread::scope` spawn/join is gone from the hot path).
+    let (rows_per, bands) = band_split(m, threads);
+    let c_sh = crate::runtime::pool::SharedSlice::new(c);
+    crate::runtime::pool::global().parallel_for(bands, |t| {
+        let row0 = t * rows_per;
+        let rows = rows_per.min(m - row0);
+        let a_band = &a[row0 * k..(row0 + rows) * k];
+        // SAFETY: bands are disjoint row ranges of C.
+        let c_band = unsafe { c_sh.slice_mut(row0 * n, rows * n) };
+        gemm_band(rows, k, n, a_band, b, c_band, cfg);
     });
+}
+
+/// Row-band split for `threads` workers: MR-aligned band height and the
+/// resulting band count (≤ `threads`).
+fn band_split(m: usize, threads: usize) -> (usize, usize) {
+    let per = (m + threads - 1) / threads;
+    let rows_per = ((per + MR - 1) / MR) * MR;
+    (rows_per, (m + rows_per - 1) / rows_per)
 }
 
 /// Single-threaded blocked GEMM over one row band of C.
@@ -138,43 +155,222 @@ fn gemm_band(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], 
             while ic < m {
                 let mcb = mc.min(m - ic);
                 pack_a(a, k, ic, pc, mcb, kcb, &mut a_pack);
-                // Micro loops over the packed panels.
-                let mut jr = 0;
-                while jr < ncb {
-                    let nrb = nr.min(ncb - jr);
-                    let b_sliver = &b_pack[(jr / nr) * kcb * nr..(jr / nr + 1) * kcb * nr];
-                    let mut ir = 0;
-                    while ir < mcb {
-                        let mrb = MR.min(mcb - ir);
-                        let a_sliver = &a_pack[(ir / MR) * kcb * MR..(ir / MR + 1) * kcb * MR];
-                        if nr == 8 {
-                            let mut acc = [[0.0f32; 8]; MR];
-                            microkernel_8(kcb, a_sliver, b_sliver, &mut acc);
-                            for i in 0..mrb {
-                                let crow = (ic + ir + i) * n + jc + jr;
-                                for j in 0..nrb {
-                                    c[crow + j] += acc[i][j];
-                                }
-                            }
-                        } else {
-                            let mut acc = [[0.0f32; 4]; MR];
-                            microkernel_4(kcb, a_sliver, b_sliver, &mut acc);
-                            for i in 0..mrb {
-                                let crow = (ic + ir + i) * n + jc + jr;
-                                for j in 0..nrb {
-                                    c[crow + j] += acc[i][j];
-                                }
-                            }
-                        }
-                        ir += MR;
-                    }
-                    jr += nr;
-                }
+                run_panel(c, n, ic, jc, mcb, ncb, kcb, nr, &a_pack, &b_pack);
                 ic += mc;
             }
             pc += kc;
         }
         jc += nc;
+    }
+}
+
+/// Micro loops over one packed (A panel, B panel) pair: accumulate the
+/// `mcb x ncb` block of C whose top-left corner is `(ic, jc)`.
+#[allow(clippy::too_many_arguments)]
+fn run_panel(
+    c: &mut [f32],
+    n: usize,
+    ic: usize,
+    jc: usize,
+    mcb: usize,
+    ncb: usize,
+    kcb: usize,
+    nr: usize,
+    a_pack: &[f32],
+    b_pack: &[f32],
+) {
+    let mut jr = 0;
+    while jr < ncb {
+        let nrb = nr.min(ncb - jr);
+        let b_sliver = &b_pack[(jr / nr) * kcb * nr..(jr / nr + 1) * kcb * nr];
+        let mut ir = 0;
+        while ir < mcb {
+            let mrb = MR.min(mcb - ir);
+            let a_sliver = &a_pack[(ir / MR) * kcb * MR..(ir / MR + 1) * kcb * MR];
+            if nr == 8 {
+                let mut acc = [[0.0f32; 8]; MR];
+                microkernel_8(kcb, a_sliver, b_sliver, &mut acc);
+                for i in 0..mrb {
+                    let crow = (ic + ir + i) * n + jc + jr;
+                    for j in 0..nrb {
+                        c[crow + j] += acc[i][j];
+                    }
+                }
+            } else {
+                let mut acc = [[0.0f32; 4]; MR];
+                microkernel_4(kcb, a_sliver, b_sliver, &mut acc);
+                for i in 0..mrb {
+                    let crow = (ic + ir + i) * n + jc + jr;
+                    for j in 0..nrb {
+                        c[crow + j] += acc[i][j];
+                    }
+                }
+            }
+            ir += MR;
+        }
+        jr += nr;
+    }
+}
+
+/// A constant B operand packed **once** (at `Compiler::compile` time) into
+/// the NR-column sliver layout the micro-kernel consumes — the per-call
+/// `pack_b` traffic of the PR-1 engine disappears from the inference hot
+/// path, and with [`gemm_prepacked`] + caller-provided A scratch the whole
+/// GEMM is allocation-free (§2.3's "all expensive analysis at compile
+/// time" applied to data layout).
+///
+/// Panels are stored in `(jc, pc)` order, matching the loop nest of
+/// [`gemm`], and the pack-time blocking (`kc`, `nc`, `nr`) travels with
+/// the data so the consuming call can never mismatch the layout.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    /// Logical shape of the packed operand: `[k, n]`.
+    pub k: usize,
+    pub n: usize,
+    kc: usize,
+    nc: usize,
+    nr: usize,
+    /// Panel start offsets in `(jc, pc)` order, with a trailing sentinel
+    /// equal to `data.len()`.
+    panel_off: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack row-major `b [k, n]` under `cfg`'s blocking parameters.
+    pub fn pack(k: usize, n: usize, b: &[f32], cfg: &GemmConfig) -> PackedB {
+        assert_eq!(b.len(), k * n, "PackedB: B length");
+        let kc = cfg.kc.max(1);
+        let nc = cfg.nc.max(1);
+        let nr = if cfg.nr == 4 { 4 } else { 8 };
+        let mut data = Vec::new();
+        let mut panel_off = Vec::new();
+        let mut jc = 0;
+        while jc < n {
+            let ncb = nc.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kcb = kc.min(k - pc);
+                panel_off.push(data.len());
+                let start = data.len();
+                data.resize(start + padded(ncb, nr) * kcb, 0.0);
+                pack_b(b, n, pc, jc, kcb, ncb, nr, &mut data[start..]);
+                pc += kc;
+            }
+            jc += nc;
+        }
+        panel_off.push(data.len());
+        PackedB { k, n, kc, nc, nr, panel_off, data }
+    }
+
+    /// Packed bytes held (the compile-time memory cost of pre-packing).
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64 * 4
+    }
+
+    /// The packed panel at column block `jci`, K block `pci`.
+    fn panel(&self, jci: usize, pci: usize) -> &[f32] {
+        let n_pc = (self.k + self.kc - 1) / self.kc;
+        let idx = jci * n_pc + pci;
+        &self.data[self.panel_off[idx]..self.panel_off[idx + 1]]
+    }
+}
+
+/// Per-band A-pack scratch (in f32 elements) that [`gemm_prepacked`]
+/// needs under `cfg`; multiply by [`GemmConfig::resolved_threads`] for a
+/// buffer that covers every band of a parallel call.
+pub fn prepacked_scratch_elems(cfg: &GemmConfig) -> usize {
+    padded(cfg.mc.max(MR), MR) * cfg.kc.max(1)
+}
+
+/// `C = A * packed_B` — the steady-state GEMM entry point: B was packed at
+/// compile time ([`PackedB`]), A panels pack into the caller's `scratch`
+/// (≥ `prepacked_scratch_elems(cfg) * resolved_threads` elements), row
+/// bands run on the persistent pool. Performs **no** heap allocation and
+/// spawns **no** threads. `cfg` must carry the same blocking parameters B
+/// was packed with (asserted).
+pub fn gemm_prepacked(
+    m: usize,
+    a: &[f32],
+    pb: &PackedB,
+    c: &mut [f32],
+    cfg: &GemmConfig,
+    scratch: &mut [f32],
+) {
+    let (k, n) = (pb.k, pb.n);
+    assert_eq!(a.len(), m * k, "gemm_prepacked: A length");
+    assert_eq!(c.len(), m * n, "gemm_prepacked: C length");
+    assert_eq!(pb.kc, cfg.kc.max(1), "gemm_prepacked: KC mismatch vs pack time");
+    assert_eq!(pb.nc, cfg.nc.max(1), "gemm_prepacked: NC mismatch vs pack time");
+    assert_eq!(pb.nr, if cfg.nr == 4 { 4 } else { 8 }, "gemm_prepacked: NR mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let per = prepacked_scratch_elems(cfg);
+    let threads = cfg.effective_threads(m, k, n);
+    if threads <= 1 {
+        gemm_band_prepacked(m, a, pb, c, cfg, &mut scratch[..per]);
+        return;
+    }
+    let (rows_per, bands) = band_split(m, threads);
+    assert!(
+        scratch.len() >= per * bands,
+        "gemm_prepacked: scratch {} < {} elems for {} bands",
+        scratch.len(),
+        per * bands,
+        bands
+    );
+    let c_sh = crate::runtime::pool::SharedSlice::new(c);
+    let s_sh = crate::runtime::pool::SharedSlice::new(scratch);
+    crate::runtime::pool::global().parallel_for(bands, |t| {
+        let row0 = t * rows_per;
+        let rows = rows_per.min(m - row0);
+        let a_band = &a[row0 * k..(row0 + rows) * k];
+        // SAFETY: disjoint row bands of C; disjoint per-band scratch.
+        let c_band = unsafe { c_sh.slice_mut(row0 * n, rows * n) };
+        let a_pack = unsafe { s_sh.slice_mut(t * per, per) };
+        gemm_band_prepacked(rows, a_band, pb, c_band, cfg, a_pack);
+    });
+}
+
+/// Single-threaded prepacked GEMM over one row band of C.
+fn gemm_band_prepacked(
+    m: usize,
+    a: &[f32],
+    pb: &PackedB,
+    c: &mut [f32],
+    cfg: &GemmConfig,
+    a_pack: &mut [f32],
+) {
+    let (k, n) = (pb.k, pb.n);
+    let mc = cfg.mc.max(MR);
+    let (kc, nc, nr) = (pb.kc, pb.nc, pb.nr);
+    c.fill(0.0);
+    let mut jc = 0;
+    let mut jci = 0;
+    while jc < n {
+        let ncb = nc.min(n - jc);
+        let mut pc = 0;
+        let mut pci = 0;
+        while pc < k {
+            let kcb = kc.min(k - pc);
+            let b_pack = pb.panel(jci, pci);
+            let mut ic = 0;
+            while ic < m {
+                let mcb = mc.min(m - ic);
+                pack_a(a, k, ic, pc, mcb, kcb, a_pack);
+                run_panel(c, n, ic, jc, mcb, ncb, kcb, nr, a_pack, b_pack);
+                ic += mc;
+            }
+            pc += kc;
+            pci += 1;
+        }
+        jc += nc;
+        jci += 1;
     }
 }
 
@@ -325,7 +521,7 @@ mod tests {
     fn parallel_matches_single_thread() {
         forall("parallel gemm == 1-thread gemm", 8, |rng| {
             // Sizes above the serial cutoff (m*k*n >= 1<<19) so the
-            // thread::scope band split actually runs for `threads: 4`.
+            // pool band split actually runs for `threads: 4`.
             let (m, k, n) = (128 + rng.below(64), 64 + rng.below(32), 128 + rng.below(64));
             assert!(m * k * n >= 1 << 19);
             let a = rng.normal_vec(m * k, 0.0, 1.0);
@@ -365,6 +561,83 @@ mod tests {
         let mut c = vec![7.0f32; 4];
         gemm(2, 0, 2, &[], &[], &mut c, &cfg);
         assert_eq!(c, vec![0.0; 4]);
+    }
+
+    /// Satellite acceptance: the prepacked entry point matches the naive
+    /// oracle on shapes that are NOT multiples of any tile size, across
+    /// awkward pack-time blockings and thread counts.
+    #[test]
+    fn prepacked_matches_naive_on_odd_shapes() {
+        let dims = [1usize, 7, 33, 129];
+        forall("prepacked gemm == naive oracle", 32, |rng| {
+            let m = *rng.choose(&dims);
+            let k = *rng.choose(&dims);
+            let n = *rng.choose(&dims);
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            gemm_naive(m, k, n, &a, &b, &mut want);
+            let cfg = GemmConfig {
+                mc: 4 + rng.below(3) * 17,
+                kc: 1 + rng.below(60),
+                nc: 1 + rng.below(60),
+                nr: *rng.choose(&[4usize, 8]),
+                threads: 1 + rng.below(3),
+            };
+            let pb = PackedB::pack(k, n, &b, &cfg);
+            let mut scratch =
+                vec![0.0f32; prepacked_scratch_elems(&cfg) * cfg.resolved_threads()];
+            let mut got = vec![0.0f32; m * n];
+            gemm_prepacked(m, &a, &pb, &mut got, &cfg, &mut scratch);
+            let d = max_abs_diff(&want, &got);
+            assert!(d <= 1e-3, "diff {d} at m={m} k={k} n={n} cfg={cfg:?}");
+        });
+    }
+
+    /// Prepacked and pack-on-the-fly paths agree bitwise: identical panel
+    /// order, identical micro-kernel, only the time of packing differs.
+    #[test]
+    fn prepacked_is_bitwise_equal_to_packing_on_the_fly() {
+        let mut rng = Rng::new(0xBB);
+        for &(m, k, n) in &[(5usize, 700usize, 6usize), (33, 129, 33), (256, 64, 96)] {
+            let a = rng.normal_vec(m * k, 0.0, 0.5);
+            let b = rng.normal_vec(k * n, 0.0, 0.5);
+            let cfg = GemmConfig { threads: 2, ..Default::default() };
+            let mut plain = vec![0.0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut plain, &cfg);
+            let pb = PackedB::pack(k, n, &b, &cfg);
+            let mut scratch =
+                vec![0.0f32; prepacked_scratch_elems(&cfg) * cfg.resolved_threads()];
+            let mut pre = vec![0.0f32; m * n];
+            gemm_prepacked(m, &a, &pb, &mut pre, &cfg, &mut scratch);
+            assert_eq!(plain, pre, "[{m},{k}]x[{k},{n}]");
+        }
+    }
+
+    #[test]
+    fn prepacked_degenerate_dims_are_safe() {
+        let cfg = GemmConfig::default();
+        // k == 0: C zeroed.
+        let pb = PackedB::pack(0, 2, &[], &cfg);
+        let mut scratch = vec![0.0f32; prepacked_scratch_elems(&cfg)];
+        let mut c = vec![7.0f32; 4];
+        gemm_prepacked(2, &[], &pb, &mut c, &cfg, &mut scratch);
+        assert_eq!(c, vec![0.0; 4]);
+        // n == 0: nothing to do.
+        let pb = PackedB::pack(3, 0, &[], &cfg);
+        let mut c: Vec<f32> = Vec::new();
+        gemm_prepacked(2, &[0.0; 6], &pb, &mut c, &cfg, &mut scratch);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prepacked_rejects_blocking_mismatch() {
+        let pack_cfg = GemmConfig { kc: 32, ..Default::default() };
+        let run_cfg = GemmConfig { kc: 64, ..Default::default() };
+        let pb = PackedB::pack(4, 4, &[0.0; 16], &pack_cfg);
+        let mut scratch = vec![0.0f32; prepacked_scratch_elems(&run_cfg)];
+        let mut c = vec![0.0f32; 16];
+        gemm_prepacked(4, &[0.0; 16], &pb, &mut c, &run_cfg, &mut scratch);
     }
 
     #[test]

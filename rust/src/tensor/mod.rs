@@ -241,38 +241,18 @@ impl Tensor {
 
     /// im2col: unfold `[n,c,h,w]` into `[n*oh*ow, c*kh*kw]` patches so conv
     /// becomes GEMM (the transformation §2.1.2 relies on: "operations in
-    /// CONV layers can be transformed into GEMM").
+    /// CONV layers can be transformed into GEMM"). Thin allocating wrapper
+    /// over [`im2col_into`] — the steady-state engine calls the `_into`
+    /// form against the workspace arena instead.
     pub fn im2col(&self, kh: usize, kw: usize, stride: usize, pad: usize) -> Tensor {
         assert_eq!(self.rank(), 4);
         let (n, c, h, w) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
         let oh = (h + 2 * pad - kh) / stride + 1;
         let ow = (w + 2 * pad - kw) / stride + 1;
         let cols = c * kh * kw;
-        let mut out = Tensor::zeros(&[n * oh * ow, cols]);
-        for b in 0..n {
-            for y in 0..oh {
-                for x in 0..ow {
-                    let row = (b * oh + y) * ow + x;
-                    for ci in 0..c {
-                        for ky in 0..kh {
-                            let iy = (y * stride + ky) as isize - pad as isize;
-                            for kx in 0..kw {
-                                let ix = (x * stride + kx) as isize - pad as isize;
-                                let col = (ci * kh + ky) * kw + kx;
-                                let v = if iy < 0 || ix < 0 || iy as usize >= h || ix as usize >= w
-                                {
-                                    0.0
-                                } else {
-                                    self.at(&[b, ci, iy as usize, ix as usize])
-                                };
-                                out.set(&[row, col], v);
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        out
+        let mut out = vec![0.0f32; n * oh * ow * cols];
+        im2col_into(&self.data, n, c, h, w, kh, kw, stride, pad, &mut out);
+        Tensor { shape: vec![n * oh * ow, cols], data: out }
     }
 
     /// 2x2 max pooling with stride 2 over NCHW (sufficient for the zoo).
@@ -339,7 +319,10 @@ impl Tensor {
         out
     }
 
-    /// Argmax per row of a 2-D tensor (classification readout).
+    /// Argmax per row of a 2-D tensor (classification readout). Uses
+    /// `f32::total_cmp`, so rows containing NaN pick a deterministic
+    /// winner (NaN sorts above +inf in the IEEE total order) instead of
+    /// panicking the way `partial_cmp(..).unwrap()` did.
     pub fn argmax_rows(&self) -> Vec<usize> {
         assert_eq!(self.rank(), 2);
         let (m, n) = (self.shape[0], self.shape[1]);
@@ -348,7 +331,7 @@ impl Tensor {
                 let row = &self.data[i * n..(i + 1) * n];
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(j, _)| j)
                     .unwrap()
             })
@@ -356,10 +339,171 @@ impl Tensor {
     }
 }
 
-/// conv2d via im2col + matmul; must agree with `Tensor::conv2d`. This is the
-/// GEMM formulation the pruning/compiler stack operates on.
+/// [`Tensor::im2col`] into a caller-provided buffer (`out` must hold
+/// `n*oh*ow * c*kh*kw` elements for the leading patch matrix). The
+/// allocation-free form the steady-state executor runs against the
+/// workspace arena.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [f32],
+) {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let cols = c * kh * kw;
+    debug_assert!(out.len() >= n * oh * ow * cols, "im2col_into: out too small");
+    for b in 0..n {
+        for y in 0..oh {
+            for xx in 0..ow {
+                let row = (b * oh + y) * ow + xx;
+                let orow = &mut out[row * cols..(row + 1) * cols];
+                for ci in 0..c {
+                    let in_base = (b * c + ci) * h * w;
+                    for ky in 0..kh {
+                        let iy = (y * stride + ky) as isize - pad as isize;
+                        for kx in 0..kw {
+                            let ix = (xx * stride + kx) as isize - pad as isize;
+                            let col = (ci * kh + ky) * kw + kx;
+                            orow[col] =
+                                if iy < 0 || ix < 0 || iy as usize >= h || ix as usize >= w {
+                                    0.0
+                                } else {
+                                    x[in_base + iy as usize * w + ix as usize]
+                                };
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Transpose a flat OIHW weight (`o` rows of `cols = i*kh*kw`) into the
+/// `[cols, o]` GEMM operand, into a caller buffer. This is the transform
+/// `Compiler::compile` runs **once** per conv when pre-packing — the
+/// per-call re-transpose of the PR-1 `conv2d_gemm` is gone from the hot
+/// path.
+pub fn conv_weight_matrix_into(w: &[f32], o: usize, cols: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= cols * o);
+    for f in 0..o {
+        let wrow = &w[f * cols..(f + 1) * cols];
+        for (c, &v) in wrow.iter().enumerate() {
+            out[c * o + f] = v;
+        }
+    }
+}
+
+/// Allocating wrapper over [`conv_weight_matrix_into`]: OIHW weight →
+/// `[i*kh*kw, o]` tensor.
+pub fn conv_weight_matrix(weight: &Tensor) -> Tensor {
+    assert_eq!(weight.rank(), 4);
+    let (o, i, kh, kw) = (
+        weight.shape()[0],
+        weight.shape()[1],
+        weight.shape()[2],
+        weight.shape()[3],
+    );
+    let cols = i * kh * kw;
+    let mut wt = vec![0.0f32; cols * o];
+    conv_weight_matrix_into(weight.data(), o, cols, &mut wt);
+    Tensor { shape: vec![cols, o], data: wt }
+}
+
+/// Scatter a GEMM conv result `[n*oh*ow, o]` back to NCHW `[n,o,oh,ow]`.
+pub fn scatter_rows_to_nchw(y: &[f32], n: usize, o: usize, oh: usize, ow: usize, out: &mut [f32]) {
+    let rows = n * oh * ow;
+    debug_assert!(y.len() >= rows * o && out.len() >= n * o * oh * ow);
+    for row in 0..rows {
+        let b = row / (oh * ow);
+        let rem = row % (oh * ow);
+        for f in 0..o {
+            out[((b * o + f) * oh * ow) + rem] = y[row * o + f];
+        }
+    }
+}
+
+/// conv2d as im2col + GEMM against a **pre-packed** transposed weight
+/// (`pb` = `[i*kh*kw, o]` packed at compile time), writing every
+/// intermediate into caller-provided workspace buffers — the steady-state
+/// conv path: no im2col allocation, no weight re-transpose, no B packing,
+/// no output allocation, no thread spawn.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gemm_prepacked_into(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    pb: &gemm::PackedB,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    cfg: &GemmConfig,
+    patches: &mut [f32],
+    gemm_out: &mut [f32],
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), n * c * h * w, "conv input length");
+    let cols = c * kh * kw;
+    let o = pb.n;
+    assert_eq!(pb.k, cols, "prepacked conv weight shape mismatch");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let rows = n * oh * ow;
+    im2col_into(x, n, c, h, w, kh, kw, stride, pad, &mut patches[..rows * cols]);
+    gemm::gemm_prepacked(rows, &patches[..rows * cols], pb, &mut gemm_out[..rows * o], cfg, scratch);
+    scatter_rows_to_nchw(&gemm_out[..rows * o], n, o, oh, ow, out);
+}
+
+/// conv2d as im2col + GEMM with the transposed weight `wt = [cols, o]`
+/// supplied by the caller (the steady engine's fallback when pre-packing
+/// is off: B panels repack per call inside [`gemm::gemm`], but im2col and
+/// the output still land in workspace buffers).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gemm_wt_into(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    wt: &[f32],
+    o: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    cfg: &GemmConfig,
+    patches: &mut [f32],
+    gemm_out: &mut [f32],
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), n * c * h * w, "conv input length");
+    let cols = c * kh * kw;
+    assert_eq!(wt.len(), cols * o, "conv weight matrix shape mismatch");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let rows = n * oh * ow;
+    im2col_into(x, n, c, h, w, kh, kw, stride, pad, &mut patches[..rows * cols]);
+    gemm::gemm(rows, cols, o, &patches[..rows * cols], wt, &mut gemm_out[..rows * o], cfg);
+    scatter_rows_to_nchw(&gemm_out[..rows * o], n, o, oh, ow, out);
+}
+
+/// conv2d via im2col + matmul; must agree with `Tensor::conv2d`. This is
+/// the GEMM formulation the pruning/compiler stack operates on — now a
+/// thin allocating wrapper over [`conv2d_gemm_wt_into`], kept as the
+/// oracle the workspace variants are property-tested against.
 pub fn conv2d_gemm(input: &Tensor, weight: &Tensor, stride: usize, pad: usize) -> Tensor {
-    let (n, _c, h, w) = (
+    let (n, c, h, w) = (
         input.shape()[0],
         input.shape()[1],
         input.shape()[2],
@@ -373,31 +517,29 @@ pub fn conv2d_gemm(input: &Tensor, weight: &Tensor, stride: usize, pad: usize) -
     );
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (w + 2 * pad - kw) / stride + 1;
-    let patches = input.im2col(kh, kw, stride, pad); // [n*oh*ow, i*kh*kw]
     let cols = i * kh * kw;
-    // Transpose the OIHW weight matrix once so the whole conv is a single
-    // blocked GEMM: [n*oh*ow, cols] x [cols, o].
-    let wmat = weight.reshape(&[o, cols]);
-    let mut wt = vec![0.0f32; cols * o];
-    for f in 0..o {
-        let wrow = &wmat.data()[f * cols..(f + 1) * cols];
-        for (c, &v) in wrow.iter().enumerate() {
-            wt[c * o + f] = v;
-        }
-    }
     let rows = n * oh * ow;
+    let wt = conv_weight_matrix(weight);
+    let mut patches = vec![0.0f32; rows * cols];
     let mut y = vec![0.0f32; rows * o];
-    gemm::gemm(rows, cols, o, patches.data(), &wt, &mut y, &GemmConfig::default());
-    // Scatter [n*oh*ow, o] back to NCHW.
     let mut out = Tensor::zeros(&[n, o, oh, ow]);
-    let od = out.data_mut();
-    for row in 0..rows {
-        let b = row / (oh * ow);
-        let rem = row % (oh * ow);
-        for f in 0..o {
-            od[((b * o + f) * oh * ow) + rem] = y[row * o + f];
-        }
-    }
+    conv2d_gemm_wt_into(
+        input.data(),
+        n,
+        c,
+        h,
+        w,
+        wt.data(),
+        o,
+        kh,
+        kw,
+        stride,
+        pad,
+        &GemmConfig::default(),
+        &mut patches,
+        &mut y,
+        out.data_mut(),
+    );
     out
 }
 
@@ -501,6 +643,82 @@ mod tests {
     fn argmax_rows_basic() {
         let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.0, 1.0, 0.2, 0.3]);
         assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    /// Satellite regression: a NaN in a row must not panic (the old
+    /// `partial_cmp(..).unwrap()` did) and must pick deterministically —
+    /// under `total_cmp`, NaN sorts above every finite value and +inf.
+    #[test]
+    fn argmax_rows_handles_nan() {
+        let t = Tensor::from_vec(
+            &[3, 3],
+            vec![
+                0.1,
+                f32::NAN,
+                0.3,
+                f32::NEG_INFINITY,
+                -1.0,
+                f32::INFINITY,
+                f32::NAN,
+                f32::NAN,
+                f32::NAN,
+            ],
+        );
+        assert_eq!(t.argmax_rows(), vec![1, 2, 0]);
+        // Deterministic across calls.
+        assert_eq!(t.argmax_rows(), t.argmax_rows());
+    }
+
+    /// Satellite acceptance: the workspace `_into` conv variants are
+    /// pinned to the allocating `conv2d_gemm` oracle (bitwise — same GEMM,
+    /// only the buffer ownership differs) and to the direct conv within
+    /// float tolerance, on shapes drawn from the odd set.
+    #[test]
+    fn conv_into_variants_match_allocating_oracles() {
+        use crate::tensor::gemm::{prepacked_scratch_elems, PackedB};
+        forall("conv _into == allocating oracle", 16, |rng| {
+            let n = 1 + rng.below(2);
+            let c = 1 + rng.below(3);
+            let o = 1 + rng.below(4);
+            let hw = 4 + rng.below(5);
+            let k = *rng.choose(&[1usize, 3]);
+            let stride = 1 + rng.below(2);
+            let pad = if k == 3 { rng.below(2) } else { 0 };
+            let x = Tensor::randn(&[n, c, hw, hw], 1.0, rng);
+            let w = Tensor::randn(&[o, c, k, k], 0.5, rng);
+            let oracle = conv2d_gemm(&x, &w, stride, pad);
+            let direct = x.conv2d(&w, stride, pad);
+
+            let oh = (hw + 2 * pad - k) / stride + 1;
+            let rows = n * oh * oh;
+            let cols = c * k * k;
+            let cfg = GemmConfig::default();
+            let wt = conv_weight_matrix(&w);
+            let mut patches = vec![0.0f32; rows * cols];
+            let mut y = vec![0.0f32; rows * o];
+            let mut scratch =
+                vec![0.0f32; prepacked_scratch_elems(&cfg) * cfg.resolved_threads()];
+
+            let mut got_wt = Tensor::zeros(&[n, o, oh, oh]);
+            conv2d_gemm_wt_into(
+                x.data(), n, c, hw, hw, wt.data(), o, k, k, stride, pad, &cfg,
+                &mut patches, &mut y, got_wt.data_mut(),
+            );
+            assert_eq!(got_wt.data(), oracle.data(), "wt_into != oracle");
+
+            let pb = PackedB::pack(cols, o, wt.data(), &cfg);
+            let mut got_pre = Tensor::zeros(&[n, o, oh, oh]);
+            conv2d_gemm_prepacked_into(
+                x.data(), n, c, hw, hw, &pb, k, k, stride, pad, &cfg,
+                &mut patches, &mut y, &mut scratch, got_pre.data_mut(),
+            );
+            assert_eq!(got_pre.data(), oracle.data(), "prepacked_into != oracle");
+            assert!(
+                direct.max_abs_diff(&got_pre) < 1e-4,
+                "prepacked conv diverges from direct conv by {}",
+                direct.max_abs_diff(&got_pre)
+            );
+        });
     }
 
     #[test]

@@ -46,6 +46,42 @@ pub fn gemm_knob(name: &str) -> Option<GemmKnob> {
     gemm_ladder().into_iter().find(|k| k.name == name)
 }
 
+/// One steady-state engine configuration — the {weight pre-packing,
+/// workspace arena, worker pool} toggle set. Like the sparsity-variant
+/// knobs, these are *compile-time* dispatch decisions the runtime can pick
+/// per deployment; `benches/steady_state.rs` sweeps the whole matrix and
+/// writes `BENCH_steady.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SteadyKnob {
+    pub name: &'static str,
+    /// Pre-pack constant GEMM operands at compile time.
+    pub prepack: bool,
+    /// Execute through the per-model workspace arena (allocation-free
+    /// steady state).
+    pub workspace: bool,
+    /// Dispatch row/filter bands on the persistent worker pool (false =
+    /// single-threaded kernels).
+    pub pool: bool,
+}
+
+/// The standard steady-state ladder, from the PR-1 baseline (allocate and
+/// pack per call, serial) to the full steady-state engine.
+pub fn steady_knobs() -> Vec<SteadyKnob> {
+    let knob = |name, prepack, workspace, pool| SteadyKnob { name, prepack, workspace, pool };
+    vec![
+        knob("legacy", false, false, false),
+        knob("pool-only", false, false, true),
+        knob("workspace", false, true, true),
+        knob("prepack", true, true, false),
+        knob("steady", true, true, true),
+    ]
+}
+
+/// Look up a steady-state knob by name.
+pub fn steady_knob(name: &str) -> Option<SteadyKnob> {
+    steady_knobs().into_iter().find(|k| k.name == name)
+}
+
 /// One selectable operating point of a compiled DNN (a knob setting).
 #[derive(Debug, Clone, PartialEq)]
 pub struct KnobSetting {
@@ -252,6 +288,46 @@ mod tests {
         assert!(foot(&ladder[2]) < foot(&ladder[3]));
         assert_eq!(gemm_knob("l2-resident").unwrap().cfg.mc, 64);
         assert!(gemm_knob("nope").is_none());
+    }
+
+    #[test]
+    fn steady_knob_ladder_covers_the_toggle_matrix() {
+        let ks = steady_knobs();
+        assert!(ks.len() >= 4);
+        // Endpoints: the PR-1 baseline and the full steady-state engine.
+        assert_eq!(steady_knob("legacy").unwrap(), SteadyKnob {
+            name: "legacy",
+            prepack: false,
+            workspace: false,
+            pool: false
+        });
+        let steady = steady_knob("steady").unwrap();
+        assert!(steady.prepack && steady.workspace && steady.pool);
+        // Each toggle is isolated somewhere in the ladder so the bench can
+        // attribute the win.
+        assert!(ks.iter().any(|k| k.pool && !k.workspace && !k.prepack));
+        assert!(ks.iter().any(|k| k.workspace && !k.prepack));
+        assert!(ks.iter().any(|k| k.prepack && !k.pool));
+        assert!(steady_knob("nope").is_none());
+        // Every knob config actually compiles and infers on the demo CNN.
+        use crate::api::Compiler;
+        use crate::tensor::gemm::GemmConfig;
+        use crate::tensor::Tensor;
+        for k in &ks {
+            let m = Compiler::for_model("demo-cnn", 1)
+                .unwrap()
+                .random_weights(77)
+                .prepack(k.prepack)
+                .workspace(k.workspace)
+                .gemm_config(GemmConfig {
+                    threads: if k.pool { 0 } else { 1 },
+                    ..Default::default()
+                })
+                .compile()
+                .unwrap();
+            let y = m.infer(&[Tensor::zeros(&[1, 3, 24, 24])]).unwrap();
+            assert_eq!(y[0].shape(), &[1, 8], "knob '{}'", k.name);
+        }
     }
 
     #[test]

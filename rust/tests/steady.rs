@@ -1,0 +1,190 @@
+//! ISSUE-3 acceptance: zero-allocation steady-state inference.
+//!
+//! This integration binary installs a counting global allocator (its own
+//! binary, so the lib/test builds are unaffected) and pins the tentpole
+//! property: with {prepack, workspace, pool} all on, repeated
+//! `CompiledModel::infer_into` performs **zero heap allocations on the
+//! calling thread** after warm-up, dispatches its GEMM row bands on the
+//! persistent worker pool (no per-call `thread::scope` — the spawn sites
+//! were removed from `tensor/gemm.rs` entirely), and is bitwise
+//! deterministic across calls.
+//!
+//! The counter is thread-local so concurrently running tests in this
+//! binary cannot pollute the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::Ordering;
+
+use xgen::api::Compiler;
+use xgen::pruning::PruneScheme;
+use xgen::runtime::pool;
+use xgen::tensor::Tensor;
+use xgen::util::rng::Rng;
+
+thread_local! {
+    static TRACK: Cell<bool> = const { Cell::new(false) };
+    static COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+fn note() {
+    // try_with: the allocator must never panic, even during TLS teardown.
+    let _ = TRACK.try_with(|t| {
+        if t.get() {
+            let _ = COUNT.try_with(|c| c.set(c.get() + 1));
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        note();
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        note();
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        note();
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Count allocations on this thread while running `f`.
+fn count_allocs<F: FnMut()>(mut f: F) -> u64 {
+    COUNT.with(|c| c.set(0));
+    TRACK.with(|t| t.set(true));
+    f();
+    TRACK.with(|t| t.set(false));
+    COUNT.with(|c| c.get())
+}
+
+/// The tentpole acceptance test: demo-cnn end-to-end `infer_into` with
+/// the full steady-state engine allocates nothing after warm-up.
+#[test]
+fn steady_state_infer_is_allocation_free() {
+    let m = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(42)
+        .compile()
+        .unwrap();
+    assert!(m.report().prepacked_operands > 0, "prepack did not run");
+    assert!(m.report().workspace_enabled, "workspace engine off");
+    let inputs = vec![Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(5))];
+    let mut outs: Vec<Tensor> = m.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+    // Warm-up: pool spawn, lazy env reads, first-touch faults.
+    for _ in 0..3 {
+        m.infer_into(&inputs, &mut outs).unwrap();
+    }
+    let want = outs[0].data().to_vec();
+    let n = count_allocs(|| {
+        for _ in 0..5 {
+            m.infer_into(&inputs, &mut outs).unwrap();
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state infer_into made {n} heap allocations on the calling thread"
+    );
+    assert_eq!(outs[0].data(), &want[..], "tracked runs changed the result");
+}
+
+/// The FKW route (pattern-pruned convs) is allocation-free too.
+#[test]
+fn steady_state_fkw_infer_is_allocation_free() {
+    let m = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(42)
+        .scheme(PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 })
+        .compile()
+        .unwrap();
+    assert!(m.report().fkw_layers > 0, "no FKW kernels attached");
+    let inputs = vec![Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(6))];
+    let mut outs: Vec<Tensor> = m.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+    for _ in 0..3 {
+        m.infer_into(&inputs, &mut outs).unwrap();
+    }
+    let n = count_allocs(|| {
+        for _ in 0..5 {
+            m.infer_into(&inputs, &mut outs).unwrap();
+        }
+    });
+    assert_eq!(n, 0, "FKW steady-state infer_into made {n} allocations");
+}
+
+/// Satellite acceptance: the same `CompiledModel` produces bitwise-equal
+/// outputs across 10 repeated `infer()` calls (pool parallelism included).
+#[test]
+fn repeated_infer_is_bitwise_deterministic() {
+    let m = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(7)
+        .compile()
+        .unwrap();
+    let inputs = vec![Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(3))];
+    let first = m.infer(&inputs).unwrap();
+    for i in 1..10 {
+        let y = m.infer(&inputs).unwrap();
+        assert_eq!(first[0].data(), y[0].data(), "call {i} diverged bitwise");
+    }
+}
+
+/// Acceptance: per-call GEMM dispatches row bands on the persistent pool
+/// instead of spawning. `PARALLEL_JOBS` counts pool dispatches; it must
+/// grow during an infer whenever more than one worker is configured.
+#[test]
+fn infer_dispatches_gemm_on_the_persistent_pool() {
+    if pool::configured_threads() <= 1 {
+        // Single-core environment: every GEMM legitimately runs serial.
+        return;
+    }
+    let m = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(11)
+        .compile()
+        .unwrap();
+    let inputs = vec![Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(9))];
+    m.infer(&inputs).unwrap();
+    let before = pool::PARALLEL_JOBS.load(Ordering::Relaxed);
+    m.infer(&inputs).unwrap();
+    let after = pool::PARALLEL_JOBS.load(Ordering::Relaxed);
+    assert!(
+        after > before,
+        "no GEMM/FKW band jobs hit the pool during infer ({before} -> {after})"
+    );
+}
+
+/// `infer_into` agrees with the straight-line reference executor.
+#[test]
+fn infer_into_matches_reference_executor() {
+    let steady = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(13)
+        .compile()
+        .unwrap();
+    let oracle = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(13)
+        .memory_planner(false)
+        .compile()
+        .unwrap();
+    let inputs = vec![Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(17))];
+    let mut outs: Vec<Tensor> =
+        steady.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+    steady.infer_into(&inputs, &mut outs).unwrap();
+    let want = oracle.infer(&inputs).unwrap();
+    let d = outs[0].max_abs_diff(&want[0]);
+    assert!(d < 1e-4, "steady infer_into diverges from reference by {d}");
+}
