@@ -1,0 +1,156 @@
+//! Transformer inference bench — the ISSUE-4 acceptance artifact.
+//!
+//! Two sections, both through `CompiledModel::infer()`:
+//!
+//! 1. The `"demo-transformer"` zoo model (2 layers, d=64, seq=32) swept
+//!    over the `xengine::knobs::steady_knobs()` toggle matrix
+//!    ({weight pre-packing, workspace arena, worker pool}), every
+//!    configuration verified against the all-off baseline.
+//! 2. One `gpt2_frontend_layers(1, 2)` row — the exporter-style dump with
+//!    per-head Transposes, rank-4 QK^T and Sqrt/Div scaling — timed at
+//!    the default configuration, with its rewrite/fusion statistics.
+//!
+//! Writes `BENCH_transformer.json` at the repo root (fields documented in
+//! EXPERIMENTS.md §Transformers). `XGEN_BENCH_QUICK=1` shrinks iteration
+//! counts for the CI smoke job; `XGEN_THREADS` sizes the worker pool.
+
+use xgen::api::Compiler;
+use xgen::graph::zoo::nlp;
+use xgen::tensor::gemm::GemmConfig;
+use xgen::tensor::Tensor;
+use xgen::util::bench::{sink, time_ms, Table};
+use xgen::util::json::Json;
+use xgen::xengine::knobs::steady_knobs;
+
+fn main() {
+    let quick = std::env::var("XGEN_BENCH_QUICK").is_ok();
+    let (warm, samples, iters) = if quick { (1, 2, 3) } else { (2, 5, 20) };
+
+    // ---- demo-transformer: steady-knob sweep --------------------------
+    let mut t = Table::new(&[
+        "config",
+        "prepack",
+        "workspace",
+        "pool",
+        "ms/infer",
+        "p95",
+        "speedup",
+        "packed KB",
+        "arena KB",
+    ]);
+    let mut results = Vec::new();
+    let mut baseline_ms = 0.0f64;
+    let mut reference: Option<Tensor> = None;
+    for k in steady_knobs() {
+        let m = Compiler::for_model("demo-transformer", 1)
+            .unwrap()
+            .random_weights(42)
+            .prepack(k.prepack)
+            .workspace(k.workspace)
+            .gemm_config(GemmConfig {
+                threads: if k.pool { 0 } else { 1 },
+                ..Default::default()
+            })
+            .compile()
+            .unwrap();
+        let xs = m.sample_inputs(0x7A);
+        // Correctness guard: every knob config agrees with the first
+        // (all-off) configuration and stays finite.
+        let y = m.infer(&xs).unwrap();
+        assert!(y[0].data().iter().all(|v| v.is_finite()), "knob '{}' non-finite", k.name);
+        match &reference {
+            None => reference = Some(y[0].clone()),
+            Some(r) => {
+                let d = r.max_abs_diff(&y[0]);
+                assert!(d < 1e-3, "knob '{}' diverges from baseline by {d}", k.name);
+            }
+        }
+        let s = time_ms(warm, samples, || {
+            for _ in 0..iters {
+                sink(m.infer(&xs).unwrap());
+            }
+        });
+        let per = s.mean / iters as f64;
+        let p95 = s.p95 / iters as f64;
+        if k.name == "legacy" {
+            baseline_ms = per;
+        }
+        let speedup = if per > 0.0 { baseline_ms / per } else { 0.0 };
+        let r = m.report();
+        t.row(vec![
+            k.name.to_string(),
+            k.prepack.to_string(),
+            k.workspace.to_string(),
+            k.pool.to_string(),
+            format!("{per:.3}"),
+            format!("{p95:.3}"),
+            format!("{speedup:.2}x"),
+            format!("{:.1}", r.prepacked_bytes as f64 / 1024.0),
+            format!("{:.1}", r.workspace_bytes as f64 / 1024.0),
+        ]);
+        results.push(Json::obj(vec![
+            ("config", Json::str(k.name)),
+            ("prepack", Json::num(k.prepack as u8 as f64)),
+            ("workspace", Json::num(k.workspace as u8 as f64)),
+            ("pool", Json::num(k.pool as u8 as f64)),
+            ("ms_per_infer", Json::num(per)),
+            ("p95_ms_per_infer", Json::num(p95)),
+            ("speedup_vs_legacy", Json::num(speedup)),
+            ("prepacked_operands", Json::num(r.prepacked_operands as f64)),
+            ("prepacked_bytes", Json::num(r.prepacked_bytes as f64)),
+            ("workspace_bytes", Json::num(r.workspace_bytes as f64)),
+            ("pool_threads", Json::num(r.pool_threads as f64)),
+        ]));
+    }
+    t.print("transformer infer: {prepack, workspace, pool} toggle matrix (demo-transformer)");
+
+    // ---- gpt2-frontend (2 layers): one end-to-end row -----------------
+    let gpt_iters = if quick { 1 } else { 3 };
+    let g = nlp::gpt2_frontend_layers(1, 2);
+    let ops_before = g.operator_count();
+    let m = Compiler::new(g).random_weights(7).compile().unwrap();
+    let xs = m.sample_inputs(0x67);
+    let y = m.infer(&xs).unwrap();
+    assert!(y[0].data().iter().all(|v| v.is_finite()), "gpt2-frontend non-finite");
+    let s = time_ms(if quick { 0 } else { 1 }, if quick { 1 } else { 3 }, || {
+        for _ in 0..gpt_iters {
+            sink(m.infer(&xs).unwrap());
+        }
+    });
+    let per = s.mean / gpt_iters as f64;
+    let r = m.report();
+    let mut t = Table::new(&["model", "ops in", "ops out", "fused layers", "ms/infer"]);
+    t.row(vec![
+        "gpt2-frontend-2L".into(),
+        ops_before.to_string(),
+        r.rewrite.ops_after.to_string(),
+        r.fusion_groups.to_string(),
+        format!("{per:.1}"),
+    ]);
+    t.print("gpt2 frontend dump (2 layers, seq 384): rewrite + fusion + real inference");
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("transformer")),
+        ("model", Json::str("demo-transformer")),
+        ("iters_per_sample", Json::num(iters as f64)),
+        ("results", Json::Arr(results)),
+        (
+            "gpt2_frontend_2l",
+            Json::obj(vec![
+                ("ops_before_rewrite", Json::num(ops_before as f64)),
+                ("ops_after_rewrite", Json::num(r.rewrite.ops_after as f64)),
+                ("fused_layers", Json::num(r.fusion_groups as f64)),
+                ("ms_per_infer", Json::num(per)),
+            ]),
+        ),
+    ]);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_transformer.json"
+    } else {
+        "BENCH_transformer.json"
+    };
+    match std::fs::write(path, json.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -538,6 +538,40 @@ impl CompiledModel {
             .unwrap_or(1)
     }
 
+    /// Deterministic *valid* sample inputs for this session: Gaussian
+    /// values for dense inputs, in-range token ids for inputs consumed by
+    /// an `Embedding`/`Gather` row lookup. The CLI `--infer` smoke and
+    /// `benches/transformer.rs` feed transformer sessions through this —
+    /// uniform floats are not valid token ids and would (correctly) make
+    /// the embedding kernel error out.
+    pub fn sample_inputs(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        self.graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Input))
+            .map(|n| {
+                // Vocab size of the first row-lookup consumer, if any.
+                let vocab = self.graph.nodes.iter().find_map(|c| match c.op {
+                    OpKind::Embedding | OpKind::Gather
+                        if c.inputs.len() == 2 && c.inputs[0] == n.id =>
+                    {
+                        Some(self.graph.node(c.inputs[1]).shape[0])
+                    }
+                    _ => None,
+                });
+                match vocab {
+                    Some(v) => {
+                        let elems: usize = n.shape.iter().product();
+                        let data: Vec<f32> = (0..elems).map(|_| rng.below(v) as f32).collect();
+                        Tensor::from_vec(&n.shape, data)
+                    }
+                    None => Tensor::randn(&n.shape, 1.0, &mut rng),
+                }
+            })
+            .collect()
+    }
+
     /// Real execution: one tensor per Input node, outputs in graph order.
     pub fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.infer_with_stats(inputs).map(|(y, _)| y)

@@ -19,10 +19,14 @@
 //! [`crate::api::CompiledModel`] builds once at compile time and shares
 //! across runs via [`FusedExecutor::with_state`].
 //!
-//! Supported op subset: everything the demo CNNs / WDSR / MLP graphs use.
-//! Transformer-specific movement ops (Transpose with implicit perms,
-//! Gather, Embedding) are intentionally out of scope and return an error —
-//! the structural zoo models are cost-modeled, not CPU-executed.
+//! Supported op subset: everything the demo CNNs / WDSR / MLP graphs use,
+//! plus the transformer execution set (general-permutation `Transpose`,
+//! `Embedding`/`Gather` row lookup, `Slice`, `Pad`, batched `MatMul` over
+//! arbitrary leading dims) — the NLP zoo infers end-to-end. The remaining
+//! estimate-only ops (`Conv3d`, `ConvTranspose2d`, `ChannelShuffle`,
+//! `PostProcess`, and the RoI form of `Gather`) return an error;
+//! [`eval_supported`] is the single source of truth the zoo-wide coverage
+//! test checks against so new gaps fail loudly.
 
 pub mod planner;
 
@@ -140,7 +144,10 @@ pub fn eval_op(g: &Graph, id: NodeId, args: &[&Tensor]) -> Result<Tensor> {
             let e = *e as f32;
             args[0].map(move |x| x.powf(e))
         }
-        OpKind::Sqrt => args[0].map(|x| x.max(0.0).sqrt()),
+        // IEEE semantics: sqrt of a negative input is NaN. The old
+        // `x.max(0.0).sqrt()` clamp silently laundered bad inputs into 0 —
+        // the same bug class as the argmax_rows NaN panic fixed in PR 3.
+        OpKind::Sqrt => args[0].map(|x| x.sqrt()),
         OpKind::Scale { mul, add } => {
             if args.len() > 1 {
                 // Per-channel scale via weight.
@@ -156,10 +163,23 @@ pub fn eval_op(g: &Graph, id: NodeId, args: &[&Tensor]) -> Result<Tensor> {
             let rows = x.len() / last;
             x.reshape(&[rows, last]).softmax_rows().reshape(&n.shape)
         }
-        OpKind::MaxPool { k: 2, stride: 2 } => args[0].maxpool2(),
-        OpKind::AvgPool { k, stride } => avg_pool(args[0], *k, *stride),
+        OpKind::MaxPool { k, stride, pad } => max_pool(args[0], *k, *stride, *pad),
+        OpKind::AvgPool { k, stride, pad } => avg_pool(args[0], *k, *stride, *pad),
         OpKind::GlobalAvgPool => args[0].global_avg_pool(),
         OpKind::Reshape | OpKind::Flatten => args[0].reshape(&n.shape),
+        OpKind::Transpose { perm } => transpose_nd(args[0], perm),
+        OpKind::Slice { start } => slice_crop(args[0], start, &n.shape),
+        OpKind::Pad { before, after } => pad_zero(args[0], before, after),
+        OpKind::Embedding | OpKind::Gather => {
+            if args.len() != 2 || args[1].rank() != 2 {
+                bail!(
+                    "executor supports only the row-lookup form of '{}' \
+                     (indices + 2-D table)",
+                    n.op.name()
+                );
+            }
+            embedding_lookup(args[0], args[1])?
+        }
         OpKind::Concat => concat_channels(args, &n.shape),
         OpKind::Upsample { r } => upsample(args[0], *r),
         OpKind::PixelShuffle { r } => pixel_shuffle(args[0], *r),
@@ -175,6 +195,30 @@ pub fn eval_op(g: &Graph, id: NodeId, args: &[&Tensor]) -> Result<Tensor> {
         );
     }
     Ok(out)
+}
+
+/// Is `op` in [`eval_op`]'s executable set? This is the single source of
+/// truth the zoo-wide op-coverage test (`tests/transformer.rs`) checks
+/// `all_models()` against — adding an op to the zoo without a kernel (or
+/// without an explicit estimate-only allowance) fails that test loudly.
+///
+/// `Embedding`/`Gather` are supported in their row-lookup form (indices +
+/// 2-D table); the RoI/scatter `Gather` shapes some detection models use
+/// are estimate-only.
+// The exhaustive match (rather than a `matches!` on the unsupported set)
+// is deliberate: adding an `OpKind` variant must force a decision here.
+#[allow(clippy::match_like_matches_macro)]
+pub fn eval_supported(op: &OpKind) -> bool {
+    use OpKind::*;
+    match op {
+        Conv2d { .. } | Dense | MatMul | BatchNorm | Bias | LayerNorm | Activation(_) | Add
+        | Sub | Mul | Div | Pow { .. } | Sqrt | Scale { .. } | Softmax | MaxPool { .. }
+        | AvgPool { .. } | GlobalAvgPool | Reshape | Flatten | Transpose { .. } | Slice { .. }
+        | Pad { .. } | Embedding | Gather | Concat | Upsample { .. } | PixelShuffle { .. }
+        | Broadcast => true,
+        Input | Weight => true, // sources, not evaluated through eval_op
+        Conv3d { .. } | ConvTranspose2d { .. } | ChannelShuffle { .. } | PostProcess => false,
+    }
 }
 
 fn act_fn(a: Act) -> impl Fn(f32) -> f32 {
@@ -306,62 +350,260 @@ fn layer_norm(x: &Tensor, w: &Tensor) -> Tensor {
     out
 }
 
-/// Batched matmul over leading dims: [..., m, k] x [..., k, n] (or 2-D rhs
-/// broadcast across batches).
-fn batched_matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    let ar = a.rank();
-    let br = b.rank();
-    if ar == 2 && br == 2 {
-        return Ok(a.matmul(b));
+/// Shape bookkeeping shared by [`batched_matmul`] and the steady MatMul
+/// kernel: `a = [..batch.., m, k]` against `b = [..batch.., k, n]` (same
+/// leading dims) or a rank-2 `b = [k, n]` broadcast across every batch.
+/// Returns `(batch, m, k, n, b_broadcast)`.
+fn batched_matmul_dims(ashape: &[usize], bshape: &[usize]) -> Result<(usize, usize, usize, usize, bool)> {
+    let (ar, br) = (ashape.len(), bshape.len());
+    if ar < 2 || br < 2 {
+        bail!("matmul needs rank >= 2 operands, got {ar}/{br}");
     }
-    if ar == 3 && br == 3 {
-        let (bt, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
-        let (bt2, k2, n) = (b.shape()[0], b.shape()[1], b.shape()[2]);
-        if bt != bt2 || k != k2 {
-            bail!("batched matmul mismatch");
-        }
-        let mut out = Tensor::zeros(&[bt, m, n]);
-        for bi in 0..bt {
-            let am = Tensor::from_vec(&[m, k], a.data()[bi * m * k..(bi + 1) * m * k].to_vec());
-            let bm = Tensor::from_vec(&[k, n], b.data()[bi * k * n..(bi + 1) * k * n].to_vec());
-            let y = am.matmul(&bm);
-            out.data_mut()[bi * m * n..(bi + 1) * m * n].copy_from_slice(y.data());
-        }
-        return Ok(out);
+    let (m, k) = (ashape[ar - 2], ashape[ar - 1]);
+    let (k2, n) = (bshape[br - 2], bshape[br - 1]);
+    if k != k2 {
+        bail!("batched matmul mismatch: inner dims {k} vs {k2} ({ashape:?} x {bshape:?})");
     }
-    if ar == 3 && br == 2 {
-        let (bt, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
-        let y = a.reshape(&[bt * m, k]).matmul(b);
-        return Ok(y.reshape(&[bt, m, b.shape()[1]]));
+    let batch: usize = ashape[..ar - 2].iter().product();
+    if br == 2 {
+        return Ok((batch, m, k, n, true));
     }
-    bail!("unsupported matmul ranks {ar}/{br}")
+    if ashape[..ar - 2] != bshape[..br - 2] {
+        bail!("batched matmul mismatch: leading dims {ashape:?} vs {bshape:?}");
+    }
+    Ok((batch, m, k, n, false))
 }
 
-fn avg_pool(x: &Tensor, k: usize, stride: usize) -> Tensor {
-    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
-    let (oh, ow) = (h / stride, w / stride);
-    let mut out = Tensor::zeros(&[n, c, oh, ow]);
-    for b in 0..n {
-        for ci in 0..c {
-            for y in 0..oh {
-                for xx in 0..ow {
-                    let mut s = 0.0;
-                    let mut cnt = 0;
-                    for dy in 0..k {
-                        for dx in 0..k {
-                            let iy = y * stride + dy;
-                            let ix = xx * stride + dx;
-                            if iy < h && ix < w {
-                                s += x.at(&[b, ci, iy, ix]);
-                                cnt += 1;
-                            }
-                        }
-                    }
-                    out.set(&[b, ci, y, xx], s / cnt as f32);
-                }
+/// Batched matmul over flat slices, one blocked GEMM per leading-dim batch
+/// (rhs broadcast collapses to a single `[batch*m, k] x [k, n]` GEMM).
+/// Every per-batch multiply runs the PR-1 blocked micro-kernel on the
+/// PR-3 persistent pool via [`gemm`] — operands are *sliced*, not copied
+/// (the old rank-3 path rebuilt both operands with `to_vec` per batch).
+fn batched_matmul_into(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    b_broadcast: bool,
+    cfg: &GemmConfig,
+    out: &mut [f32],
+) {
+    if b_broadcast {
+        gemm(batch * m, k, n, a, b, &mut out[..batch * m * n], cfg);
+        return;
+    }
+    for bi in 0..batch {
+        gemm(
+            m,
+            k,
+            n,
+            &a[bi * m * k..(bi + 1) * m * k],
+            &b[bi * k * n..(bi + 1) * k * n],
+            &mut out[bi * m * n..(bi + 1) * m * n],
+            cfg,
+        );
+    }
+}
+
+/// Batched matmul over arbitrary leading dims: `[..., m, k] x [..., k, n]`
+/// (or a 2-D rhs broadcast across every batch) — rank-4 attention shapes
+/// (`[n, heads, L, d_h]`) included.
+///
+/// Runs with `GemmConfig::default()`: [`eval_op`] is the session-agnostic
+/// oracle and has no channel to a compiled session's config — the same
+/// convention as the Dense arm's `Tensor::matmul`. Session knobs
+/// (`threads: 1`, blocking) apply on the steady engine, which calls
+/// [`batched_matmul_into`] with its `ExecState` config.
+fn batched_matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (batch, m, k, n, b_broadcast) = batched_matmul_dims(a.shape(), b.shape())?;
+    let mut shape = a.shape()[..a.rank() - 2].to_vec();
+    shape.push(m);
+    shape.push(n);
+    let mut out = Tensor::zeros(&shape);
+    batched_matmul_into(
+        a.data(),
+        b.data(),
+        batch,
+        m,
+        k,
+        n,
+        b_broadcast,
+        &GemmConfig::default(),
+        out.data_mut(),
+    );
+    Ok(out)
+}
+
+/// General N-d axis permutation (`out.shape[i] = in.shape[perm[i]]`).
+fn transpose_nd(x: &Tensor, perm: &[usize]) -> Tensor {
+    let shape: Vec<usize> = perm.iter().map(|&p| x.shape()[p]).collect();
+    let mut out = Tensor::zeros(&shape);
+    transpose_into(x.data(), x.shape(), perm, out.data_mut());
+    out
+}
+
+/// [`transpose_nd`] into a caller buffer — the steady-state form (pure
+/// index copy, no scratch).
+fn transpose_into(x: &[f32], xshape: &[usize], perm: &[usize], out: &mut [f32]) {
+    let rank = xshape.len();
+    debug_assert_eq!(perm.len(), rank);
+    // Input strides (row-major), permuted to output-axis order: walking
+    // the output linearly advances the input index by in_stride[perm[d]]
+    // per step of output dim d.
+    let mut in_stride = vec![0usize; rank];
+    let mut s = 1usize;
+    for d in (0..rank).rev() {
+        in_stride[d] = s;
+        s *= xshape[d];
+    }
+    let out_shape: Vec<usize> = perm.iter().map(|&p| xshape[p]).collect();
+    let stride: Vec<usize> = perm.iter().map(|&p| in_stride[p]).collect();
+    debug_assert!(out.len() >= x.len());
+    let mut idx = vec![0usize; rank];
+    let mut src = 0usize;
+    for o in out.iter_mut().take(x.len()) {
+        *o = x[src];
+        // Odometer increment over the output index space.
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            src += stride[d];
+            if idx[d] < out_shape[d] {
+                break;
             }
+            src -= stride[d] * out_shape[d];
+            idx[d] = 0;
         }
     }
+}
+
+/// Contiguous crop: take `out_shape[d]` elements starting at `start[d]`.
+fn slice_crop(x: &Tensor, start: &[usize], out_shape: &[usize]) -> Tensor {
+    let mut out = Tensor::zeros(out_shape);
+    slice_into(x.data(), x.shape(), start, out_shape, out.data_mut());
+    out
+}
+
+fn slice_into(x: &[f32], xshape: &[usize], start: &[usize], out_shape: &[usize], out: &mut [f32]) {
+    let rank = xshape.len();
+    let mut in_stride = vec![0usize; rank];
+    let mut s = 1usize;
+    for d in (0..rank).rev() {
+        in_stride[d] = s;
+        s *= xshape[d];
+    }
+    let base: usize = start.iter().zip(&in_stride).map(|(&a, &b)| a * b).sum();
+    // Copy row-by-row over the innermost dim (contiguous in both layouts).
+    let inner = out_shape[rank - 1];
+    let rows: usize = out_shape[..rank - 1].iter().product();
+    let mut idx = vec![0usize; rank.max(1) - 1];
+    for r in 0..rows {
+        let mut src = base;
+        for (d, &i) in idx.iter().enumerate() {
+            src += i * in_stride[d];
+        }
+        out[r * inner..(r + 1) * inner].copy_from_slice(&x[src..src + inner]);
+        for d in (0..rank - 1).rev() {
+            idx[d] += 1;
+            if idx[d] < out_shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// Zero padding: `before[d]`/`after[d]` zeros around each dim.
+fn pad_zero(x: &Tensor, before: &[usize], after: &[usize]) -> Tensor {
+    let out_shape: Vec<usize> = x
+        .shape()
+        .iter()
+        .zip(before)
+        .zip(after)
+        .map(|((&s, &b), &a)| s + b + a)
+        .collect();
+    let mut out = Tensor::zeros(&out_shape);
+    pad_into(x.data(), x.shape(), before, &out_shape, out.data_mut());
+    out
+}
+
+/// Scatter `x` into the zero-filled `out` at offset `before` (out is
+/// cleared here, so the steady engine can reuse a dirty arena buffer).
+fn pad_into(x: &[f32], xshape: &[usize], before: &[usize], out_shape: &[usize], out: &mut [f32]) {
+    out.fill(0.0);
+    let rank = xshape.len();
+    let mut out_stride = vec![0usize; rank];
+    let mut s = 1usize;
+    for d in (0..rank).rev() {
+        out_stride[d] = s;
+        s *= out_shape[d];
+    }
+    let base: usize = before.iter().zip(&out_stride).map(|(&a, &b)| a * b).sum();
+    let inner = xshape[rank - 1];
+    let rows: usize = xshape[..rank - 1].iter().product();
+    let mut idx = vec![0usize; rank.max(1) - 1];
+    for r in 0..rows {
+        let mut dst = base;
+        for (d, &i) in idx.iter().enumerate() {
+            dst += i * out_stride[d];
+        }
+        out[dst..dst + inner].copy_from_slice(&x[r * inner..(r + 1) * inner]);
+        for d in (0..rank - 1).rev() {
+            idx[d] += 1;
+            if idx[d] < xshape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// Row lookup: `ids` (any shape, f32-encoded integer ids) against a
+/// `[vocab, d]` table → `ids.shape + [d]`. Out-of-range or non-integral
+/// ids are a loud error, not a clamp.
+fn embedding_lookup(ids: &Tensor, table: &Tensor) -> Result<Tensor> {
+    let (vocab, d) = (table.shape()[0], table.shape()[1]);
+    let mut shape = ids.shape().to_vec();
+    shape.push(d);
+    let mut out = Tensor::zeros(&shape);
+    embedding_into(ids.data(), table.data(), vocab, d, out.data_mut())?;
+    Ok(out)
+}
+
+fn embedding_into(ids: &[f32], table: &[f32], vocab: usize, d: usize, out: &mut [f32]) -> Result<()> {
+    debug_assert!(out.len() >= ids.len() * d);
+    for (i, &idf) in ids.iter().enumerate() {
+        let id = idf as isize;
+        if id < 0 || id as usize >= vocab || idf.fract() != 0.0 {
+            bail!("embedding id {idf} out of range for vocab {vocab}");
+        }
+        let row = id as usize;
+        out[i * d..(i + 1) * d].copy_from_slice(&table[row * d..(row + 1) * d]);
+    }
+    Ok(())
+}
+
+/// k×k/stride max pool with symmetric zero padding over NCHW (padding
+/// contributes no candidates — max over in-bounds taps only).
+fn max_pool(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    max_pool_into(x.data(), n, c, h, w, k, stride, pad, out.data_mut());
+    out
+}
+
+/// k×k/stride average pool with symmetric zero padding; windowed output
+/// shape `(h + 2*pad − k)/stride + 1` — the old `h/stride` shape ignored
+/// the kernel size and was wrong for every k ≠ stride.
+fn avg_pool(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    avg_pool_into(x.data(), n, c, h, w, k, stride, pad, out.data_mut());
     out
 }
 
@@ -922,10 +1164,15 @@ impl<'g> FusedExecutor<'g> {
     /// bands run on the persistent pool. Outputs stay in the arena; read
     /// them through [`ExecState::planned_slice`].
     ///
-    /// Ops outside the steady kernel set (movement/broadcast exotics,
-    /// grouped conv, batched matmul) fall back to the allocating
-    /// [`eval_op`] oracle and copy into their slot — numerically
-    /// identical, just not allocation-free.
+    /// The transformer set executes natively in-arena too: batched
+    /// `MatMul` (per-batch GEMMs on the blocked micro-kernel),
+    /// general-permutation `Transpose`, `Embedding`/`Gather` row lookup,
+    /// `Slice` and `Pad` — so the attention path (QK^T → scale → softmax
+    /// → AV) stays inside the workspace. Ops outside the steady kernel
+    /// set (grouped conv, concat/upsample/pixel-shuffle, broadcast, the
+    /// RoI gather form) fall back to the allocating [`eval_op`] oracle
+    /// and copy into their slot — numerically identical, just not
+    /// allocation-free.
     pub fn run_steady(&self, inputs: &[Tensor], ws: &mut Workspace) -> Result<()> {
         let state: &ExecState = &self.state;
         // Validate sources up front (allocation-free on the success path).
@@ -1257,17 +1504,61 @@ impl<'g> FusedExecutor<'g> {
                 }
                 Ok(())
             }
-            OpKind::MaxPool { k: 2, stride: 2 } => {
+            OpKind::MaxPool { k, stride, pad } => {
                 let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
                 let xs = &g.node(node.inputs[0]).shape;
-                maxpool2_into(x, xs[0], xs[1], xs[2], xs[3], out);
+                max_pool_into(x, xs[0], xs[1], xs[2], xs[3], *k, *stride, *pad, out);
                 Ok(())
             }
-            OpKind::AvgPool { k, stride } => {
+            OpKind::AvgPool { k, stride, pad } => {
                 let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
                 let xs = &g.node(node.inputs[0]).shape;
-                avg_pool_into(x, xs[0], xs[1], xs[2], xs[3], *k, *stride, out);
+                avg_pool_into(x, xs[0], xs[1], xs[2], xs[3], *k, *stride, *pad, out);
                 Ok(())
+            }
+            // ---- transformer set: every op of the attention path
+            // (QK^T → scale → softmax → AV), the token-embedding front and
+            // the movement ops run *in-arena* — sliced operands in, arena
+            // buffer out, per-batch GEMMs on the session's blocked
+            // micro-kernel and worker pool. The movement/lookup kernels
+            // are allocation-free; MatMul needs no *dedicated* workspace
+            // buffers but `gemm` still packs its panels internally, so
+            // batched matmul is not yet part of the zero-allocation
+            // guarantee (ROADMAP: prepacked/allocation-free attention
+            // GEMMs; the counting-allocator property in tests/steady.rs
+            // pins the conv/dense demo-cnn path only).
+            OpKind::MatMul => {
+                let (aid, bid) = (node.inputs[0], node.inputs[1]);
+                let a = steady_arg(g, self.ws, state, inputs, slots, group, prev, aid)?;
+                let b = steady_arg(g, self.ws, state, inputs, slots, group, prev, bid)?;
+                let (batch, m, k, n, bb) =
+                    batched_matmul_dims(&g.node(aid).shape, &g.node(bid).shape)?;
+                batched_matmul_into(a, b, batch, m, k, n, bb, &state.gemm_cfg, out);
+                Ok(())
+            }
+            OpKind::Transpose { perm } => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                transpose_into(x, &g.node(node.inputs[0]).shape, perm, out);
+                Ok(())
+            }
+            OpKind::Slice { start } => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                slice_into(x, &g.node(node.inputs[0]).shape, start, &node.shape, out);
+                Ok(())
+            }
+            OpKind::Pad { before, .. } => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                pad_into(x, &g.node(node.inputs[0]).shape, before, &node.shape, out);
+                Ok(())
+            }
+            OpKind::Embedding | OpKind::Gather
+                if node.inputs.len() == 2 && g.node(node.inputs[1]).shape.len() == 2 =>
+            {
+                let ids = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                let table =
+                    steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[1])?;
+                let ts = &g.node(node.inputs[1]).shape;
+                embedding_into(ids, table, ts[0], ts[1], out)
             }
             OpKind::GlobalAvgPool => {
                 let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
@@ -1374,18 +1665,43 @@ fn bn_into(x: &[f32], w: &[f32], c: usize, xshape: &[usize], out: &mut [f32]) {
     }
 }
 
-/// 2x2/2 max pool over flat NCHW into `out`.
-fn maxpool2_into(x: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f32]) {
-    let (oh, ow) = (h / 2, w / 2);
+/// General k×k/stride max pool with symmetric zero padding over flat NCHW
+/// into `out` (the `{k:2, stride:2}`-only special case is gone — the
+/// window max is taken over in-bounds taps, so padding never wins).
+#[allow(clippy::too_many_arguments)]
+fn max_pool_into(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [f32],
+) {
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
     for b in 0..n {
         for ci in 0..c {
             let in_base = (b * c + ci) * h * w;
             let out_base = (b * c + ci) * oh * ow;
             for y in 0..oh {
                 for xx in 0..ow {
-                    let i0 = in_base + (2 * y) * w + 2 * xx;
-                    let i1 = in_base + (2 * y + 1) * w + 2 * xx;
-                    let m = x[i0].max(x[i0 + 1]).max(x[i1]).max(x[i1 + 1]);
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..k {
+                        let iy = (y * stride + dy) as isize - pad as isize;
+                        if iy < 0 || iy as usize >= h {
+                            continue;
+                        }
+                        for dx in 0..k {
+                            let ix = (xx * stride + dx) as isize - pad as isize;
+                            if ix < 0 || ix as usize >= w {
+                                continue;
+                            }
+                            m = m.max(x[in_base + iy as usize * w + ix as usize]);
+                        }
+                    }
                     out[out_base + y * ow + xx] = m;
                 }
             }
@@ -1393,8 +1709,8 @@ fn maxpool2_into(x: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f
     }
 }
 
-/// k×k/stride average pool over flat NCHW into `out` (partial windows
-/// average over in-bounds taps, matching [`eval_op`]).
+/// k×k/stride average pool with symmetric zero padding over flat NCHW into
+/// `out` (windows average over in-bounds taps only, matching [`eval_op`]).
 #[allow(clippy::too_many_arguments)]
 fn avg_pool_into(
     x: &[f32],
@@ -1404,9 +1720,11 @@ fn avg_pool_into(
     w: usize,
     k: usize,
     stride: usize,
+    pad: usize,
     out: &mut [f32],
 ) {
-    let (oh, ow) = (h / stride, w / stride);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
     for b in 0..n {
         for ci in 0..c {
             let in_base = (b * c + ci) * h * w;
@@ -1416,16 +1734,20 @@ fn avg_pool_into(
                     let mut s = 0.0;
                     let mut cnt = 0;
                     for dy in 0..k {
+                        let iy = (y * stride + dy) as isize - pad as isize;
+                        if iy < 0 || iy as usize >= h {
+                            continue;
+                        }
                         for dx in 0..k {
-                            let iy = y * stride + dy;
-                            let ix = xx * stride + dx;
-                            if iy < h && ix < w {
-                                s += x[in_base + iy * w + ix];
-                                cnt += 1;
+                            let ix = (xx * stride + dx) as isize - pad as isize;
+                            if ix < 0 || ix as usize >= w {
+                                continue;
                             }
+                            s += x[in_base + iy as usize * w + ix as usize];
+                            cnt += 1;
                         }
                     }
-                    out[out_base + y * ow + xx] = s / cnt as f32;
+                    out[out_base + y * ow + xx] = s / cnt.max(1) as f32;
                 }
             }
         }
@@ -1508,8 +1830,9 @@ fn apply_unary_slice_inplace(op: &OpKind, s: &mut [f32]) {
             }
         }
         OpKind::Sqrt => {
+            // IEEE: sqrt(negative) is NaN, same as the eval_op kernel.
             for v in s {
-                *v = v.max(0.0).sqrt();
+                *v = v.sqrt();
             }
         }
         _ => unreachable!("not a unary in-place op"),
@@ -1533,7 +1856,7 @@ mod tests {
         b.conv_bn_act(8, 3, 1, 1, Act::Relu);
         let t = b.cur();
         b.add_residual(skip, t);
-        b.maxpool(2, 2);
+        b.maxpool(2, 2, 0);
         b.gap();
         b.dense(10);
         b.finish()
@@ -1830,5 +2153,193 @@ mod tests {
             );
             assert!(g2.operator_count() < g.operator_count());
         });
+    }
+
+    /// Satellite regression: `Sqrt` propagates NaN for negative inputs per
+    /// IEEE instead of clamping to 0 — on both the eval_op kernel and the
+    /// in-place fused/steady kernel.
+    #[test]
+    fn sqrt_propagates_nan_per_ieee() {
+        let mut g = Graph::new("sq");
+        let x = g.input("x", &[4]);
+        let s = g.add("sqrt", OpKind::Sqrt, vec![x], vec![4]);
+        g.outputs = vec![s];
+        let ws = WeightStore::new();
+        let xin = Tensor::from_vec(&[4], vec![4.0, 0.0, -1.0, -0.25]);
+        let y = Executor::new(&g, &ws).run(&[xin]).unwrap();
+        assert_eq!(y[0].data()[0], 2.0);
+        assert_eq!(y[0].data()[1], 0.0);
+        assert!(y[0].data()[2].is_nan(), "sqrt(-1) must be NaN, got {}", y[0].data()[2]);
+        assert!(y[0].data()[3].is_nan());
+        let mut buf = vec![9.0f32, -9.0];
+        apply_unary_slice_inplace(&OpKind::Sqrt, &mut buf);
+        assert_eq!(buf[0], 3.0);
+        assert!(buf[1].is_nan(), "in-place sqrt kernel still clamps");
+    }
+
+    /// Satellite regression: pooling with k ≠ stride uses windowed
+    /// `(h−k)/stride+1` output semantics in builder + executor (the old
+    /// shape was `h/stride`, silently wrong for e.g. k=3, s=1).
+    #[test]
+    fn pools_with_k_ne_stride_use_windowed_shapes() {
+        let mut rng = Rng::new(61);
+        for (k, stride, pad) in [(3usize, 1usize, 0usize), (3, 1, 1), (3, 2, 1), (5, 1, 2), (2, 1, 0)] {
+            let mut b = NetBuilder::new("p", &[1, 2, 8, 8]);
+            b.avgpool(k, stride, pad);
+            let g = b.finish();
+            let want_hw = (8 + 2 * pad - k) / stride + 1;
+            assert_eq!(
+                g.node(g.outputs[0]).shape,
+                vec![1, 2, want_hw, want_hw],
+                "builder shape for k={k} s={stride} p={pad}"
+            );
+            let ws = WeightStore::new();
+            let x = Tensor::randn(&[1, 2, 8, 8], 1.0, &mut rng);
+            let y = Executor::new(&g, &ws).run(&[x.clone()]).unwrap();
+            assert_eq!(y[0].shape(), &[1, 2, want_hw, want_hw]);
+            // Hand-rolled window average at one interior site.
+            let mut s = 0.0;
+            let mut cnt = 0;
+            for dy in 0..k {
+                for dx in 0..k {
+                    let iy = dy as isize - pad as isize;
+                    let ix = dx as isize - pad as isize;
+                    if iy >= 0 && ix >= 0 && (iy as usize) < 8 && (ix as usize) < 8 {
+                        s += x.at(&[0, 1, iy as usize, ix as usize]);
+                        cnt += 1;
+                    }
+                }
+            }
+            let d = (y[0].at(&[0, 1, 0, 0]) - s / cnt as f32).abs();
+            assert!(d < 1e-5, "avg window wrong for k={k} s={stride} p={pad}: {d}");
+        }
+    }
+
+    /// Satellite: the general max-pool kernel replaces the {k:2, s:2}
+    /// special case — it must agree with the old `maxpool2` on that shape
+    /// and produce correct maxima for k ≠ stride.
+    #[test]
+    fn general_maxpool_kernel() {
+        let mut rng = Rng::new(62);
+        let x = Tensor::randn(&[2, 3, 8, 8], 1.0, &mut rng);
+        let got = max_pool(&x, 2, 2, 0);
+        assert_eq!(got.data(), x.maxpool2().data(), "k=2/s=2 diverges from maxpool2");
+        // k=3, s=1, pad=1: same-size output; interior site is a 3x3 max.
+        let y = max_pool(&x, 3, 1, 1);
+        assert_eq!(y.shape(), &[2, 3, 8, 8]);
+        let mut m = f32::NEG_INFINITY;
+        for dy in 0..3 {
+            for dx in 0..3 {
+                m = m.max(x.at(&[1, 2, 2 + dy, 3 + dx]));
+            }
+        }
+        assert_eq!(y.at(&[1, 2, 3, 4]), m);
+        // Executor path with a k≠stride pool.
+        let mut b = NetBuilder::new("mp", &[1, 2, 9, 9]);
+        b.maxpool(3, 2, 1);
+        let g = b.finish();
+        let x = Tensor::randn(&[1, 2, 9, 9], 1.0, &mut rng);
+        let y = Executor::new(&g, &WeightStore::new()).run(&[x]).unwrap();
+        assert_eq!(y[0].shape(), &[1, 2, 5, 5]);
+    }
+
+    /// The movement kernels: general transpose (rank 2/3/4 perms), slice
+    /// crop and zero pad, checked against hand indexing.
+    #[test]
+    fn movement_kernels_match_hand_indexing() {
+        let mut rng = Rng::new(63);
+        let x = Tensor::randn(&[2, 3, 4, 5], 1.0, &mut rng);
+        // Head-split style perm [0,2,1,3].
+        let t = transpose_nd(&x, &[0, 2, 1, 3]);
+        assert_eq!(t.shape(), &[2, 4, 3, 5]);
+        for a in 0..2 {
+            for bb in 0..3 {
+                for c in 0..4 {
+                    for d in 0..5 {
+                        assert_eq!(t.at(&[a, c, bb, d]), x.at(&[a, bb, c, d]));
+                    }
+                }
+            }
+        }
+        // Last-two swap [0,1,3,2] (the K^T form).
+        let t = transpose_nd(&x, &[0, 1, 3, 2]);
+        assert_eq!(t.shape(), &[2, 3, 5, 4]);
+        assert_eq!(t.at(&[1, 2, 4, 3]), x.at(&[1, 2, 3, 4]));
+        // Matrix transpose round-trips.
+        let m = Tensor::randn(&[7, 3], 1.0, &mut rng);
+        let mt = transpose_nd(&m, &[1, 0]);
+        assert_eq!(transpose_nd(&mt, &[1, 0]).data(), m.data());
+
+        // Slice: a [1,2,2] window starting at [1,1,2].
+        let s = slice_crop(&x.reshape(&[2, 3, 20]), &[1, 1, 2], &[1, 2, 2]);
+        assert_eq!(s.shape(), &[1, 2, 2]);
+        let xr = x.reshape(&[2, 3, 20]);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(s.at(&[0, i, j]), xr.at(&[1, 1 + i, 2 + j]));
+            }
+        }
+
+        // Pad: zeros outside, payload shifted by `before`.
+        let p = pad_zero(&m, &[1, 2], &[0, 1]);
+        assert_eq!(p.shape(), &[8, 6]);
+        assert_eq!(p.at(&[0, 0]), 0.0);
+        assert_eq!(p.at(&[1, 2]), m.at(&[0, 0]));
+        assert_eq!(p.at(&[7, 4]), m.at(&[6, 2]));
+        assert_eq!(p.at(&[7, 5]), 0.0);
+        let total: f32 = p.data().iter().sum();
+        let want: f32 = m.data().iter().sum();
+        assert!((total - want).abs() < 1e-4, "pad invented mass");
+    }
+
+    /// Embedding row lookup: correct rows, loud errors on bad ids.
+    #[test]
+    fn embedding_lookup_rows_and_errors() {
+        let table = Tensor::from_vec(&[3, 2], vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        let ids = Tensor::from_vec(&[2, 2], vec![2.0, 0.0, 1.0, 2.0]);
+        let y = embedding_lookup(&ids, &table).unwrap();
+        assert_eq!(y.shape(), &[2, 2, 2]);
+        assert_eq!(y.data(), &[20.0, 21.0, 0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        assert!(embedding_lookup(&Tensor::from_vec(&[1], vec![3.0]), &table).is_err());
+        assert!(embedding_lookup(&Tensor::from_vec(&[1], vec![-1.0]), &table).is_err());
+        assert!(embedding_lookup(&Tensor::from_vec(&[1], vec![0.5]), &table).is_err());
+    }
+
+    /// Batched matmul over rank-3 and rank-4 leading dims (and the rank-2
+    /// broadcast RHS) against a hand-rolled triple loop.
+    #[test]
+    fn batched_matmul_matches_naive_loops() {
+        let mut rng = Rng::new(64);
+        // [2, 3, 4, 5] x [2, 3, 5, 6] — the attention shape class.
+        let a = Tensor::randn(&[2, 3, 4, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[2, 3, 5, 6], 1.0, &mut rng);
+        let y = batched_matmul(&a, &b).unwrap();
+        assert_eq!(y.shape(), &[2, 3, 4, 6]);
+        for b0 in 0..2 {
+            for b1 in 0..3 {
+                for i in 0..4 {
+                    for j in 0..6 {
+                        let mut acc = 0.0f32;
+                        for kk in 0..5 {
+                            acc += a.at(&[b0, b1, i, kk]) * b.at(&[b0, b1, kk, j]);
+                        }
+                        let d = (y.at(&[b0, b1, i, j]) - acc).abs();
+                        assert!(d < 1e-4, "rank-4 matmul off by {d}");
+                    }
+                }
+            }
+        }
+        // Rank-2 RHS broadcast: [2, 3, 4, 5] x [5, 6].
+        let w = Tensor::randn(&[5, 6], 1.0, &mut rng);
+        let y = batched_matmul(&a, &w).unwrap();
+        assert_eq!(y.shape(), &[2, 3, 4, 6]);
+        let mut acc = 0.0f32;
+        for kk in 0..5 {
+            acc += a.at(&[1, 2, 3, kk]) * w.at(&[kk, 4]);
+        }
+        assert!((y.at(&[1, 2, 3, 4]) - acc).abs() < 1e-4);
+        // Mismatched inner or leading dims are loud errors.
+        assert!(batched_matmul(&a, &Tensor::zeros(&[2, 3, 4, 6])).is_err());
+        assert!(batched_matmul(&a, &Tensor::zeros(&[2, 2, 5, 6])).is_err());
     }
 }

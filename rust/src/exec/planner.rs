@@ -175,6 +175,15 @@ impl MemoryPlan {
 /// buffers. Computed once per `Compiler::compile`; [`Workspace::new`]
 /// turns it into real buffers that `infer()` borrows mutably on every
 /// call, so steady state allocates nothing.
+///
+/// The transformer kernel set (batched MatMul, Transpose, Embedding,
+/// Slice, Pad) needs **no dedicated scratch**: every operand is read
+/// straight from a slot/group buffer and every result is written straight
+/// into one, so the attention path (QK^T → scale → softmax → AV) is
+/// covered by `slot_elems`/`group_elems` alone — the per-op `out_elems`
+/// maxima this pass already takes over all non-source nodes. (MatMul's
+/// GEMM still packs panels *inside* `gemm`, so batched matmul is outside
+/// the zero-allocation guarantee — see ROADMAP.)
 #[derive(Debug, Clone, Default)]
 pub struct WorkspaceSpec {
     /// Per-slot f32 capacity (from [`MemoryPlan::slot_elems`]).
@@ -382,6 +391,34 @@ mod tests {
                 assert!(materialize[d]);
             }
         }
+    }
+
+    /// The transformer zoo goes through the same liveness pass: every
+    /// planned attention intermediate (rank-3 scores, probs, context)
+    /// fits its slot, and the attention path needs no conv scratch — the
+    /// arena is slots + group buffers only.
+    #[test]
+    fn workspace_sizes_cover_the_attention_path() {
+        let g = crate::graph::zoo::by_name("demo-transformer", 1);
+        let plan = MemoryPlan::straight_line(&g);
+        for id in g.compute_nodes() {
+            let s = plan.slot_of[id].expect("straight line plans every value");
+            assert!(
+                plan.slot_elems[s] >= g.node(id).out_elems() as usize,
+                "slot {s} too small for node {id}"
+            );
+        }
+        let materialize = vec![true; g.nodes.len()];
+        let spec = WorkspaceSpec::for_graph(&g, &plan, &materialize);
+        assert_eq!(spec.patches_elems, 0, "attention path must need no im2col scratch");
+        assert_eq!(spec.gemm_out_elems, 0);
+        // Scores/probs ([1, 32, 32]) are among the planned values.
+        let scores = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, OpKind::Softmax))
+            .expect("transformer has a softmax");
+        assert!(spec.slot_elems[plan.slot_of[scores.id].unwrap()] >= 32 * 32);
     }
 
     #[test]

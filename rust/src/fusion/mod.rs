@@ -17,7 +17,7 @@
 use std::collections::BTreeSet;
 
 use crate::graph::ops::{fuse_class, fused_mapping, FuseClass, MappingType};
-use crate::graph::{Graph, NodeId, OpKind};
+use crate::graph::{Graph, NodeId};
 
 /// One fused group: a set of nodes executed as a single kernel.
 #[derive(Debug, Clone)]
@@ -101,7 +101,10 @@ impl Default for FusionConfig {
 /// order; each not-yet-fused node seeds a group, which is grown forward
 /// along producer→consumer edges while (a) the Table 1 algebra allows it,
 /// (b) the producer's value does not escape the group (no recompute), and
-/// (c) the group stays convex (no external path re-entering the group).
+/// (c) every other input of the candidate is already fused into this or
+/// an earlier-seeded group (which keeps the flattened group order
+/// topological — the property both executors execute by — and implies
+/// the group is convex).
 pub fn fuse(g: &Graph, cfg: &FusionConfig) -> FusionPlan {
     let users = g.users();
     let mut group_of: Vec<Option<usize>> = vec![None; g.nodes.len()];
@@ -155,18 +158,23 @@ pub fn fuse(g: &Graph, cfg: &FusionConfig) -> FusionPlan {
             if !fusable {
                 break;
             }
-            // Convexity: every *other* data input of `next` must not be a
-            // descendant of the group (ids are topological, so any input
-            // with id < seed is safe; inputs inside the group are fine;
-            // inputs between seed and next that are outside the group could
-            // create a cycle through the fused kernel — reject those).
-            let convex = g.node(next).inputs.iter().all(|&i| {
-                i <= seed
-                    || group_of[i] == Some(gi)
-                    || matches!(g.node(i).op, OpKind::Weight)
-                    || !depends_on_group(g, i, gi, &group_of)
-            });
-            if !convex {
+            // Order safety (which implies convexity): every non-source
+            // input of `next` must already be fused — into this group or
+            // into one seeded earlier. Groups execute sorted by first
+            // member, and seeds are visited in id order, so an assigned
+            // input's group always runs before this one. An *unassigned*
+            // input (id > seed, like the position-broadcast feeding a
+            // transformer's embedding residual) would land in a
+            // later-sorted group and break the flattened topological
+            // order the executors require — the old check only rejected
+            // cycles, which let those groups form and then fail at run
+            // time with "fusion order is not topological".
+            let safe = g
+                .node(next)
+                .inputs
+                .iter()
+                .all(|&i| group_of[i].is_some() || g.node(i).op.is_source());
+            if !safe {
                 break;
             }
             mapping = fused_mapping(mapping, next_map).unwrap_or(next_map);
@@ -179,22 +187,6 @@ pub fn fuse(g: &Graph, cfg: &FusionConfig) -> FusionPlan {
     }
 
     FusionPlan { groups, candidates, accepted, profile_rejected }
-}
-
-/// Does node `id` transitively depend on any member of group `gi`?
-fn depends_on_group(g: &Graph, id: NodeId, gi: usize, group_of: &[Option<usize>]) -> bool {
-    let mut stack = vec![id];
-    let mut seen = BTreeSet::new();
-    while let Some(v) = stack.pop() {
-        if !seen.insert(v) {
-            continue;
-        }
-        if group_of[v] == Some(gi) {
-            return true;
-        }
-        stack.extend(&g.node(v).inputs);
-    }
-    false
 }
 
 /// Fusion-opportunity count: number of producer→consumer pairs of compute
@@ -297,6 +289,40 @@ mod tests {
                     w[1],
                     w[0]
                 );
+            }
+        }
+    }
+
+    /// The flattened group order (groups sorted by first member, members
+    /// in chain order) must be topological — the property both executors
+    /// run by. The embedding + position-broadcast residual of every
+    /// transformer used to break this: the Add joined the embedding's
+    /// group while the broadcast (id between seed and Add) landed in a
+    /// *later*-sorted group.
+    #[test]
+    fn flattened_group_order_is_topological() {
+        for name in ["demo-transformer", "tinybert", "mobilenet-v2", "u-net"] {
+            let g = by_name(name, 1);
+            let p = plan(&g);
+            let mut order: Vec<usize> = (0..p.groups.len()).collect();
+            order.sort_by_key(|&gi| p.groups[gi].nodes[0]);
+            let mut done = vec![false; g.nodes.len()];
+            for n in &g.nodes {
+                if n.op.is_source() {
+                    done[n.id] = true;
+                }
+            }
+            for &gi in &order {
+                for &id in &p.groups[gi].nodes {
+                    for &i in &g.node(id).inputs {
+                        assert!(
+                            done[i],
+                            "{name}: node {id} runs before its input {i} — \
+                             flattened fusion order is not topological"
+                        );
+                    }
+                    done[id] = true;
+                }
             }
         }
     }

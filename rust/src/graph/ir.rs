@@ -38,11 +38,23 @@ pub struct Graph {
     pub name: String,
     pub nodes: Vec<Node>,
     pub outputs: Vec<NodeId>,
+    /// Weight-node name → fixed scalar value for weights that are really
+    /// *constants* the frontend baked into the graph (e.g. the `sqrt(d_k)`
+    /// attention divisor an exporter emits as an initializer).
+    /// [`crate::graph::WeightStore::init_random`] honors these instead of
+    /// drawing random values — a random "constant" would change semantics
+    /// (and a negative one would make `Sqrt` produce NaN).
+    pub consts: BTreeMap<String, f32>,
 }
 
 impl Graph {
     pub fn new(name: &str) -> Graph {
-        Graph { name: name.to_string(), nodes: Vec::new(), outputs: Vec::new() }
+        Graph {
+            name: name.to_string(),
+            nodes: Vec::new(),
+            outputs: Vec::new(),
+            consts: BTreeMap::new(),
+        }
     }
 
     /// Append a node; inputs must already exist (ids are topological by
@@ -64,6 +76,14 @@ impl Graph {
     /// Add a weight source.
     pub fn weight(&mut self, name: &str, shape: &[usize]) -> NodeId {
         self.add(name, OpKind::Weight, vec![], shape.to_vec())
+    }
+
+    /// Add a 1-element weight holding a graph constant. The value is
+    /// recorded in [`Graph::consts`] so weight initialization reproduces
+    /// it (names survive rewriting; node ids do not).
+    pub fn const_scalar(&mut self, name: &str, value: f32) -> NodeId {
+        self.consts.insert(name.to_string(), value);
+        self.weight(name, &[1])
     }
 
     pub fn node(&self, id: NodeId) -> &Node {
@@ -207,6 +227,88 @@ impl Graph {
             }
             if n.shape.iter().any(|&d| d == 0) {
                 return Err(format!("node {} has zero dim", i));
+            }
+            // Movement-op payloads must be consistent with the recorded
+            // input/output shapes — a wrong perm dies here, not deep in a
+            // kernel.
+            match &n.op {
+                OpKind::Transpose { perm } => {
+                    let xs = &self.nodes[n.inputs[0]].shape;
+                    let mut seen = vec![false; xs.len()];
+                    for &p in perm {
+                        if p >= xs.len() || seen[p] {
+                            return Err(format!(
+                                "node {} transpose perm {:?} is not a permutation of rank {}",
+                                i, perm, xs.len()
+                            ));
+                        }
+                        seen[p] = true;
+                    }
+                    if perm.len() != xs.len() {
+                        return Err(format!(
+                            "node {} transpose perm {:?} is not a permutation of rank {}",
+                            i, perm, xs.len()
+                        ));
+                    }
+                    let want: Vec<usize> = perm.iter().map(|&p| xs[p]).collect();
+                    if want != n.shape {
+                        return Err(format!(
+                            "node {} transpose shape {:?} != perm {:?} of {:?}",
+                            i, n.shape, perm, xs
+                        ));
+                    }
+                }
+                OpKind::Slice { start } => {
+                    let xs = &self.nodes[n.inputs[0]].shape;
+                    if start.len() != xs.len()
+                        || n.shape.len() != xs.len()
+                        || start.iter().zip(&n.shape).zip(xs).any(|((&s, &o), &x)| s + o > x)
+                    {
+                        return Err(format!("node {} slice start {:?} + {:?} exceeds {:?}", i, start, n.shape, xs));
+                    }
+                }
+                OpKind::MaxPool { k, stride, pad } | OpKind::AvgPool { k, stride, pad } => {
+                    // pad < k guarantees every window overlaps the data
+                    // (first window reaches index k-1-pad ≥ 0; the last
+                    // window starts at most h+pad-k < h), so the max
+                    // kernel can never emit -inf for an all-padding
+                    // window and the avg kernel never divides by zero.
+                    if *k == 0 || *stride == 0 || pad >= k {
+                        return Err(format!(
+                            "node {} pool k={} stride={} pad={} invalid (need k, stride > 0 and pad < k)",
+                            i, k, stride, pad
+                        ));
+                    }
+                    // The pool kernels are strictly NCHW; higher-rank
+                    // pools must be decomposed (fold extra dims into
+                    // channels — see the video zoo's pool3d).
+                    if self.nodes[n.inputs[0]].shape.len() != 4 {
+                        return Err(format!(
+                            "node {} pools a rank-{} tensor (pools are NCHW-only)",
+                            i,
+                            self.nodes[n.inputs[0]].shape.len()
+                        ));
+                    }
+                }
+                OpKind::Pad { before, after } => {
+                    let xs = &self.nodes[n.inputs[0]].shape;
+                    let ok = before.len() == xs.len()
+                        && after.len() == xs.len()
+                        && n.shape.len() == xs.len()
+                        && xs
+                            .iter()
+                            .zip(before)
+                            .zip(after)
+                            .zip(&n.shape)
+                            .all(|(((&x, &b), &a), &o)| x + b + a == o);
+                    if !ok {
+                        return Err(format!(
+                            "node {} pad ({:?}, {:?}) of {:?} != {:?}",
+                            i, before, after, xs, n.shape
+                        ));
+                    }
+                }
+                _ => {}
             }
         }
         for &o in &self.outputs {

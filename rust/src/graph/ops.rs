@@ -147,15 +147,24 @@ pub enum OpKind {
     /// present, overrides with per-channel scale).
     Scale { mul: f64, add: f64 },
     Softmax,
-    MaxPool { k: usize, stride: usize },
-    AvgPool { k: usize, stride: usize },
+    /// Windowed pooling: `out = (h + 2*pad - k)/stride + 1` per spatial
+    /// dim (conv_out semantics — a k≠stride window is *not* `h/stride`).
+    MaxPool { k: usize, stride: usize, pad: usize },
+    AvgPool { k: usize, stride: usize, pad: usize },
     GlobalAvgPool,
     /// Layout / movement ops (Reorganize).
     Reshape,
-    Transpose,
+    /// General axis permutation: `out.shape[i] = in.shape[perm[i]]`
+    /// (NumPy `transpose(x, axes=perm)`). The perm is explicit on the op —
+    /// inferring it from shapes is ambiguous whenever two dims are equal,
+    /// which is exactly the attention case (seq == seq).
+    Transpose { perm: Vec<usize> },
     Concat,
-    Slice,
-    Pad,
+    /// Contiguous crop: per-dim start offsets; the extent of each dim is
+    /// the node's output shape.
+    Slice { start: Vec<usize> },
+    /// Zero padding: per-dim (before, after) element counts.
+    Pad { before: Vec<usize>, after: Vec<usize> },
     Flatten,
     /// Shuffle ops.
     ChannelShuffle { groups: usize },
@@ -180,7 +189,7 @@ impl OpKind {
             | Softmax | MaxPool { .. } | AvgPool { .. } | GlobalAvgPool | PostProcess => ManyToMany,
             BatchNorm | Bias | LayerNorm | Activation(_) | Add | Sub | Mul | Div
             | Pow { .. } | Sqrt | Scale { .. } => OneToOne,
-            Reshape | Transpose | Concat | Slice | Pad | Flatten => Reorganize,
+            Reshape | Transpose { .. } | Concat | Slice { .. } | Pad { .. } | Flatten => Reorganize,
             ChannelShuffle { .. } | PixelShuffle { .. } | Gather => Shuffle,
             Upsample { .. } | Broadcast | Embedding => OneToMany,
         }
@@ -234,10 +243,10 @@ impl OpKind {
             AvgPool { .. } => "avg_pool",
             GlobalAvgPool => "global_avg_pool",
             Reshape => "reshape",
-            Transpose => "transpose",
+            Transpose { .. } => "transpose",
             Concat => "concat",
-            Slice => "slice",
-            Pad => "pad",
+            Slice { .. } => "slice",
+            Pad { .. } => "pad",
             Flatten => "flatten",
             ChannelShuffle { .. } => "channel_shuffle",
             PixelShuffle { .. } => "pixel_shuffle",
@@ -311,7 +320,7 @@ mod tests {
         assert_eq!(OpKind::Softmax.mapping(), ManyToMany);
         assert_eq!(OpKind::ChannelShuffle { groups: 2 }.mapping(), Shuffle);
         assert_eq!(OpKind::Upsample { r: 2 }.mapping(), OneToMany);
-        assert_eq!(OpKind::Transpose.mapping(), Reorganize);
+        assert_eq!(OpKind::Transpose { perm: vec![1, 0] }.mapping(), Reorganize);
         assert_eq!(OpKind::Activation(Act::Gelu).mapping(), OneToOne);
     }
 }

@@ -30,7 +30,12 @@ impl WeightStore {
             if matches!(n.op, OpKind::Weight) {
                 let fan_in: usize = n.shape.iter().skip(1).product::<usize>().max(1);
                 let std = 1.0 / (fan_in as f32).sqrt();
-                let t = if n.shape.len() == 2 && n.shape[0] == 2 {
+                let t = if let Some(&v) = g.consts.get(&n.name) {
+                    // Graph constants (e.g. the attention sqrt(d_k)
+                    // divisor) keep their baked value — randomizing a
+                    // constant changes semantics.
+                    Tensor::full(&n.shape, v)
+                } else if n.shape.len() == 2 && n.shape[0] == 2 {
                     // BatchNorm/LayerNorm [2, c] params: scale≈1, shift≈0.
                     let c = n.shape[1];
                     let mut data = Vec::with_capacity(2 * c);

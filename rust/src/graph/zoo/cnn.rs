@@ -11,7 +11,7 @@ use crate::graph::ops::Act;
 pub fn resnet50(batch: usize) -> Graph {
     let mut b = NetBuilder::new("resnet-50", &[batch, 3, 224, 224]);
     b.conv_bn_act(64, 7, 2, 3, Act::Relu);
-    b.maxpool(3, 2);
+    b.maxpool(3, 2, 1);
     // (width, blocks, first-stride) per stage.
     let stages: [(usize, usize, usize); 4] = [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)];
     for &(w, blocks, stride1) in stages.iter() {
@@ -52,7 +52,7 @@ pub fn vgg16(batch: usize) -> Graph {
             b.bias();
             b.act(Act::Relu);
         }
-        b.maxpool(2, 2);
+        b.maxpool(2, 2, 0);
     }
     b.flatten();
     b.dense(4096);

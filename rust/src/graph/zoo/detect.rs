@@ -99,7 +99,9 @@ pub fn yolo_v4(batch: usize) -> Graph {
         b.set_cur(spp_in);
         let s = b.shape();
         let name = format!("spp_pool{k}");
-        let id = b.g.add(&name, OpKind::MaxPool { k, stride: 1 }, vec![spp_in], s);
+        // SPP pools are "same"-padded (k odd, stride 1) so the branches
+        // concat at equal spatial size.
+        let id = b.g.add(&name, OpKind::MaxPool { k, stride: 1, pad: k / 2 }, vec![spp_in], s);
         pools.push(id);
     }
     b.concat(&pools);
@@ -162,15 +164,20 @@ pub fn pointpillar(batch: usize) -> Graph {
     // 1x1-conv formulation (the standard deployment form).
     let mut b = NetBuilder::new("pointpillar", &[batch, 9, 12000, 32]);
     b.conv_bn_act(64, 1, 1, 0, Act::Relu);
-    // Max over points → [batch, 64, 12000, 1], then scatter to BEV.
+    // Reduce over the 32 points of each pillar → [batch, 64, 12000, 1].
+    // The real op is a per-pillar *max* over the points axis only — a 1×32
+    // rectangular window the square-pool vocabulary cannot express (the
+    // old `MaxPool { k: 32, stride: 32 }` node declared the per-pillar
+    // shape while the op semantics said 32×32, an inconsistency the
+    // now-general pool kernel would reject at run time). Model it as a
+    // reshape to one pillar per row + global pool + reshape back: same
+    // reduction structure and traffic, mean instead of max (this is a
+    // structural model; the scatter right after is estimate-only anyway).
     let s = b.shape();
-    let pooled = b.g.add(
-        "point_max",
-        OpKind::MaxPool { k: 32, stride: 32 },
-        vec![b.cur()],
-        vec![s[0], s[1], s[2], 1],
-    );
-    b.set_cur(pooled);
+    let (pillars, points) = (s[2], s[3]);
+    b.reshape(&[s[0], s[1] * pillars, 1, points]);
+    b.gap();
+    b.reshape(&[s[0], s[1], pillars, 1]);
     let scatter = b.g.add(
         "scatter_bev",
         OpKind::Gather,
@@ -314,7 +321,7 @@ fn rcnn(batch: usize, with_mask: bool) -> Graph {
     let mut b = NetBuilder::new(name, &[batch, 3, 800, 800]);
     // ResNet-50 trunk with taps (reuse stage logic inline).
     b.conv_bn_act(64, 7, 2, 3, Act::Relu);
-    b.maxpool(3, 2);
+    b.maxpool(3, 2, 1);
     let mut taps = Vec::new();
     for &(w, blocks, stride1) in &[(64usize, 3usize, 1usize), (128, 4, 2), (256, 6, 2), (512, 3, 2)] {
         for bi in 0..blocks {

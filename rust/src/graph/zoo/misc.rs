@@ -17,9 +17,9 @@ pub fn demo_cnn(batch: usize) -> Graph {
     b.conv_bn_act(16, 3, 1, 1, Act::Relu);
     let t = b.cur();
     b.add_residual(skip, t);
-    b.maxpool(2, 2);
+    b.maxpool(2, 2, 0);
     b.conv_bn_act(32, 3, 1, 1, Act::Relu);
-    b.maxpool(2, 2);
+    b.maxpool(2, 2, 0);
     b.gap();
     b.dense(8);
     b.finish()
@@ -37,7 +37,7 @@ pub fn unet(batch: usize) -> Graph {
         b.conv_bn_act(w, 3, 1, 1, Act::Relu);
         b.conv_bn_act(w, 3, 1, 1, Act::Relu);
         skips.push(b.cur());
-        b.maxpool(2, 2);
+        b.maxpool(2, 2, 0);
         w *= 2;
     }
     // Bottleneck.

@@ -180,31 +180,35 @@ impl NetBuilder {
         self.act(a)
     }
 
-    /// Max pool k×k stride s.
-    pub fn maxpool(&mut self, k: usize, stride: usize) -> NodeId {
+    /// Max pool k×k stride s with symmetric zero padding. Output spatial
+    /// size is `(h + 2*pad − k)/stride + 1` (conv_out semantics) — the old
+    /// `h/stride` shape ignored the kernel size and was wrong whenever
+    /// k ≠ stride (e.g. k=3, s=1).
+    pub fn maxpool(&mut self, k: usize, stride: usize, pad: usize) -> NodeId {
         let s = self.shape();
         let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
         let name = self.uid("maxpool");
         let id = self.g.add(
             &name,
-            OpKind::MaxPool { k, stride },
+            OpKind::MaxPool { k, stride, pad },
             vec![self.cur],
-            vec![n, c, h / stride, w / stride],
+            vec![n, c, conv_out(h, k, stride, pad), conv_out(w, k, stride, pad)],
         );
         self.cur = id;
         id
     }
 
-    /// Average pool.
-    pub fn avgpool(&mut self, k: usize, stride: usize) -> NodeId {
+    /// Average pool k×k stride s with symmetric padding (same windowed
+    /// output-shape semantics as [`NetBuilder::maxpool`]).
+    pub fn avgpool(&mut self, k: usize, stride: usize, pad: usize) -> NodeId {
         let s = self.shape();
         let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
         let name = self.uid("avgpool");
         let id = self.g.add(
             &name,
-            OpKind::AvgPool { k, stride },
+            OpKind::AvgPool { k, stride, pad },
             vec![self.cur],
-            vec![n, c, h / stride, w / stride],
+            vec![n, c, conv_out(h, k, stride, pad), conv_out(w, k, stride, pad)],
         );
         self.cur = id;
         id
@@ -228,6 +232,65 @@ impl NetBuilder {
         let wname = format!("{name}_w");
         let wgt = self.g.weight(&wname, &[in_f, out_f]);
         let id = self.g.add(&name, OpKind::Dense, vec![self.cur, wgt], s);
+        self.cur = id;
+        id
+    }
+
+    /// General axis permutation (`out.shape[i] = in.shape[perm[i]]`).
+    pub fn transpose(&mut self, perm: &[usize]) -> NodeId {
+        let s = self.shape();
+        assert_eq!(perm.len(), s.len(), "transpose perm rank mismatch in {}", self.g.name);
+        let shape: Vec<usize> = perm.iter().map(|&p| s[p]).collect();
+        let name = self.uid("transpose");
+        let id = self.g.add(
+            &name,
+            OpKind::Transpose { perm: perm.to_vec() },
+            vec![self.cur],
+            shape,
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Contiguous crop: keep `len[d]` elements of each dim starting at
+    /// `start[d]`.
+    pub fn slice(&mut self, start: &[usize], len: &[usize]) -> NodeId {
+        let s = self.shape();
+        assert_eq!(start.len(), s.len(), "slice rank mismatch in {}", self.g.name);
+        assert_eq!(len.len(), s.len(), "slice rank mismatch in {}", self.g.name);
+        let name = self.uid("slice");
+        let id = self.g.add(
+            &name,
+            OpKind::Slice { start: start.to_vec() },
+            vec![self.cur],
+            len.to_vec(),
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Zero-pad each dim by (before, after) elements.
+    pub fn pad(&mut self, before: &[usize], after: &[usize]) -> NodeId {
+        let s = self.shape();
+        assert_eq!(before.len(), s.len(), "pad rank mismatch in {}", self.g.name);
+        assert_eq!(after.len(), s.len(), "pad rank mismatch in {}", self.g.name);
+        let shape: Vec<usize> =
+            s.iter().zip(before).zip(after).map(|((&x, &b), &a)| x + b + a).collect();
+        let name = self.uid("pad");
+        let id = self.g.add(
+            &name,
+            OpKind::Pad { before: before.to_vec(), after: after.to_vec() },
+            vec![self.cur],
+            shape,
+        );
+        self.cur = id;
+        id
+    }
+
+    /// Reshape to an explicit shape of the same element count.
+    pub fn reshape(&mut self, shape: &[usize]) -> NodeId {
+        let name = self.uid("reshape");
+        let id = self.g.add(&name, OpKind::Reshape, vec![self.cur], shape.to_vec());
         self.cur = id;
         id
     }
@@ -354,8 +417,16 @@ impl NetBuilder {
             self.dense(d)
         };
         // scores = q @ k^T : [n, L, L] (head dim folded into the matmul).
+        // K must be *transposed* before the batched matmul — the old
+        // MatMul(q, k) form was [n,L,d]×[n,L,d], which is not QK^T (and
+        // died at runtime with "batched matmul mismatch" the moment the
+        // executor grew a transformer path).
+        let kt = {
+            self.set_cur(k);
+            self.transpose(&[0, 2, 1])
+        };
         let name = self.uid("qk");
-        let scores = self.g.add(&name, OpKind::MatMul, vec![q, k], vec![n, l, l]);
+        let scores = self.g.add(&name, OpKind::MatMul, vec![q, kt], vec![n, l, l]);
         let name = self.uid("scale");
         let dh = (d / heads) as f64;
         let scaled = self.g.add(
@@ -398,6 +469,7 @@ impl NetBuilder {
 pub fn by_name(name: &str, batch: usize) -> Graph {
     match name {
         "demo-cnn" => misc::demo_cnn(batch),
+        "demo-transformer" => nlp::demo_transformer(batch),
         "efficientnet-b0" => cnn::efficientnet_b0(batch),
         "resnet-50" => cnn::resnet50(batch),
         "vgg-16" => cnn::vgg16(batch),
@@ -432,6 +504,7 @@ pub fn by_name(name: &str, batch: usize) -> Graph {
 pub fn all_models() -> Vec<&'static str> {
     vec![
         "demo-cnn",
+        "demo-transformer",
         "efficientnet-b0",
         "resnet-50",
         "vgg-16",

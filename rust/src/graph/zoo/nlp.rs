@@ -99,10 +99,17 @@ pub fn gpt2(batch: usize) -> Graph {
         b.transformer_layer(heads, ffn, Act::Gelu);
     }
     b.layer_norm();
-    // LM head: project to vocab via the (shared) embedding — model as MatMul
-    // against the table so no new params are counted.
+    // LM head: project to vocab via the (shared) embedding — model as
+    // MatMul against the *transposed* table ([vocab, d] → [d, vocab]) so
+    // the contraction dims line up and no new params are counted.
     let h = b.cur();
-    let logits = b.g.add("lm_head", OpKind::MatMul, vec![h, table], vec![batch, seq, 50257]);
+    let wte_t = b.g.add(
+        "wte_t",
+        OpKind::Transpose { perm: vec![1, 0] },
+        vec![table],
+        vec![d, 50257],
+    );
+    let logits = b.g.add("lm_head", OpKind::MatMul, vec![h, wte_t], vec![batch, seq, 50257]);
     b.set_cur(logits);
     b.finish()
 }
@@ -192,7 +199,7 @@ pub fn gpt2_frontend_layers(batch: usize, layers: usize) -> Graph {
             );
             let tp = b.g.add(
                 &format!("head_tp_{}", b.g.len()),
-                OpKind::Transpose,
+                OpKind::Transpose { perm: vec![0, 2, 1, 3] },
                 vec![rs],
                 vec![s[0], 12, s[1], d / 12],
             );
@@ -203,7 +210,7 @@ pub fn gpt2_frontend_layers(batch: usize, layers: usize) -> Graph {
         let ks = b.g.node(k).shape.clone();
         let kt = b.g.add(
             &format!("k_tp_{}", b.g.len()),
-            OpKind::Transpose,
+            OpKind::Transpose { perm: vec![0, 1, 3, 2] },
             vec![k],
             vec![ks[0], ks[1], ks[3], ks[2]],
         );
@@ -213,8 +220,9 @@ pub fn gpt2_frontend_layers(batch: usize, layers: usize) -> Graph {
             vec![q, kt],
             vec![batch, 12, seq, seq],
         );
-        // Scaling emitted as Sqrt(const) then Div.
-        let csqrt = b.g.weight(&format!("dk_{}", b.g.len()), &[1]);
+        // Scaling emitted as Sqrt(const) then Div; the divisor is a *graph
+        // constant* (d_k = d/heads), not a trainable weight.
+        let csqrt = b.g.const_scalar(&format!("dk_{}", b.g.len()), (d / 12) as f32);
         let sq = b.g.add(&format!("sqrt_{}", b.g.len()), OpKind::Sqrt, vec![csqrt], vec![1]);
         let sqb = b.g.add(
             &format!("bcast_{}", b.g.len()),
@@ -243,7 +251,7 @@ pub fn gpt2_frontend_layers(batch: usize, layers: usize) -> Graph {
         // Merge heads: Transpose back + Reshape.
         let tp = b.g.add(
             &format!("merge_tp_{}", b.g.len()),
-            OpKind::Transpose,
+            OpKind::Transpose { perm: vec![0, 2, 1, 3] },
             vec![ctx],
             vec![batch, seq, 12, d / 12],
         );
@@ -267,6 +275,34 @@ pub fn gpt2_frontend_layers(batch: usize, layers: usize) -> Graph {
         b.add_residual(resid, o);
     }
     b.layer_norm();
+    b.finish()
+}
+
+/// The small executable transformer: 2 encoder layers, d=64, seq=32,
+/// 4 heads, ffn 128, vocab 256, with a [CLS]-slice 8-way classifier head.
+/// Small enough to CPU-execute in tests and benches end-to-end through
+/// `CompiledModel::infer()` — the transformer counterpart of
+/// [`super::misc::demo_cnn`], and the model behind `benches/transformer.rs`.
+/// Input is `[batch, 32]` token ids (as f32; `Embedding` does the row
+/// lookup against the `[256, 64]` table).
+pub fn demo_transformer(batch: usize) -> Graph {
+    let (seq, d, heads, ffn, vocab, classes) = (32usize, 64usize, 4usize, 128usize, 256usize, 8usize);
+    let mut b = NetBuilder::new("demo-transformer", &[batch, seq]);
+    let table = b.g.weight("tok_embed", &[vocab, d]);
+    let emb = b.g.add("embed", OpKind::Embedding, vec![b.cur(), table], vec![batch, seq, d]);
+    b.set_cur(emb);
+    let pos = b.g.weight("pos_embed", &[seq, d]);
+    let posb = b.g.add("pos_broadcast", OpKind::Broadcast, vec![pos], vec![batch, seq, d]);
+    let with_pos = b.add_residual(emb, posb);
+    b.set_cur(with_pos);
+    for _ in 0..2 {
+        b.transformer_layer(heads, ffn, Act::Gelu);
+    }
+    b.layer_norm();
+    // [CLS] head: slice the first sequence position, flatten, classify.
+    b.slice(&[0, 0, 0], &[batch, 1, d]);
+    b.reshape(&[batch, d]);
+    b.dense(classes);
     b.finish()
 }
 
@@ -357,6 +393,27 @@ mod tests {
         assert!((0.8..3.5).contains(&p), "conformer params {p}M");
         let g = conformer(1);
         assert!(g.operator_count() > 150, "conformer ops {}", g.operator_count());
+    }
+
+    #[test]
+    fn demo_transformer_is_small_and_classifies() {
+        let g = demo_transformer(2);
+        assert!(g.validate().is_ok(), "{:?}", g.validate());
+        assert_eq!(g.node(g.outputs[0]).shape, vec![2, 8]);
+        // Tiny on purpose: it executes in tests.
+        assert!(g.total_params() < 300_000, "params {}", g.total_params());
+        // The attention fix: every QK^T matmul consumes a transposed K.
+        let qk_with_transposed_rhs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::MatMul))
+            .filter(|n| {
+                n.inputs
+                    .iter()
+                    .any(|&i| matches!(g.node(i).op, OpKind::Transpose { .. }))
+            })
+            .count();
+        assert_eq!(qk_with_transposed_rhs, 2, "one K-transpose per layer");
     }
 
     #[test]

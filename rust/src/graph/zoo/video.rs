@@ -4,24 +4,39 @@
 
 use super::NetBuilder;
 use crate::graph::ir::Graph;
-use crate::graph::ops::{Act, OpKind};
+use crate::graph::ops::Act;
 
 /// C3D (Tran et al.): 8 3×3×3 conv layers + 2 fc. Published: ~78M params
 /// (fc-heavy), ~38.5 GMACs @16×112×112. Paper row: 78M / 77 GFLOPs ✓.
 pub fn c3d(batch: usize) -> Graph {
     let mut b = NetBuilder::new("c3d", &[batch, 3, 16, 112, 112]);
     let pool3d = |b: &mut NetBuilder, kt: usize| {
-        // 3-D pooling approximated on the NCDHW tensor as a shape op +
-        // MACs-free reduction node.
+        // 3-D pooling decomposed into ops the (strictly NCHW) pool
+        // vocabulary can express: fold depth into channels for the 2×2
+        // spatial max pool, then reduce depth ×kt with a transpose +
+        // global-pool mean (a structural stand-in for the temporal max —
+        // same reduction pattern and traffic). The old single rank-5
+        // `MaxPool` node declared a shape no square-window pool produces,
+        // which the general kernel now rejects.
         let s = b.shape();
         let (n, c, d, h, w) = (s[0], s[1], s[2], s[3], s[4]);
-        let id = b.g.add(
-            &format!("pool3d_{}", b.g.len()),
-            OpKind::MaxPool { k: 2, stride: 2 },
-            vec![b.cur()],
-            vec![n, c, (d / kt).max(1), h / 2, w / 2],
-        );
-        b.set_cur(id);
+        b.reshape(&[n, c * d, h, w]);
+        b.maxpool(2, 2, 0);
+        let s2 = b.shape();
+        let (oh, ow) = (s2[2], s2[3]);
+        if kt > 1 && d >= kt {
+            let od = d / kt;
+            // Group kt consecutive depth slices per output slice and
+            // mean-reduce them: [n, c*od, kt, oh*ow] → [.., oh*ow, kt]
+            // → one row per output element → global pool.
+            b.reshape(&[n, c * od, kt, oh * ow]);
+            b.transpose(&[0, 1, 3, 2]);
+            b.reshape(&[n, c * od * oh * ow, 1, kt]);
+            b.gap();
+            b.reshape(&[n, c, od, oh, ow]);
+        } else {
+            b.reshape(&[n, c, d, oh, ow]);
+        }
     };
     b.conv3d(64, 3, 3, 1, 1);
     b.act(Act::Relu);

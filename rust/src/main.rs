@@ -124,18 +124,23 @@ fn cmd_compile(args: &Args) -> Result<()> {
         }
     }
     if args.flag("infer") {
+        // Valid sample inputs per input node: token ids for embedding-fed
+        // inputs (demo-transformer), Gaussians otherwise.
+        let xs = cm.sample_inputs(args.opt_u64("seed", 7));
         let shape = cm.input_shapes()[0].clone();
-        let n: usize = shape.iter().product();
-        let mut rng = Rng::new(args.opt_u64("seed", 7));
-        let x: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
         let t0 = std::time::Instant::now();
-        let y = cm.infer_flat(&x)?;
+        let y = cm.infer(&xs)?;
+        let finite = y[0].data().iter().all(|v| v.is_finite());
         println!(
-            "real inference: {:?} -> {} outputs in {:.2} ms",
+            "real inference: {:?} -> {} outputs in {:.2} ms ({})",
             shape,
-            y.len(),
-            t0.elapsed().as_secs_f64() * 1e3
+            y[0].len(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            if finite { "finite" } else { "NON-FINITE" }
         );
+        if !finite {
+            anyhow::bail!("inference produced non-finite outputs");
+        }
     }
     Ok(())
 }

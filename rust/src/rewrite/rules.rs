@@ -22,8 +22,11 @@ pub fn eliminate_identity(g: &mut Graph) -> usize {
     for id in 0..g.nodes.len() {
         let n = &g.nodes[id];
         let bypass = match &n.op {
-            OpKind::Reshape | OpKind::Flatten | OpKind::Pad | OpKind::Slice => {
+            OpKind::Reshape | OpKind::Flatten | OpKind::Pad { .. } | OpKind::Slice { .. } => {
                 n.inputs.len() == 1 && g.nodes[n.inputs[0]].shape == n.shape
+            }
+            OpKind::Transpose { perm } => {
+                n.inputs.len() == 1 && perm.iter().enumerate().all(|(i, &p)| i == p)
             }
             OpKind::Upsample { r: 1 } => true,
             OpKind::Scale { mul, add } => {
@@ -56,12 +59,29 @@ pub fn collapse_movement(g: &mut Graph) -> usize {
         let p = n.inputs[0];
         let parent = &g.nodes[p];
         match (&parent.op, &n.op) {
-            // transpose(transpose(x)) == x when the shape round-trips.
-            (OpKind::Transpose, OpKind::Transpose)
-                if users[p].len() == 1 && g.nodes[parent.inputs[0]].shape == n.shape =>
+            // transpose(transpose(x)) == x when the composed permutation is
+            // the identity. (The old shape-round-trip test was both too
+            // weak — equal dims can round-trip the shape without restoring
+            // the layout — and is now unnecessary: perms are explicit.)
+            (OpKind::Transpose { perm: p1 }, OpKind::Transpose { perm: p2 })
+                if users[p].len() == 1
+                    && p1.len() == p2.len()
+                    && p2.iter().enumerate().all(|(i, &o)| p1[o] == i) =>
             {
                 let src = parent.inputs[0];
                 replace_uses(g, id, src);
+                hits += 1;
+            }
+            // Non-inverse transpose chains compose into one transpose of
+            // the combined permutation (the GPT-2 frontend's head-split
+            // transpose feeding the K^T transpose is the motivating case).
+            (OpKind::Transpose { perm: p1 }, OpKind::Transpose { perm: p2 })
+                if users[p].len() == 1 && p1.len() == p2.len() =>
+            {
+                let combined: Vec<usize> = p2.iter().map(|&o| p1[o]).collect();
+                let src = parent.inputs[0];
+                g.nodes[id].op = OpKind::Transpose { perm: combined };
+                g.nodes[id].inputs[0] = src;
                 hits += 1;
             }
             // reshape/flatten chains: retarget the outer one.
@@ -99,7 +119,7 @@ pub fn commute_movement(g: &mut Graph) -> usize {
         let parent = &g.nodes[p];
         let movement_unary = matches!(
             parent.op,
-            OpKind::Reshape | OpKind::Transpose | OpKind::Flatten
+            OpKind::Reshape | OpKind::Transpose { .. } | OpKind::Flatten
         ) && parent.inputs.len() == 1;
         if !movement_unary || users[p].len() != 1 {
             continue;
@@ -142,17 +162,26 @@ pub fn fold_constants(g: &mut Graph, mut ws: Option<&mut WeightStore>) -> usize 
                     && users[n.inputs[0]].len() == 1 =>
             {
                 let wid = n.inputs[0];
+                let f = |x: f32| -> f32 {
+                    match n.op {
+                        // IEEE semantics: sqrt of a negative is NaN,
+                        // matching the executor kernel — the old clamp
+                        // silently hid bad constants.
+                        OpKind::Sqrt => x.sqrt(),
+                        OpKind::Pow { e } => x.powf(e as f32),
+                        OpKind::Scale { mul, add } => x * mul as f32 + add as f32,
+                        _ => unreachable!(),
+                    }
+                };
+                let wname = g.nodes[wid].name.clone();
+                // Keep the graph-constant record in sync with the fold —
+                // a later structural rewrite or weight re-init must see
+                // the folded value, not the original.
+                if let Some(&v) = g.consts.get(&wname) {
+                    g.consts.insert(wname.clone(), f(v));
+                }
                 if let Some(ws) = ws.as_deref_mut() {
-                    let wname = g.nodes[wid].name.clone();
                     if let Some(t) = ws.get(&wname).cloned() {
-                        let f = |x: f32| -> f32 {
-                            match n.op {
-                                OpKind::Sqrt => x.max(0.0).sqrt(),
-                                OpKind::Pow { e } => x.powf(e as f32),
-                                OpKind::Scale { mul, add } => x * mul as f32 + add as f32,
-                                _ => unreachable!(),
-                            }
-                        };
                         ws.set(&wname, t.map(f));
                     }
                 }
@@ -194,8 +223,9 @@ fn resolve_scalar_const(g: &Graph, id: NodeId, ws: Option<&WeightStore>) -> Opti
     }
     match ws {
         Some(ws) => ws.get(&n.name).map(|t| t.data()[0] as f64),
-        // Structural mode: the value does not matter for op counting.
-        None => Some(1.0),
+        // Structural mode: graph constants keep their baked value; for
+        // anything else the value does not matter for op counting.
+        None => Some(g.consts.get(&n.name).copied().unwrap_or(1.0) as f64),
     }
 }
 
@@ -420,13 +450,33 @@ mod tests {
     fn double_transpose_removed() {
         let mut g = Graph::new("t");
         let x = g.input("x", &[2, 3, 4]);
-        let t1 = g.add("t1", OpKind::Transpose, vec![x], vec![4, 3, 2]);
-        let t2 = g.add("t2", OpKind::Transpose, vec![t1], vec![2, 3, 4]);
+        let t1 = g.add("t1", OpKind::Transpose { perm: vec![2, 1, 0] }, vec![x], vec![4, 3, 2]);
+        let t2 = g.add("t2", OpKind::Transpose { perm: vec![2, 1, 0] }, vec![t1], vec![2, 3, 4]);
         let s = g.add("sqrt", OpKind::Sqrt, vec![t2], vec![2, 3, 4]);
         g.outputs = vec![s];
         assert_eq!(collapse_movement(&mut g), 1);
         g.prune_dead();
         assert_eq!(g.operator_count(), 1);
+    }
+
+    #[test]
+    fn transpose_chain_composes_into_one() {
+        // Head-split [0,2,1,3] then K^T [0,1,3,2] → single [0,2,3,1].
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[2, 3, 4, 5]);
+        let t1 = g.add("t1", OpKind::Transpose { perm: vec![0, 2, 1, 3] }, vec![x], vec![2, 4, 3, 5]);
+        let t2 = g.add("t2", OpKind::Transpose { perm: vec![0, 1, 3, 2] }, vec![t1], vec![2, 4, 5, 3]);
+        g.outputs = vec![t2];
+        assert_eq!(collapse_movement(&mut g), 1);
+        g.prune_dead();
+        assert_eq!(g.operator_count(), 1);
+        let out = g.node(g.outputs[0]);
+        assert!(
+            matches!(out.op, OpKind::Transpose { ref perm } if perm == &vec![0, 2, 3, 1]),
+            "composed perm wrong: {:?}",
+            out.op
+        );
+        assert!(g.validate().is_ok(), "{:?}", g.validate());
     }
 
     #[test]

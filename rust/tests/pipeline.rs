@@ -91,7 +91,7 @@ fn optimized_execution_matches_reference_numerically() {
     let mut b = NetBuilder::new("e2e", &[2, 3, 20, 20]);
     b.conv_bn_act(8, 3, 1, 1, Act::Relu);
     b.conv_bn_act(8, 3, 1, 1, Act::Relu);
-    b.maxpool(2, 2);
+    b.maxpool(2, 2, 0);
     b.gap();
     b.dense(10);
     let g = b.finish();
@@ -121,7 +121,7 @@ fn fused_with_memory_planner_matches_straight_line() {
     b.conv_bn_act(12, 3, 1, 1, Act::Relu);
     let t = b.cur();
     b.add_residual(skip, t);
-    b.maxpool(2, 2);
+    b.maxpool(2, 2, 0);
     b.conv_bn_act(24, 3, 2, 1, Act::Relu);
     b.gap();
     b.dense(10);
