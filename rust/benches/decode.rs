@@ -1,0 +1,132 @@
+//! Autoregressive decoding bench — the ISSUE-5 acceptance artifact.
+//!
+//! Measures tokens/sec on `demo-transformer-causal` two ways:
+//!
+//! 1. **Incremental** (`DecodeSession`): prefill the prompt once, then one
+//!    `step()` per token against the K/V caches — `O(L)` work per token.
+//! 2. **Naive full recompute**: for every new token, re-run the whole
+//!    fixed-length graph through `CompiledModel::infer` and read the
+//!    newest row — the `O(L²)`-per-sequence baseline a framework without
+//!    KV-cache serving pays.
+//!
+//! Both paths produce identical logits (causal masking guarantees padding
+//! cannot leak backwards; asserted here before timing). Writes
+//! `BENCH_decode.json` at the repo root (fields documented in
+//! EXPERIMENTS.md §Decoding). `XGEN_BENCH_QUICK=1` shrinks iteration
+//! counts for the CI smoke job; `XGEN_THREADS` sizes the worker pool.
+
+use xgen::api::Compiler;
+use xgen::tensor::Tensor;
+use xgen::util::bench::{sink, time_ms, Table};
+use xgen::util::json::Json;
+
+fn main() {
+    let quick = std::env::var("XGEN_BENCH_QUICK").is_ok();
+    let (warm, samples) = if quick { (1, 2) } else { (2, 5) };
+
+    let m = Compiler::for_model("demo-transformer-causal", 1)
+        .unwrap()
+        .random_weights(42)
+        .compile()
+        .unwrap();
+    let seq = m.input_shapes()[0][1];
+    let prompt: Vec<u32> = (0..8u32).map(|i| (i * 37) % 256).collect();
+    let steps: Vec<u32> = (0..(seq - prompt.len()) as u32).map(|i| (i * 97 + 13) % 256).collect();
+    let vocab = 256usize;
+
+    // ---- correctness guard: both paths agree at every position --------
+    let mut ids = vec![0.0f32; seq];
+    let all: Vec<u32> = prompt.iter().chain(&steps).copied().collect();
+    for (i, &t) in all.iter().enumerate() {
+        ids[i] = t as f32;
+    }
+    let full = m.infer(&[Tensor::from_vec(&[1, seq], ids.clone())]).unwrap();
+    let mut sess = m.decode_session(seq).unwrap();
+    for (i, &t) in all.iter().enumerate() {
+        let logits = sess.step(t).unwrap();
+        let want = &full[0].data()[i * vocab..(i + 1) * vocab];
+        let d = logits
+            .iter()
+            .zip(want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d < 1e-4, "incremental diverges from full forward at {i} by {d}");
+    }
+
+    // ---- incremental: prefill once, then per-token steps --------------
+    let s_prefill = time_ms(warm, samples, || {
+        sess.reset();
+        sink(sess.prefill(&prompt).unwrap()[0]);
+    });
+    let s_step = time_ms(warm, samples, || {
+        sess.reset();
+        sess.prefill(&prompt).unwrap();
+        for &t in &steps {
+            sink(sess.step(t).unwrap()[0]);
+        }
+    });
+    let inc_ms_per_tok = (s_step.mean - s_prefill.mean).max(1e-9) / steps.len() as f64;
+
+    // ---- naive: full recompute per generated token ---------------------
+    let naive_iters = if quick { 4 } else { steps.len() };
+    let s_naive = time_ms(warm, samples, || {
+        // Each new token re-runs the whole fixed-length graph.
+        for k in 0..naive_iters {
+            let mut ids = vec![0.0f32; seq];
+            for (i, &t) in all[..prompt.len() + k].iter().enumerate() {
+                ids[i] = t as f32;
+            }
+            let y = m.infer(&[Tensor::from_vec(&[1, seq], ids)]).unwrap();
+            sink(y[0].data()[(prompt.len() + k) * vocab]);
+        }
+    });
+    let naive_ms_per_tok = s_naive.mean / naive_iters as f64;
+
+    let speedup = naive_ms_per_tok / inc_ms_per_tok.max(1e-9);
+    let inc_tok_s = 1e3 / inc_ms_per_tok.max(1e-9);
+    let naive_tok_s = 1e3 / naive_ms_per_tok.max(1e-9);
+    let kv_bytes = sess.kv_cache_elems() as f64 * 4.0;
+
+    let mut t = Table::new(&["path", "ms/token", "tok/s", "speedup"]);
+    t.row(vec![
+        "full-recompute".into(),
+        format!("{naive_ms_per_tok:.3}"),
+        format!("{naive_tok_s:.0}"),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "prefill+step (KV cache)".into(),
+        format!("{inc_ms_per_tok:.3}"),
+        format!("{inc_tok_s:.0}"),
+        format!("{speedup:.2}x"),
+    ]);
+    t.print(&format!(
+        "autoregressive decode (demo-transformer-causal, prompt {}, {} generated, kv cache {:.1} KB)",
+        prompt.len(),
+        steps.len(),
+        kv_bytes / 1024.0
+    ));
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("decode")),
+        ("model", Json::str("demo-transformer-causal")),
+        ("prompt_len", Json::num(prompt.len() as f64)),
+        ("generated", Json::num(steps.len() as f64)),
+        ("prefill_ms", Json::num(s_prefill.mean)),
+        ("incremental_ms_per_token", Json::num(inc_ms_per_tok)),
+        ("full_recompute_ms_per_token", Json::num(naive_ms_per_tok)),
+        ("incremental_tok_per_s", Json::num(inc_tok_s)),
+        ("full_recompute_tok_per_s", Json::num(naive_tok_s)),
+        ("speedup_incremental_vs_full", Json::num(speedup)),
+        ("kv_cache_bytes", Json::num(kv_bytes)),
+    ]);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_decode.json"
+    } else {
+        "BENCH_decode.json"
+    };
+    match std::fs::write(path, json.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -49,7 +49,7 @@ use crate::cost::{
     devices, estimate_latency, scheme_density_map, sparse_efficiency, DensityMap, Device,
 };
 use crate::deepreuse::ReuseConfig;
-use crate::exec::{ExecState, Executor, FusedExecutor, PlanStats, Workspace};
+use crate::exec::{DecodeSession, ExecState, Executor, FusedExecutor, PlanStats, Workspace};
 use crate::fusion::{fuse, FusionConfig, FusionPlan};
 use crate::tensor::gemm::GemmConfig;
 use crate::graph::zoo::{all_models, by_name};
@@ -695,6 +695,30 @@ impl CompiledModel {
         }
     }
 
+    /// Open an autoregressive decoding session over this compiled model:
+    /// per-attention K/V caches sized for `max_seq` positions, with
+    /// `prefill`/`step` returning per-position logits and `step` being
+    /// allocation-free after warm-up. Errors loudly when the model was
+    /// compiled without weights, is not a causal decoder (every attention
+    /// must carry a `CausalMask`), or `max_seq` exceeds the model's
+    /// positional range.
+    pub fn decode_session(&self, max_seq: usize) -> Result<DecodeSession<'_>> {
+        let ws = self
+            .weights
+            .as_ref()
+            .ok_or_else(|| anyhow!("model was compiled without weights — cannot decode"))?;
+        DecodeSession::new(&self.graph, ws, max_seq)
+    }
+
+    /// Greedy generation convenience: prefill `prompt`, then emit `n`
+    /// argmax tokens through a fresh [`DecodeSession`] sized to fit
+    /// (the last generated token needs no extra position).
+    pub fn generate(&self, prompt: &[u32], n: usize) -> Result<Vec<u32>> {
+        let need = (prompt.len() + n.saturating_sub(1)).max(1);
+        let mut session = self.decode_session(need)?;
+        session.generate(prompt, n)
+    }
+
     /// Single-input convenience over flat `f32` data (the serving path).
     pub fn infer_flat(&self, x: &[f32]) -> Result<Vec<f32>> {
         let shape = self
@@ -850,6 +874,38 @@ mod tests {
             .compile()
             .unwrap();
         assert!(off.infer_into(&[x], &mut outs).is_err());
+    }
+
+    /// `decode_session`/`generate` work on the causal demo decoder and
+    /// error cleanly on weightless sessions and encoder models.
+    #[test]
+    fn decode_session_and_generate_on_the_causal_demo() {
+        let m = Compiler::for_model("demo-transformer-causal", 1)
+            .unwrap()
+            .random_weights(23)
+            .compile()
+            .unwrap();
+        let mut s = m.decode_session(8).unwrap();
+        let logits = s.prefill(&[3, 1, 4]).unwrap();
+        assert_eq!(logits.len(), 256);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let out = m.generate(&[3, 1, 4], 5).unwrap();
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|&t| (t as usize) < 256));
+        // Greedy decoding is deterministic: same prompt, same tokens.
+        assert_eq!(out, m.generate(&[3, 1, 4], 5).unwrap());
+
+        let weightless = Compiler::for_model("demo-transformer-causal", 1)
+            .unwrap()
+            .compile()
+            .unwrap();
+        assert!(weightless.decode_session(8).is_err());
+        let encoder = Compiler::for_model("demo-transformer", 1)
+            .unwrap()
+            .random_weights(23)
+            .compile()
+            .unwrap();
+        assert!(encoder.decode_session(8).is_err());
     }
 
     #[test]

@@ -279,6 +279,137 @@ impl Drop for Server {
     }
 }
 
+/// One token-streaming generation request.
+struct GenRequest {
+    prompt: Vec<u32>,
+    n: usize,
+    reply: mpsc::Sender<Result<u32, String>>,
+}
+
+/// Serving statistics of a [`DecodeServer`].
+#[derive(Debug, Clone, Default)]
+pub struct DecodeStats {
+    pub requests: usize,
+    pub tokens: usize,
+}
+
+/// Token-streaming generation server: one thread owns a compiled *causal
+/// decoder* session ([`CompiledModel::decode_session`]) and serves greedy
+/// generation requests, sending each token back over the request's channel
+/// **as it is decoded** — the client reads a stream, not a batch. The
+/// session's K/V caches are reset and reused across requests, so the
+/// serving loop allocates nothing per token after the first request.
+pub struct DecodeServer {
+    tx: mpsc::Sender<GenRequest>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<DecodeStats>>,
+}
+
+impl DecodeServer {
+    /// Spawn the decode thread over a compiled causal decoder. The model
+    /// must carry weights and decode incrementally (validated before the
+    /// call returns, so misconfiguration fails here, not on request one).
+    pub fn start(model: CompiledModel, max_seq: usize) -> Result<DecodeServer> {
+        let (tx, rx) = mpsc::channel::<GenRequest>();
+        // Session construction (constant-subgraph evaluation, cache
+        // allocation) happens once, inside the worker thread; the ready
+        // channel reports the validation result before start() returns so
+        // misconfiguration still fails eagerly.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let stats = Arc::new(Mutex::new(DecodeStats::default()));
+        let stats2 = stats.clone();
+        let handle = std::thread::spawn(move || {
+            let mut session = match model.decode_session(max_seq) {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            let mut logits: Vec<f32> = Vec::new();
+            while let Ok(req) = rx.recv() {
+                session.reset();
+                logits.clear();
+                match session.prefill(&req.prompt) {
+                    Ok(l) => logits.extend_from_slice(l),
+                    Err(e) => {
+                        let _ = req.reply.send(Err(e.to_string()));
+                        continue;
+                    }
+                }
+                let mut sent = 0usize;
+                for i in 0..req.n {
+                    let next = crate::exec::decode::argmax(&logits) as u32;
+                    if req.reply.send(Ok(next)).is_err() {
+                        break; // client hung up mid-stream
+                    }
+                    sent += 1;
+                    if i + 1 < req.n {
+                        match session.step(next) {
+                            Ok(l) => {
+                                logits.clear();
+                                logits.extend_from_slice(l);
+                            }
+                            Err(e) => {
+                                let _ = req.reply.send(Err(e.to_string()));
+                                break;
+                            }
+                        }
+                    }
+                }
+                let mut st = stats2.lock().unwrap();
+                st.requests += 1;
+                st.tokens += sent;
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("decode server thread died"))?
+            .map_err(anyhow::Error::msg)?;
+        Ok(DecodeServer { tx, handle: Some(handle), stats })
+    }
+
+    /// Enqueue a generation request; tokens stream over the returned
+    /// receiver one by one (an `Err` item ends the stream).
+    pub fn generate_stream(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+    ) -> mpsc::Receiver<Result<u32, String>> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(GenRequest { prompt, n, reply });
+        rx
+    }
+
+    /// Blocking convenience: drain the stream into a vec.
+    pub fn generate(&self, prompt: Vec<u32>, n: usize) -> Result<Vec<u32>, String> {
+        let rx = self.generate_stream(prompt, n);
+        let mut out = Vec::with_capacity(n);
+        for tok in rx {
+            out.push(tok?);
+        }
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl Drop for DecodeServer {
+    fn drop(&mut self) {
+        let (dummy_tx, _) = mpsc::channel();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 fn dispatcher<E: BatchEngine>(
     mut engine: E,
     rx: mpsc::Receiver<Request>,
@@ -369,6 +500,57 @@ mod tests {
         let st = server.stats();
         assert_eq!(st.completed, 9);
         assert!(st.batches >= 3);
+    }
+
+    /// The token-streaming decode server: tokens arrive one by one,
+    /// multiple requests reuse the session, and results match the
+    /// in-process `CompiledModel::generate` exactly.
+    #[test]
+    fn decode_server_streams_tokens() {
+        use crate::api::Compiler;
+        let build = || {
+            Compiler::for_model("demo-transformer-causal", 1)
+                .unwrap()
+                .random_weights(31)
+                .compile()
+                .unwrap()
+        };
+        let reference = build().generate(&[5, 6, 7], 4).unwrap();
+        let server = DecodeServer::start(build(), 16).unwrap();
+        // Streamed tokens match the in-process greedy decode.
+        let rx = server.generate_stream(vec![5, 6, 7], 4);
+        let mut got = Vec::new();
+        for tok in rx {
+            got.push(tok.unwrap());
+        }
+        assert_eq!(got, reference);
+        // A second request after the first reuses the reset session.
+        let again = server.generate(vec![5, 6, 7], 4).unwrap();
+        assert_eq!(again, reference);
+        // Errors stream too: an over-long prompt fails loudly.
+        let err = server.generate((0..40).collect(), 1).unwrap_err();
+        assert!(err.contains("exceeds max_seq"), "got: {err}");
+        let st = server.stats();
+        assert_eq!(st.requests, 2, "failed prefill must not count");
+        assert_eq!(st.tokens, 8);
+    }
+
+    #[test]
+    fn decode_server_rejects_non_decoders_eagerly() {
+        use crate::api::Compiler;
+        // Encoder attention: refused at start(), not at request time.
+        let enc = Compiler::for_model("demo-transformer", 1)
+            .unwrap()
+            .random_weights(1)
+            .compile()
+            .unwrap();
+        assert!(DecodeServer::start(enc, 8).is_err());
+        // Weightless causal model: refused too.
+        let weightless = Compiler::for_model("demo-transformer-causal", 1)
+            .unwrap()
+            .compile()
+            .unwrap();
+        assert!(DecodeServer::start(weightless, 8).is_err());
     }
 
     #[test]

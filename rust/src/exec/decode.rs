@@ -1,0 +1,1058 @@
+//! Incremental autoregressive decoding: the second execution mode of the
+//! crate (ISSUE-5 tentpole). A [`DecodeSession`] runs a *causal* decoder
+//! graph one token at a time: each step computes the new token's row
+//! through every row-wise op (embedding, LayerNorm, dense, FFN,
+//! residuals), appends that position's K/V rows **in place** into
+//! per-attention cache buffers, and evaluates attention as row-vector
+//! products against the cache — `O(L)` work per step instead of the
+//! `O(L²)` full-sequence recompute, and semantically identical to a full
+//! causal forward pass at the same position (pinned by
+//! `tests/decode.rs`).
+//!
+//! The session is a small shape-specialized interpreter over the
+//! (rewritten) graph, built once at construction:
+//!
+//! * **Constant subgraphs** (weight-only ancestry, e.g. GPT-2's transposed
+//!   tied LM-head table or the exporter's `sqrt(d_k)` divisor) are
+//!   evaluated once via [`eval_op`] and cached.
+//! * **Attention blocks** are discovered structurally by
+//!   [`attention_specs`] (`MatMul → [scale/mask]* → Softmax → MatMul`,
+//!   shared with the planner's K/V-cache sizing); non-causal attention is
+//!   a loud construction error — decoding it incrementally would silently
+//!   change semantics.
+//! * Every other op is resolved to a slice kernel over pre-allocated
+//!   per-node buffers whose shapes substitute the sequence dim with 1
+//!   (score-chain nodes keep a *dynamic* key axis = current length).
+//!
+//! After the first (warm-up) call, [`DecodeSession::step`] performs **no
+//! heap allocation on the calling thread** — the counting-allocator test
+//! in `tests/steady.rs` pins this.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{Graph, NodeId, OpKind, WeightStore};
+use crate::tensor::Tensor;
+
+use super::{
+    apply_unary_slice_inplace, embedding_into, eval_op, per_channel_stride, softmax_rows_inplace,
+    transpose_into,
+};
+
+/// One attention block discovered in a graph, in the terms the incremental
+/// decoder and the planner's K/V-cache sizing share.
+#[derive(Debug, Clone)]
+pub struct AttnSpec {
+    /// The score MatMul `Q × K^T`.
+    pub scores_mm: NodeId,
+    /// The transpose feeding the score MatMul's RHS.
+    pub kt: NodeId,
+    /// Producer of K rows (the transpose's input; one `batch·heads × d_head`
+    /// row block per position).
+    pub k_src: NodeId,
+    /// The softmax over the (masked) scores.
+    pub softmax: NodeId,
+    /// The context MatMul `probs × V`.
+    pub av_mm: NodeId,
+    /// Producer of V rows.
+    pub v_src: NodeId,
+    /// Nodes on the scores → softmax chain (inclusive, topological): their
+    /// key axis is the *current* sequence length during decode.
+    pub chain: Vec<NodeId>,
+    /// Leading batch×heads product of the score tensor.
+    pub bh: usize,
+    /// Per-head feature dim (the cached row width per head).
+    pub dh: usize,
+    /// Full-graph sequence length (the maximum cacheable positions).
+    pub seq: usize,
+    /// Whether an [`OpKind::CausalMask`] sits on the chain.
+    pub causal: bool,
+}
+
+impl AttnSpec {
+    /// Elements of one cached row (K or V) across all heads.
+    pub fn row_elems(&self) -> usize {
+        self.bh * self.dh
+    }
+}
+
+/// Find every attention block `MatMul → [scale/mask elementwise]* →
+/// Softmax → MatMul` in `g`. Purely structural and total — graphs without
+/// attention yield an empty vec, malformed patterns are skipped, nothing
+/// panics. Both [`DecodeSession`] and
+/// [`WorkspaceSpec`](super::planner::WorkspaceSpec)'s K/V-cache sizing go
+/// through this single detector.
+pub fn attention_specs(g: &Graph) -> Vec<AttnSpec> {
+    let users = g.users();
+    let mut specs = Vec::new();
+    for s in g.nodes.iter().filter(|n| matches!(n.op, OpKind::Softmax)) {
+        // Walk up from the softmax through the elementwise score chain.
+        let mut walked = vec![s.id];
+        let mut causal = false;
+        let mut cur = s.inputs[0];
+        let mut found = None;
+        for _ in 0..16 {
+            let n = g.node(cur);
+            match &n.op {
+                OpKind::MatMul => {
+                    found = Some(cur);
+                    break;
+                }
+                OpKind::CausalMask => {
+                    causal = true;
+                    walked.push(cur);
+                    cur = n.inputs[0];
+                }
+                OpKind::Scale { .. } | OpKind::Pow { .. } | OpKind::Sqrt
+                | OpKind::Activation(_) => {
+                    walked.push(cur);
+                    cur = n.inputs[0];
+                }
+                OpKind::Div | OpKind::Mul | OpKind::Add | OpKind::Sub => {
+                    // The data side of the chain: skip scalar-constant
+                    // operands (a Broadcast of the sqrt(d_k) divisor, a
+                    // bare weight).
+                    walked.push(cur);
+                    let data = n.inputs.iter().copied().find(|&i| {
+                        !matches!(g.node(i).op, OpKind::Broadcast | OpKind::Weight)
+                    });
+                    match data {
+                        Some(d) => cur = d,
+                        None => break,
+                    }
+                }
+                _ => break,
+            }
+        }
+        let Some(scores_mm) = found else { continue };
+        let mm = g.node(scores_mm);
+        if mm.inputs.len() != 2 {
+            continue;
+        }
+        let (q, kt) = (mm.inputs[0], mm.inputs[1]);
+        let ktn = g.node(kt);
+        if !matches!(ktn.op, OpKind::Transpose { .. }) || ktn.shape.len() < 2 {
+            continue;
+        }
+        let k_src = ktn.inputs[0];
+        // K^T is [.., d_head, S]: keys on the last axis.
+        let (dh, seq) = (ktn.shape[ktn.shape.len() - 2], ktn.shape[ktn.shape.len() - 1]);
+        let bh: usize = ktn.shape[..ktn.shape.len() - 2].iter().product();
+        if g.node(q).shape.last() != Some(&dh) || mm.shape.last() != Some(&seq) {
+            continue;
+        }
+        // The context MatMul: consumes the softmax as its LHS.
+        let av = users[s.id].iter().copied().find(|&u| {
+            matches!(g.node(u).op, OpKind::MatMul) && g.node(u).inputs.first() == Some(&s.id)
+        });
+        let Some(av_mm) = av else { continue };
+        let v_src = g.node(av_mm).inputs[1];
+        if g.node(v_src).shape.last() != Some(&dh) {
+            continue;
+        }
+        let mut chain = walked;
+        chain.push(scores_mm);
+        chain.reverse();
+        specs.push(AttnSpec {
+            scores_mm,
+            kt,
+            k_src,
+            softmax: s.id,
+            av_mm,
+            v_src,
+            chain,
+            bh,
+            dh,
+            seq,
+            causal,
+        });
+    }
+    specs
+}
+
+/// Per-node execution plan of the incremental interpreter.
+#[derive(Debug, Clone)]
+enum Kind {
+    /// The graph input: the current token id as f32.
+    Token,
+    /// Weight, read straight from the store.
+    Weight,
+    /// Weight-only subgraph evaluated once at construction.
+    Const,
+    /// Value never read during decode (the K^T transpose — the score
+    /// kernel reads the cache instead).
+    Skip,
+    /// Token-id row lookup against a `[vocab, d]` table.
+    Embedding { ids: NodeId, table: NodeId, vocab: usize, d: usize },
+    /// Broadcast of a `[S, d]` table: row `p` at position `p` (learned
+    /// position embeddings).
+    PosRow { src: NodeId, d: usize },
+    /// Broadcast of a 1-element value.
+    ScalarBroadcast { src: NodeId },
+    /// Row-vector GEMM against a `[in_f, out_f]` weight.
+    Dense { x: NodeId, w: NodeId, in_f: usize, out_f: usize },
+    Bias { x: NodeId, w: NodeId },
+    LayerNorm { x: NodeId, w: NodeId, d: usize },
+    /// Elementwise unary (Activation / Scale / Pow / Sqrt).
+    Unary { x: NodeId },
+    /// CausalMask on the newest query row: every cached key is allowed, so
+    /// the mask is the identity during decode.
+    MaskIdentity { x: NodeId },
+    Binary { a: NodeId, b: NodeId },
+    /// Row softmax; `row = None` means the dynamic key axis (current len).
+    Softmax { x: NodeId, row: Option<usize> },
+    /// `q × K_cacheᵀ` over the cached prefix.
+    Scores { attn: usize, q: NodeId },
+    /// `probs × V_cache` over the cached prefix.
+    Av { attn: usize, probs: NodeId },
+    /// Generic row MatMul against a constant rank-2 RHS (the LM head).
+    RowMatMul { a: NodeId, b: NodeId, k: usize, n: usize },
+    Transpose { x: NodeId, perm: Vec<usize> },
+    /// Plain copy (Reshape / Flatten).
+    Copy { x: NodeId },
+}
+
+#[derive(Debug, Clone)]
+struct NodePlan {
+    kind: Kind,
+    /// Decode-time f32 elements; for `dynamic` nodes, elements *per cached
+    /// position* (total = base × current length).
+    base: usize,
+    dynamic: bool,
+    /// Append this node's value into attention `i`'s K (resp. V) cache.
+    k_of: Option<usize>,
+    v_of: Option<usize>,
+}
+
+/// One attention's per-session K/V cache: `[bh, max_seq, dh]` row-major,
+/// appended in place, never reallocated.
+#[derive(Debug)]
+struct KvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    bh: usize,
+    dh: usize,
+}
+
+/// An autoregressive decoding session over a compiled causal decoder
+/// graph. See the [module docs](self); constructed through
+/// [`crate::api::CompiledModel::decode_session`].
+pub struct DecodeSession<'m> {
+    g: &'m Graph,
+    plan: Vec<NodePlan>,
+    /// Template decode shape per node (sequence dims substituted with 1).
+    dshape: Vec<Vec<usize>>,
+    /// Weight tensors resolved once (node id → store tensor).
+    wref: Vec<Option<&'m Tensor>>,
+    /// Constant-subgraph values evaluated once.
+    consts: Vec<Option<Tensor>>,
+    /// Per-node value buffers (sized for max_seq on dynamic nodes).
+    bufs: Vec<Vec<f32>>,
+    /// Input-dependent nodes in topological order.
+    order: Vec<NodeId>,
+    kv: Vec<KvCache>,
+    out_id: NodeId,
+    vocab: usize,
+    max_seq: usize,
+    /// Tokens consumed so far (the next step decodes position `len`).
+    len: usize,
+    /// Current sequence length *during* a step (`len + 1`).
+    cur: usize,
+}
+
+impl<'m> DecodeSession<'m> {
+    /// Build a session over a (rewritten) graph + weights. Errors loudly
+    /// on anything that cannot decode incrementally: batch > 1, missing
+    /// token embedding, non-causal attention, unsupported ops, or
+    /// `max_seq` outside `1..=S`.
+    pub fn new(g: &'m Graph, ws: &'m WeightStore, max_seq: usize) -> Result<DecodeSession<'m>> {
+        let nn = g.nodes.len();
+        // --- the single token input ------------------------------------
+        let inputs: Vec<NodeId> = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Input))
+            .map(|n| n.id)
+            .collect();
+        let &[input_id] = &inputs[..] else {
+            bail!("decode_session needs exactly one input node, got {}", inputs.len());
+        };
+        let ishape = &g.node(input_id).shape;
+        if ishape.len() != 2 {
+            bail!("decode_session needs a [batch, seq] token input, got {ishape:?}");
+        }
+        let (batch, seq) = (ishape[0], ishape[1]);
+        if batch != 1 {
+            bail!("decode_session supports batch 1 only (model compiled at batch {batch})");
+        }
+        if max_seq == 0 || max_seq > seq {
+            bail!("max_seq {max_seq} outside the model's positional range 1..={seq}");
+        }
+        // The token input must feed an embedding row lookup — that is what
+        // defines the vocabulary the session validates ids against.
+        let vocab = g
+            .nodes
+            .iter()
+            .find_map(|n| match n.op {
+                OpKind::Embedding | OpKind::Gather
+                    if n.inputs.len() == 2 && n.inputs[0] == input_id =>
+                {
+                    Some(g.node(n.inputs[1]).shape[0])
+                }
+                _ => None,
+            })
+            .ok_or_else(|| {
+                anyhow!("decode_session needs the input consumed by a token embedding")
+            })?;
+        let &[out_id] = &g.outputs[..] else {
+            bail!("decode_session needs exactly one graph output");
+        };
+        if !g.node(out_id).shape.contains(&seq) {
+            bail!(
+                "graph output {:?} has no sequence dim — not a per-position decoder head",
+                g.node(out_id).shape
+            );
+        }
+
+        // --- input-dependence closure ----------------------------------
+        let mut dep = vec![false; nn];
+        dep[input_id] = true;
+        for n in &g.nodes {
+            if !n.op.is_source() && n.inputs.iter().any(|&i| dep[i]) {
+                dep[n.id] = true;
+            }
+        }
+        if !dep[out_id] {
+            bail!("graph output does not depend on the token input");
+        }
+
+        // --- constant subgraphs, evaluated once ------------------------
+        let mut wref: Vec<Option<&'m Tensor>> = vec![None; nn];
+        let mut consts: Vec<Option<Tensor>> = vec![None; nn];
+        for n in &g.nodes {
+            if dep[n.id] {
+                continue;
+            }
+            match n.op {
+                OpKind::Weight => {
+                    wref[n.id] = Some(
+                        ws.get(&n.name)
+                            .ok_or_else(|| anyhow!("weight '{}' missing", n.name))?,
+                    );
+                }
+                OpKind::Input => {}
+                _ => {
+                    let args: Vec<&Tensor> = n
+                        .inputs
+                        .iter()
+                        .map(|&i| {
+                            consts[i]
+                                .as_ref()
+                                .or(wref[i])
+                                .ok_or_else(|| anyhow!("constant input {i} unavailable"))
+                        })
+                        .collect::<Result<_>>()?;
+                    consts[n.id] = Some(eval_op(g, n.id, &args)?);
+                }
+            }
+        }
+
+        // --- attention discovery + K/V caches --------------------------
+        let specs: Vec<AttnSpec> = attention_specs(g);
+        for a in &specs {
+            if !a.causal {
+                bail!(
+                    "attention at node {} is not causal — incremental decoding would \
+                     change its semantics (build the model with causal attention)",
+                    a.softmax
+                );
+            }
+        }
+        let mut in_chain = vec![false; nn];
+        let mut k_of = vec![None; nn];
+        let mut v_of = vec![None; nn];
+        let mut skip = vec![false; nn];
+        let users = g.users();
+        for (ai, a) in specs.iter().enumerate() {
+            for &c in &a.chain {
+                in_chain[c] = true;
+            }
+            k_of[a.k_src] = Some(ai);
+            v_of[a.v_src] = Some(ai);
+            // The K^T value itself is never read — the score kernel runs
+            // against the cache — unless something else consumes it.
+            if users[a.kt].len() == 1 && users[a.kt][0] == a.scores_mm {
+                skip[a.kt] = true;
+            }
+        }
+        // Any score-shaped softmax the detector did not claim would decode
+        // incorrectly — refuse instead.
+        for n in &g.nodes {
+            if matches!(n.op, OpKind::Softmax) && dep[n.id] && !in_chain[n.id] {
+                let sh = &n.shape;
+                if sh.len() >= 2 && sh[sh.len() - 1] == seq && sh[sh.len() - 2] == seq {
+                    bail!("unrecognized attention structure at softmax node {}", n.id);
+                }
+            }
+        }
+
+        // --- decode-time shapes (seq → 1 substitution) ------------------
+        let sub = |shape: &[usize]| -> Vec<usize> {
+            shape.iter().map(|&d| if d == seq { 1 } else { d }).collect()
+        };
+        let mut dshape: Vec<Vec<usize>> = vec![Vec::new(); nn];
+        for n in &g.nodes {
+            dshape[n.id] = sub(&n.shape);
+        }
+
+        // --- per-node plans ---------------------------------------------
+        let data_and_weight = |id: NodeId| -> Result<(NodeId, NodeId)> {
+            super::split_data_weight(g, id)
+        };
+        let mut plan: Vec<NodePlan> = Vec::with_capacity(nn);
+        for n in &g.nodes {
+            let id = n.id;
+            let dynamic = in_chain[id];
+            let base = if dynamic {
+                // Chain tensors are [.., 1, keys]: elements per key.
+                let sh = &g.node(id).shape;
+                sub(&sh[..sh.len() - 1]).iter().product()
+            } else {
+                dshape[id].iter().product()
+            };
+            let kind = if skip[id] {
+                Kind::Skip
+            } else if !dep[id] {
+                match &n.op {
+                    OpKind::Weight => Kind::Weight,
+                    // Constant broadcasts must stay *per-step* kernels, not
+                    // materialized full-sequence tensors: the position
+                    // table contributes row `p` at position `p`, and a
+                    // scalar (the sqrt(d_k) divisor) stays one element so
+                    // decode-time elementwise consumers re-broadcast it.
+                    OpKind::Broadcast => {
+                        let src = n.inputs[0];
+                        let ss = &g.node(src).shape;
+                        if ss.iter().product::<usize>() == 1 {
+                            Kind::ScalarBroadcast { src }
+                        } else if ss.len() == 2 && ss[0] == seq && n.shape[..] == [1, seq, ss[1]]
+                        {
+                            Kind::PosRow { src, d: ss[1] }
+                        } else {
+                            Kind::Const
+                        }
+                    }
+                    _ => Kind::Const,
+                }
+            } else {
+                match &n.op {
+                    OpKind::Input => Kind::Token,
+                    OpKind::Embedding | OpKind::Gather => {
+                        if n.inputs.len() != 2 {
+                            bail!("decode supports only the row-lookup embedding form");
+                        }
+                        let ts = &g.node(n.inputs[1]).shape;
+                        Kind::Embedding {
+                            ids: n.inputs[0],
+                            table: n.inputs[1],
+                            vocab: ts[0],
+                            d: ts[1],
+                        }
+                    }
+                    OpKind::Broadcast => {
+                        let src = n.inputs[0];
+                        let ss = &g.node(src).shape;
+                        if ss.iter().product::<usize>() == 1 {
+                            Kind::ScalarBroadcast { src }
+                        } else if !dep[src]
+                            && ss.len() == 2
+                            && ss[0] == seq
+                            && n.shape[..] == [1, seq, ss[1]]
+                        {
+                            Kind::PosRow { src, d: ss[1] }
+                        } else {
+                            bail!("decode cannot broadcast {:?} -> {:?}", ss, n.shape);
+                        }
+                    }
+                    OpKind::Dense => {
+                        let (x, w) = data_and_weight(id)?;
+                        let wsh = &g.node(w).shape;
+                        Kind::Dense { x, w, in_f: wsh[0], out_f: wsh[1] }
+                    }
+                    OpKind::Bias => {
+                        let (x, w) = data_and_weight(id)?;
+                        Kind::Bias { x, w }
+                    }
+                    OpKind::LayerNorm => {
+                        let (x, w) = data_and_weight(id)?;
+                        Kind::LayerNorm { x, w, d: g.node(w).shape[1] }
+                    }
+                    OpKind::Activation(_) | OpKind::Pow { .. } | OpKind::Sqrt => {
+                        Kind::Unary { x: n.inputs[0] }
+                    }
+                    OpKind::Scale { .. } if n.inputs.len() == 1 => Kind::Unary { x: n.inputs[0] },
+                    OpKind::CausalMask => Kind::MaskIdentity { x: n.inputs[0] },
+                    OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div => {
+                        Kind::Binary { a: n.inputs[0], b: n.inputs[1] }
+                    }
+                    OpKind::Softmax => Kind::Softmax {
+                        x: n.inputs[0],
+                        row: if dynamic { None } else { Some(*dshape[id].last().unwrap()) },
+                    },
+                    OpKind::MatMul => {
+                        if let Some(ai) = specs.iter().position(|a| a.scores_mm == id) {
+                            Kind::Scores { attn: ai, q: n.inputs[0] }
+                        } else if let Some(ai) = specs.iter().position(|a| a.av_mm == id) {
+                            Kind::Av { attn: ai, probs: n.inputs[0] }
+                        } else {
+                            let b = n.inputs[1];
+                            if dep[b] || dshape[b].len() != 2 {
+                                bail!(
+                                    "decode MatMul at node {id} needs a constant rank-2 RHS \
+                                     (got {:?})",
+                                    g.node(b).shape
+                                );
+                            }
+                            Kind::RowMatMul {
+                                a: n.inputs[0],
+                                b,
+                                k: dshape[b][0],
+                                n: dshape[b][1],
+                            }
+                        }
+                    }
+                    OpKind::Transpose { perm } => {
+                        Kind::Transpose { x: n.inputs[0], perm: perm.clone() }
+                    }
+                    OpKind::Reshape | OpKind::Flatten => Kind::Copy { x: n.inputs[0] },
+                    other => bail!(
+                        "op '{}' (node {id}) is not supported by the incremental decoder",
+                        other.name()
+                    ),
+                }
+            };
+            // A scalar broadcast materializes one element regardless of its
+            // baked full-sequence shape — consumers broadcast it back out.
+            let base = if matches!(kind, Kind::ScalarBroadcast { .. }) { 1 } else { base };
+            plan.push(NodePlan { kind, base, dynamic, k_of: k_of[id], v_of: v_of[id] });
+        }
+
+        // Structural sanity: cached rows and the score/context operands
+        // must agree on the bh×dh layout.
+        for a in &specs {
+            for src in [a.k_src, a.v_src] {
+                if plan[src].dynamic || plan[src].base != a.row_elems() {
+                    bail!(
+                        "attention K/V producer {src} yields {} elements per step, \
+                         expected {}×{}",
+                        plan[src].base,
+                        a.bh,
+                        a.dh
+                    );
+                }
+            }
+            let q = g.node(a.scores_mm).inputs[0];
+            if plan[q].base != a.row_elems() {
+                bail!("attention Q producer {q} does not match bh×dh");
+            }
+            if plan[a.av_mm].base != a.row_elems() {
+                bail!("attention context {0} does not match bh×dh", a.av_mm);
+            }
+        }
+        // Copy-kind (reshape) element counts must survive substitution.
+        for n in &g.nodes {
+            if let Kind::Copy { x } = &plan[n.id].kind {
+                if plan[n.id].dynamic != plan[*x].dynamic || plan[n.id].base != plan[*x].base {
+                    bail!("reshape at node {} changes decode element count", n.id);
+                }
+            }
+        }
+
+        // Constant broadcasts re-kinded to per-step kernels: drop their
+        // materialized full-sequence values so `read` resolves to the
+        // per-step buffer, not the stale constant.
+        for (id, p) in plan.iter().enumerate() {
+            if matches!(p.kind, Kind::PosRow { .. } | Kind::ScalarBroadcast { .. }) {
+                consts[id] = None;
+            }
+        }
+
+        let evaluated =
+            |k: &Kind| !matches!(k, Kind::Weight | Kind::Const | Kind::Skip);
+        let bufs: Vec<Vec<f32>> = plan
+            .iter()
+            .map(|p| {
+                if !evaluated(&p.kind) {
+                    Vec::new()
+                } else if p.dynamic {
+                    vec![0.0; p.base * max_seq]
+                } else {
+                    vec![0.0; p.base]
+                }
+            })
+            .collect();
+        let kv = specs
+            .iter()
+            .map(|a| KvCache {
+                k: vec![0.0; a.row_elems() * max_seq],
+                v: vec![0.0; a.row_elems() * max_seq],
+                bh: a.bh,
+                dh: a.dh,
+            })
+            .collect();
+        let order: Vec<NodeId> = (0..nn).filter(|&id| evaluated(&plan[id].kind)).collect();
+        Ok(DecodeSession {
+            g,
+            plan,
+            dshape,
+            wref,
+            consts,
+            bufs,
+            order,
+            kv,
+            out_id,
+            vocab,
+            max_seq,
+            len: 0,
+            cur: 0,
+        })
+    }
+
+    /// Maximum positions this session can hold.
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Tokens consumed so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Vocabulary size token ids are validated against.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Total K/V cache elements held by this session
+    /// (`Σ attentions 2 × bh × d_head × max_seq` — the planner's
+    /// [`WorkspaceSpec::kv_cache_elems`](super::planner::WorkspaceSpec::kv_cache_elems)
+    /// sizing).
+    pub fn kv_cache_elems(&self) -> usize {
+        self.kv.iter().map(|c| c.k.len() + c.v.len()).sum()
+    }
+
+    /// Rewind to an empty sequence so the session (and its caches) can be
+    /// reused without reallocation.
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Feed a prompt, one position at a time; returns the logits row of
+    /// the *last* prompt token.
+    pub fn prefill(&mut self, tokens: &[u32]) -> Result<&[f32]> {
+        if tokens.is_empty() {
+            bail!("prefill needs at least one token");
+        }
+        if self.len + tokens.len() > self.max_seq {
+            bail!(
+                "prompt of {} tokens exceeds max_seq {} (at position {})",
+                tokens.len(),
+                self.max_seq,
+                self.len
+            );
+        }
+        // Validate every id up front so prefill is atomic: a bad token
+        // mid-prompt must not leave the session partially advanced.
+        for &t in tokens {
+            if t as usize >= self.vocab {
+                bail!("token id {t} out of range for vocab {}", self.vocab);
+            }
+        }
+        for &t in tokens {
+            self.advance(t)?;
+        }
+        Ok(self.logits())
+    }
+
+    /// Decode one token: appends its K/V rows to the caches and returns
+    /// the logits row for the next position. Allocation-free after
+    /// warm-up; loud errors on out-of-range ids and full sequences.
+    pub fn step(&mut self, token: u32) -> Result<&[f32]> {
+        self.advance(token)?;
+        Ok(self.logits())
+    }
+
+    /// Greedy decoding convenience: prefill the prompt, then emit `n`
+    /// argmax tokens.
+    pub fn generate(&mut self, prompt: &[u32], n: usize) -> Result<Vec<u32>> {
+        self.prefill(prompt)?;
+        self.generate_continue(n)
+    }
+
+    /// Continue greedy decoding from the current position: emit `n` argmax
+    /// tokens starting from the logits of the last decoded position
+    /// (requires a prior `prefill`/`step`).
+    pub fn generate_continue(&mut self, n: usize) -> Result<Vec<u32>> {
+        if self.len == 0 {
+            bail!("generate_continue needs a prefilled prompt");
+        }
+        let mut logits = self.logits().to_vec();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let next = argmax(&logits) as u32;
+            out.push(next);
+            if i + 1 < n {
+                logits.clear();
+                logits.extend_from_slice(self.step(next)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// The logits row of the most recently decoded position.
+    fn logits(&self) -> &[f32] {
+        &self.bufs[self.out_id][..self.plan[self.out_id].base]
+    }
+
+    /// Run one position through the interpreter.
+    fn advance(&mut self, token: u32) -> Result<()> {
+        if self.len >= self.max_seq {
+            bail!(
+                "sequence is full ({} positions) — call reset() or raise max_seq",
+                self.max_seq
+            );
+        }
+        if token as usize >= self.vocab {
+            bail!("token id {token} out of range for vocab {}", self.vocab);
+        }
+        let p = self.len;
+        self.cur = p + 1;
+        for oi in 0..self.order.len() {
+            let id = self.order[oi];
+            let elems = self.len_of(id);
+            // Take the output buffer out so sibling buffers stay readable.
+            let mut ob = std::mem::take(&mut self.bufs[id]);
+            let res = self.eval_node(id, token, &mut ob[..elems]);
+            if res.is_ok() {
+                let max_seq = self.max_seq;
+                if let Some(ai) = self.plan[id].k_of {
+                    let c = &mut self.kv[ai];
+                    append_rows(&mut c.k, c.bh, c.dh, max_seq, p, &ob);
+                }
+                if let Some(ai) = self.plan[id].v_of {
+                    let c = &mut self.kv[ai];
+                    append_rows(&mut c.v, c.bh, c.dh, max_seq, p, &ob);
+                }
+            }
+            self.bufs[id] = ob;
+            res?;
+        }
+        self.len = p + 1;
+        Ok(())
+    }
+
+    /// Decode-time element count of a node's current value.
+    fn len_of(&self, id: NodeId) -> usize {
+        let pl = &self.plan[id];
+        if pl.dynamic {
+            pl.base * self.cur
+        } else {
+            pl.base
+        }
+    }
+
+    /// Read a node's current value (weight / precomputed constant /
+    /// per-step buffer).
+    fn read(&self, id: NodeId) -> &[f32] {
+        if let Some(t) = self.wref[id] {
+            return t.data();
+        }
+        if let Some(t) = &self.consts[id] {
+            return t.data();
+        }
+        &self.bufs[id][..self.len_of(id)]
+    }
+
+    fn eval_node(&self, id: NodeId, token: u32, out: &mut [f32]) -> Result<()> {
+        let cur = self.cur;
+        match &self.plan[id].kind {
+            Kind::Token => {
+                out[0] = token as f32;
+                Ok(())
+            }
+            Kind::Embedding { ids, table, vocab, d } => {
+                embedding_into(self.read(*ids), self.read(*table), *vocab, *d, out)
+            }
+            Kind::PosRow { src, d } => {
+                let (p, d) = (cur - 1, *d);
+                out.copy_from_slice(&self.read(*src)[p * d..(p + 1) * d]);
+                Ok(())
+            }
+            Kind::ScalarBroadcast { src } => {
+                out[0] = self.read(*src)[0];
+                Ok(())
+            }
+            Kind::Dense { x, w, in_f, out_f } => {
+                row_matmul(self.read(*x), self.read(*w), *in_f, *out_f, out);
+                Ok(())
+            }
+            Kind::RowMatMul { a, b, k, n } => {
+                row_matmul(self.read(*a), self.read(*b), *k, *n, out);
+                Ok(())
+            }
+            Kind::Bias { x, w } => {
+                let xv = self.read(*x);
+                let wv = self.read(*w);
+                let c = wv.len();
+                let per = per_channel_stride(&self.dshape[*x], c).0;
+                for (i, v) in out.iter_mut().enumerate() {
+                    *v = xv[i] + wv[(i / per) % c];
+                }
+                Ok(())
+            }
+            Kind::LayerNorm { x, w, d } => {
+                let xv = self.read(*x);
+                let wv = self.read(*w);
+                let d = *d;
+                out.copy_from_slice(&xv[..out.len()]);
+                for row in out.chunks_exact_mut(d) {
+                    let mean: f32 = row.iter().sum::<f32>() / d as f32;
+                    let var: f32 =
+                        row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+                    let inv = 1.0 / (var + 1e-5).sqrt();
+                    for (i, v) in row.iter_mut().enumerate() {
+                        *v = (*v - mean) * inv * wv[i] + wv[d + i];
+                    }
+                }
+                Ok(())
+            }
+            Kind::Unary { x } => {
+                let xv = self.read(*x);
+                out.copy_from_slice(&xv[..out.len()]);
+                apply_unary_slice_inplace(&self.g.node(id).op, out);
+                Ok(())
+            }
+            Kind::MaskIdentity { x } => {
+                // The newest query row attends to every cached position —
+                // the causal mask is the identity on the decode path.
+                out.copy_from_slice(&self.read(*x)[..out.len()]);
+                Ok(())
+            }
+            Kind::Binary { a, b } => {
+                let av = self.read(*a);
+                let bv = self.read(*b);
+                let op = &self.g.node(id).op;
+                if av.len() == out.len() && bv.len() == out.len() {
+                    for (i, v) in out.iter_mut().enumerate() {
+                        *v = binop(op, av[i], bv[i]);
+                    }
+                } else if bv.len() == 1 && av.len() == out.len() {
+                    let s = bv[0];
+                    for (i, v) in out.iter_mut().enumerate() {
+                        *v = binop(op, av[i], s);
+                    }
+                } else if av.len() == 1 && bv.len() == out.len() {
+                    let s = av[0];
+                    for (i, v) in out.iter_mut().enumerate() {
+                        *v = binop(op, s, bv[i]);
+                    }
+                } else {
+                    bail!(
+                        "decode elementwise shape mismatch at node {id}: {} vs {} -> {}",
+                        av.len(),
+                        bv.len(),
+                        out.len()
+                    );
+                }
+                Ok(())
+            }
+            Kind::Softmax { x, row } => {
+                let l = (*row).unwrap_or(cur);
+                out.copy_from_slice(&self.read(*x)[..out.len()]);
+                softmax_rows_inplace(out, l);
+                Ok(())
+            }
+            Kind::Scores { attn, q } => {
+                let qv = self.read(*q);
+                let c = &self.kv[*attn];
+                for b in 0..c.bh {
+                    let qrow = &qv[b * c.dh..(b + 1) * c.dh];
+                    for j in 0..cur {
+                        let krow = &c.k[(b * self.max_seq + j) * c.dh..][..c.dh];
+                        let mut acc = 0.0f32;
+                        for (a, b2) in qrow.iter().zip(krow) {
+                            acc += a * b2;
+                        }
+                        out[b * cur + j] = acc;
+                    }
+                }
+                Ok(())
+            }
+            Kind::Av { attn, probs } => {
+                let pv = self.read(*probs);
+                let c = &self.kv[*attn];
+                for b in 0..c.bh {
+                    let orow = &mut out[b * c.dh..(b + 1) * c.dh];
+                    orow.fill(0.0);
+                    for j in 0..cur {
+                        let pj = pv[b * cur + j];
+                        let vrow = &c.v[(b * self.max_seq + j) * c.dh..][..c.dh];
+                        for (o, vv) in orow.iter_mut().zip(vrow) {
+                            *o += pj * vv;
+                        }
+                    }
+                }
+                Ok(())
+            }
+            Kind::Transpose { x, perm } => {
+                transpose_into(self.read(*x), &self.dshape[*x], perm, out);
+                Ok(())
+            }
+            Kind::Copy { x } => {
+                out.copy_from_slice(&self.read(*x)[..out.len()]);
+                Ok(())
+            }
+            Kind::Weight | Kind::Const | Kind::Skip => Ok(()),
+        }
+    }
+}
+
+/// `out[r, j] = Σ_i x[r, i] · w[i, j]` over a row-major `[in_f, out_f]`
+/// RHS — axpy order so the weight streams row-contiguously. The decoder's
+/// row GEMM: allocation-free, no panel packing (rows is 1 on the hot
+/// path, so blocked packing would cost more than it saves).
+fn row_matmul(x: &[f32], w: &[f32], in_f: usize, out_f: usize, out: &mut [f32]) {
+    let rows = out.len() / out_f;
+    out.fill(0.0);
+    for r in 0..rows {
+        let xrow = &x[r * in_f..(r + 1) * in_f];
+        let orow = &mut out[r * out_f..(r + 1) * out_f];
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * out_f..(i + 1) * out_f];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+fn binop(op: &OpKind, a: f32, b: f32) -> f32 {
+    match op {
+        OpKind::Add => a + b,
+        OpKind::Sub => a - b,
+        OpKind::Mul => a * b,
+        _ => a / b,
+    }
+}
+
+/// Append one `[bh, dh]` row block into a `[bh, max_seq, dh]` cache at
+/// position `p`.
+fn append_rows(cache: &mut [f32], bh: usize, dh: usize, max_seq: usize, p: usize, row: &[f32]) {
+    for b in 0..bh {
+        cache[(b * max_seq + p) * dh..(b * max_seq + p + 1) * dh]
+            .copy_from_slice(&row[b * dh..(b + 1) * dh]);
+    }
+}
+
+/// Index of the largest logit (NaN-safe via total order; first wins ties)
+/// — the greedy sampling rule `generate` and the token-streaming server
+/// share.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, v) in xs.iter().enumerate() {
+        if v.total_cmp(&xs[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo::nlp;
+    use crate::graph::WeightStore;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn detector_finds_causal_attention_in_both_forms() {
+        // Compact form: 2 layers → 2 specs, bh = batch, dh = d.
+        let g = nlp::demo_transformer_causal(1);
+        let specs = attention_specs(&g);
+        assert_eq!(specs.len(), 2);
+        for a in &specs {
+            assert!(a.causal);
+            assert_eq!((a.bh, a.dh, a.seq), (1, 64, 32));
+            assert!(a.chain.len() >= 3, "scores→scale→mask→softmax");
+            assert_eq!(a.chain[0], a.scores_mm);
+            assert_eq!(*a.chain.last().unwrap(), a.softmax);
+        }
+        // Frontend form: per-head rank-4 shapes, bh = heads.
+        let g = nlp::gpt2_frontend_layers(1, 2);
+        let specs = attention_specs(&g);
+        assert_eq!(specs.len(), 2);
+        for a in &specs {
+            assert!(a.causal);
+            assert_eq!((a.bh, a.dh, a.seq), (12, 64, 384));
+        }
+        // Encoder form: detected but not causal.
+        let g = nlp::demo_transformer(1);
+        let specs = attention_specs(&g);
+        assert_eq!(specs.len(), 2);
+        assert!(specs.iter().all(|a| !a.causal));
+        // No attention at all.
+        assert!(attention_specs(&crate::graph::zoo::by_name("demo-cnn", 1)).is_empty());
+    }
+
+    #[test]
+    fn session_rejects_non_causal_and_non_decoder_models() {
+        let mut rng = Rng::new(3);
+        let g = nlp::demo_transformer(1);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        let err = DecodeSession::new(&g, &ws, 8).unwrap_err().to_string();
+        assert!(err.contains("not causal"), "got: {err}");
+
+        let g = crate::graph::zoo::by_name("demo-cnn", 1);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        assert!(DecodeSession::new(&g, &ws, 8).is_err());
+    }
+
+    #[test]
+    fn session_validates_tokens_and_length() {
+        let mut rng = Rng::new(4);
+        let g = nlp::demo_transformer_causal(1);
+        let ws = WeightStore::init_random(&g, &mut rng);
+        // max_seq outside the positional range.
+        assert!(DecodeSession::new(&g, &ws, 0).is_err());
+        assert!(DecodeSession::new(&g, &ws, 33).is_err());
+        let mut s = DecodeSession::new(&g, &ws, 4).unwrap();
+        assert_eq!(s.vocab(), 256);
+        // Out-of-range token: loud error, not the executor's bounds panic.
+        let err = s.step(256).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "got: {err}");
+        assert_eq!(s.len(), 0, "failed step must not advance");
+        // Too-long prompt.
+        let err = s.prefill(&[1, 2, 3, 4, 5]).unwrap_err().to_string();
+        assert!(err.contains("exceeds max_seq"), "got: {err}");
+        // Fill up, then overflow.
+        s.prefill(&[1, 2, 3, 4]).unwrap();
+        let err = s.step(1).unwrap_err().to_string();
+        assert!(err.contains("full"), "got: {err}");
+        // reset() rewinds without reallocation.
+        s.reset();
+        assert!(s.is_empty());
+        s.prefill(&[9, 8]).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.kv_cache_elems() > 0);
+        // prefill is atomic: a bad id mid-prompt advances nothing.
+        let err = s.prefill(&[1, 300]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "got: {err}");
+        assert_eq!(s.len(), 2, "failed prefill must not advance");
+    }
+}

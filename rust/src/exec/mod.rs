@@ -28,6 +28,7 @@
 //! [`eval_supported`] is the single source of truth the zoo-wide coverage
 //! test checks against so new gaps fail loudly.
 
+pub mod decode;
 pub mod planner;
 
 use std::borrow::Cow;
@@ -35,6 +36,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+pub use decode::{attention_specs, AttnSpec, DecodeSession};
 pub use planner::{MemoryPlan, PlanStats, Workspace, WorkspaceSpec};
 
 use crate::deepreuse::{reuse_conv2d, reuse_conv2d_pre, reuse_gemm, ReuseConfig};
@@ -157,11 +159,27 @@ pub fn eval_op(g: &Graph, id: NodeId, args: &[&Tensor]) -> Result<Tensor> {
                 args[0].map(move |x| x * m + a)
             }
         }
+        OpKind::CausalMask => {
+            let mut out = args[0].clone();
+            let l = *n.shape.last().unwrap();
+            causal_mask_rows(out.data_mut(), l);
+            out
+        }
         OpKind::Softmax => {
             let x = args[0];
             let last = *x.shape().last().unwrap();
-            let rows = x.len() / last;
-            x.reshape(&[rows, last]).softmax_rows().reshape(&n.shape)
+            // Fused masked softmax: when the scores were causally masked,
+            // normalize each query row over its allowed prefix and write
+            // exact zeros beyond — identical numerics to exponentiating
+            // the -inf entries, without touching them.
+            if matches!(g.node(n.inputs[0]).op, OpKind::CausalMask) {
+                let mut out = x.clone();
+                causal_softmax_rows(out.data_mut(), last);
+                out
+            } else {
+                let rows = x.len() / last;
+                x.reshape(&[rows, last]).softmax_rows().reshape(&n.shape)
+            }
         }
         OpKind::MaxPool { k, stride, pad } => max_pool(args[0], *k, *stride, *pad),
         OpKind::AvgPool { k, stride, pad } => avg_pool(args[0], *k, *stride, *pad),
@@ -212,7 +230,7 @@ pub fn eval_supported(op: &OpKind) -> bool {
     use OpKind::*;
     match op {
         Conv2d { .. } | Dense | MatMul | BatchNorm | Bias | LayerNorm | Activation(_) | Add
-        | Sub | Mul | Div | Pow { .. } | Sqrt | Scale { .. } | Softmax | MaxPool { .. }
+        | Sub | Mul | Div | Pow { .. } | Sqrt | Scale { .. } | CausalMask | Softmax | MaxPool { .. }
         | AvgPool { .. } | GlobalAvgPool | Reshape | Flatten | Transpose { .. } | Slice { .. }
         | Pad { .. } | Embedding | Gather | Concat | Upsample { .. } | PixelShuffle { .. }
         | Broadcast => true,
@@ -1466,22 +1484,24 @@ impl<'g> FusedExecutor<'g> {
                 }
                 Ok(())
             }
+            OpKind::CausalMask => {
+                let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
+                let l = *node.shape.last().unwrap();
+                out.copy_from_slice(&x[..elems]);
+                causal_mask_rows(out, l);
+                Ok(())
+            }
             OpKind::Softmax => {
                 let x = steady_arg(g, self.ws, state, inputs, slots, group, prev, node.inputs[0])?;
                 let last = *node.shape.last().unwrap();
-                let rows = elems / last;
                 out.copy_from_slice(&x[..elems]);
-                for r in 0..rows {
-                    let row = &mut out[r * last..(r + 1) * last];
-                    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    let mut s = 0.0;
-                    for v in row.iter_mut() {
-                        *v = (*v - mx).exp();
-                        s += *v;
-                    }
-                    for v in row.iter_mut() {
-                        *v /= s;
-                    }
+                // Fused masked softmax on the in-arena path: skip the
+                // masked upper-triangle columns entirely (no exp over
+                // -inf), preserving the zero-allocation guarantee.
+                if matches!(g.node(node.inputs[0]).op, OpKind::CausalMask) {
+                    causal_softmax_rows(out, last);
+                } else {
+                    softmax_rows_inplace(out, last);
                 }
                 Ok(())
             }
@@ -1751,6 +1771,61 @@ fn avg_pool_into(
                 }
             }
         }
+    }
+}
+
+/// Causal mask over the trailing `l × l` matrices of `data`: entries with
+/// key index `j > i` (strictly above the diagonal of each square block)
+/// become `-inf`. This is the reference semantics of [`OpKind::CausalMask`]
+/// — the fused softmax kernels below never materialize these values.
+fn causal_mask_rows(data: &mut [f32], l: usize) {
+    debug_assert!(l > 0 && data.len() % (l * l) == 0);
+    for block in data.chunks_exact_mut(l * l) {
+        for (i, row) in block.chunks_exact_mut(l).enumerate() {
+            for v in &mut row[i + 1..] {
+                *v = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+/// Plain row softmax in place over `[rows, l]`-flattened data.
+fn softmax_rows_inplace(data: &mut [f32], l: usize) {
+    for row in data.chunks_exact_mut(l) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+}
+
+/// Fused causal masked softmax in place over `[rows, l]`-flattened scores:
+/// query row `i` (its index within each `l × l` block) normalizes over the
+/// allowed prefix `0..=i` and the masked tail is written as exact zeros —
+/// the masked columns are *skipped*, never exponentiated. Bitwise
+/// identical to `causal_mask_rows` + [`softmax_rows_inplace`]
+/// (`exp(-inf − mx) == 0` and `-inf` never wins the row max, since the
+/// diagonal is always allowed).
+fn causal_softmax_rows(data: &mut [f32], l: usize) {
+    debug_assert!(l > 0 && data.len() % (l * l) == 0);
+    for (r, row) in data.chunks_exact_mut(l).enumerate() {
+        let allowed = (r % l) + 1;
+        let (live, masked) = row.split_at_mut(allowed);
+        let mx = live.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0;
+        for v in live.iter_mut() {
+            *v = (*v - mx).exp();
+            s += *v;
+        }
+        for v in live.iter_mut() {
+            *v /= s;
+        }
+        masked.fill(0.0);
     }
 }
 
@@ -2303,6 +2378,36 @@ mod tests {
         assert!(embedding_lookup(&Tensor::from_vec(&[1], vec![3.0]), &table).is_err());
         assert!(embedding_lookup(&Tensor::from_vec(&[1], vec![-1.0]), &table).is_err());
         assert!(embedding_lookup(&Tensor::from_vec(&[1], vec![0.5]), &table).is_err());
+    }
+
+    /// The fused masked-softmax kernel (skip masked columns) is bitwise
+    /// identical to the reference semantics (mask to -inf, then the plain
+    /// row softmax), including the seq=1 edge case.
+    #[test]
+    fn causal_softmax_skip_kernel_matches_minus_inf_reference() {
+        let mut rng = Rng::new(91);
+        for l in [1usize, 2, 5, 8] {
+            let x = Tensor::randn(&[3, l, l], 1.0, &mut rng);
+            let mut reference = x.data().to_vec();
+            causal_mask_rows(&mut reference, l);
+            softmax_rows_inplace(&mut reference, l);
+            let mut fused = x.data().to_vec();
+            causal_softmax_rows(&mut fused, l);
+            assert_eq!(reference, fused, "l={l}: skip kernel diverges");
+            // Masked positions are exact zeros; every row sums to 1.
+            for b in 0..3 {
+                for i in 0..l {
+                    let row = &fused[(b * l + i) * l..(b * l + i + 1) * l];
+                    for (j, &v) in row.iter().enumerate() {
+                        if j > i {
+                            assert_eq!(v, 0.0, "masked [{b},{i},{j}] leaked");
+                        }
+                    }
+                    let s: f32 = row.iter().sum();
+                    assert!((s - 1.0).abs() < 1e-5, "row [{b},{i}] sums to {s}");
+                }
+            }
+        }
     }
 
     /// Batched matmul over rank-3 and rank-4 leading dims (and the rank-2

@@ -200,6 +200,16 @@ pub struct WorkspaceSpec {
     /// Largest transposed conv weight matrix (`i*kh*kw × o`) — used only
     /// when pre-packing is off and the transpose happens per call.
     pub wt_elems: usize,
+    /// Per-*causal*-attention K/V cache row widths (`batch·heads × d_head`
+    /// elements per cached position, per tensor), discovered by
+    /// [`crate::exec::decode::attention_specs`]. A
+    /// [`DecodeSession`](crate::exec::decode::DecodeSession) holds
+    /// `2 × row × max_seq` elements per entry — over a whole decoder this
+    /// is the classic `layers × 2 × heads × max_seq × d_head` cache-slot
+    /// budget; see [`WorkspaceSpec::kv_cache_elems`]. The caches are
+    /// per-session state (not part of the shared arena), so they are
+    /// excluded from [`WorkspaceSpec::bytes`].
+    pub kv_rows: Vec<usize>,
 }
 
 impl WorkspaceSpec {
@@ -209,6 +219,11 @@ impl WorkspaceSpec {
     /// deep-reuse or plain GEMM.
     pub fn for_graph(g: &Graph, plan: &MemoryPlan, materialize: &[bool]) -> WorkspaceSpec {
         let mut spec = WorkspaceSpec { slot_elems: plan.slot_elems.clone(), ..Default::default() };
+        spec.kv_rows = crate::exec::decode::attention_specs(g)
+            .iter()
+            .filter(|a| a.causal)
+            .map(|a| a.row_elems())
+            .collect();
         for n in &g.nodes {
             if n.op.is_source() {
                 continue;
@@ -236,6 +251,12 @@ impl WorkspaceSpec {
             }
         }
         spec
+    }
+
+    /// Total f32 elements a decode session's K/V caches occupy at
+    /// `max_seq` positions (`Σ causal attentions 2 × bh·d_head × max_seq`).
+    pub fn kv_cache_elems(&self, max_seq: usize) -> usize {
+        self.kv_rows.iter().map(|&r| 2 * r * max_seq).sum()
     }
 
     /// Total arena footprint in bytes under `cfg` (reported by
@@ -419,6 +440,33 @@ mod tests {
             .find(|n| matches!(n.op, OpKind::Softmax))
             .expect("transformer has a softmax");
         assert!(spec.slot_elems[plan.slot_of[scores.id].unwrap()] >= 32 * 32);
+    }
+
+    /// The extended liveness pass sizes decode K/V cache slots: one
+    /// `batch·heads × d_head` row pair per causal attention, i.e. the
+    /// classic `layers × 2 × heads × max_seq × d_head` budget.
+    #[test]
+    fn workspace_sizes_kv_cache_slots_for_causal_decoders() {
+        // demo-transformer-causal: 2 layers, folded heads (bh=1, dh=64).
+        let g = crate::graph::zoo::by_name("demo-transformer-causal", 1);
+        let plan = MemoryPlan::straight_line(&g);
+        let materialize = vec![true; g.nodes.len()];
+        let spec = WorkspaceSpec::for_graph(&g, &plan, &materialize);
+        assert_eq!(spec.kv_rows, vec![64, 64]);
+        assert_eq!(spec.kv_cache_elems(32), 2 * 2 * 64 * 32);
+        // gpt2 frontend (2 layers, 12 heads, d_head 64): per-head rows.
+        let g = crate::graph::zoo::nlp::gpt2_frontend_layers(1, 2);
+        let plan = MemoryPlan::straight_line(&g);
+        let materialize = vec![true; g.nodes.len()];
+        let spec = WorkspaceSpec::for_graph(&g, &plan, &materialize);
+        assert_eq!(spec.kv_rows, vec![12 * 64, 12 * 64]);
+        assert_eq!(spec.kv_cache_elems(16), 2 * 2 * 12 * 16 * 64);
+        // Encoders carry no decode cache slots.
+        let g = crate::graph::zoo::by_name("demo-transformer", 1);
+        let plan = MemoryPlan::straight_line(&g);
+        let materialize = vec![true; g.nodes.len()];
+        let spec = WorkspaceSpec::for_graph(&g, &plan, &materialize);
+        assert!(spec.kv_rows.is_empty());
     }
 
     #[test]

@@ -163,7 +163,7 @@ impl Graph {
             OpKind::Softmax | OpKind::LayerNorm => out * 4,
             OpKind::BatchNorm | OpKind::Bias | OpKind::Scale { .. } | OpKind::Activation(_)
             | OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Pow { .. }
-            | OpKind::Sqrt => out,
+            | OpKind::Sqrt | OpKind::CausalMask => out,
             OpKind::Embedding => out,
             _ => 0, // movement ops: no MACs
         }
@@ -287,6 +287,25 @@ impl Graph {
                             "node {} pools a rank-{} tensor (pools are NCHW-only)",
                             i,
                             self.nodes[n.inputs[0]].shape.len()
+                        ));
+                    }
+                }
+                OpKind::CausalMask => {
+                    let xs = &self.nodes[n.inputs[0]].shape;
+                    if xs != &n.shape {
+                        return Err(format!(
+                            "node {} causal mask shape {:?} != input {:?}",
+                            i, n.shape, xs
+                        ));
+                    }
+                    // The mask is defined over the last two dims (query
+                    // rows × key columns) and the full-graph form is the
+                    // square attention score matrix.
+                    if n.shape.len() < 2 || n.shape[n.shape.len() - 1] != n.shape[n.shape.len() - 2]
+                    {
+                        return Err(format!(
+                            "node {} causal mask needs square trailing dims, got {:?}",
+                            i, n.shape
                         ));
                     }
                 }

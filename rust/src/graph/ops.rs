@@ -146,6 +146,15 @@ pub enum OpKind {
     /// form that constant-folding rewrites produce; a weight input, when
     /// present, overrides with per-channel scale).
     Scale { mul: f64, add: f64 },
+    /// Autoregressive (decoder) attention mask over the last two dims of a
+    /// score tensor `[..., Lq, Lk]`: positions with key index `j > i`
+    /// (strictly above the diagonal) are masked to `-inf` so the following
+    /// `Softmax` assigns them exactly zero probability. Kept as its own op
+    /// (between QK^T-scale and Softmax) rather than a payload on Softmax so
+    /// graph rewriting can reason about the chain; the executors fuse it
+    /// into a masked-softmax kernel that *skips* masked columns instead of
+    /// materializing `-inf`.
+    CausalMask,
     Softmax,
     /// Windowed pooling: `out = (h + 2*pad - k)/stride + 1` per spatial
     /// dim (conv_out semantics — a k≠stride window is *not* `h/stride`).
@@ -188,7 +197,7 @@ impl OpKind {
             Conv2d { .. } | Conv3d { .. } | ConvTranspose2d { .. } | Dense | MatMul
             | Softmax | MaxPool { .. } | AvgPool { .. } | GlobalAvgPool | PostProcess => ManyToMany,
             BatchNorm | Bias | LayerNorm | Activation(_) | Add | Sub | Mul | Div
-            | Pow { .. } | Sqrt | Scale { .. } => OneToOne,
+            | Pow { .. } | Sqrt | Scale { .. } | CausalMask => OneToOne,
             Reshape | Transpose { .. } | Concat | Slice { .. } | Pad { .. } | Flatten => Reorganize,
             ChannelShuffle { .. } | PixelShuffle { .. } | Gather => Shuffle,
             Upsample { .. } | Broadcast | Embedding => OneToMany,
@@ -238,6 +247,7 @@ impl OpKind {
             Pow { .. } => "pow",
             Sqrt => "sqrt",
             Scale { .. } => "scale",
+            CausalMask => "causal_mask",
             Softmax => "softmax",
             MaxPool { .. } => "max_pool",
             AvgPool { .. } => "avg_pool",
@@ -322,5 +332,9 @@ mod tests {
         assert_eq!(OpKind::Upsample { r: 2 }.mapping(), OneToMany);
         assert_eq!(OpKind::Transpose { perm: vec![1, 0] }.mapping(), Reorganize);
         assert_eq!(OpKind::Activation(Act::Gelu).mapping(), OneToOne);
+        // CausalMask is elementwise-classified so the scale → mask →
+        // softmax chain stays fusable under the Table 1 algebra.
+        assert_eq!(OpKind::CausalMask.mapping(), OneToOne);
+        assert!(!OpKind::CausalMask.has_weights());
     }
 }

@@ -394,9 +394,12 @@ impl NetBuilder {
     }
 
     /// Multi-head self-attention over [n, L, d]; returns output id.
-    /// Structure: LN → Q,K,V dense → QK^T matmul → scale → softmax → V
-    /// matmul → output dense → residual add.
-    pub fn attention(&mut self, heads: usize) -> NodeId {
+    /// Structure: LN → Q,K,V dense → QK^T matmul → scale → (causal mask) →
+    /// softmax → V matmul → output dense → residual add. With
+    /// `causal = true` a [`OpKind::CausalMask`] sits between the scale and
+    /// the softmax, turning the block into decoder (GPT-style)
+    /// autoregressive attention.
+    pub fn attention(&mut self, heads: usize, causal: bool) -> NodeId {
         let resid = self.cur;
         let s = self.shape();
         assert_eq!(s.len(), 3, "attention wants [n, L, d]");
@@ -429,12 +432,16 @@ impl NetBuilder {
         let scores = self.g.add(&name, OpKind::MatMul, vec![q, kt], vec![n, l, l]);
         let name = self.uid("scale");
         let dh = (d / heads) as f64;
-        let scaled = self.g.add(
+        let mut scaled = self.g.add(
             &name,
             OpKind::Scale { mul: 1.0 / dh.sqrt(), add: 0.0 },
             vec![scores],
             vec![n, l, l],
         );
+        if causal {
+            let name = self.uid("causal_mask");
+            scaled = self.g.add(&name, OpKind::CausalMask, vec![scaled], vec![n, l, l]);
+        }
         let name = self.uid("softmax");
         let probs = self.g.add(&name, OpKind::Softmax, vec![scaled], vec![n, l, l]);
         let name = self.uid("av");
@@ -457,9 +464,16 @@ impl NetBuilder {
         self.add_residual(resid, o)
     }
 
-    /// One standard transformer encoder layer.
-    pub fn transformer_layer(&mut self, heads: usize, ffn_hidden: usize, a: Act) -> NodeId {
-        self.attention(heads);
+    /// One standard transformer layer: encoder (`causal = false`) or
+    /// decoder (`causal = true`) self-attention, then the FFN block.
+    pub fn transformer_layer(
+        &mut self,
+        heads: usize,
+        ffn_hidden: usize,
+        a: Act,
+        causal: bool,
+    ) -> NodeId {
+        self.attention(heads, causal);
         self.ffn(ffn_hidden, a)
     }
 }
@@ -470,6 +484,8 @@ pub fn by_name(name: &str, batch: usize) -> Graph {
     match name {
         "demo-cnn" => misc::demo_cnn(batch),
         "demo-transformer" => nlp::demo_transformer(batch),
+        "demo-transformer-causal" => nlp::demo_transformer_causal(batch),
+        "gpt-2-decoder" => nlp::gpt2_decoder_layers(batch, 2),
         "efficientnet-b0" => cnn::efficientnet_b0(batch),
         "resnet-50" => cnn::resnet50(batch),
         "vgg-16" => cnn::vgg16(batch),
@@ -505,6 +521,8 @@ pub fn all_models() -> Vec<&'static str> {
     vec![
         "demo-cnn",
         "demo-transformer",
+        "demo-transformer-causal",
+        "gpt-2-decoder",
         "efficientnet-b0",
         "resnet-50",
         "vgg-16",
@@ -571,7 +589,7 @@ mod tests {
     #[test]
     fn transformer_layer_preserves_shape() {
         let mut b = NetBuilder::new("tl", &[1, 16, 64]);
-        b.transformer_layer(4, 256, Act::Gelu);
+        b.transformer_layer(4, 256, Act::Gelu, false);
         assert_eq!(b.shape(), vec![1, 16, 64]);
         // One layer = 12 d^2 params (+ LN/embed): 4 attn dense + 2 ffn dense.
         let g = b.finish();

@@ -29,7 +29,7 @@ fn bert_like(
     b.set_cur(with_pos);
     b.layer_norm();
     for _ in 0..layers {
-        b.transformer_layer(heads, ffn, Act::Gelu);
+        b.transformer_layer(heads, ffn, Act::Gelu, false);
     }
     b.layer_norm();
     b.finish()
@@ -70,7 +70,7 @@ pub fn mobilebert(batch: usize) -> Graph {
         // Bottleneck in.
         let body_in = b.cur();
         b.dense(d_block);
-        b.attention(4);
+        b.attention(4, false);
         for _ in 0..4 {
             b.ffn(d_block * 4, Act::Relu);
         }
@@ -86,8 +86,19 @@ pub fn mobilebert(batch: usize) -> Graph {
 /// GPT-2 (124M): L12 d768 ffn3072 vocab 50257, causal decoder. The LM head
 /// shares the embedding. Paper row: 125M / 69.1 GFLOPs (seq 384).
 pub fn gpt2(batch: usize) -> Graph {
-    let (seq, layers, d, heads, ffn) = (384usize, 12usize, 768usize, 12usize, 3072usize);
-    let mut b = NetBuilder::new("gpt-2", &[batch, seq]);
+    gpt2_decoder_layers(batch, 12)
+}
+
+/// Compact-form GPT-2 decoder with a configurable layer count: embedding +
+/// learned positions + L *causal* transformer layers (QK^T → scale →
+/// [`OpKind::CausalMask`] → softmax) + final LN + tied LM head. This is
+/// what `CompiledModel::decode_session` serves; the registry entry
+/// `"gpt-2-decoder"` builds the 2-layer variant the decode tests and
+/// benches use.
+pub fn gpt2_decoder_layers(batch: usize, layers: usize) -> Graph {
+    let (seq, d, heads, ffn) = (384usize, 768usize, 12usize, 3072usize);
+    let name = if layers == 12 { "gpt-2" } else { "gpt-2-decoder" };
+    let mut b = NetBuilder::new(name, &[batch, seq]);
     let table = b.g.weight("wte", &[50257, d]);
     let emb = b.g.add("embed", OpKind::Embedding, vec![b.cur(), table], vec![batch, seq, d]);
     let pos = b.g.weight("wpe", &[seq, d]);
@@ -96,7 +107,7 @@ pub fn gpt2(batch: usize) -> Graph {
     let x = b.add_residual(emb, posb);
     b.set_cur(x);
     for _ in 0..layers {
-        b.transformer_layer(heads, ffn, Act::Gelu);
+        b.transformer_layer(heads, ffn, Act::Gelu, true);
     }
     b.layer_norm();
     // LM head: project to vocab via the (shared) embedding — model as
@@ -236,10 +247,18 @@ pub fn gpt2_frontend_layers(batch: usize, layers: usize) -> Graph {
             vec![scores, sqb],
             vec![batch, 12, seq, seq],
         );
+        // GPT-2 is a decoder: the exporter emits the causal mask between
+        // the scaling and the softmax.
+        let masked = b.g.add(
+            &format!("causal_{}", b.g.len()),
+            OpKind::CausalMask,
+            vec![scaled],
+            vec![batch, 12, seq, seq],
+        );
         let probs = b.g.add(
             &format!("softmax_{}", b.g.len()),
             OpKind::Softmax,
-            vec![scaled],
+            vec![masked],
             vec![batch, 12, seq, seq],
         );
         let ctx = b.g.add(
@@ -296,13 +315,39 @@ pub fn demo_transformer(batch: usize) -> Graph {
     let with_pos = b.add_residual(emb, posb);
     b.set_cur(with_pos);
     for _ in 0..2 {
-        b.transformer_layer(heads, ffn, Act::Gelu);
+        b.transformer_layer(heads, ffn, Act::Gelu, false);
     }
     b.layer_norm();
     // [CLS] head: slice the first sequence position, flatten, classify.
     b.slice(&[0, 0, 0], &[batch, 1, d]);
     b.reshape(&[batch, d]);
     b.dense(classes);
+    b.finish()
+}
+
+/// The small executable *decoder*: the causal counterpart of
+/// [`demo_transformer`] — same scale (2 layers, d=64, seq=32, 4 heads,
+/// ffn 128, vocab 256) but with [`OpKind::CausalMask`]ed attention and a
+/// per-position LM head (`[batch, 32, 256]` logits) instead of the [CLS]
+/// classifier, so it both infers end-to-end *and* decodes autoregressively
+/// through `CompiledModel::decode_session`. This is the model behind
+/// `tests/decode.rs` and `benches/decode.rs`.
+pub fn demo_transformer_causal(batch: usize) -> Graph {
+    let (seq, d, heads, ffn, vocab) = (32usize, 64usize, 4usize, 128usize, 256usize);
+    let mut b = NetBuilder::new("demo-transformer-causal", &[batch, seq]);
+    let table = b.g.weight("tok_embed", &[vocab, d]);
+    let emb = b.g.add("embed", OpKind::Embedding, vec![b.cur(), table], vec![batch, seq, d]);
+    b.set_cur(emb);
+    let pos = b.g.weight("pos_embed", &[seq, d]);
+    let posb = b.g.add("pos_broadcast", OpKind::Broadcast, vec![pos], vec![batch, seq, d]);
+    let with_pos = b.add_residual(emb, posb);
+    b.set_cur(with_pos);
+    for _ in 0..2 {
+        b.transformer_layer(heads, ffn, Act::Gelu, true);
+    }
+    b.layer_norm();
+    // Per-position LM head (untied — the model is tiny, clarity wins).
+    b.dense(vocab);
     b.finish()
 }
 
@@ -326,7 +371,7 @@ pub fn conformer(batch: usize) -> Graph {
         // Half-step FFN.
         b.ffn(d * 4, Act::Swish);
         // MHSA.
-        b.attention(4);
+        b.attention(4, false);
         // Conv module: LN → pointwise dense ×2 (GLU) → depthwise-ish dense →
         // BN → swish → dense, modeled at sequence level.
         let resid = b.cur();
@@ -422,5 +467,44 @@ mod tests {
         let g = gpt2(1);
         assert!(g.nodes.iter().any(|n| matches!(n.op, OpKind::Softmax)));
         assert!(g.nodes.iter().any(|n| matches!(n.op, OpKind::MatMul)));
+    }
+
+    /// Decoder builders are causal: one `CausalMask` per layer, sitting
+    /// directly between the score scaling and the softmax; encoder
+    /// builders have none.
+    #[test]
+    fn gpt2_builders_are_causal_and_encoders_are_not() {
+        let masks = |g: &Graph| {
+            g.nodes
+                .iter()
+                .filter(|n| matches!(n.op, OpKind::CausalMask))
+                .count()
+        };
+        assert_eq!(masks(&gpt2(1)), 12);
+        assert_eq!(masks(&gpt2_decoder_layers(1, 2)), 2);
+        assert_eq!(masks(&gpt2_frontend_layers(1, 2)), 2);
+        assert_eq!(masks(&demo_transformer_causal(1)), 2);
+        assert_eq!(masks(&demo_transformer(1)), 0);
+        assert_eq!(masks(&bert_base(1)), 0);
+        // Every mask feeds a softmax (and nothing else).
+        let g = gpt2_frontend_layers(1, 2);
+        let users = g.users();
+        for n in g.nodes.iter().filter(|n| matches!(n.op, OpKind::CausalMask)) {
+            assert_eq!(users[n.id].len(), 1, "mask {} escapes", n.id);
+            assert!(
+                matches!(g.node(users[n.id][0]).op, OpKind::Softmax),
+                "mask {} not consumed by softmax",
+                n.id
+            );
+        }
+    }
+
+    #[test]
+    fn demo_transformer_causal_is_a_small_lm() {
+        let g = demo_transformer_causal(2);
+        assert!(g.validate().is_ok(), "{:?}", g.validate());
+        // Per-position logits over the 256-token vocabulary.
+        assert_eq!(g.node(g.outputs[0]).shape, vec![2, 32, 256]);
+        assert!(g.total_params() < 300_000, "params {}", g.total_params());
     }
 }

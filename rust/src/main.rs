@@ -5,7 +5,7 @@
 //! ```text
 //! xgen models                                   list the model zoo
 //! xgen compile --model resnet-50 [--scheme pattern|block|none]
-//!              [--opt 0..3] [--reuse] [--no-fkw] [--infer]
+//!              [--opt 0..3] [--reuse] [--no-fkw] [--infer] [--generate N]
 //! xgen sched [--variant ADy416] [--horizon 3000]    Table 5 simulation
 //! xgen caps [--budget 8.0]                      NPAS co-search
 //! xgen emit-kernel [--pattern 0] [--unroll 4]   generated pattern kernel
@@ -66,7 +66,8 @@ const HELP: &str = "\
 xgen — CoCoPIE XGen reproduction (see DESIGN.md)
   models        list the model zoo with params/MACs
   compile       compile a zoo model through the session API
-                (--scheme, --opt 0..3, --reuse, --no-fkw, --infer)
+                (--scheme, --opt 0..3, --reuse, --no-fkw, --infer;
+                 --generate N greedy-decodes N tokens on causal models)
   sched         XEngine Table-5 scheduler simulation
   caps          NPAS architecture/pruning co-search
   emit-kernel   print a generated branch-less pattern kernel
@@ -141,6 +142,31 @@ fn cmd_compile(args: &Args) -> Result<()> {
         if !finite {
             anyhow::bail!("inference produced non-finite outputs");
         }
+    }
+    // Autoregressive smoke: greedy-generate N tokens through a
+    // DecodeSession (causal decoder models only — demo-transformer-causal,
+    // gpt-2-decoder). Exits nonzero on a non-causal model or invalid ids.
+    let n = args.opt_usize("generate", 0);
+    if n > 0 {
+        let xs = cm.sample_inputs(args.opt_u64("seed", 7));
+        let prompt: Vec<u32> = xs[0].data().iter().take(4).map(|&v| v as u32).collect();
+        // The last generated token needs no extra position (same sizing
+        // as CompiledModel::generate).
+        let mut session = cm.decode_session((prompt.len() + n.saturating_sub(1)).max(1))?;
+        let t0 = std::time::Instant::now();
+        session.prefill(&prompt)?;
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
+        let toks = session.generate_continue(n)?;
+        let step_s = t1.elapsed().as_secs_f64();
+        println!(
+            "generate: prompt {:?} -> {:?} (prefill {:.2} ms, {:.0} tok/s, kv cache {:.1} KB)",
+            prompt,
+            toks,
+            prefill_ms,
+            n as f64 / step_s.max(1e-9),
+            session.kv_cache_elems() as f64 * 4.0 / 1024.0
+        );
     }
     Ok(())
 }

@@ -1,0 +1,268 @@
+//! ISSUE-5 acceptance: incremental decoding is *exactly* autoregressive.
+//!
+//! The oracle is a full causal forward pass: because every attention is
+//! causally masked, running the whole fixed-length graph on a sequence
+//! whose first `k` positions hold the prompt (and the rest padding)
+//! produces, at positions `0..k`, precisely the outputs of the prompt
+//! alone — padding can only influence *later* rows. The suite pins that
+//! `prefill + N×step` logits match that oracle **at every position**:
+//!
+//! * `demo-transformer-causal` across the full {fkw, prepack, workspace,
+//!   pool} toggle matrix and O0–O3 (tolerance 1e-4);
+//! * `gpt2_frontend_layers(1, 2)` — the causal exporter dump with
+//!   per-head rank-4 attention, Sqrt/Div scaling and decomposed GELU —
+//!   across single-toggle flips and O0/O3 (tolerance 1e-3: d=768 dot
+//!   products under two different summation orders);
+//! * the straight-line `Executor` as an engine-independent oracle;
+//! * loud validation errors (satellite bugfix): out-of-range token ids
+//!   and over-long prompts fail in `DecodeSession`, not as executor
+//!   bounds panics.
+
+use xgen::api::{CompiledModel, Compiler, OptLevel};
+use xgen::exec::Executor;
+use xgen::graph::zoo::nlp;
+use xgen::tensor::gemm::GemmConfig;
+use xgen::tensor::Tensor;
+
+/// Per-position output rows of a full causal forward pass over `tokens`
+/// (graph padded to its fixed length with token 0).
+fn full_forward_rows(m: &CompiledModel, tokens: &[u32]) -> Vec<Vec<f32>> {
+    let shape = m.input_shapes()[0].clone(); // [1, S]
+    let s = shape[1];
+    assert!(tokens.len() <= s);
+    let mut ids = vec![0.0f32; s];
+    for (i, &t) in tokens.iter().enumerate() {
+        ids[i] = t as f32;
+    }
+    let y = m.infer(&[Tensor::from_vec(&shape, ids)]).unwrap();
+    let row = y[0].len() / s;
+    (0..tokens.len())
+        .map(|i| y[0].data()[i * row..(i + 1) * row].to_vec())
+        .collect()
+}
+
+/// Step the prompt token by token and assert the logits match `rows` at
+/// every position within `tol`.
+fn assert_steps_match(m: &CompiledModel, prompt: &[u32], rows: &[Vec<f32>], tol: f32, label: &str) {
+    let mut s = m.decode_session(prompt.len()).unwrap();
+    for (i, &t) in prompt.iter().enumerate() {
+        let logits = s.step(t).unwrap();
+        assert_eq!(logits.len(), rows[i].len(), "{label}: row width at {i}");
+        let d = logits
+            .iter()
+            .zip(&rows[i])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            d < tol,
+            "{label}: decode diverges from full causal forward at position {i} by {d}"
+        );
+        assert!(logits.iter().all(|v| v.is_finite()), "{label}: non-finite at {i}");
+    }
+}
+
+fn compile_demo(fkw: bool, prepack: bool, workspace: bool, pool: bool, opt: OptLevel) -> CompiledModel {
+    Compiler::for_model("demo-transformer-causal", 1)
+        .unwrap()
+        .random_weights(2026)
+        .opt_level(opt)
+        .fkw(fkw)
+        .prepack(prepack)
+        .workspace(workspace)
+        .gemm_config(GemmConfig { threads: if pool { 0 } else { 1 }, ..Default::default() })
+        .compile()
+        .unwrap()
+}
+
+const PROMPT: [u32; 6] = [7, 42, 3, 255, 0, 99];
+
+/// Headline: the full toggle matrix on the small causal decoder. The
+/// toggles change the *full-forward* engine (the oracle side); the decode
+/// interpreter must agree with every one of them.
+#[test]
+fn demo_decode_matches_full_forward_across_toggle_matrix() {
+    for fkw in [false, true] {
+        for prepack in [false, true] {
+            for workspace in [false, true] {
+                for pool in [false, true] {
+                    let m = compile_demo(fkw, prepack, workspace, pool, OptLevel::O2);
+                    let rows = full_forward_rows(&m, &PROMPT);
+                    assert_steps_match(
+                        &m,
+                        &PROMPT,
+                        &rows,
+                        1e-4,
+                        &format!("demo fkw={fkw} prepack={prepack} ws={workspace} pool={pool}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// O0–O3 change the *graph* the session interprets (raw movement ops vs
+/// folded Scale/GELU/transpose chains) — decode must track all of them.
+#[test]
+fn demo_decode_matches_across_opt_levels() {
+    for opt in [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3] {
+        let m = compile_demo(true, true, true, true, opt);
+        let rows = full_forward_rows(&m, &PROMPT);
+        assert_steps_match(&m, &PROMPT, &rows, 1e-4, &format!("demo {}", opt.name()));
+    }
+}
+
+/// Engine-independent oracle: the straight-line reference `Executor` over
+/// the same rewritten graph + weights.
+#[test]
+fn demo_decode_matches_reference_executor() {
+    let m = compile_demo(true, true, true, true, OptLevel::O2);
+    let shape = m.input_shapes()[0].clone();
+    let s = shape[1];
+    let mut ids = vec![0.0f32; s];
+    for (i, &t) in PROMPT.iter().enumerate() {
+        ids[i] = t as f32;
+    }
+    let y = Executor::new(m.graph(), m.weights().unwrap())
+        .run(&[Tensor::from_vec(&shape, ids)])
+        .unwrap();
+    let row = y[0].len() / s;
+    let rows: Vec<Vec<f32>> = (0..PROMPT.len())
+        .map(|i| y[0].data()[i * row..(i + 1) * row].to_vec())
+        .collect();
+    assert_steps_match(&m, &PROMPT, &rows, 1e-4, "demo vs Executor");
+}
+
+/// `prefill(prompt)` is exactly `N×step`: same cache state, same logits.
+#[test]
+fn prefill_then_step_equals_all_steps() {
+    let m = compile_demo(true, true, true, true, OptLevel::O2);
+    let mut stepped = m.decode_session(PROMPT.len() + 2).unwrap();
+    let mut mixed = m.decode_session(PROMPT.len() + 2).unwrap();
+    for &t in &PROMPT {
+        stepped.step(t).unwrap();
+    }
+    let a = mixed.prefill(&PROMPT).unwrap().to_vec();
+    let b = stepped.step(11).unwrap(); // advance stepped past the prompt…
+    assert!(b.iter().all(|v| v.is_finite()));
+    // …but compare the *prompt-end* logits first: re-derive via a fresh
+    // all-step session to keep the borrow story simple.
+    let mut fresh = m.decode_session(PROMPT.len()).unwrap();
+    let mut last = Vec::new();
+    for &t in &PROMPT {
+        last = fresh.step(t).unwrap().to_vec();
+    }
+    assert_eq!(a, last, "prefill != N×step (bitwise)");
+    // And continuing from a prefill matches continuing from steps.
+    let c = mixed.step(11).unwrap();
+    assert_eq!(b, c, "post-prefill step != post-steps step (bitwise)");
+}
+
+/// The exporter-style causal GPT-2 dump: rank-4 per-head attention,
+/// Sqrt/Div scaling, decomposed GELU. Toggle flips at O2 plus O0/O3
+/// (each config pays a seq-384 full forward, so the matrix is the
+/// single-flip set rather than the full product).
+#[test]
+fn gpt2_frontend_decode_matches_full_forward() {
+    let seed = 424u64;
+    let prompt: [u32; 5] = [50256, 318, 2, 7, 1000];
+    let mk = |fkw: bool, prepack: bool, workspace: bool, pool: bool, opt: OptLevel| {
+        Compiler::new(nlp::gpt2_frontend_layers(1, 2))
+            .random_weights(seed)
+            .opt_level(opt)
+            .fkw(fkw)
+            .prepack(prepack)
+            .workspace(workspace)
+            .gemm_config(GemmConfig { threads: if pool { 0 } else { 1 }, ..Default::default() })
+            .compile()
+            .unwrap()
+    };
+    for (fkw, prepack, workspace, pool, opt) in [
+        (true, true, true, true, OptLevel::O2),
+        (false, true, true, true, OptLevel::O2),
+        (true, false, true, true, OptLevel::O2),
+        (true, true, false, true, OptLevel::O2),
+        (true, true, true, false, OptLevel::O2),
+        (true, true, true, true, OptLevel::O0),
+        (true, true, true, true, OptLevel::O3),
+    ] {
+        let m = mk(fkw, prepack, workspace, pool, opt);
+        let rows = full_forward_rows(&m, &prompt);
+        assert_steps_match(
+            &m,
+            &prompt,
+            &rows,
+            1e-3,
+            &format!(
+                "gpt2-frontend fkw={fkw} prepack={prepack} ws={workspace} pool={pool} {}",
+                opt.name()
+            ),
+        );
+    }
+}
+
+/// Satellite bugfix: `sample_inputs` produces in-vocab ids, and the decode
+/// session rejects out-of-range and too-long inputs with *session-level*
+/// errors — never the executor's bounds panic.
+#[test]
+fn decode_session_validates_inputs_loudly() {
+    let m = compile_demo(true, true, true, true, OptLevel::O2);
+    // sample_inputs ids are valid prompt material.
+    let xs = m.sample_inputs(5);
+    let prompt: Vec<u32> = xs[0].data().iter().take(4).map(|&v| v as u32).collect();
+    assert!(prompt.iter().all(|&t| (t as usize) < 256));
+    let mut s = m.decode_session(8).unwrap();
+    s.prefill(&prompt).unwrap();
+
+    // Out-of-range token id: loud session error.
+    let err = s.step(1_000_000).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "got: {err}");
+    // Too-long prompt: loud session error.
+    let mut s2 = m.decode_session(4).unwrap();
+    let err = s2.prefill(&[1, 2, 3, 4, 5]).unwrap_err().to_string();
+    assert!(err.contains("exceeds max_seq"), "got: {err}");
+    // max_seq beyond the positional table: refused at construction.
+    assert!(m.decode_session(33).is_err());
+    assert!(m.decode_session(0).is_err());
+    // Non-causal and non-decoder models: refused at construction.
+    let enc = Compiler::for_model("demo-transformer", 1)
+        .unwrap()
+        .random_weights(1)
+        .compile()
+        .unwrap();
+    assert!(enc.decode_session(8).is_err());
+    let cnn = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(1)
+        .compile()
+        .unwrap();
+    assert!(cnn.decode_session(8).is_err());
+}
+
+/// The compact causal registry entry ("gpt-2-decoder") decodes too — a
+/// cheap structural smoke at 1 layer scale via the builder, checking the
+/// tied-LM-head constant path (MatMul against a transposed weight).
+#[test]
+fn gpt2_decoder_compact_form_decodes_with_tied_head() {
+    let m = Compiler::new(nlp::gpt2_decoder_layers(1, 1))
+        .random_weights(9)
+        .prepack(false) // don't double the 150 MB embedding in packed form
+        .compile()
+        .unwrap();
+    let mut s = m.decode_session(3).unwrap();
+    let prompt: [u32; 2] = [50_000, 17];
+    let logits = s.prefill(&prompt).unwrap();
+    assert_eq!(logits.len(), 50257);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    let rows = full_forward_rows(&m, &prompt);
+    // Logits are O(√d)-scale pre-softmax values; compare relative to that.
+    let mut s2 = m.decode_session(prompt.len()).unwrap();
+    for (i, &t) in prompt.iter().enumerate() {
+        let got = s2.step(t).unwrap();
+        let d = got
+            .iter()
+            .zip(&rows[i])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d < 5e-3, "gpt-2-decoder position {i} diverges by {d}");
+    }
+}

@@ -166,6 +166,63 @@ fn infer_dispatches_gemm_on_the_persistent_pool() {
     );
 }
 
+/// ISSUE-5 satellite: `DecodeSession::step` performs zero heap
+/// allocations on the calling thread after warm-up — the per-token hot
+/// loop of autoregressive serving touches only session-owned buffers
+/// (per-node scratch + K/V caches appended in place).
+#[test]
+fn decode_step_is_allocation_free_after_warmup() {
+    let m = Compiler::for_model("demo-transformer-causal", 1)
+        .unwrap()
+        .random_weights(42)
+        .compile()
+        .unwrap();
+    let mut s = m.decode_session(32).unwrap();
+    assert!(s.kv_cache_elems() > 0, "no K/V cache slots allocated");
+    // Warm-up: prefill + a few steps (pool spawn, first-touch faults).
+    s.prefill(&[1, 2, 3]).unwrap();
+    for t in 4..7u32 {
+        s.step(t).unwrap();
+    }
+    let mut sink = 0.0f32;
+    let n = count_allocs(|| {
+        for t in 7..17u32 {
+            sink += s.step(t).unwrap()[0];
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "DecodeSession::step made {n} heap allocations on the calling thread"
+    );
+    assert!(sink.is_finite());
+}
+
+/// ISSUE-5 satellite: two sessions from the same `CompiledModel` are
+/// bitwise deterministic across a 10-step decode.
+#[test]
+fn decode_is_bitwise_deterministic_across_sessions() {
+    let m = Compiler::for_model("demo-transformer-causal", 1)
+        .unwrap()
+        .random_weights(7)
+        .compile()
+        .unwrap();
+    let mut a = m.decode_session(16).unwrap();
+    let mut b = m.decode_session(16).unwrap();
+    a.prefill(&[9, 8, 7]).unwrap();
+    b.prefill(&[9, 8, 7]).unwrap();
+    for t in 0..10u32 {
+        let la = a.step(t).unwrap().to_vec();
+        let lb = b.step(t).unwrap();
+        assert_eq!(&la[..], lb, "step {t} diverged bitwise across sessions");
+    }
+    // And a reset session replays the same stream bitwise.
+    a.reset();
+    let first = a.prefill(&[9, 8, 7]).unwrap().to_vec();
+    b.reset();
+    let again = b.prefill(&[9, 8, 7]).unwrap();
+    assert_eq!(&first[..], again, "reset session diverged bitwise");
+}
+
 /// `infer_into` agrees with the straight-line reference executor.
 #[test]
 fn infer_into_matches_reference_executor() {

@@ -75,6 +75,28 @@ fn sdpa_rows(q: &[Vec<f32>], k: &[Vec<f32>], v: &[Vec<f32>], dh: usize) -> Vec<V
         .collect()
 }
 
+/// *Causal* scaled-dot-product attention: query row `i` normalizes over
+/// keys `0..=i` only — the NumPy-style ground truth for `CausalMask` +
+/// `Softmax`.
+fn sdpa_causal_rows(q: &[Vec<f32>], k: &[Vec<f32>], v: &[Vec<f32>], dh: usize) -> Vec<Vec<f32>> {
+    let l = q.len();
+    let scale = 1.0 / (dh as f32).sqrt();
+    (0..l)
+        .map(|i| {
+            let scores: Vec<f32> = (0..=i)
+                .map(|j| {
+                    q[i].iter().zip(&k[j]).map(|(a, b)| a * b).sum::<f32>() * scale
+                })
+                .collect();
+            let p = softmax_row(&scores);
+            let d = v[0].len();
+            (0..d)
+                .map(|t| (0..=i).map(|j| p[j] * v[j][t]).sum())
+                .collect()
+        })
+        .collect()
+}
+
 fn rows_of(t: &Tensor, b: usize, l: usize, d: usize) -> Vec<Vec<f32>> {
     (0..l)
         .map(|i| t.data()[(b * l + i) * d..(b * l + i) * d + d].to_vec())
@@ -139,7 +161,7 @@ fn attention_core_matches_numpy_style_oracle() {
 fn netbuilder_attention_block_matches_oracle() {
     let (n, l, d, heads) = (1usize, 6usize, 8usize, 2usize);
     let mut b = NetBuilder::new("attn-block", &[n, l, d]);
-    b.attention(heads);
+    b.attention(heads, false);
     let g = b.finish();
     assert!(g.validate().is_ok(), "{:?}", g.validate());
     let mut rng = Rng::new(42);
@@ -198,6 +220,134 @@ fn netbuilder_attention_block_matches_oracle() {
             let want = xr[i][t] + orows[i][t];
             let diff = (got[0].at(&[0, i, t]) - want).abs();
             assert!(diff < 1e-3, "attention block [{i},{t}] off by {diff}");
+        }
+    }
+}
+
+/// Masked-softmax unit oracle (ISSUE-5 satellite): `CausalMask → Softmax`
+/// through the reference executor against a hand-rolled loop, including
+/// the seq=1 and seq=max_seq edge cases. Pins: unmasked prefixes sum to
+/// 1, masked positions contribute *exactly* 0, and the kernel matches
+/// per-element NumPy-style math.
+#[test]
+fn causal_masked_softmax_matches_hand_rolled_oracle() {
+    let mut rng = Rng::new(0xCA);
+    for l in [1usize, 2, 5, 32] {
+        let (n, h) = (2usize, 3usize);
+        let mut g = Graph::new("masked-softmax");
+        let x = g.input("scores", &[n, h, l, l]);
+        let m = g.add("mask", OpKind::CausalMask, vec![x], vec![n, h, l, l]);
+        let p = g.add("probs", OpKind::Softmax, vec![m], vec![n, h, l, l]);
+        g.outputs = vec![p];
+        assert!(g.validate().is_ok(), "{:?}", g.validate());
+        let xt = Tensor::randn(&[n, h, l, l], 1.0, &mut rng);
+        let y = Executor::new(&g, &WeightStore::new()).run(&[xt.clone()]).unwrap();
+        for b in 0..n {
+            for hh in 0..h {
+                for i in 0..l {
+                    // Hand-rolled masked row: softmax over columns 0..=i.
+                    let raw: Vec<f32> = (0..=i).map(|j| xt.at(&[b, hh, i, j])).collect();
+                    let want = softmax_row(&raw);
+                    let mut sum = 0.0f32;
+                    for j in 0..l {
+                        let got = y[0].at(&[b, hh, i, j]);
+                        sum += got;
+                        if j > i {
+                            assert_eq!(got, 0.0, "masked [{b},{hh},{i},{j}] contributes");
+                        } else {
+                            let d = (got - want[j]).abs();
+                            assert!(d < 1e-6, "probs[{b},{hh},{i},{j}] off by {d}");
+                        }
+                    }
+                    assert!((sum - 1.0).abs() < 1e-5, "row [{b},{hh},{i}] sums to {sum}");
+                }
+            }
+        }
+    }
+}
+
+/// The causal attention core (mask between scale and softmax) matches the
+/// causal NumPy-style oracle — and position 0 (a 1-long prefix) gets
+/// probability exactly 1 on itself.
+#[test]
+fn causal_attention_core_matches_oracle() {
+    let (n, l, d, heads) = (2usize, 7usize, 8usize, 2usize);
+    let dh = d / heads;
+    let mut g = Graph::new("causal-attn-core");
+    let q = g.input("q", &[n, l, d]);
+    let k = g.input("k", &[n, l, d]);
+    let v = g.input("v", &[n, l, d]);
+    let kt = g.add("kt", OpKind::Transpose { perm: vec![0, 2, 1] }, vec![k], vec![n, d, l]);
+    let scores = g.add("qk", OpKind::MatMul, vec![q, kt], vec![n, l, l]);
+    let scaled = g.add(
+        "scale",
+        OpKind::Scale { mul: 1.0 / (dh as f64).sqrt(), add: 0.0 },
+        vec![scores],
+        vec![n, l, l],
+    );
+    let masked = g.add("mask", OpKind::CausalMask, vec![scaled], vec![n, l, l]);
+    let probs = g.add("softmax", OpKind::Softmax, vec![masked], vec![n, l, l]);
+    let ctx = g.add("av", OpKind::MatMul, vec![probs, v], vec![n, l, d]);
+    g.outputs = vec![ctx];
+    assert!(g.validate().is_ok(), "{:?}", g.validate());
+
+    let mut rng = Rng::new(43);
+    let qt = Tensor::randn(&[n, l, d], 1.0, &mut rng);
+    let ktn = Tensor::randn(&[n, l, d], 1.0, &mut rng);
+    let vt = Tensor::randn(&[n, l, d], 1.0, &mut rng);
+    let got = Executor::new(&g, &WeightStore::new())
+        .run(&[qt.clone(), ktn.clone(), vt.clone()])
+        .unwrap();
+    for b in 0..n {
+        let want = sdpa_causal_rows(
+            &rows_of(&qt, b, l, d),
+            &rows_of(&ktn, b, l, d),
+            &rows_of(&vt, b, l, d),
+            dh,
+        );
+        for i in 0..l {
+            for t in 0..d {
+                let diff = (got[0].at(&[b, i, t]) - want[i][t]).abs();
+                assert!(diff < 1e-4, "causal attention[{b},{i},{t}] off by {diff}");
+            }
+        }
+        // Row 0 can only attend to itself: its context row is exactly v[0].
+        for t in 0..d {
+            let diff = (got[0].at(&[b, 0, t]) - vt.at(&[b, 0, t])).abs();
+            assert!(diff < 1e-6, "position 0 must copy v[0], off by {diff}");
+        }
+    }
+}
+
+/// The last row of a masked full-sequence attention equals the
+/// single-step cache path: the newest query against *all* cached keys
+/// with an unmasked softmax — the identity the KV-cache decoder relies
+/// on. Checked at seq=1 (trivial) and seq=max.
+#[test]
+fn masked_full_seq_last_row_equals_single_step_cache_path() {
+    let mut rng = Rng::new(44);
+    for l in [1usize, 6, 32] {
+        let (d, dh) = (8usize, 4usize);
+        let q: Vec<Vec<f32>> =
+            (0..l).map(|_| Tensor::randn(&[d], 1.0, &mut rng).into_vec()).collect();
+        let k: Vec<Vec<f32>> =
+            (0..l).map(|_| Tensor::randn(&[d], 1.0, &mut rng).into_vec()).collect();
+        let v: Vec<Vec<f32>> =
+            (0..l).map(|_| Tensor::randn(&[d], 1.0, &mut rng).into_vec()).collect();
+        let full = sdpa_causal_rows(&q, &k, &v, dh);
+
+        // Cache path: the last query row, every key allowed, no mask.
+        let scale = 1.0 / (dh as f32).sqrt();
+        let scores: Vec<f32> = (0..l)
+            .map(|j| q[l - 1].iter().zip(&k[j]).map(|(a, b)| a * b).sum::<f32>() * scale)
+            .collect();
+        let p = softmax_row(&scores);
+        let step: Vec<f32> = (0..d)
+            .map(|t| (0..l).map(|j| p[j] * v[j][t]).sum())
+            .collect();
+        for t in 0..d {
+            let diff = (full[l - 1][t] - step[t]).abs();
+            assert!(diff < 1e-5, "l={l}: cache path diverges at {t} by {diff}");
         }
     }
 }
