@@ -39,12 +39,15 @@
 //! [`Server`](crate::coordinator::Server) goes through this seam; future
 //! backends (sharding, multi-device XEngine dispatch) plug in here.
 
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::baselines::{no_fusion, DeviceClass, Framework};
+use crate::error::{panic_detail, XgenError};
 use crate::cost::{
     devices, estimate_latency, scheme_density_map, sparse_efficiency, DensityMap, Device,
 };
@@ -455,8 +458,30 @@ impl Compiler {
             planner: self.planner,
             prune_report,
             report,
+            counters: RuntimeCounters::default(),
         })
     }
+}
+
+/// Serve-time self-healing counters (internal; read through
+/// [`CompiledModel::runtime_stats`]). Atomics so `CompiledModel` stays
+/// `Sync` and the hot path pays one relaxed store at most.
+#[derive(Default)]
+struct RuntimeCounters {
+    engine_fallbacks: AtomicUsize,
+    workspace_recoveries: AtomicUsize,
+    worker_panics: AtomicUsize,
+}
+
+/// Snapshot of a session's serve-time recovery events: how many times the
+/// steady engine degraded to the reference `eval_op` path, how many
+/// poisoned workspace arenas were rebuilt, and how many caught panics this
+/// model absorbed. All zero in a healthy process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RuntimeStats {
+    pub engine_fallbacks: usize,
+    pub workspace_recoveries: usize,
+    pub worker_panics: usize,
 }
 
 /// A compiled session: owns the (rewritten) graph, the (pruned) weights,
@@ -478,6 +503,7 @@ pub struct CompiledModel {
     planner: bool,
     prune_report: Option<PruneReport>,
     report: CompileReport,
+    counters: RuntimeCounters,
 }
 
 impl CompiledModel {
@@ -588,6 +614,7 @@ impl CompiledModel {
             .weights
             .as_ref()
             .ok_or_else(|| anyhow!("model was compiled without weights — cannot infer"))?;
+        self.validate_inputs(inputs)?;
         if !self.planner {
             let y = Executor::new(&self.graph, ws).run(inputs)?;
             return Ok((y, PlanStats::default()));
@@ -597,13 +624,133 @@ impl CompiledModel {
             .as_ref()
             .expect("executor state exists when weights are attached and the planner is on");
         if let Some(arena) = &self.workspace {
-            let mut arena = arena.lock().unwrap();
-            FusedExecutor::with_state(&self.graph, ws, &self.plan, state)
-                .run_steady(inputs, &mut arena)?;
+            let mut arena = self.lock_workspace(state, arena);
+            if let Err(e) = self.run_steady_guarded(ws, state, inputs, &mut arena) {
+                return self
+                    .reference_fallback(ws, inputs, e)
+                    .map(|y| (y, state.plan_stats().clone()));
+            }
             let outs = self.steady_outputs(inputs, &arena)?;
             return Ok((outs, state.plan_stats().clone()));
         }
         FusedExecutor::with_state(&self.graph, ws, &self.plan, state).run_with_stats(inputs)
+    }
+
+    /// Allocation-free up-front validation of `inputs` against the graph's
+    /// Input nodes (count, then shape per position). Typed
+    /// [`XgenError::ShapeMismatch`]; nothing executes on failure, so a
+    /// malformed request can never corrupt the arena or write garbage.
+    fn validate_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        let mut idx = 0usize;
+        for n in self.graph.nodes.iter().filter(|n| matches!(n.op, OpKind::Input)) {
+            match inputs.get(idx) {
+                Some(t) if t.shape() == &n.shape[..] => {}
+                Some(t) => {
+                    return Err(XgenError::ShapeMismatch {
+                        expected: format!("{:?} for input {idx}", n.shape),
+                        got: format!("{:?}", t.shape()),
+                    }
+                    .into());
+                }
+                None => {
+                    return Err(XgenError::ShapeMismatch {
+                        expected: format!("at least {} input tensors", idx + 1),
+                        got: format!("{}", inputs.len()),
+                    }
+                    .into());
+                }
+            }
+            idx += 1;
+        }
+        if inputs.len() > idx {
+            return Err(XgenError::ShapeMismatch {
+                expected: format!("{idx} input tensors"),
+                got: format!("{}", inputs.len()),
+            }
+            .into());
+        }
+        Ok(())
+    }
+
+    /// Lock the steady arena, recovering a poisoned mutex by rebuilding
+    /// the workspace from the compile-time spec — a panic that unwound
+    /// through a previous `infer` must not brick every later request.
+    fn lock_workspace<'a>(
+        &self,
+        state: &ExecState,
+        arena: &'a Mutex<Workspace>,
+    ) -> MutexGuard<'a, Workspace> {
+        match arena.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                let mut g = poisoned.into_inner();
+                *g = state.workspace();
+                arena.clear_poison();
+                self.counters.workspace_recoveries.fetch_add(1, Ordering::Relaxed);
+                g
+            }
+        }
+    }
+
+    /// One steady-engine run with panic isolation. On *any* failure the
+    /// arena is rebuilt before returning: `run_steady` stages values by
+    /// `mem::take`-ing arena slots, so an unwound or errored run may leave
+    /// the workspace torn.
+    fn run_steady_guarded(
+        &self,
+        ws: &WeightStore,
+        state: &ExecState,
+        inputs: &[Tensor],
+        arena: &mut Workspace,
+    ) -> Result<()> {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            FusedExecutor::with_state(&self.graph, ws, &self.plan, state)
+                .run_steady(inputs, arena)
+        }));
+        match run {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(e)) => {
+                *arena = state.workspace();
+                Err(e)
+            }
+            Err(payload) => {
+                *arena = state.workspace();
+                self.counters.worker_panics.fetch_add(1, Ordering::Relaxed);
+                Err(XgenError::WorkerPanic { detail: panic_detail(payload.as_ref()) }.into())
+            }
+        }
+    }
+
+    /// Graceful degradation: the steady engine failed mid-serve, so run
+    /// the same request through the reference `eval_op` executor (numeric
+    /// oracle, allocating but engine-independent) and count the fallback.
+    /// Only if the reference path *also* fails does the caller see an
+    /// error — [`XgenError::EngineFallback`] carrying both causes.
+    fn reference_fallback(
+        &self,
+        ws: &WeightStore,
+        inputs: &[Tensor],
+        steady_err: anyhow::Error,
+    ) -> Result<Vec<Tensor>> {
+        match Executor::new(&self.graph, ws).run(inputs) {
+            Ok(y) => {
+                self.counters.engine_fallbacks.fetch_add(1, Ordering::Relaxed);
+                Ok(y)
+            }
+            Err(ref_err) => Err(XgenError::EngineFallback {
+                detail: format!("steady: {steady_err:#}; reference: {ref_err:#}"),
+            }
+            .into()),
+        }
+    }
+
+    /// Serve-time recovery counters of this session (see [`RuntimeStats`]).
+    pub fn runtime_stats(&self) -> RuntimeStats {
+        RuntimeStats {
+            engine_fallbacks: self.counters.engine_fallbacks.load(Ordering::Relaxed),
+            workspace_recoveries: self.counters.workspace_recoveries.load(Ordering::Relaxed),
+            worker_panics: self.counters.worker_panics.load(Ordering::Relaxed),
+        }
     }
 
     /// Zero-allocation steady-state inference: runs the workspace engine
@@ -627,9 +774,21 @@ impl CompiledModel {
                 self.graph.outputs.len()
             );
         }
-        let mut arena = arena.lock().unwrap();
-        FusedExecutor::with_state(&self.graph, ws, &self.plan, state)
-            .run_steady(inputs, &mut arena)?;
+        self.validate_inputs(inputs)?;
+        let mut arena = self.lock_workspace(state, arena);
+        if let Err(e) = self.run_steady_guarded(ws, state, inputs, &mut arena) {
+            // Degrade to the reference path, then copy into the caller's
+            // buffers so infer_into keeps its contract under faults too.
+            let y = self.reference_fallback(ws, inputs, e)?;
+            for (oi, t) in y.iter().enumerate() {
+                let n = self.graph.node(self.graph.outputs[oi]);
+                if outs[oi].shape() != &n.shape[..] {
+                    bail!("output {oi} tensor shape {:?} != {:?}", outs[oi].shape(), n.shape);
+                }
+                outs[oi].data_mut().copy_from_slice(t.data());
+            }
+            return Ok(());
+        }
         for (oi, &o) in self.graph.outputs.iter().enumerate() {
             let n = self.graph.node(o);
             if outs[oi].shape() != &n.shape[..] {
@@ -728,7 +887,11 @@ impl CompiledModel {
             .ok_or_else(|| anyhow!("model has no input node"))?;
         let n: usize = shape.iter().product();
         if x.len() != n {
-            bail!("input length {} != expected {} for shape {:?}", x.len(), n, shape);
+            return Err(XgenError::ShapeMismatch {
+                expected: format!("{n} elements for shape {shape:?}"),
+                got: format!("{} elements", x.len()),
+            }
+            .into());
         }
         let mut out = self.infer(&[Tensor::from_vec(&shape, x.to_vec())])?;
         if out.is_empty() {
@@ -747,13 +910,21 @@ impl CompiledModel {
             .ok_or_else(|| anyhow!("model has no input node"))?;
         let b = *shape.first().unwrap_or(&1);
         if xs.len() != b {
-            bail!("got {} inputs for compiled batch size {b}", xs.len());
+            return Err(XgenError::ShapeMismatch {
+                expected: format!("{b} inputs (compiled batch size)"),
+                got: format!("{} inputs", xs.len()),
+            }
+            .into());
         }
         let per: usize = shape[1..].iter().product();
         let mut flat = Vec::with_capacity(b * per);
         for x in xs {
             if x.len() != per {
-                bail!("input length {} != expected {per}", x.len());
+                return Err(XgenError::ShapeMismatch {
+                    expected: format!("{per} elements per request"),
+                    got: format!("{} elements", x.len()),
+                }
+                .into());
             }
             flat.extend_from_slice(x);
         }

@@ -11,13 +11,42 @@
 //! wait), executes on a [`BatchEngine`], and completes per-request
 //! responses through per-request channels.
 //!
+//! ## Fault tolerance
+//!
+//! The request lifecycle is hardened end to end:
+//!
+//! - **Typed errors** — every per-request channel carries
+//!   [`crate::error::XgenError`], so clients can branch on
+//!   [`XgenError::code`] instead of string-matching.
+//! - **Backpressure** — submission queues are bounded
+//!   ([`ServeConfig::queue_cap`] / [`DecodeConfig::queue_cap`]); past the
+//!   cap, requests are shed immediately with [`XgenError::Overloaded`]
+//!   rather than growing the queue without bound.
+//! - **Deadlines** — a per-request deadline is checked before dispatch and
+//!   between decode steps; an expired request gets
+//!   [`XgenError::DeadlineExceeded`] (decode clients keep any tokens
+//!   already streamed — the partial generation stands).
+//! - **Panic isolation** — engine execution runs under `catch_unwind`: a
+//!   panicking request is answered with [`XgenError::WorkerPanic`] and the
+//!   server keeps serving; the decode server rebuilds its session after a
+//!   panic so later requests see a clean K/V cache.
+//! - **Cancellation** — a dropped receiver never kills the server; failed
+//!   reply sends are counted as cancellations and the stream just stops.
+//! - **Graceful drain** — dropping a server closes the submission channel;
+//!   the dispatcher keeps draining buffered requests (mpsc receivers yield
+//!   queued messages after all senders drop) before the thread joins.
+//!
+//! All of it is observable through [`ServeStats`] / [`DecodeStats`].
+//!
 //! The old pipeline driver ([`compile`]/[`Compiled`]) is a deprecated
 //! shim over [`crate::api::Compiler`]; it stays for one release.
 
 pub mod service;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -25,6 +54,7 @@ use anyhow::{bail, Result};
 use crate::api::CompiledModel;
 use crate::baselines::{DeviceClass, Framework};
 use crate::cost::{estimate_latency, scheme_density_map, sparse_efficiency, DensityMap, Device};
+use crate::error::{panic_detail, XgenError};
 use crate::fusion::FusionPlan;
 use crate::graph::{Graph, WeightStore};
 use crate::pruning::{prune_graph, PruneReport, PruneScheme};
@@ -82,11 +112,39 @@ pub fn compile(
     Compiled { graph, plan, rewrite_stats, prune_report, scheme, density }
 }
 
+/// Lock a stats mutex, recovering from poison: statistics stay readable
+/// even if a holder panicked mid-update (counters may then be one off —
+/// acceptable for observability data, fatal for nothing).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// A single inference request: input tensor + response channel.
 struct Request {
     input: Vec<f32>,
-    reply: mpsc::Sender<Result<Vec<f32>, String>>,
+    reply: mpsc::Sender<Result<Vec<f32>, XgenError>>,
     enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+/// Serving configuration: batching bound, queue bound, default deadline.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// How long the dispatcher waits for a batch to fill before serving a
+    /// partial one.
+    pub max_wait: Duration,
+    /// Bound on queued (admitted, not yet served) requests; past it,
+    /// submissions are shed with [`XgenError::Overloaded`].
+    pub queue_cap: usize,
+    /// Deadline applied to [`Server::submit`] requests (none by default;
+    /// [`Server::submit_with_deadline`] overrides per request).
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_wait: Duration::from_millis(2), queue_cap: 1024, default_deadline: None }
+    }
 }
 
 /// Serving statistics.
@@ -95,6 +153,19 @@ pub struct ServeStats {
     pub completed: usize,
     pub batches: usize,
     pub latencies_ms: Vec<f64>,
+    /// Requests answered with an error (engine failure or worker panic).
+    pub errors: usize,
+    /// Requests refused at submission because the queue was full.
+    pub shed: usize,
+    /// Requests dropped because their deadline expired before dispatch.
+    pub deadline_exceeded: usize,
+    /// Replies that found the receiver already dropped.
+    pub cancelled: usize,
+    /// Engine panics caught and converted into per-request errors.
+    pub worker_panics: usize,
+    /// Requests served through the reference-executor fallback after the
+    /// steady-state engine failed (see [`CompiledModel::runtime_stats`]).
+    pub engine_fallbacks: usize,
 }
 
 impl ServeStats {
@@ -113,6 +184,23 @@ impl ServeStats {
             self.completed as f64 / self.batches as f64
         }
     }
+
+    /// One-line operator-facing summary including the fault counters.
+    pub fn report(&self) -> String {
+        format!(
+            "served {} in {} batches (mean {:.2}/batch); errors {}, shed {}, \
+             deadline-exceeded {}, cancelled {}, worker panics {}, engine fallbacks {}",
+            self.completed,
+            self.batches,
+            self.mean_batch(),
+            self.errors,
+            self.shed,
+            self.deadline_exceeded,
+            self.cancelled,
+            self.worker_panics,
+            self.engine_fallbacks
+        )
+    }
 }
 
 /// An inference engine the [`Server`] dispatcher batches onto: a
@@ -121,6 +209,11 @@ impl ServeStats {
 trait BatchEngine {
     fn run_single(&mut self, x: &[f32]) -> Result<Vec<f32>>;
     fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    /// Cumulative count of requests this engine served through a degraded
+    /// fallback path (0 for engines with no fallback).
+    fn fallbacks(&self) -> usize {
+        0
+    }
 }
 
 /// AOT artifacts executed through the PJRT runtime.
@@ -155,6 +248,11 @@ impl BatchEngine for CompiledEngine {
     fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.batched.infer_flat_batch(xs)
     }
+
+    fn fallbacks(&self) -> usize {
+        self.single.runtime_stats().engine_fallbacks
+            + self.batched.runtime_stats().engine_fallbacks
+    }
 }
 
 /// Dynamic-batching server over one model family (either PJRT artifacts
@@ -166,17 +264,36 @@ pub struct Server {
     tx: mpsc::Sender<Request>,
     handle: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<ServeStats>>,
+    depth: Arc<AtomicUsize>,
+    cap: usize,
+    default_deadline: Option<Duration>,
 }
 
 impl Server {
-    /// Spawn the dispatcher thread over PJRT artifacts. The PJRT client is
-    /// **created inside** the thread (the xla crate's client is not
-    /// `Send`); artifacts are compiled there before the call returns.
+    /// Spawn the dispatcher thread over PJRT artifacts with default
+    /// [`ServeConfig`] bounds. The PJRT client is **created inside** the
+    /// thread (the xla crate's client is not `Send`); artifacts are
+    /// compiled there before the call returns.
     pub fn start(
         artifact_dir: std::path::PathBuf,
         single_artifact: &str,
         batch_artifact: &str,
         max_wait: Duration,
+    ) -> Result<Server> {
+        Server::start_cfg(
+            artifact_dir,
+            single_artifact,
+            batch_artifact,
+            ServeConfig { max_wait, ..ServeConfig::default() },
+        )
+    }
+
+    /// [`Server::start`] with explicit queue/deadline bounds.
+    pub fn start_cfg(
+        artifact_dir: std::path::PathBuf,
+        single_artifact: &str,
+        batch_artifact: &str,
+        cfg: ServeConfig,
     ) -> Result<Server> {
         let single = single_artifact.to_string();
         let batched = batch_artifact.to_string();
@@ -184,6 +301,9 @@ impl Server {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let stats = Arc::new(Mutex::new(ServeStats::default()));
         let stats2 = stats.clone();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth2 = depth.clone();
+        let max_wait = cfg.max_wait;
         let handle = std::thread::spawn(move || {
             let mut rt = match ModelRuntime::open(&artifact_dir) {
                 Ok(rt) => rt,
@@ -204,23 +324,40 @@ impl Server {
                 }
             };
             let _ = ready_tx.send(Ok(()));
-            dispatcher(PjrtEngine { rt, single, batched }, rx, batch_size, max_wait, stats2);
+            dispatcher(PjrtEngine { rt, single, batched }, rx, batch_size, max_wait, depth2, stats2);
         });
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server thread died"))?
             .map_err(anyhow::Error::msg)?;
-        Ok(Server { tx, handle: Some(handle), stats })
+        Ok(Server {
+            tx,
+            handle: Some(handle),
+            stats,
+            depth,
+            cap: cfg.queue_cap,
+            default_deadline: cfg.default_deadline,
+        })
     }
 
     /// Spawn the dispatcher over a pair of compiled sessions (batch-1 and
     /// batch-N variants of the same model, both built via
-    /// [`crate::api::Compiler`] with weights attached). Pure-Rust real
-    /// execution — no AOT artifacts required.
+    /// [`crate::api::Compiler`] with weights attached) with default
+    /// [`ServeConfig`] bounds. Pure-Rust real execution — no AOT
+    /// artifacts required.
     pub fn start_compiled(
         single: CompiledModel,
         batched: CompiledModel,
         max_wait: Duration,
+    ) -> Result<Server> {
+        Server::start_compiled_cfg(single, batched, ServeConfig { max_wait, ..ServeConfig::default() })
+    }
+
+    /// [`Server::start_compiled`] with explicit queue/deadline bounds.
+    pub fn start_compiled_cfg(
+        single: CompiledModel,
+        batched: CompiledModel,
+        cfg: ServeConfig,
     ) -> Result<Server> {
         if single.weights().is_none() || batched.weights().is_none() {
             bail!("serving requires sessions compiled with weights");
@@ -239,168 +376,112 @@ impl Server {
             ),
         }
         let batch_size = batched.batch_size().max(1);
+        Ok(Server::spawn_engine(CompiledEngine { single, batched }, batch_size, cfg))
+    }
+
+    /// Spawn the dispatcher thread over an arbitrary engine (shared by the
+    /// compiled path and the mock engines in tests).
+    fn spawn_engine<E: BatchEngine + Send + 'static>(
+        engine: E,
+        batch_size: usize,
+        cfg: ServeConfig,
+    ) -> Server {
         let (tx, rx) = mpsc::channel::<Request>();
         let stats = Arc::new(Mutex::new(ServeStats::default()));
         let stats2 = stats.clone();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth2 = depth.clone();
+        let max_wait = cfg.max_wait;
         let handle = std::thread::spawn(move || {
-            dispatcher(CompiledEngine { single, batched }, rx, batch_size, max_wait, stats2);
+            dispatcher(engine, rx, batch_size, max_wait, depth2, stats2);
         });
-        Ok(Server { tx, handle: Some(handle), stats })
+        Server {
+            tx,
+            handle: Some(handle),
+            stats,
+            depth,
+            cap: cfg.queue_cap,
+            default_deadline: cfg.default_deadline,
+        }
     }
 
-    /// Enqueue a request; returns the response receiver.
-    pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Result<Vec<f32>, String>> {
+    /// Admission control: bump the queue depth, shed if past the cap, then
+    /// hand the request to the dispatcher. The depth counter is our own
+    /// (std mpsc has no bounded variant); the dispatcher decrements it on
+    /// dequeue.
+    fn enqueue(
+        &self,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, XgenError>>, XgenError> {
+        let d = self.depth.fetch_add(1, Ordering::SeqCst);
+        if d >= self.cap {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            lock(&self.stats).shed += 1;
+            return Err(XgenError::Overloaded { depth: d, capacity: self.cap });
+        }
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Request { input, reply, enqueued: Instant::now() });
-        rx
+        let now = Instant::now();
+        let req = Request { input, reply, enqueued: now, deadline: deadline.map(|w| now + w) };
+        if let Err(mpsc::SendError(req)) = self.tx.send(req) {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            // Recover the reply sender from the failed send so the caller
+            // still gets a typed answer through the usual channel.
+            let _ = req.reply.send(Err(XgenError::ServerGone));
+        }
+        Ok(rx)
+    }
+
+    /// Enqueue a request; returns the response receiver. Uses the server's
+    /// default deadline (if any). If the queue is full the receiver yields
+    /// [`XgenError::Overloaded`] immediately — the signature stays
+    /// infallible so existing call sites keep working.
+    pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Result<Vec<f32>, XgenError>> {
+        self.submit_with_deadline(input, self.default_deadline)
+    }
+
+    /// [`Server::submit`] with an explicit per-request deadline (None =
+    /// no deadline).
+    pub fn submit_with_deadline(
+        &self,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<Result<Vec<f32>, XgenError>> {
+        match self.enqueue(input, deadline) {
+            Ok(rx) => rx,
+            Err(e) => {
+                let (reply, rx) = mpsc::channel();
+                let _ = reply.send(Err(e));
+                rx
+            }
+        }
+    }
+
+    /// Typed-admission variant of [`Server::submit`]: a full queue is an
+    /// immediate `Err(Overloaded)` instead of an error on the receiver.
+    pub fn try_submit(
+        &self,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, XgenError>>, XgenError> {
+        self.enqueue(input, self.default_deadline)
     }
 
     /// Blocking convenience call.
-    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, String> {
-        self.submit(input)
-            .recv()
-            .map_err(|_| "server shut down".to_string())?
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, XgenError> {
+        self.submit(input).recv().map_err(|_| XgenError::ServerGone)?
     }
 
     pub fn stats(&self) -> ServeStats {
-        self.stats.lock().unwrap().clone()
+        lock(&self.stats).clone()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        // Closing the channel stops the dispatcher.
-        let (dummy_tx, _) = mpsc::channel();
-        let tx = std::mem::replace(&mut self.tx, dummy_tx);
-        drop(tx);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-/// One token-streaming generation request.
-struct GenRequest {
-    prompt: Vec<u32>,
-    n: usize,
-    reply: mpsc::Sender<Result<u32, String>>,
-}
-
-/// Serving statistics of a [`DecodeServer`].
-#[derive(Debug, Clone, Default)]
-pub struct DecodeStats {
-    pub requests: usize,
-    pub tokens: usize,
-}
-
-/// Token-streaming generation server: one thread owns a compiled *causal
-/// decoder* session ([`CompiledModel::decode_session`]) and serves greedy
-/// generation requests, sending each token back over the request's channel
-/// **as it is decoded** — the client reads a stream, not a batch. The
-/// session's K/V caches are reset and reused across requests, so the
-/// serving loop allocates nothing per token after the first request.
-pub struct DecodeServer {
-    tx: mpsc::Sender<GenRequest>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    stats: Arc<Mutex<DecodeStats>>,
-}
-
-impl DecodeServer {
-    /// Spawn the decode thread over a compiled causal decoder. The model
-    /// must carry weights and decode incrementally (validated before the
-    /// call returns, so misconfiguration fails here, not on request one).
-    pub fn start(model: CompiledModel, max_seq: usize) -> Result<DecodeServer> {
-        let (tx, rx) = mpsc::channel::<GenRequest>();
-        // Session construction (constant-subgraph evaluation, cache
-        // allocation) happens once, inside the worker thread; the ready
-        // channel reports the validation result before start() returns so
-        // misconfiguration still fails eagerly.
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let stats = Arc::new(Mutex::new(DecodeStats::default()));
-        let stats2 = stats.clone();
-        let handle = std::thread::spawn(move || {
-            let mut session = match model.decode_session(max_seq) {
-                Ok(s) => {
-                    let _ = ready_tx.send(Ok(()));
-                    s
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e.to_string()));
-                    return;
-                }
-            };
-            let mut logits: Vec<f32> = Vec::new();
-            while let Ok(req) = rx.recv() {
-                session.reset();
-                logits.clear();
-                match session.prefill(&req.prompt) {
-                    Ok(l) => logits.extend_from_slice(l),
-                    Err(e) => {
-                        let _ = req.reply.send(Err(e.to_string()));
-                        continue;
-                    }
-                }
-                let mut sent = 0usize;
-                for i in 0..req.n {
-                    let next = crate::exec::decode::argmax(&logits) as u32;
-                    if req.reply.send(Ok(next)).is_err() {
-                        break; // client hung up mid-stream
-                    }
-                    sent += 1;
-                    if i + 1 < req.n {
-                        match session.step(next) {
-                            Ok(l) => {
-                                logits.clear();
-                                logits.extend_from_slice(l);
-                            }
-                            Err(e) => {
-                                let _ = req.reply.send(Err(e.to_string()));
-                                break;
-                            }
-                        }
-                    }
-                }
-                let mut st = stats2.lock().unwrap();
-                st.requests += 1;
-                st.tokens += sent;
-            }
-        });
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("decode server thread died"))?
-            .map_err(anyhow::Error::msg)?;
-        Ok(DecodeServer { tx, handle: Some(handle), stats })
-    }
-
-    /// Enqueue a generation request; tokens stream over the returned
-    /// receiver one by one (an `Err` item ends the stream).
-    pub fn generate_stream(
-        &self,
-        prompt: Vec<u32>,
-        n: usize,
-    ) -> mpsc::Receiver<Result<u32, String>> {
-        let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(GenRequest { prompt, n, reply });
-        rx
-    }
-
-    /// Blocking convenience: drain the stream into a vec.
-    pub fn generate(&self, prompt: Vec<u32>, n: usize) -> Result<Vec<u32>, String> {
-        let rx = self.generate_stream(prompt, n);
-        let mut out = Vec::with_capacity(n);
-        for tok in rx {
-            out.push(tok?);
-        }
-        Ok(out)
-    }
-
-    pub fn stats(&self) -> DecodeStats {
-        self.stats.lock().unwrap().clone()
-    }
-}
-
-impl Drop for DecodeServer {
-    fn drop(&mut self) {
+        // Closing the channel stops the dispatcher — after it drains what
+        // is already queued (mpsc receivers keep yielding buffered
+        // messages once all senders are gone), so in-flight requests get
+        // answers, not hangups.
         let (dummy_tx, _) = mpsc::channel();
         let tx = std::mem::replace(&mut self.tx, dummy_tx);
         drop(tx);
@@ -415,52 +496,457 @@ fn dispatcher<E: BatchEngine>(
     rx: mpsc::Receiver<Request>,
     batch_size: usize,
     max_wait: Duration,
+    depth: Arc<AtomicUsize>,
     stats: Arc<Mutex<ServeStats>>,
 ) {
     loop {
         // Block for the first request.
         let Ok(first) = rx.recv() else { return };
+        depth.fetch_sub(1, Ordering::SeqCst);
         let mut pending = vec![first];
-        let deadline = Instant::now() + max_wait;
+        let wait_deadline = Instant::now() + max_wait;
         // Coalesce until a full batch or the wait bound.
         while pending.len() < batch_size {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= wait_deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
+            match rx.recv_timeout(wait_deadline - now) {
+                Ok(r) => {
+                    depth.fetch_sub(1, Ordering::SeqCst);
+                    pending.push(r);
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
+        // Shed requests whose deadline expired while they sat in the
+        // queue: answering them late helps nobody and starves the rest.
+        let now = Instant::now();
+        pending.retain(|req| {
+            let expired = req.deadline.is_some_and(|d| now >= d);
+            if expired {
+                let mut st = lock(&stats);
+                st.deadline_exceeded += 1;
+                let elapsed_ms = req.enqueued.elapsed().as_millis() as u64;
+                if req.reply.send(Err(XgenError::DeadlineExceeded { elapsed_ms })).is_err() {
+                    st.cancelled += 1;
+                }
+            }
+            !expired
+        });
         // Serve: full batches through the batch variant, remainder 1-by-1.
         while !pending.is_empty() {
             let take = if pending.len() >= batch_size { batch_size } else { 1 };
             let chunk: Vec<Request> = pending.drain(..take).collect();
             let inputs: Vec<Vec<f32>> = chunk.iter().map(|r| r.input.clone()).collect();
-            let result = if take == 1 {
-                engine.run_single(&inputs[0]).map(|o| vec![o])
-            } else {
-                engine.run_batch(&inputs)
-            };
-            let mut st = stats.lock().unwrap();
+            // Panic isolation: a panicking engine answers this chunk with
+            // WorkerPanic and the dispatcher keeps serving.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                if take == 1 {
+                    engine.run_single(&inputs[0]).map(|o| vec![o])
+                } else {
+                    engine.run_batch(&inputs)
+                }
+            }));
+            let mut st = lock(&stats);
             st.batches += 1;
+            st.engine_fallbacks = engine.fallbacks();
             match result {
-                Ok(outs) => {
+                Ok(Ok(outs)) => {
                     for (req, out) in chunk.into_iter().zip(outs) {
-                        st.completed += 1;
-                        st.latencies_ms
-                            .push(req.enqueued.elapsed().as_secs_f64() * 1e3);
-                        let _ = req.reply.send(Ok(out));
+                        if req.reply.send(Ok(out)).is_ok() {
+                            st.completed += 1;
+                            st.latencies_ms.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
+                        } else {
+                            st.cancelled += 1;
+                        }
                     }
                 }
-                Err(e) => {
+                Ok(Err(e)) => {
+                    let typed = XgenError::classify(&e);
                     for req in chunk {
-                        let _ = req.reply.send(Err(e.to_string()));
+                        st.errors += 1;
+                        if req.reply.send(Err(typed.clone())).is_err() {
+                            st.cancelled += 1;
+                        }
+                    }
+                }
+                Err(payload) => {
+                    st.worker_panics += 1;
+                    let typed =
+                        XgenError::WorkerPanic { detail: panic_detail(payload.as_ref()) };
+                    for req in chunk {
+                        st.errors += 1;
+                        if req.reply.send(Err(typed.clone())).is_err() {
+                            st.cancelled += 1;
+                        }
                     }
                 }
             }
+        }
+    }
+}
+
+/// One token-streaming generation request.
+struct GenRequest {
+    prompt: Vec<u32>,
+    n: usize,
+    reply: mpsc::Sender<Result<u32, XgenError>>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+/// Decode-server configuration: queue bound + default per-request deadline.
+#[derive(Debug, Clone)]
+pub struct DecodeConfig {
+    /// Bound on queued generation requests; past it, submissions are shed
+    /// with [`XgenError::Overloaded`].
+    pub queue_cap: usize,
+    /// Deadline applied to [`DecodeServer::generate_stream`] requests
+    /// (none by default). Checked between decode steps: an expired request
+    /// keeps the tokens already streamed and ends with
+    /// [`XgenError::DeadlineExceeded`].
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        DecodeConfig { queue_cap: 1024, default_deadline: None }
+    }
+}
+
+/// Serving statistics of a [`DecodeServer`].
+#[derive(Debug, Clone, Default)]
+pub struct DecodeStats {
+    pub requests: usize,
+    pub tokens: usize,
+    /// Requests refused at submission because the queue was full.
+    pub shed: usize,
+    /// Streams whose client dropped the receiver mid-generation.
+    pub cancelled: usize,
+    /// Requests answered with an error (prefill/step failure or panic).
+    pub errors: usize,
+    /// Requests cut off mid-generation by their deadline.
+    pub deadline_exceeded: usize,
+    /// Session panics caught; the session is rebuilt after each.
+    pub worker_panics: usize,
+}
+
+impl DecodeStats {
+    /// One-line operator-facing summary including the fault counters.
+    pub fn report(&self) -> String {
+        format!(
+            "{} requests, {} tokens; errors {}, shed {}, deadline-exceeded {}, \
+             cancelled {}, worker panics {}",
+            self.requests,
+            self.tokens,
+            self.errors,
+            self.shed,
+            self.deadline_exceeded,
+            self.cancelled,
+            self.worker_panics
+        )
+    }
+}
+
+/// Token-streaming generation server: one thread owns a compiled *causal
+/// decoder* session ([`CompiledModel::decode_session`]) and serves greedy
+/// generation requests, sending each token back over the request's channel
+/// **as it is decoded** — the client reads a stream, not a batch. The
+/// session's K/V caches are reset and reused across requests, so the
+/// serving loop allocates nothing per token after the first request.
+///
+/// Faults are isolated per request: a panic during prefill or a step is
+/// caught, answered with [`XgenError::WorkerPanic`], and the session is
+/// **rebuilt** before the next request (a panic can leave session buffers
+/// mid-move); non-finite logits abort the stream with
+/// [`XgenError::NonFinite`] instead of feeding NaN back into the argmax.
+pub struct DecodeServer {
+    tx: mpsc::Sender<GenRequest>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<DecodeStats>>,
+    depth: Arc<AtomicUsize>,
+    cap: usize,
+    default_deadline: Option<Duration>,
+}
+
+impl DecodeServer {
+    /// Spawn the decode thread over a compiled causal decoder with default
+    /// [`DecodeConfig`] bounds. The model must carry weights and decode
+    /// incrementally (validated before the call returns, so
+    /// misconfiguration fails here, not on request one).
+    pub fn start(model: CompiledModel, max_seq: usize) -> Result<DecodeServer> {
+        DecodeServer::start_cfg(model, max_seq, DecodeConfig::default())
+    }
+
+    /// [`DecodeServer::start`] with explicit queue/deadline bounds.
+    pub fn start_cfg(
+        model: CompiledModel,
+        max_seq: usize,
+        cfg: DecodeConfig,
+    ) -> Result<DecodeServer> {
+        let (tx, rx) = mpsc::channel::<GenRequest>();
+        // Session construction (constant-subgraph evaluation, cache
+        // allocation) happens once, inside the worker thread; the ready
+        // channel reports the validation result before start() returns so
+        // misconfiguration still fails eagerly.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let stats = Arc::new(Mutex::new(DecodeStats::default()));
+        let stats2 = stats.clone();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth2 = depth.clone();
+        let handle = std::thread::spawn(move || {
+            let mut session = match model.decode_session(max_seq) {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            let mut logits: Vec<f32> = Vec::new();
+            while let Ok(req) = rx.recv() {
+                depth2.fetch_sub(1, Ordering::SeqCst);
+                // Expired before we even started: shed without touching
+                // the session. Not counted in `requests` (nothing ran).
+                if let Some(d) = req.deadline {
+                    if Instant::now() >= d {
+                        let mut st = lock(&stats2);
+                        st.deadline_exceeded += 1;
+                        let elapsed_ms = req.enqueued.elapsed().as_millis() as u64;
+                        if req
+                            .reply
+                            .send(Err(XgenError::DeadlineExceeded { elapsed_ms }))
+                            .is_err()
+                        {
+                            st.cancelled += 1;
+                        }
+                        continue;
+                    }
+                }
+                session.reset();
+                logits.clear();
+                // Prefill under panic isolation. On a caught panic the
+                // session buffers may be mid-move — rebuild before the
+                // next request.
+                let prefill = catch_unwind(AssertUnwindSafe(|| {
+                    session.prefill(&req.prompt).map(|l| {
+                        logits.clear();
+                        logits.extend_from_slice(l);
+                    })
+                }));
+                match prefill {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        lock(&stats2).errors += 1;
+                        let _ = req.reply.send(Err(XgenError::classify(&e)));
+                        continue;
+                    }
+                    Err(payload) => {
+                        let mut st = lock(&stats2);
+                        st.worker_panics += 1;
+                        st.errors += 1;
+                        drop(st);
+                        let _ = req.reply.send(Err(XgenError::WorkerPanic {
+                            detail: panic_detail(payload.as_ref()),
+                        }));
+                        match model.decode_session(max_seq) {
+                            Ok(s) => session = s,
+                            Err(_) => return, // cannot recover: stop serving
+                        }
+                        continue;
+                    }
+                }
+                if !logits.iter().all(|v| v.is_finite()) {
+                    lock(&stats2).errors += 1;
+                    let _ = req
+                        .reply
+                        .send(Err(XgenError::NonFinite { at: "prefill logits".to_string() }));
+                    continue;
+                }
+                let mut sent = 0usize;
+                for i in 0..req.n {
+                    // Deadline between steps: the partial stream stands.
+                    if let Some(d) = req.deadline {
+                        if Instant::now() >= d {
+                            let mut st = lock(&stats2);
+                            st.deadline_exceeded += 1;
+                            let elapsed_ms = req.enqueued.elapsed().as_millis() as u64;
+                            if req
+                                .reply
+                                .send(Err(XgenError::DeadlineExceeded { elapsed_ms }))
+                                .is_err()
+                            {
+                                st.cancelled += 1;
+                            }
+                            break;
+                        }
+                    }
+                    let next = crate::exec::decode::argmax(&logits) as u32;
+                    if req.reply.send(Ok(next)).is_err() {
+                        lock(&stats2).cancelled += 1;
+                        break; // client hung up mid-stream
+                    }
+                    sent += 1;
+                    if i + 1 < req.n {
+                        let step = catch_unwind(AssertUnwindSafe(|| {
+                            session.step(next).map(|l| {
+                                logits.clear();
+                                logits.extend_from_slice(l);
+                            })
+                        }));
+                        match step {
+                            Ok(Ok(())) => {}
+                            Ok(Err(e)) => {
+                                lock(&stats2).errors += 1;
+                                let _ = req.reply.send(Err(XgenError::classify(&e)));
+                                break;
+                            }
+                            Err(payload) => {
+                                let mut st = lock(&stats2);
+                                st.worker_panics += 1;
+                                st.errors += 1;
+                                drop(st);
+                                let _ = req.reply.send(Err(XgenError::WorkerPanic {
+                                    detail: panic_detail(payload.as_ref()),
+                                }));
+                                match model.decode_session(max_seq) {
+                                    Ok(s) => session = s,
+                                    Err(_) => return, // cannot recover: stop serving
+                                }
+                                break;
+                            }
+                        }
+                        if !logits.iter().all(|v| v.is_finite()) {
+                            lock(&stats2).errors += 1;
+                            let _ = req.reply.send(Err(XgenError::NonFinite {
+                                at: "step logits".to_string(),
+                            }));
+                            break;
+                        }
+                    }
+                }
+                let mut st = lock(&stats2);
+                st.requests += 1;
+                st.tokens += sent;
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("decode server thread died"))?
+            .map_err(anyhow::Error::msg)?;
+        Ok(DecodeServer {
+            tx,
+            handle: Some(handle),
+            stats,
+            depth,
+            cap: cfg.queue_cap,
+            default_deadline: cfg.default_deadline,
+        })
+    }
+
+    /// Shared admission path: shed past the cap, recover the reply sender
+    /// on a dead server so the stream still ends with a typed error.
+    fn stream_opt(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<Result<u32, XgenError>> {
+        let (reply, rx) = mpsc::channel();
+        let d = self.depth.fetch_add(1, Ordering::SeqCst);
+        if d >= self.cap {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            lock(&self.stats).shed += 1;
+            let _ = reply.send(Err(XgenError::Overloaded { depth: d, capacity: self.cap }));
+            return rx;
+        }
+        let now = Instant::now();
+        let req = GenRequest {
+            prompt,
+            n,
+            reply,
+            enqueued: now,
+            deadline: deadline.map(|w| now + w),
+        };
+        if let Err(mpsc::SendError(req)) = self.tx.send(req) {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            let _ = req.reply.send(Err(XgenError::ServerGone));
+        }
+        rx
+    }
+
+    /// Enqueue a generation request; tokens stream over the returned
+    /// receiver one by one (an `Err` item ends the stream). Uses the
+    /// server's default deadline, if any.
+    pub fn generate_stream(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+    ) -> mpsc::Receiver<Result<u32, XgenError>> {
+        self.stream_opt(prompt, n, self.default_deadline)
+    }
+
+    /// [`DecodeServer::generate_stream`] with an explicit per-request
+    /// deadline.
+    pub fn generate_stream_deadline(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+        deadline: Duration,
+    ) -> mpsc::Receiver<Result<u32, XgenError>> {
+        self.stream_opt(prompt, n, Some(deadline))
+    }
+
+    /// Blocking convenience: drain the stream into a vec.
+    pub fn generate(&self, prompt: Vec<u32>, n: usize) -> Result<Vec<u32>, XgenError> {
+        let rx = self.generate_stream(prompt, n);
+        let mut out = Vec::with_capacity(n);
+        for tok in rx {
+            out.push(tok?);
+        }
+        Ok(out)
+    }
+
+    /// Deadline-bounded blocking generation: returns the tokens produced
+    /// before the stream ended plus the terminating error, if any — a
+    /// deadline mid-generation yields the partial prefix and
+    /// `Some(DeadlineExceeded)`.
+    pub fn generate_with_deadline(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+        deadline: Duration,
+    ) -> (Vec<u32>, Option<XgenError>) {
+        let rx = self.generate_stream_deadline(prompt, n, deadline);
+        let mut out = Vec::with_capacity(n);
+        for tok in rx {
+            match tok {
+                Ok(t) => out.push(t),
+                Err(e) => return (out, Some(e)),
+            }
+        }
+        (out, None)
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        lock(&self.stats).clone()
+    }
+}
+
+impl Drop for DecodeServer {
+    fn drop(&mut self) {
+        // Closing the channel stops the decode loop after it drains the
+        // already-queued requests (buffered mpsc messages survive sender
+        // drop), so queued clients get streams, not hangups.
+        let (dummy_tx, _) = mpsc::channel();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
         }
     }
 }
@@ -471,6 +957,7 @@ mod tests {
     use super::*;
     use crate::graph::zoo::by_name;
     use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicBool;
 
     #[test]
     fn compiled_server_round_trips_requests() {
@@ -500,6 +987,8 @@ mod tests {
         let st = server.stats();
         assert_eq!(st.completed, 9);
         assert!(st.batches >= 3);
+        assert_eq!(st.errors, 0);
+        assert_eq!(st.shed, 0);
     }
 
     /// The token-streaming decode server: tokens arrive one by one,
@@ -527,12 +1016,15 @@ mod tests {
         // A second request after the first reuses the reset session.
         let again = server.generate(vec![5, 6, 7], 4).unwrap();
         assert_eq!(again, reference);
-        // Errors stream too: an over-long prompt fails loudly.
+        // Errors stream too: an over-long prompt fails loudly, and the
+        // error is typed.
         let err = server.generate((0..40).collect(), 1).unwrap_err();
-        assert!(err.contains("exceeds max_seq"), "got: {err}");
+        assert_eq!(err.code(), "SeqOverflow");
+        assert!(err.to_string().contains("exceeds max_seq"), "got: {err}");
         let st = server.stats();
         assert_eq!(st.requests, 2, "failed prefill must not count");
         assert_eq!(st.tokens, 8);
+        assert_eq!(st.errors, 1);
     }
 
     #[test]
@@ -559,6 +1051,155 @@ mod tests {
         let single = Compiler::for_model("demo-cnn", 1).unwrap().compile().unwrap();
         let batched = Compiler::for_model("demo-cnn", 4).unwrap().compile().unwrap();
         assert!(Server::start_compiled(single, batched, Duration::from_millis(1)).is_err());
+    }
+
+    /// An engine that panics on its second call: the dispatcher must
+    /// answer that request with `WorkerPanic` and keep serving.
+    struct FlakyEngine {
+        calls: usize,
+    }
+
+    impl BatchEngine for FlakyEngine {
+        fn run_single(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+            self.calls += 1;
+            if self.calls == 2 {
+                panic!("injected engine panic (call #2)");
+            }
+            Ok(x.iter().map(|v| v * 2.0).collect())
+        }
+
+        fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            xs.iter().map(|x| self.run_single(x)).collect()
+        }
+    }
+
+    #[test]
+    fn dispatcher_isolates_engine_panics() {
+        let server = Server::spawn_engine(
+            FlakyEngine { calls: 0 },
+            1,
+            ServeConfig { max_wait: Duration::ZERO, ..ServeConfig::default() },
+        );
+        let r1 = server.infer(vec![1.0, 2.0]).unwrap();
+        assert_eq!(r1, vec![2.0, 4.0]);
+        let e = server.infer(vec![1.0, 2.0]).unwrap_err();
+        assert_eq!(e.code(), "WorkerPanic");
+        assert!(e.to_string().contains("injected engine panic"), "got: {e}");
+        // The server survived the panic: request 3 is bitwise-identical
+        // to request 1.
+        let r3 = server.infer(vec![1.0, 2.0]).unwrap();
+        assert_eq!(r3, r1);
+        let st = server.stats();
+        assert_eq!(st.worker_panics, 1);
+        assert_eq!(st.errors, 1);
+        assert_eq!(st.completed, 2);
+    }
+
+    /// An engine whose `run_single` blocks on a gate the test holds —
+    /// lets the test fill the queue deterministically.
+    struct GateEngine {
+        gate: Arc<Mutex<()>>,
+        entered: Arc<AtomicBool>,
+    }
+
+    impl BatchEngine for GateEngine {
+        fn run_single(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+            self.entered.store(true, Ordering::SeqCst);
+            let _g = lock(&self.gate);
+            Ok(x.to_vec())
+        }
+
+        fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            xs.iter().map(|x| self.run_single(x)).collect()
+        }
+    }
+
+    #[test]
+    fn full_queue_sheds_with_overloaded() {
+        let gate = Arc::new(Mutex::new(()));
+        let entered = Arc::new(AtomicBool::new(false));
+        let server = Server::spawn_engine(
+            GateEngine { gate: gate.clone(), entered: entered.clone() },
+            1,
+            ServeConfig { max_wait: Duration::ZERO, queue_cap: 2, default_deadline: None },
+        );
+        let held = gate.lock().unwrap();
+        // r1 is dequeued by the dispatcher and blocks inside the engine.
+        let r1 = server.submit(vec![1.0]);
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        // r2 and r3 fill the queue (cap 2); r4 must shed.
+        let r2 = server.submit(vec![2.0]);
+        let r3 = server.submit(vec![3.0]);
+        let e = server.try_submit(vec![4.0]).unwrap_err();
+        assert_eq!(e.code(), "Overloaded");
+        // submit() delivers the same typed error through the channel.
+        let r5 = server.submit(vec![5.0]);
+        assert_eq!(r5.recv().unwrap().unwrap_err().code(), "Overloaded");
+        drop(held);
+        // Everything admitted completes once the gate opens.
+        assert_eq!(r1.recv().unwrap().unwrap(), vec![1.0]);
+        assert_eq!(r2.recv().unwrap().unwrap(), vec![2.0]);
+        assert_eq!(r3.recv().unwrap().unwrap(), vec![3.0]);
+        let st = server.stats();
+        assert_eq!(st.shed, 2);
+        assert_eq!(st.completed, 3);
+    }
+
+    /// Dropping the receiver must not panic or kill the server — the
+    /// failed reply send is counted as a cancellation.
+    #[test]
+    fn dropped_receiver_counts_as_cancellation() {
+        struct Echo;
+        impl BatchEngine for Echo {
+            fn run_single(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+                Ok(x.to_vec())
+            }
+            fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                Ok(xs.to_vec())
+            }
+        }
+        let server = Server::spawn_engine(
+            Echo,
+            1,
+            ServeConfig { max_wait: Duration::ZERO, ..ServeConfig::default() },
+        );
+        drop(server.submit(vec![1.0])); // receiver gone before the reply
+        // The server is still alive and serving.
+        let y = server.infer(vec![2.0]).unwrap();
+        assert_eq!(y, vec![2.0]);
+        // The dropped request was either cancelled at reply time or (rarely)
+        // completed before the drop landed; cancellation is the expected
+        // path once the reply send fails.
+        let st = server.stats();
+        assert_eq!(st.completed + st.cancelled, 2);
+        assert!(st.errors == 0);
+    }
+
+    /// Dropping the server drains the queue: every already-submitted
+    /// request still gets an answer before the dispatcher exits.
+    #[test]
+    fn drop_drains_queued_requests() {
+        struct Echo;
+        impl BatchEngine for Echo {
+            fn run_single(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+                Ok(x.to_vec())
+            }
+            fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+                Ok(xs.to_vec())
+            }
+        }
+        let server = Server::spawn_engine(
+            Echo,
+            4,
+            ServeConfig { max_wait: Duration::from_millis(1), ..ServeConfig::default() },
+        );
+        let rxs: Vec<_> = (0..3).map(|i| server.submit(vec![i as f32])).collect();
+        drop(server); // joins the dispatcher after it drains the queue
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32]);
+        }
     }
 
     #[test]

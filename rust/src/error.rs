@@ -1,0 +1,197 @@
+//! Typed errors of the serving runtime (ISSUE-6 tentpole).
+//!
+//! The ROADMAP's north star is serving heavy traffic, and a serving loop
+//! cannot tell its callers "something panicked somewhere" — admission
+//! control, deadline handling and client retry policy all hinge on *which*
+//! failure happened. [`XgenError`] is that taxonomy: the recoverable
+//! subset of what used to be panics/unwraps/anyhow strings, as a typed,
+//! cloneable value that crosses the coordinator's reply channels intact.
+//!
+//! Layering rules:
+//!
+//! * Functions keep returning `anyhow::Result` (the crate-wide idiom); a
+//!   typed failure is an `XgenError` *inside* the `anyhow::Error`
+//!   (`XgenError: std::error::Error`, so `?` and `.into()` just work).
+//! * [`XgenError::of`] recovers the typed value from any `anyhow::Error`
+//!   (the CLI prints `error[Code]: …` and exits nonzero; tests match on
+//!   variants instead of message substrings).
+//! * [`XgenError::classify`] is the serving boundary: whatever error a
+//!   request produced becomes a typed value on the wire — already-typed
+//!   errors pass through, anything else becomes [`XgenError::Internal`].
+//! * Panics stay panics for true internal invariants; the serving layer
+//!   catches them at isolation points and reports
+//!   [`XgenError::WorkerPanic`].
+
+use std::fmt;
+
+/// One typed failure of compilation, inference, decoding or serving.
+///
+/// `PartialEq` compares variants *and* payloads; use
+/// [`XgenError::code`] when only the category matters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum XgenError {
+    /// Input tensor count / shape / length does not match the compiled
+    /// graph. Returned before any execution starts.
+    ShapeMismatch { expected: String, got: String },
+    /// A token id is outside the decoder's vocabulary.
+    VocabOutOfRange { token: u32, vocab: usize },
+    /// A prompt or step would exceed the session's positional capacity.
+    /// `at` is the current length, `want` the tokens being added.
+    SeqOverflow { at: usize, want: usize, max_seq: usize },
+    /// The bounded submission queue is full — the request was shed
+    /// immediately, nothing was enqueued.
+    Overloaded { depth: usize, capacity: usize },
+    /// The per-request deadline expired. For streaming generation the
+    /// tokens decoded before the deadline were already delivered — the
+    /// partial generation stands.
+    DeadlineExceeded { elapsed_ms: u64 },
+    /// The client dropped its receiver; the remaining work was abandoned.
+    Cancelled,
+    /// A worker job panicked. The pool and the per-model workspace
+    /// self-heal; only this request fails.
+    WorkerPanic { detail: String },
+    /// The steady engine failed at serve time and the fallback reference
+    /// path failed too (a successful fallback is invisible to the caller
+    /// and only counted in stats).
+    EngineFallback { detail: String },
+    /// Non-finite values surfaced at a guarded point (e.g. serving-time
+    /// logits).
+    NonFinite { at: String },
+    /// The server thread is gone (shut down or crashed at startup).
+    ServerGone,
+    /// Anything else: an internal invariant or a wrapped lower-level
+    /// error that has no dedicated variant.
+    Internal { detail: String },
+}
+
+impl XgenError {
+    /// Stable short code naming the variant — what the CLI prints inside
+    /// `error[...]` and what dashboards should key on.
+    pub fn code(&self) -> &'static str {
+        match self {
+            XgenError::ShapeMismatch { .. } => "ShapeMismatch",
+            XgenError::VocabOutOfRange { .. } => "VocabOutOfRange",
+            XgenError::SeqOverflow { .. } => "SeqOverflow",
+            XgenError::Overloaded { .. } => "Overloaded",
+            XgenError::DeadlineExceeded { .. } => "DeadlineExceeded",
+            XgenError::Cancelled => "Cancelled",
+            XgenError::WorkerPanic { .. } => "WorkerPanic",
+            XgenError::EngineFallback { .. } => "EngineFallback",
+            XgenError::NonFinite { .. } => "NonFinite",
+            XgenError::ServerGone => "ServerGone",
+            XgenError::Internal { .. } => "Internal",
+        }
+    }
+
+    /// The typed error inside an `anyhow::Error`, if there is one.
+    pub fn of(err: &anyhow::Error) -> Option<&XgenError> {
+        err.downcast_ref::<XgenError>()
+    }
+
+    /// Serving-boundary conversion: pass a typed error through, wrap
+    /// anything else as [`XgenError::Internal`] (with the full anyhow
+    /// context chain in the detail).
+    pub fn classify(err: &anyhow::Error) -> XgenError {
+        match XgenError::of(err) {
+            Some(e) => e.clone(),
+            None => XgenError::Internal { detail: format!("{err:#}") },
+        }
+    }
+}
+
+impl fmt::Display for XgenError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XgenError::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: expected {expected}, got {got}")
+            }
+            XgenError::VocabOutOfRange { token, vocab } => {
+                write!(f, "token id {token} out of range for vocab {vocab}")
+            }
+            // Two spellings, one variant: a full sequence (nothing can be
+            // added) vs. a prompt that does not fit from the current
+            // position. Tests and callers match on these phrases.
+            XgenError::SeqOverflow { at, want, max_seq } => {
+                if at >= max_seq {
+                    write!(
+                        f,
+                        "sequence is full ({max_seq} positions) — call reset() or raise max_seq"
+                    )
+                } else {
+                    write!(
+                        f,
+                        "prompt of {want} tokens exceeds max_seq {max_seq} (at position {at})"
+                    )
+                }
+            }
+            XgenError::Overloaded { depth, capacity } => {
+                write!(f, "server overloaded: {depth} requests queued (capacity {capacity})")
+            }
+            XgenError::DeadlineExceeded { elapsed_ms } => {
+                write!(f, "deadline exceeded after {elapsed_ms} ms")
+            }
+            XgenError::Cancelled => write!(f, "request cancelled (receiver dropped)"),
+            XgenError::WorkerPanic { detail } => {
+                write!(f, "a worker panicked while serving this request: {detail}")
+            }
+            XgenError::EngineFallback { detail } => {
+                write!(f, "steady engine failed and the reference fallback failed too: {detail}")
+            }
+            XgenError::NonFinite { at } => {
+                write!(f, "non-finite values detected at {at}")
+            }
+            XgenError::ServerGone => write!(f, "server shut down"),
+            XgenError::Internal { detail } => write!(f, "{detail}"),
+        }
+    }
+}
+
+impl std::error::Error for XgenError {}
+
+/// Best-effort human-readable message from a caught panic payload (the
+/// `Box<dyn Any>` that `catch_unwind` returns).
+pub fn panic_detail(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_display_is_matchable() {
+        let e = XgenError::VocabOutOfRange { token: 300, vocab: 256 };
+        assert_eq!(e.code(), "VocabOutOfRange");
+        assert!(e.to_string().contains("out of range"));
+        let full = XgenError::SeqOverflow { at: 4, want: 1, max_seq: 4 };
+        assert!(full.to_string().contains("full"));
+        let long = XgenError::SeqOverflow { at: 0, want: 9, max_seq: 4 };
+        assert!(long.to_string().contains("exceeds max_seq"));
+    }
+
+    #[test]
+    fn round_trips_through_anyhow() {
+        let e: anyhow::Error = XgenError::Cancelled.into();
+        assert_eq!(XgenError::of(&e), Some(&XgenError::Cancelled));
+        assert_eq!(XgenError::classify(&e), XgenError::Cancelled);
+        let plain = anyhow::anyhow!("just a string");
+        assert!(XgenError::of(&plain).is_none());
+        assert_eq!(XgenError::classify(&plain).code(), "Internal");
+    }
+
+    #[test]
+    fn panic_detail_extracts_strings() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_detail(p.as_ref()), "boom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_detail(p.as_ref()), "owned");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert!(panic_detail(p.as_ref()).contains("non-string"));
+    }
+}

@@ -30,6 +30,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::error::XgenError;
 use crate::graph::{Graph, NodeId, OpKind, WeightStore};
 use crate::tensor::Tensor;
 
@@ -657,18 +658,18 @@ impl<'m> DecodeSession<'m> {
             bail!("prefill needs at least one token");
         }
         if self.len + tokens.len() > self.max_seq {
-            bail!(
-                "prompt of {} tokens exceeds max_seq {} (at position {})",
-                tokens.len(),
-                self.max_seq,
-                self.len
-            );
+            return Err(XgenError::SeqOverflow {
+                at: self.len,
+                want: tokens.len(),
+                max_seq: self.max_seq,
+            }
+            .into());
         }
         // Validate every id up front so prefill is atomic: a bad token
         // mid-prompt must not leave the session partially advanced.
         for &t in tokens {
             if t as usize >= self.vocab {
-                bail!("token id {t} out of range for vocab {}", self.vocab);
+                return Err(XgenError::VocabOutOfRange { token: t, vocab: self.vocab }.into());
             }
         }
         for &t in tokens {
@@ -681,6 +682,8 @@ impl<'m> DecodeSession<'m> {
     /// the logits row for the next position. Allocation-free after
     /// warm-up; loud errors on out-of-range ids and full sequences.
     pub fn step(&mut self, token: u32) -> Result<&[f32]> {
+        #[cfg(feature = "fault-injection")]
+        crate::runtime::fault::on_decode_step();
         self.advance(token)?;
         Ok(self.logits())
     }
@@ -718,15 +721,21 @@ impl<'m> DecodeSession<'m> {
     }
 
     /// Run one position through the interpreter.
+    /// On `Err` the session is untouched: `len` does not advance and the
+    /// K/V caches keep their pre-call lengths, so callers can recover with
+    /// a corrected token (or `reset()`) — pinned by the error-then-continue
+    /// oracle in `tests/robustness.rs`.
     fn advance(&mut self, token: u32) -> Result<()> {
         if self.len >= self.max_seq {
-            bail!(
-                "sequence is full ({} positions) — call reset() or raise max_seq",
-                self.max_seq
-            );
+            return Err(XgenError::SeqOverflow {
+                at: self.len,
+                want: 1,
+                max_seq: self.max_seq,
+            }
+            .into());
         }
         if token as usize >= self.vocab {
-            bail!("token id {token} out of range for vocab {}", self.vocab);
+            return Err(XgenError::VocabOutOfRange { token, vocab: self.vocab }.into());
         }
         let p = self.len;
         self.cur = p + 1;
@@ -736,6 +745,11 @@ impl<'m> DecodeSession<'m> {
             // Take the output buffer out so sibling buffers stay readable.
             let mut ob = std::mem::take(&mut self.bufs[id]);
             let res = self.eval_node(id, token, &mut ob[..elems]);
+            #[cfg(feature = "fault-injection")]
+            let res = res.and_then(|()| {
+                crate::runtime::fault::on_decode_node(&self.g.node(id).name, &mut ob[..elems])
+                    .map_err(|m| anyhow::anyhow!(m))
+            });
             if res.is_ok() {
                 let max_seq = self.max_seq;
                 if let Some(ai) = self.plan[id].k_of {

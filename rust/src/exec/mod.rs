@@ -1192,6 +1192,8 @@ impl<'g> FusedExecutor<'g> {
     /// and copy into their slot — numerically identical, just not
     /// allocation-free.
     pub fn run_steady(&self, inputs: &[Tensor], ws: &mut Workspace) -> Result<()> {
+        #[cfg(feature = "fault-injection")]
+        crate::runtime::fault::on_steady_run().map_err(|m| anyhow!(m))?;
         let state: &ExecState = &self.state;
         // Validate sources up front (allocation-free on the success path).
         let mut next_input = 0usize;

@@ -32,7 +32,7 @@
 //! | layer | modules |
 //! |---|---|
 //! | **session API** | [`api`] |
-//! | substrates | [`util`], [`tensor`] |
+//! | substrates | [`error`], [`util`], [`tensor`] |
 //! | graph IR + model zoo | [`graph`] |
 //! | high-level opt | [`rewrite`], [`fusion`] |
 //! | model opt | [`pruning`], [`fkw`] |
@@ -68,6 +68,7 @@
 )]
 
 pub mod api;
+pub mod error;
 pub mod util;
 pub mod tensor;
 pub mod graph;

@@ -12,7 +12,11 @@
 //! xgen run --artifact cnn_dense_b1              one PJRT inference
 //! xgen serve [--model demo-cnn] [--requests 64] [--opt 0..3]
 //!            [--scheme none|pattern|...] [--reuse] [--no-fkw] [--pjrt]
+//!            [--queue-cap 1024] [--deadline-ms N]
 //! ```
+//!
+//! Failures exit nonzero and print `error[<code>]: ...` where `<code>` is
+//! the stable [`xgen::error::XgenError::code`] of the root cause.
 
 // Same lint policy as lib.rs (CI gates `cargo clippy -- -D warnings`).
 #![allow(unknown_lints)]
@@ -30,7 +34,8 @@ use anyhow::Result;
 use xgen::api::{CompiledModel, Compiler, OptLevel};
 use xgen::baselines::{DeviceClass, Framework};
 use xgen::caps::{search, CapsConfig};
-use xgen::coordinator::Server;
+use xgen::coordinator::{ServeConfig, Server};
+use xgen::error::XgenError;
 use xgen::cost::devices;
 use xgen::graph::zoo::{all_models, by_name};
 use xgen::pruning::PruneScheme;
@@ -41,7 +46,16 @@ use xgen::xengine::adapp::{modules, variants};
 use xgen::xengine::sim::simulate;
 use xgen::xengine::Policy;
 
-fn main() -> Result<()> {
+fn main() {
+    if let Err(e) = run() {
+        // Typed errors print their stable code so scripts can branch on
+        // `error[SeqOverflow]`-style prefixes; everything else is Internal.
+        eprintln!("error[{}]: {e:#}", XgenError::classify(&e).code());
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
     let args = Args::from_env();
     match args.command.as_str() {
         "models" => cmd_models(),
@@ -73,7 +87,9 @@ xgen — CoCoPIE XGen reproduction (see DESIGN.md)
   emit-kernel   print a generated branch-less pattern kernel
   run           execute one AOT artifact via PJRT
   serve         dynamic-batching serving demo (compiled sessions by
-                default; --pjrt for the AOT artifact path)
+                default; --pjrt for the AOT artifact path;
+                --queue-cap bounds the queue, --deadline-ms sets a
+                per-request deadline)
 ";
 
 /// CLI spelling of a pruning scheme; unknown spellings are a loud error,
@@ -257,11 +273,18 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.opt_usize("requests", 64);
-    let max_wait = std::time::Duration::from_millis(args.opt_u64("max-wait-ms", 2));
+    let cfg = ServeConfig {
+        max_wait: std::time::Duration::from_millis(args.opt_u64("max-wait-ms", 2)),
+        queue_cap: args.opt_usize("queue-cap", 1024),
+        default_deadline: args
+            .opt("deadline-ms")
+            .and_then(|v| v.parse().ok())
+            .map(std::time::Duration::from_millis),
+    };
     let (server, per) = if args.flag("pjrt") {
         // Legacy path: AOT artifacts over the PJRT runtime.
         let server =
-            Server::start(default_artifact_dir(), "cnn_dense_b1", "cnn_dense_b4", max_wait)?;
+            Server::start_cfg(default_artifact_dir(), "cnn_dense_b1", "cnn_dense_b4", cfg)?;
         (server, 3 * 24 * 24)
     } else {
         // Default path: compiled sessions executing in-process.
@@ -275,26 +298,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
             single.report().opt.name(),
             batched.batch_size()
         );
-        (Server::start_compiled(single, batched, max_wait)?, per)
+        (Server::start_compiled_cfg(single, batched, cfg)?, per)
     };
     let mut rng = Rng::new(9);
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)
         .map(|_| server.submit((0..per).map(|_| rng.f32()).collect()))
         .collect();
+    let mut first_err: Option<XgenError> = None;
+    let mut failed = 0usize;
     for rx in rxs {
-        rx.recv().unwrap().map_err(anyhow::Error::msg)?;
+        match rx.recv() {
+            Ok(Ok(_)) => {}
+            Ok(Err(e)) => {
+                failed += 1;
+                first_err.get_or_insert(e);
+            }
+            Err(_) => anyhow::bail!("server thread died mid-run"),
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let st = server.stats();
-    let s = st.summary().unwrap();
-    println!(
-        "{n} requests in {:.1} ms: {:.0} req/s, mean batch {:.2}, p50 {:.2} ms, p95 {:.2} ms",
-        wall * 1e3,
-        n as f64 / wall,
-        st.mean_batch(),
-        s.p50,
-        s.p95
-    );
+    println!("{}", st.report());
+    if let Some(s) = st.summary() {
+        println!(
+            "{n} requests in {:.1} ms: {:.0} req/s, p50 {:.2} ms, p95 {:.2} ms",
+            wall * 1e3,
+            n as f64 / wall,
+            s.p50,
+            s.p95
+        );
+    }
+    if let Some(e) = first_err {
+        return Err(anyhow::Error::new(e).context(format!("{failed}/{n} requests failed")));
+    }
     Ok(())
 }

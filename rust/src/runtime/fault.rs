@@ -1,0 +1,248 @@
+//! Deterministic fault injection (ISSUE-6 tentpole, layer 4).
+//!
+//! Every recovery path of the fault-tolerant serving runtime — pool panic
+//! isolation, workspace-arena rebuild, steady-engine fallback, decode
+//! deadline shedding — is exercised by *deterministic* tests rather than
+//! hope. A [`FaultPlan`] is installed process-globally ([`install`]
+//! returns a guard that clears it on drop); cheap hooks compiled into the
+//! hot paths under `--features fault-injection` consult it:
+//!
+//! * [`on_parallel_task`] — panic the worker executing the Nth pool task
+//!   (counted process-wide from the counter's current value).
+//! * [`on_steady_run`] — fail (or panic) the Nth entry into the steady
+//!   in-arena engine (models an injected allocation/setup failure or
+//!   crash at serve time; drives the `eval_op`-path fallback and the
+//!   arena rebuild).
+//! * [`on_decode_node`] — fail, corrupt with NaN, or panic at the named
+//!   graph node's output on its Nth evaluation inside a [`DecodeSession`]
+//!   (`crate::exec::DecodeSession`) step.
+//! * [`on_decode_step`] — stall each `step()` by a fixed duration (drives
+//!   deadline-exceeded partial generations).
+//!
+//! With no plan installed every hook is a single relaxed atomic load —
+//! the unfaulted path stays allocation-free, which is how the counting-
+//! allocator tests in `tests/steady.rs` can run under
+//! `--features fault-injection` too.
+//!
+//! The plan is process-global, so tests that install one must not run
+//! concurrently with each other; `rust/tests/robustness.rs` serializes
+//! them behind a file-local mutex (integration-test binaries are their
+//! own processes, so other test binaries are unaffected).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What to break, and when. All counters are absolute values of the
+/// matching process-wide counter — use the `*_so_far()` getters to aim
+/// relative to "now".
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Panic inside the pool task whose global ordinal equals this value
+    /// (see [`parallel_tasks_so_far`]).
+    pub panic_on_parallel_task: Option<u64>,
+    /// Fail the steady engine run whose global ordinal equals this value
+    /// (see [`steady_runs_so_far`]).
+    pub fail_steady_run: Option<u64>,
+    /// Panic inside the steady engine run whose global ordinal equals
+    /// this value — drives the api-layer catch-unwind + arena-rebuild
+    /// path deterministically (unlike pool-task panics, which require a
+    /// matrix large enough to be banded across workers).
+    pub panic_steady_run: Option<u64>,
+    /// `(node name, k)`: make the named decode node return an error on
+    /// the k-th time (1-based) it is evaluated after installation.
+    pub fail_decode_node: Option<(String, u64)>,
+    /// `(node name, k)`: overwrite the named decode node's output with
+    /// NaN on the k-th time (1-based) it is evaluated after installation.
+    pub nan_decode_node: Option<(String, u64)>,
+    /// `(node name, k)`: panic while the named decode node is evaluated,
+    /// on the k-th time (1-based) after installation — drives the decode
+    /// server's catch-unwind + session-rebuild path.
+    pub panic_decode_node: Option<(String, u64)>,
+    /// Sleep this many milliseconds inside every `DecodeSession::step`.
+    pub stall_step_ms: Option<u64>,
+}
+
+/// Fast-path gate: hooks return immediately while this is false.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// Process-wide ordinals (monotone, never reset — plans aim at absolute
+/// values read off the getters).
+static PARALLEL_TASKS: AtomicU64 = AtomicU64::new(0);
+static STEADY_RUNS: AtomicU64 = AtomicU64::new(0);
+/// Per-plan decode-node evaluation counter (reset by [`install`]).
+static DECODE_NODE_HITS: AtomicU64 = AtomicU64::new(0);
+
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+fn plan_lock() -> std::sync::MutexGuard<'static, Option<FaultPlan>> {
+    // A panic while holding the plan lock (only possible inside an
+    // injected-panic hook) must not wedge every later hook.
+    PLAN.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Install a plan; faults fire until the returned guard drops (or
+/// [`clear`] runs). Installing resets the per-plan decode-node counter.
+#[must_use = "faults clear when the guard drops"]
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    DECODE_NODE_HITS.store(0, Ordering::SeqCst);
+    *plan_lock() = Some(plan);
+    ACTIVE.store(true, Ordering::SeqCst);
+    FaultGuard { _priv: () }
+}
+
+/// Remove the active plan (idempotent).
+pub fn clear() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    *plan_lock() = None;
+}
+
+/// Clears the installed plan on drop.
+pub struct FaultGuard {
+    _priv: (),
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Pool tasks executed so far, process-wide — aim
+/// [`FaultPlan::panic_on_parallel_task`] at `this + k`.
+pub fn parallel_tasks_so_far() -> u64 {
+    PARALLEL_TASKS.load(Ordering::SeqCst)
+}
+
+/// Steady-engine runs entered so far, process-wide.
+pub fn steady_runs_so_far() -> u64 {
+    STEADY_RUNS.load(Ordering::SeqCst)
+}
+
+/// Hook: called once per claimed pool task, before the task closure runs.
+/// Panics (on the executing thread — a worker or the submitting thread)
+/// when the task's ordinal matches the plan.
+pub fn on_parallel_task() {
+    let n = PARALLEL_TASKS.fetch_add(1, Ordering::SeqCst);
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    let hit = plan_lock()
+        .as_ref()
+        .and_then(|p| p.panic_on_parallel_task)
+        .is_some_and(|at| at == n);
+    if hit {
+        panic!("injected fault: worker panic at pool task {n}");
+    }
+}
+
+/// Hook: called once per steady-engine run entry. `Err` models a
+/// serve-time setup/allocation failure; the caller degrades to the
+/// reference path.
+pub fn on_steady_run() -> Result<(), String> {
+    let n = STEADY_RUNS.fetch_add(1, Ordering::SeqCst);
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    let guard = plan_lock();
+    let Some(plan) = guard.as_ref() else { return Ok(()) };
+    if plan.fail_steady_run.is_some_and(|at| at == n) {
+        return Err(format!("injected fault: steady engine failure at run {n}"));
+    }
+    if plan.panic_steady_run.is_some_and(|at| at == n) {
+        drop(guard);
+        panic!("injected fault: steady engine panic at run {n}");
+    }
+    Ok(())
+}
+
+/// Hook: called after a decode node evaluates, with its freshly written
+/// output. May fail the node or corrupt the output with NaN, per plan.
+pub fn on_decode_node(name: &str, out: &mut [f32]) -> Result<(), String> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    let guard = plan_lock();
+    let Some(plan) = guard.as_ref() else { return Ok(()) };
+    if let Some((target, k)) = &plan.fail_decode_node {
+        if target == name {
+            let n = DECODE_NODE_HITS.fetch_add(1, Ordering::SeqCst) + 1;
+            if n == *k {
+                return Err(format!("injected fault: decode node '{name}' failed (hit {n})"));
+            }
+        }
+    }
+    if let Some((target, k)) = &plan.nan_decode_node {
+        if target == name {
+            let n = DECODE_NODE_HITS.fetch_add(1, Ordering::SeqCst) + 1;
+            if n == *k {
+                out.fill(f32::NAN);
+            }
+        }
+    }
+    if let Some((target, k)) = &plan.panic_decode_node {
+        if target == name {
+            let n = DECODE_NODE_HITS.fetch_add(1, Ordering::SeqCst) + 1;
+            if n == *k {
+                // Release the plan lock before unwinding so later hooks
+                // (and the clearing guard) never contend with a poisoned
+                // holder.
+                drop(guard);
+                panic!("injected fault: decode node '{name}' panicked (hit {n})");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Hook: called once per `DecodeSession::step` (not per prefill
+/// position). Stalls when the plan says so.
+pub fn on_decode_step() {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    let stall = plan_lock().as_ref().and_then(|p| p.stall_step_ms);
+    if let Some(ms) = stall {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The hooks are no-ops (and panic-free) with no plan installed, and
+    /// the guard clears the plan on drop. The panic/stall behaviors are
+    /// exercised end-to-end in `tests/robustness.rs` (its own process).
+    #[test]
+    fn hooks_are_inert_without_a_plan_and_guard_clears() {
+        clear();
+        on_parallel_task();
+        assert!(on_steady_run().is_ok());
+        let mut buf = [1.0f32; 4];
+        assert!(on_decode_node("any", &mut buf).is_ok());
+        assert_eq!(buf, [1.0f32; 4]);
+        on_decode_step();
+        {
+            let _g = install(FaultPlan {
+                nan_decode_node: Some(("x".into(), 1)),
+                ..Default::default()
+            });
+            let mut buf = [1.0f32; 2];
+            on_decode_node("x", &mut buf).unwrap();
+            assert!(buf.iter().all(|v| v.is_nan()), "first hit injects NaN");
+        }
+        // Guard dropped: inert again.
+        let mut buf = [1.0f32; 2];
+        on_decode_node("x", &mut buf).unwrap();
+        assert_eq!(buf, [1.0f32; 2]);
+    }
+
+    #[test]
+    fn ordinals_are_monotone() {
+        let a = parallel_tasks_so_far();
+        on_parallel_task();
+        assert!(parallel_tasks_so_far() > a);
+        let s = steady_runs_so_far();
+        let _ = on_steady_run();
+        assert!(steady_runs_so_far() > s);
+    }
+}

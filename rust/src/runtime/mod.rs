@@ -13,6 +13,8 @@
 
 use std::path::PathBuf;
 
+#[cfg(any(test, feature = "fault-injection"))]
+pub mod fault;
 pub mod pool;
 
 #[cfg(feature = "xla")]

@@ -22,7 +22,9 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+
+use crate::error::XgenError;
 
 /// Worker-thread count resolved once per process: `XGEN_THREADS` if set to
 /// a positive integer, else `std::thread::available_parallelism()`. Every
@@ -132,33 +134,57 @@ impl ThreadPool {
     /// inside another pool task, or there is nothing to parallelize —
     /// so it is always safe to call, never deadlocks, and performs no
     /// heap allocation.
+    ///
+    /// A panicking task no longer kills a worker or wedges the job: every
+    /// task runs under `catch_unwind`, the job drains fully, and the panic
+    /// is re-raised here on the submitting thread. Serving paths that must
+    /// survive use [`ThreadPool::try_parallel_for`] instead.
     pub fn parallel_for<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if self.run(tasks, &f) {
+            // Propagate like the `thread::scope` this pool replaced: the
+            // caller observes the failure, and the pool stays usable (the
+            // worker caught the panic and the job slot is cleared).
+            panic!("a pool task panicked (see worker output above)");
+        }
+    }
+
+    /// [`ThreadPool::parallel_for`] for callers that must outlive a bad
+    /// task: a task panic surfaces as [`XgenError::WorkerPanic`] instead
+    /// of re-panicking. Every task still runs (panicking ones are caught
+    /// individually), the pool stays usable, and the unfaulted path stays
+    /// allocation-free (`catch_unwind` costs nothing on success).
+    pub fn try_parallel_for<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) -> Result<(), XgenError> {
+        if self.run(tasks, &f) {
+            Err(XgenError::WorkerPanic {
+                detail: "a pool task panicked (caught; pool self-healed)".to_string(),
+            })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Shared body of the two entry points. Returns true when any task
+    /// panicked (the panic itself was caught on the executing thread).
+    fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) -> bool {
         if tasks == 0 {
-            return;
+            return false;
         }
         if tasks == 1 || self.workers == 0 || IN_POOL.with(|c| c.get()) {
-            for i in 0..tasks {
-                f(i);
-            }
-            return;
+            return run_inline(f, tasks);
         }
-        let fobj: &(dyn Fn(usize) + Sync) = &f;
         // SAFETY: erases the closure's lifetime (fat-pointer layout is
         // identical); see `JobFn` for the validity argument.
         let fptr = JobFn(unsafe {
-            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(fobj)
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
         });
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_state(&self.shared);
             if st.job.is_some() {
                 // Another thread owns the pool right now: run inline
                 // rather than queueing (keeps submission allocation-free
                 // and deadlock-free).
                 drop(st);
-                for i in 0..tasks {
-                    f(i);
-                }
-                return;
+                return run_inline(f, tasks);
             }
             st.job = Some(Job { f: fptr, tasks, next: 0, pending: tasks, panicked: false });
         }
@@ -169,26 +195,51 @@ impl ThreadPool {
         drain(&self.shared);
         IN_POOL.with(|c| c.set(false));
         // Wait for stragglers, then clear the slot for the next job.
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_state(&self.shared);
         while st.job.map(|j| j.pending > 0).unwrap_or(false) {
-            st = self.shared.done.wait(st).unwrap();
+            st = self.shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         let panicked = st.job.map(|j| j.panicked).unwrap_or(false);
         st.job = None;
-        drop(st);
-        if panicked {
-            // Propagate like the `thread::scope` this pool replaced: the
-            // caller observes the failure, and the pool stays usable (the
-            // worker caught the panic and the job slot is cleared).
-            panic!("a pool task panicked (see worker output above)");
+        panicked
+    }
+}
+
+/// The pool's locks are held only around counter bookkeeping, so a poisoned
+/// state mutex carries no torn invariants — recover the guard instead of
+/// propagating poison into every later submission.
+fn lock_state(shared: &Shared) -> MutexGuard<'_, State> {
+    shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Run one task on the current thread, catching its panic. Returns true on
+/// success. This is the single execution point for pooled *and* inline
+/// tasks, so the fault-injection hook fires identically on both paths.
+fn run_task(f: &(dyn Fn(usize) + Sync), i: usize) -> bool {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        #[cfg(feature = "fault-injection")]
+        crate::runtime::fault::on_parallel_task();
+        f(i);
+    }))
+    .is_ok()
+}
+
+/// Serial fallback: run every task (a panicking one is caught and the rest
+/// still run, matching pooled semantics). Returns true when any panicked.
+fn run_inline(f: &(dyn Fn(usize) + Sync), tasks: usize) -> bool {
+    let mut panicked = false;
+    for i in 0..tasks {
+        if !run_task(f, i) {
+            panicked = true;
         }
     }
+    panicked
 }
 
 /// Claim and run tasks from the current job until none are unclaimed.
 /// Must be called with the state lock **not** held.
 fn drain(shared: &Shared) {
-    let mut st = shared.state.lock().unwrap();
+    let mut st = lock_state(shared);
     loop {
         let Some(job) = st.job.as_mut() else { return };
         if job.next >= job.tasks {
@@ -199,14 +250,12 @@ fn drain(shared: &Shared) {
         let f = job.f;
         drop(st);
         // SAFETY: pending > 0 keeps the submitter (and thus the closure)
-        // alive until after we decrement below. The catch_unwind keeps a
-        // panicking task from wedging the job (pending would never reach
-        // 0) or killing a persistent worker; the submitter re-raises.
-        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            (unsafe { &*f.0 })(i);
-        }))
-        .is_ok();
-        st = shared.state.lock().unwrap();
+        // alive until after we decrement below. The catch_unwind inside
+        // `run_task` keeps a panicking task from wedging the job (pending
+        // would never reach 0) or killing a persistent worker; the
+        // submitter re-raises (or returns `WorkerPanic`).
+        let ok = run_task(unsafe { &*f.0 }, i);
+        st = lock_state(shared);
         let job = st.job.as_mut().expect("job cleared while tasks pending");
         job.pending -= 1;
         if !ok {
@@ -221,10 +270,23 @@ fn drain(shared: &Shared) {
 fn worker_loop(shared: &Shared) {
     IN_POOL.with(|c| c.set(true));
     loop {
+        // Defense in depth: per-task panics are caught in `run_task`, so
+        // `worker_body` only unwinds if the pool's own bookkeeping breaks.
+        // Recover the worker in place rather than losing a lane for the
+        // rest of the process, and count it so tests/ops can observe.
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| worker_body(shared))).is_err()
         {
-            let mut st = shared.state.lock().unwrap();
+            WORKER_RESPAWNS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn worker_body(shared: &Shared) {
+    loop {
+        {
+            let mut st = lock_state(shared);
             while !st.job.map(|j| j.next < j.tasks).unwrap_or(false) {
-                st = shared.work.wait(st).unwrap();
+                st = shared.work.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
         }
         drain(shared);
@@ -278,6 +340,11 @@ impl SharedSlice {
 /// steady-state acceptance tests use it to assert GEMM/FKW bands really
 /// dispatch on the pool.
 pub static PARALLEL_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// How many times a pool worker unwound out of its dispatch loop and was
+/// recovered in place (see `worker_loop`). Zero in a healthy process —
+/// per-task panics are caught one level down and do **not** count here.
+pub static WORKER_RESPAWNS: AtomicUsize = AtomicUsize::new(0);
 
 #[cfg(test)]
 mod tests {
@@ -355,6 +422,68 @@ mod tests {
         for (i, v) in buf.iter().enumerate() {
             assert_eq!(*v, i as f32);
         }
+    }
+
+    #[test]
+    fn try_parallel_for_reports_worker_panic_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let done = AtomicUsize::new(0);
+        let err = pool
+            .try_parallel_for(16, |i| {
+                if i == 7 {
+                    panic!("task 7 exploded");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "WorkerPanic");
+        // Every non-panicking task still ran — one bad task does not
+        // abort its siblings.
+        assert_eq!(done.load(Ordering::Relaxed), 15);
+        // The pool is immediately reusable for clean work.
+        let sum = AtomicUsize::new(0);
+        pool.try_parallel_for(32, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(sum.load(Ordering::Relaxed), 31 * 32 / 2);
+    }
+
+    #[test]
+    fn parallel_for_repanics_but_pool_stays_usable() {
+        let pool = ThreadPool::new(4);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "parallel_for keeps panic semantics");
+        let n = AtomicUsize::new(0);
+        pool.parallel_for(8, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn inline_fallbacks_report_panics_too() {
+        // Single-participant pool (workers == 0) takes the inline path;
+        // a nested submission takes it as well. Both must report the
+        // panic instead of unwinding through the caller.
+        let pool = ThreadPool::new(1);
+        assert!(pool.try_parallel_for(4, |i| assert!(i != 2, "inline boom")).is_err());
+        let outer = ThreadPool::new(4);
+        let nested_err = AtomicUsize::new(0);
+        outer
+            .try_parallel_for(4, |_| {
+                if global().try_parallel_for(2, |j| assert!(j != 1)).is_err() {
+                    nested_err.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .unwrap();
+        assert_eq!(nested_err.load(Ordering::Relaxed), 4);
     }
 
     #[test]

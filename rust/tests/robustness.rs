@@ -1,0 +1,538 @@
+//! ISSUE-6 acceptance: the fault-tolerant serving runtime.
+//!
+//! Always-on tests pin the typed-error surface (`XgenError` through
+//! `infer`/`infer_flat`/`DecodeSession` and both servers), bounded-queue
+//! load shedding, zero-deadline rejection, drain-on-drop, and the
+//! error-then-continue oracle (a failed `step` leaves the session's K/V
+//! caches at their pre-call lengths, so continuing after the error is
+//! bitwise-identical to a fresh session that never erred).
+//!
+//! The `faults` module (compiled under `--features fault-injection`)
+//! drives every recovery path deterministically through
+//! `xgen::runtime::fault`: pool-task panics, steady-engine failures and
+//! panics (reference-path fallback + arena rebuild), decode-node
+//! failures/NaN/panics (typed replies + session rebuild), and
+//! stall-driven deadline expiry (partial generations).
+//!
+//! The fault plan is process-global, so every test here — fault-injecting
+//! or not — runs behind one file-local mutex: a concurrently running
+//! inference would otherwise consume an injected ordinal meant for the
+//! test that installed the plan.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use xgen::api::{CompiledModel, Compiler};
+use xgen::coordinator::{DecodeConfig, DecodeServer, ServeConfig, Server};
+use xgen::error::XgenError;
+use xgen::tensor::Tensor;
+
+/// Serialize every test in this binary (see module docs).
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn cnn(batch: usize) -> CompiledModel {
+    Compiler::for_model("demo-cnn", batch)
+        .unwrap()
+        .random_weights(11)
+        .compile()
+        .unwrap()
+}
+
+fn causal() -> CompiledModel {
+    Compiler::for_model("demo-transformer-causal", 1)
+        .unwrap()
+        .random_weights(31)
+        .compile()
+        .unwrap()
+}
+
+/// The typed error inside an anyhow error, asserted present.
+fn typed(e: &anyhow::Error) -> &XgenError {
+    XgenError::of(e).unwrap_or_else(|| panic!("expected a typed XgenError, got: {e:#}"))
+}
+
+#[test]
+fn every_variant_has_a_stable_code_and_message() {
+    let _g = serial();
+    let all = [
+        XgenError::ShapeMismatch { expected: "a".into(), got: "b".into() },
+        XgenError::VocabOutOfRange { token: 300, vocab: 256 },
+        XgenError::SeqOverflow { at: 0, want: 9, max_seq: 4 },
+        XgenError::Overloaded { depth: 3, capacity: 2 },
+        XgenError::DeadlineExceeded { elapsed_ms: 17 },
+        XgenError::Cancelled,
+        XgenError::WorkerPanic { detail: "boom".into() },
+        XgenError::EngineFallback { detail: "both".into() },
+        XgenError::NonFinite { at: "logits".into() },
+        XgenError::ServerGone,
+        XgenError::Internal { detail: "other".into() },
+    ];
+    let codes: std::collections::BTreeSet<&str> = all.iter().map(|e| e.code()).collect();
+    assert_eq!(codes.len(), all.len(), "codes must be distinct per variant");
+    for e in &all {
+        assert!(!e.to_string().is_empty());
+        // Round-trip through anyhow: the typed value survives intact.
+        let any: anyhow::Error = e.clone().into();
+        assert_eq!(XgenError::of(&any), Some(e));
+        assert_eq!(&XgenError::classify(&any), e);
+    }
+    // Untyped errors classify as Internal, keeping the full context chain.
+    let plain = anyhow::anyhow!("inner").context("outer");
+    let c = XgenError::classify(&plain);
+    assert_eq!(c.code(), "Internal");
+    assert!(c.to_string().contains("outer") && c.to_string().contains("inner"));
+}
+
+#[test]
+fn infer_validates_inputs_before_executing() {
+    let _g = serial();
+    let m = cnn(1);
+    let good = m.sample_inputs(7);
+    assert!(m.infer(&good).is_ok());
+
+    // Wrong shape.
+    let e = m.infer(&[Tensor::zeros(&[1, 3, 5, 5])]).unwrap_err();
+    assert_eq!(typed(&e).code(), "ShapeMismatch");
+    // Missing input.
+    let e = m.infer(&[]).unwrap_err();
+    assert_eq!(typed(&e).code(), "ShapeMismatch");
+    // Extra input.
+    let two = [good[0].clone(), good[0].clone()];
+    let e = m.infer(&two).unwrap_err();
+    assert_eq!(typed(&e).code(), "ShapeMismatch");
+    // Flat-input length mismatch (the serving engine's entry point).
+    let e = m.infer_flat(&[0.0; 3]).unwrap_err();
+    assert_eq!(typed(&e).code(), "ShapeMismatch");
+    // A rejected request leaves the engine fully usable.
+    assert!(m.infer(&good).is_ok());
+    assert_eq!(m.runtime_stats().engine_fallbacks, 0);
+}
+
+#[test]
+fn decode_session_validates_prompts_and_tokens() {
+    let _g = serial();
+    let m = causal();
+    let mut s = m.decode_session(8).unwrap();
+    // Over-long prompt: typed SeqOverflow, nothing consumed.
+    let e = s.prefill(&(0..40).collect::<Vec<u32>>()).unwrap_err();
+    assert!(matches!(typed(&e), XgenError::SeqOverflow { at: 0, want: 40, max_seq: 8 }));
+    assert!(e.to_string().contains("exceeds max_seq"));
+    assert_eq!(s.len(), 0);
+    // Out-of-vocab token (vocab is 256): typed VocabOutOfRange.
+    s.prefill(&[5, 6, 7]).unwrap();
+    let e = s.step(999).unwrap_err();
+    assert!(matches!(typed(&e), XgenError::VocabOutOfRange { token: 999, vocab: 256 }));
+    // Full sequence: the other SeqOverflow spelling, and reset() recovers.
+    let mut s = m.decode_session(2).unwrap();
+    s.prefill(&[5, 6]).unwrap();
+    let e = s.step(1).unwrap_err();
+    assert_eq!(typed(&e).code(), "SeqOverflow");
+    assert!(e.to_string().contains("full"), "got: {e}");
+    s.reset();
+    assert!(s.prefill(&[5]).is_ok());
+}
+
+/// The error-then-continue oracle: a failed `step` leaves the session at
+/// its pre-call state (length AND K/V cache contents), so decoding on
+/// after the error is bitwise-identical to a session that never erred.
+#[test]
+fn decode_session_survives_a_failed_step_bitwise() {
+    let _g = serial();
+    let m = causal();
+    let mut faulted = m.decode_session(8).unwrap();
+    faulted.prefill(&[5, 6, 7]).unwrap();
+    assert!(faulted.step(9999).is_err()); // out-of-vocab: rejected
+    assert_eq!(faulted.len(), 3, "failed step must not advance the session");
+    let after_err: Vec<f32> = faulted.step(2).unwrap().to_vec();
+    let continued = faulted.generate_continue(3).unwrap();
+
+    let mut clean = m.decode_session(8).unwrap();
+    clean.prefill(&[5, 6, 7]).unwrap();
+    let clean_logits: Vec<f32> = clean.step(2).unwrap().to_vec();
+    let clean_tokens = clean.generate_continue(3).unwrap();
+
+    assert_eq!(after_err, clean_logits, "post-error logits must be bitwise-identical");
+    assert_eq!(continued, clean_tokens);
+}
+
+#[test]
+fn zero_capacity_queues_shed_with_overloaded() {
+    let _g = serial();
+    // Batch server: cap 0 sheds every submission, typed, via both entry
+    // points; stats count the sheds.
+    let server = Server::start_compiled_cfg(
+        cnn(1),
+        cnn(4),
+        ServeConfig { queue_cap: 0, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let per = 3 * 24 * 24;
+    let e = server.try_submit(vec![0.0; per]).unwrap_err();
+    assert_eq!(e.code(), "Overloaded");
+    let e = server.infer(vec![0.0; per]).unwrap_err();
+    assert_eq!(e.code(), "Overloaded");
+    assert_eq!(server.stats().shed, 2);
+    drop(server);
+
+    // Decode server: same contract on the streaming path.
+    let server = DecodeServer::start_cfg(
+        causal(),
+        16,
+        DecodeConfig { queue_cap: 0, ..DecodeConfig::default() },
+    )
+    .unwrap();
+    let e = server.generate(vec![5, 6, 7], 2).unwrap_err();
+    assert_eq!(e.code(), "Overloaded");
+    let st = server.stats();
+    assert_eq!(st.shed, 1);
+    assert_eq!(st.requests, 0, "shed requests never reach the session");
+}
+
+#[test]
+fn zero_deadline_rejects_before_execution() {
+    let _g = serial();
+    let server = Server::start_compiled_cfg(
+        cnn(1),
+        cnn(4),
+        ServeConfig { default_deadline: Some(Duration::ZERO), ..ServeConfig::default() },
+    )
+    .unwrap();
+    let per = 3 * 24 * 24;
+    let e = server.infer(vec![0.0; per]).unwrap_err();
+    assert_eq!(e.code(), "DeadlineExceeded");
+    // A per-request override beats the server default: the same server
+    // still serves relaxed requests.
+    let rx = server.submit_with_deadline(vec![0.0; per], Some(Duration::from_secs(60)));
+    assert!(rx.recv().unwrap().is_ok());
+    let st = server.stats();
+    assert_eq!(st.deadline_exceeded, 1);
+    assert_eq!(st.completed, 1);
+    drop(server);
+
+    let server = DecodeServer::start_cfg(
+        causal(),
+        16,
+        DecodeConfig { default_deadline: Some(Duration::ZERO), ..DecodeConfig::default() },
+    )
+    .unwrap();
+    let err = server.generate(vec![5, 6, 7], 2).unwrap_err();
+    assert_eq!(err.code(), "DeadlineExceeded");
+    // Override: a generous explicit deadline completes normally.
+    let (toks, err) = server.generate_with_deadline(vec![5, 6, 7], 2, Duration::from_secs(60));
+    assert_eq!(err, None);
+    assert_eq!(toks.len(), 2);
+    let st = server.stats();
+    assert_eq!(st.deadline_exceeded, 1);
+    assert_eq!(st.requests, 1, "the pre-prefill shed never reaches the session");
+}
+
+/// Dropping a response receiver must neither panic nor kill the server
+/// (ISSUE-6 satellite: the reply-channel audit's regression test).
+#[test]
+fn dropped_receiver_does_not_kill_the_server() {
+    let _g = serial();
+    let server =
+        Server::start_compiled(cnn(1), cnn(4), Duration::from_millis(1)).unwrap();
+    let per = 3 * 24 * 24;
+    drop(server.submit(vec![0.0; per]));
+    // Still serving after the hang-up.
+    for _ in 0..3 {
+        assert!(server.infer(vec![0.0; per]).is_ok());
+    }
+    let st = server.stats();
+    // The dropped request either completed before the drop landed or was
+    // counted as a cancellation at reply time — never an error.
+    assert_eq!(st.completed + st.cancelled, 4);
+    assert_eq!(st.errors, 0);
+}
+
+/// Dropping the server closes the queue but still answers what is queued.
+#[test]
+fn server_drop_drains_already_submitted_requests() {
+    let _g = serial();
+    let server =
+        Server::start_compiled(cnn(1), cnn(4), Duration::from_millis(1)).unwrap();
+    let per = 3 * 24 * 24;
+    let rxs: Vec<_> = (0..3).map(|_| server.submit(vec![0.5; per])).collect();
+    drop(server); // graceful drain: joins after the queue empties
+    for rx in rxs {
+        assert!(rx.recv().expect("drained, not dropped").is_ok());
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+mod faults {
+    use super::*;
+    use xgen::runtime::fault::{self, FaultPlan};
+    use xgen::runtime::pool::ThreadPool;
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    /// A pool-task panic surfaces as a typed WorkerPanic and the pool
+    /// survives to run the next job.
+    #[test]
+    fn injected_pool_task_panic_is_typed_and_pool_survives() {
+        let _g = serial();
+        let pool = ThreadPool::new(2);
+        let _f = fault::install(FaultPlan {
+            panic_on_parallel_task: Some(fault::parallel_tasks_so_far() + 3),
+            ..Default::default()
+        });
+        let err = pool.try_parallel_for(8, |_| {}).unwrap_err();
+        assert_eq!(err.code(), "WorkerPanic");
+        fault::clear();
+        // Same pool, next job: all tasks run.
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        pool.try_parallel_for(8, |_| {
+            hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(hits.load(std::sync::atomic::Ordering::Relaxed), 8);
+    }
+
+    /// A steady-engine *failure* at serve time degrades to the reference
+    /// path: the caller still gets a (near-identical) answer, the
+    /// fallback is counted, and the steady engine comes back untouched.
+    #[test]
+    fn steady_failure_degrades_to_reference_and_recovers() {
+        let _g = serial();
+        let m = cnn(1);
+        let xs = m.sample_inputs(7);
+        let warm = m.infer(&xs).unwrap(); // steady path, unfaulted
+        let guard = fault::install(FaultPlan {
+            fail_steady_run: Some(fault::steady_runs_so_far()),
+            ..Default::default()
+        });
+        let faulted = m.infer(&xs).unwrap(); // served via the eval_op path
+        drop(guard);
+        assert!(
+            max_abs_diff(warm[0].data(), faulted[0].data()) < 1e-4,
+            "fallback answer must match the steady answer numerically"
+        );
+        let st = m.runtime_stats();
+        assert_eq!(st.engine_fallbacks, 1);
+        assert_eq!(st.worker_panics, 0);
+        // Fault cleared: the steady engine serves again, bitwise.
+        let after = m.infer(&xs).unwrap();
+        assert_eq!(warm[0].data(), after[0].data());
+        assert_eq!(m.runtime_stats().engine_fallbacks, 1);
+    }
+
+    /// A *panic* inside the steady engine is caught at the api layer, the
+    /// torn arena is rebuilt, and the request is served via the fallback.
+    #[test]
+    fn steady_panic_is_isolated_and_arena_rebuilt() {
+        let _g = serial();
+        let m = cnn(1);
+        let xs = m.sample_inputs(7);
+        let warm = m.infer(&xs).unwrap();
+        let guard = fault::install(FaultPlan {
+            panic_steady_run: Some(fault::steady_runs_so_far()),
+            ..Default::default()
+        });
+        let faulted = m.infer(&xs).unwrap();
+        drop(guard);
+        assert!(max_abs_diff(warm[0].data(), faulted[0].data()) < 1e-4);
+        let st = m.runtime_stats();
+        assert_eq!(st.worker_panics, 1, "the caught panic is counted");
+        assert_eq!(st.engine_fallbacks, 1);
+        // The rebuilt arena serves the steady path again, bitwise.
+        let after = m.infer(&xs).unwrap();
+        assert_eq!(warm[0].data(), after[0].data());
+        assert_eq!(m.runtime_stats().worker_panics, 1);
+    }
+
+    /// Name of the logits node of the causal demo model — evaluated once
+    /// per decoded position, so fault ordinals aim at exact positions:
+    /// a 3-token prompt burns hits 1..=3 in prefill; hit 4 is step one.
+    fn logits_node_name() -> String {
+        let m = causal();
+        let g = m.graph();
+        g.node(g.outputs[0]).name.clone()
+    }
+
+    /// The full fault matrix for the decode server: request A is faulted
+    /// at a chosen step and gets a typed error (after its partial
+    /// stream); request B afterwards is bitwise-identical to an unfaulted
+    /// run — proof that A's fault did not leak into shared session state.
+    #[test]
+    fn decode_node_failure_is_typed_and_isolated() {
+        let _g = serial();
+        let reference = causal().generate(&[5, 6, 7], 4).unwrap();
+        let node = logits_node_name();
+        let server = DecodeServer::start(causal(), 16).unwrap();
+        assert_eq!(server.generate(vec![5, 6, 7], 4).unwrap(), reference);
+
+        // Fault request A at its first step (prefill burns hits 1..=3).
+        let guard = fault::install(FaultPlan {
+            fail_decode_node: Some((node, 4)),
+            ..Default::default()
+        });
+        let rx = server.generate_stream(vec![5, 6, 7], 4);
+        let mut tokens = Vec::new();
+        let mut err = None;
+        for item in rx {
+            match item {
+                Ok(t) => tokens.push(t),
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(guard);
+        assert_eq!(tokens, &reference[..1], "one token streams before the fault");
+        let err = err.expect("the fault ends the stream with an error");
+        assert!(err.to_string().contains("injected fault"), "got: {err}");
+
+        // Request B: bitwise-identical to the unfaulted reference.
+        assert_eq!(server.generate(vec![5, 6, 7], 4).unwrap(), reference);
+        let st = server.stats();
+        assert_eq!(st.errors, 1);
+        assert_eq!(st.worker_panics, 0);
+    }
+
+    /// NaN corruption at the logits node is caught by the non-finite
+    /// guard — typed NonFinite, never NaN fed back into the argmax.
+    #[test]
+    fn decode_nan_is_caught_as_nonfinite() {
+        let _g = serial();
+        let reference = causal().generate(&[5, 6, 7], 4).unwrap();
+        let node = logits_node_name();
+        let server = DecodeServer::start(causal(), 16).unwrap();
+        // Hit 3 = the last prefill position: corrupts the prefill logits.
+        let guard = fault::install(FaultPlan {
+            nan_decode_node: Some((node, 3)),
+            ..Default::default()
+        });
+        let err = server.generate(vec![5, 6, 7], 4).unwrap_err();
+        drop(guard);
+        assert_eq!(err.code(), "NonFinite");
+        assert!(err.to_string().contains("prefill"), "got: {err}");
+        // The next request is clean and bitwise-identical.
+        assert_eq!(server.generate(vec![5, 6, 7], 4).unwrap(), reference);
+    }
+
+    /// A panic mid-step: request A gets WorkerPanic after its partial
+    /// stream, the session is rebuilt, and request B is bitwise-identical
+    /// to the unfaulted reference.
+    #[test]
+    fn decode_step_panic_rebuilds_the_session() {
+        let _g = serial();
+        let reference = causal().generate(&[5, 6, 7], 4).unwrap();
+        let node = logits_node_name();
+        let server = DecodeServer::start(causal(), 16).unwrap();
+        let guard = fault::install(FaultPlan {
+            panic_decode_node: Some((node, 4)), // first step after prefill
+            ..Default::default()
+        });
+        let rx = server.generate_stream(vec![5, 6, 7], 4);
+        let mut tokens = Vec::new();
+        let mut err = None;
+        for item in rx {
+            match item {
+                Ok(t) => tokens.push(t),
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(guard);
+        assert_eq!(tokens, &reference[..1]);
+        assert_eq!(err.expect("stream ends in an error").code(), "WorkerPanic");
+        assert_eq!(server.generate(vec![5, 6, 7], 4).unwrap(), reference);
+        let st = server.stats();
+        assert_eq!(st.worker_panics, 1);
+        assert_eq!(st.errors, 1);
+    }
+
+    /// Deadline + stall: a 400 ms deadline over 500 ms steps yields
+    /// exactly one token, then DeadlineExceeded — the partial stands.
+    #[test]
+    fn stalled_steps_hit_the_deadline_with_a_partial_generation() {
+        let _g = serial();
+        let reference = causal().generate(&[5, 6, 7], 4).unwrap();
+        let server = DecodeServer::start_cfg(
+            causal(),
+            16,
+            DecodeConfig { default_deadline: Some(Duration::from_millis(400)), ..DecodeConfig::default() },
+        )
+        .unwrap();
+        // Unfaulted: well inside the deadline.
+        assert_eq!(server.generate(vec![5, 6, 7], 4).unwrap(), reference);
+        let guard = fault::install(FaultPlan {
+            stall_step_ms: Some(500),
+            ..Default::default()
+        });
+        let (tokens, err) =
+            server.generate_with_deadline(vec![5, 6, 7], 4, Duration::from_millis(400));
+        drop(guard);
+        assert_eq!(tokens, &reference[..1], "exactly one token beats the deadline");
+        assert_eq!(err.expect("deadline ends the stream").code(), "DeadlineExceeded");
+        let st = server.stats();
+        assert_eq!(st.deadline_exceeded, 1);
+        assert_eq!(st.tokens, 4 + 1, "partial tokens are accounted");
+        // Stall cleared: full generations resume.
+        assert_eq!(server.generate(vec![5, 6, 7], 4).unwrap(), reference);
+    }
+
+    /// The error-then-continue oracle under a *mid-graph* failure: the
+    /// failed `step` may have staged early nodes (K/V appends for the
+    /// failed position happen before the fault node evaluates), yet
+    /// continuing on the same session is bitwise-identical to a fresh
+    /// session — stale rows are rewritten before they are ever read.
+    #[test]
+    fn mid_graph_step_failure_keeps_the_session_consistent() {
+        let _g = serial();
+        let m = causal();
+        let node = logits_node_name();
+        let mut faulted = m.decode_session(8).unwrap();
+        faulted.prefill(&[5, 6, 7]).unwrap();
+        // Installed after prefill, so the step below is the node's first
+        // hit under this plan.
+        let guard = fault::install(FaultPlan {
+            fail_decode_node: Some((node, 1)),
+            ..Default::default()
+        });
+        let e = faulted.step(2).unwrap_err();
+        drop(guard);
+        assert!(e.to_string().contains("injected fault"), "got: {e}");
+        assert_eq!(faulted.len(), 3, "a failed step must not advance the session");
+        let after_err: Vec<f32> = faulted.step(2).unwrap().to_vec();
+
+        let mut clean = m.decode_session(8).unwrap();
+        clean.prefill(&[5, 6, 7]).unwrap();
+        let clean_logits: Vec<f32> = clean.step(2).unwrap().to_vec();
+        assert_eq!(after_err, clean_logits, "continue-after-error must be bitwise-clean");
+    }
+
+    /// A client hanging up mid-stream is counted as a cancellation and
+    /// never disturbs the next request.
+    #[test]
+    fn mid_stream_hangup_counts_as_cancellation() {
+        let _g = serial();
+        let reference = causal().generate(&[5, 6, 7], 4).unwrap();
+        let server = DecodeServer::start(causal(), 16).unwrap();
+        // Slow the steps so the hang-up lands before the next send.
+        let guard = fault::install(FaultPlan {
+            stall_step_ms: Some(150),
+            ..Default::default()
+        });
+        let rx = server.generate_stream(vec![5, 6, 7], 6);
+        let first = rx.recv().unwrap().unwrap();
+        assert_eq!(first, reference[0]);
+        drop(rx); // hang up while the server sleeps inside step()
+        drop(guard);
+        // The next request is served normally; the hang-up was counted.
+        assert_eq!(server.generate(vec![5, 6, 7], 4).unwrap(), reference);
+        let st = server.stats();
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.errors, 0);
+    }
+}
