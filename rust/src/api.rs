@@ -61,6 +61,7 @@ use crate::pruning::{prune_graph, PruneReport, PruneScheme};
 use crate::rewrite::{rewrite, RewriteConfig, RewriteStats};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+use crate::verify::{self, VerifyReport};
 
 /// How hard the graph-level compiler works.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -140,6 +141,12 @@ pub struct CompileReport {
     /// Resolved worker-pool size the steady-state engine runs with
     /// (`XGEN_THREADS`, read once per process).
     pub pool_threads: usize,
+    /// What the static verifier proved (ISSUE-7): present when the
+    /// session compiled with `.verify(true)` — the default under
+    /// `debug_assertions` — and every pass checked out clean. A failed
+    /// check aborts `compile()` with a typed
+    /// [`XgenError::InvalidGraph`]/[`XgenError::InvalidPlan`] instead.
+    pub verify: Option<VerifyReport>,
     pub compile_ms: f64,
 }
 
@@ -196,6 +203,9 @@ impl CompileReport {
             self.workspace_bytes as f64 / 1024.0,
             self.pool_threads
         );
+        if let Some(v) = &self.verify {
+            s += &format!("  verify: {}\n", v.summary());
+        }
         s
     }
 }
@@ -213,6 +223,7 @@ pub struct Compiler {
     prepack: bool,
     workspace: bool,
     gemm: GemmConfig,
+    verify: bool,
 }
 
 impl Compiler {
@@ -230,6 +241,9 @@ impl Compiler {
             prepack: true,
             workspace: true,
             gemm: GemmConfig::default(),
+            // Every debug build verifies every compile; release opts in
+            // via `.verify(true)` / `xgen compile --verify`.
+            verify: cfg!(debug_assertions),
         }
     }
 
@@ -332,6 +346,19 @@ impl Compiler {
         self
     }
 
+    /// Run the [`crate::verify`] static checkers after every pipeline
+    /// stage (rewrite → prune → fuse → plan): deep IR validation, the
+    /// fusion ordering invariant, the memory-plan liveness replay, and
+    /// the arena-region layout. A violation aborts the compile with a
+    /// typed [`XgenError::InvalidGraph`] / [`XgenError::InvalidPlan`]
+    /// naming the pass and the offending node/slot/region. Default: on
+    /// under `debug_assertions`, off in release builds (the CLI's
+    /// `compile --verify` turns it on there).
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
     /// Run the pipeline: rewrite → prune → fuse → plan (+ FKW encode).
     pub fn compile(mut self) -> Result<CompiledModel> {
         let t0 = Instant::now();
@@ -345,12 +372,25 @@ impl Compiler {
                 ops_after: ops_before,
             }
         };
+        // ISSUE-7: the static verifier runs between every pair of passes,
+        // so a violation is blamed on the pass that introduced it — not
+        // discovered numerically three stages later. Each hook aborts the
+        // compile with a typed error naming pass + node/slot/region.
+        let mut verified_passes: Vec<String> = Vec::new();
+        if self.verify {
+            verify::check_graph(&self.graph, self.weights.as_ref(), "rewrite")?;
+            verified_passes.push("rewrite".to_string());
+        }
         let prune_report = match (&mut self.weights, &self.scheme) {
             (Some(ws), s) if !matches!(s, PruneScheme::None) => {
                 Some(prune_graph(&self.graph, ws, s))
             }
             _ => None,
         };
+        if self.verify {
+            verify::check_graph(&self.graph, self.weights.as_ref(), "prune")?;
+            verified_passes.push("prune".to_string());
+        }
         let plan = match self.opt {
             OptLevel::O0 | OptLevel::O1 => no_fusion(&self.graph),
             OptLevel::O2 => fuse(&self.graph, &FusionConfig::default()),
@@ -359,6 +399,11 @@ impl Compiler {
                 &FusionConfig { profile_threshold_bytes: 4 * 1024, max_group_size: 32 },
             ),
         };
+        if self.verify {
+            verify::check_graph(&self.graph, self.weights.as_ref(), "fuse")?;
+            verify::check_fusion(&self.graph, &plan, "fuse")?;
+            verified_passes.push("fuse".to_string());
+        }
         // Cached at compile time — estimate() no longer rebuilds the
         // density map on every call.
         let density = scheme_density_map(&self.graph, &self.scheme);
@@ -404,6 +449,25 @@ impl Compiler {
         } else {
             None
         };
+        // The plan-stage checks need the final ExecState (flattened
+        // order, materialization mask, memory plan, arena spec); with
+        // the planner off there is no plan to verify, so the report
+        // covers the graph-stage passes only.
+        let verify_report = if self.verify {
+            let mut rep = match &state {
+                Some(st) => {
+                    verify::check_compiled(&self.graph, self.weights.as_ref(), &plan, st, "plan")?
+                }
+                None => VerifyReport { nodes: self.graph.nodes.len(), ..Default::default() },
+            };
+            if state.is_some() {
+                verified_passes.push("plan".to_string());
+            }
+            rep.passes = verified_passes;
+            Some(rep)
+        } else {
+            None
+        };
         // The steady-state arena: allocated once here, borrowed by every
         // infer. Sized by the planner's extended liveness pass.
         let workspace = match (&state, self.workspace) {
@@ -443,6 +507,7 @@ impl Compiler {
             workspace_enabled: workspace.is_some(),
             workspace_bytes,
             pool_threads: self.gemm.resolved_threads(),
+            verify: verify_report,
             compile_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
         Ok(CompiledModel {

@@ -59,6 +59,15 @@ pub enum XgenError {
     NonFinite { at: String },
     /// The server thread is gone (shut down or crashed at startup).
     ServerGone,
+    /// A structural graph invariant failed — topological order, payload
+    /// consistency, const-store sync or the fusion materialization
+    /// invariant. `pass` names the pipeline stage that produced the
+    /// offending graph ("builder" when it never entered the pipeline).
+    InvalidGraph { pass: String, detail: String },
+    /// A memory-plan invariant failed — two simultaneously-live values
+    /// share a slot, a slot is under-sized for one of its users, or an
+    /// arena region overlaps/overflows. `pass` names the checker stage.
+    InvalidPlan { pass: String, detail: String },
     /// Anything else: an internal invariant or a wrapped lower-level
     /// error that has no dedicated variant.
     Internal { detail: String },
@@ -79,7 +88,26 @@ impl XgenError {
             XgenError::EngineFallback { .. } => "EngineFallback",
             XgenError::NonFinite { .. } => "NonFinite",
             XgenError::ServerGone => "ServerGone",
+            XgenError::InvalidGraph { .. } => "InvalidGraph",
+            XgenError::InvalidPlan { .. } => "InvalidPlan",
             XgenError::Internal { .. } => "Internal",
+        }
+    }
+
+    /// Re-label a verifier error with the pipeline stage it fired in.
+    /// `Graph::validate` reports against a generic "graph" pass because it
+    /// cannot know who mutated the graph; the pipeline verifier calls this
+    /// so a failure reads `invalid graph after pass 'fuse': …`. Non-verifier
+    /// errors pass through unchanged.
+    pub fn with_pass(self, pass: &str) -> XgenError {
+        match self {
+            XgenError::InvalidGraph { detail, .. } => {
+                XgenError::InvalidGraph { pass: pass.to_string(), detail }
+            }
+            XgenError::InvalidPlan { detail, .. } => {
+                XgenError::InvalidPlan { pass: pass.to_string(), detail }
+            }
+            other => other,
         }
     }
 
@@ -141,6 +169,12 @@ impl fmt::Display for XgenError {
                 write!(f, "non-finite values detected at {at}")
             }
             XgenError::ServerGone => write!(f, "server shut down"),
+            XgenError::InvalidGraph { pass, detail } => {
+                write!(f, "invalid graph after pass '{pass}': {detail}")
+            }
+            XgenError::InvalidPlan { pass, detail } => {
+                write!(f, "invalid memory plan after pass '{pass}': {detail}")
+            }
             XgenError::Internal { detail } => write!(f, "{detail}"),
         }
     }
@@ -173,6 +207,19 @@ mod tests {
         assert!(full.to_string().contains("full"));
         let long = XgenError::SeqOverflow { at: 0, want: 9, max_seq: 4 };
         assert!(long.to_string().contains("exceeds max_seq"));
+    }
+
+    #[test]
+    fn verifier_errors_carry_the_pass() {
+        let e = XgenError::InvalidGraph { pass: "graph".into(), detail: "cycle".into() };
+        assert_eq!(e.code(), "InvalidGraph");
+        let e = e.with_pass("fuse");
+        assert!(e.to_string().contains("after pass 'fuse'"));
+        let p = XgenError::InvalidPlan { pass: "plan".into(), detail: "alias".into() };
+        assert_eq!(p.code(), "InvalidPlan");
+        assert!(p.to_string().contains("invalid memory plan"));
+        // Non-verifier variants are untouched by with_pass.
+        assert_eq!(XgenError::Cancelled.with_pass("fuse"), XgenError::Cancelled);
     }
 
     #[test]

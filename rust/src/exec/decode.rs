@@ -267,6 +267,12 @@ impl<'m> DecodeSession<'m> {
     /// `max_seq` outside `1..=S`.
     pub fn new(g: &'m Graph, ws: &'m WeightStore, max_seq: usize) -> Result<DecodeSession<'m>> {
         let nn = g.nodes.len();
+        // The decode planner trusts the graph invariants the IR verifier
+        // proves (topological order, shape consistency, weight backing);
+        // check them up front in debug builds so a corrupted graph fails
+        // with a named pass instead of a mid-plan index panic.
+        #[cfg(debug_assertions)]
+        crate::verify::check_graph(g, Some(ws), "decode")?;
         // --- the single token input ------------------------------------
         let inputs: Vec<NodeId> = g
             .nodes

@@ -875,6 +875,27 @@ impl ExecState {
         &self.mplan.stats
     }
 
+    /// The flattened execution order (groups in execution order, members
+    /// in group order) — exactly what the memory plan was computed
+    /// against. [`crate::verify::check_plan`] replays liveness over it.
+    pub fn execution_order(&self, plan: &FusionPlan) -> Vec<NodeId> {
+        self.group_order
+            .iter()
+            .flat_map(|&gi| plan.groups[gi].nodes.iter().copied())
+            .collect()
+    }
+
+    /// Which values materialize into pooled slots (group tails and
+    /// members whose value escapes their group).
+    pub fn materialize_mask(&self) -> &[bool] {
+        &self.materialize
+    }
+
+    /// The buffer-pool memory plan over the flattened order.
+    pub fn memory_plan(&self) -> &MemoryPlan {
+        &self.mplan
+    }
+
     /// Set the GEMM blocking/thread config of the steady-state engine
     /// (pack-time and run-time blocking must agree, so change it before
     /// [`ExecState::prepack`]).

@@ -9,6 +9,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use super::ops::{MappingType, OpKind};
+use crate::error::XgenError;
 
 /// Node identifier (index into `Graph::nodes`).
 pub type NodeId = usize;
@@ -208,25 +209,31 @@ impl Graph {
             .sum()
     }
 
-    /// Verify structural invariants; returns an error string on violation.
-    pub fn validate(&self) -> Result<(), String> {
+    /// Verify structural invariants; returns a typed
+    /// [`XgenError::InvalidGraph`] on violation. The pass label is the
+    /// generic "graph" — [`XgenError::with_pass`] re-labels it with the
+    /// pipeline stage when the verifier runs after a specific pass.
+    pub fn validate(&self) -> Result<(), XgenError> {
+        fn bad(detail: String) -> XgenError {
+            XgenError::InvalidGraph { pass: "graph".to_string(), detail }
+        }
         for (i, n) in self.nodes.iter().enumerate() {
             if n.id != i {
-                return Err(format!("node {} has id {}", i, n.id));
+                return Err(bad(format!("node {} has id {}", i, n.id)));
             }
             for &inp in &n.inputs {
                 if inp >= i {
-                    return Err(format!("node {} consumes non-preceding {}", i, inp));
+                    return Err(bad(format!("node {} consumes non-preceding {}", i, inp)));
                 }
             }
             if n.op.is_source() && !n.inputs.is_empty() {
-                return Err(format!("source node {} has inputs", i));
+                return Err(bad(format!("source node {} has inputs", i)));
             }
             if !n.op.is_source() && n.inputs.is_empty() {
-                return Err(format!("compute node {} ({}) has no inputs", i, n.op.name()));
+                return Err(bad(format!("compute node {} ({}) has no inputs", i, n.op.name())));
             }
             if n.shape.iter().any(|&d| d == 0) {
-                return Err(format!("node {} has zero dim", i));
+                return Err(bad(format!("node {} has zero dim", i)));
             }
             // Movement-op payloads must be consistent with the recorded
             // input/output shapes — a wrong perm dies here, not deep in a
@@ -237,25 +244,25 @@ impl Graph {
                     let mut seen = vec![false; xs.len()];
                     for &p in perm {
                         if p >= xs.len() || seen[p] {
-                            return Err(format!(
+                            return Err(bad(format!(
                                 "node {} transpose perm {:?} is not a permutation of rank {}",
                                 i, perm, xs.len()
-                            ));
+                            )));
                         }
                         seen[p] = true;
                     }
                     if perm.len() != xs.len() {
-                        return Err(format!(
+                        return Err(bad(format!(
                             "node {} transpose perm {:?} is not a permutation of rank {}",
                             i, perm, xs.len()
-                        ));
+                        )));
                     }
                     let want: Vec<usize> = perm.iter().map(|&p| xs[p]).collect();
                     if want != n.shape {
-                        return Err(format!(
+                        return Err(bad(format!(
                             "node {} transpose shape {:?} != perm {:?} of {:?}",
                             i, n.shape, perm, xs
-                        ));
+                        )));
                     }
                 }
                 OpKind::Slice { start } => {
@@ -264,7 +271,10 @@ impl Graph {
                         || n.shape.len() != xs.len()
                         || start.iter().zip(&n.shape).zip(xs).any(|((&s, &o), &x)| s + o > x)
                     {
-                        return Err(format!("node {} slice start {:?} + {:?} exceeds {:?}", i, start, n.shape, xs));
+                        return Err(bad(format!(
+                            "node {} slice start {:?} + {:?} exceeds {:?}",
+                            i, start, n.shape, xs
+                        )));
                     }
                 }
                 OpKind::MaxPool { k, stride, pad } | OpKind::AvgPool { k, stride, pad } => {
@@ -274,39 +284,39 @@ impl Graph {
                     // kernel can never emit -inf for an all-padding
                     // window and the avg kernel never divides by zero.
                     if *k == 0 || *stride == 0 || pad >= k {
-                        return Err(format!(
+                        return Err(bad(format!(
                             "node {} pool k={} stride={} pad={} invalid (need k, stride > 0 and pad < k)",
                             i, k, stride, pad
-                        ));
+                        )));
                     }
                     // The pool kernels are strictly NCHW; higher-rank
                     // pools must be decomposed (fold extra dims into
                     // channels — see the video zoo's pool3d).
                     if self.nodes[n.inputs[0]].shape.len() != 4 {
-                        return Err(format!(
+                        return Err(bad(format!(
                             "node {} pools a rank-{} tensor (pools are NCHW-only)",
                             i,
                             self.nodes[n.inputs[0]].shape.len()
-                        ));
+                        )));
                     }
                 }
                 OpKind::CausalMask => {
                     let xs = &self.nodes[n.inputs[0]].shape;
                     if xs != &n.shape {
-                        return Err(format!(
+                        return Err(bad(format!(
                             "node {} causal mask shape {:?} != input {:?}",
                             i, n.shape, xs
-                        ));
+                        )));
                     }
                     // The mask is defined over the last two dims (query
                     // rows × key columns) and the full-graph form is the
                     // square attention score matrix.
                     if n.shape.len() < 2 || n.shape[n.shape.len() - 1] != n.shape[n.shape.len() - 2]
                     {
-                        return Err(format!(
+                        return Err(bad(format!(
                             "node {} causal mask needs square trailing dims, got {:?}",
                             i, n.shape
-                        ));
+                        )));
                     }
                 }
                 OpKind::Pad { before, after } => {
@@ -321,10 +331,10 @@ impl Graph {
                             .zip(&n.shape)
                             .all(|(((&x, &b), &a), &o)| x + b + a == o);
                     if !ok {
-                        return Err(format!(
+                        return Err(bad(format!(
                             "node {} pad ({:?}, {:?}) of {:?} != {:?}",
                             i, before, after, xs, n.shape
-                        ));
+                        )));
                     }
                 }
                 _ => {}
@@ -332,7 +342,7 @@ impl Graph {
         }
         for &o in &self.outputs {
             if o >= self.nodes.len() {
-                return Err(format!("output {o} out of range"));
+                return Err(bad(format!("output {o} out of range")));
             }
         }
         Ok(())
@@ -473,7 +483,9 @@ mod tests {
         let g = tiny();
         let mut bad = g.clone();
         bad.nodes[2].inputs = vec![3, 1];
-        assert!(bad.validate().is_err());
+        let err = bad.validate().unwrap_err();
+        assert_eq!(err.code(), "InvalidGraph");
+        assert!(err.to_string().contains("non-preceding"));
     }
 
     #[test]

@@ -37,6 +37,7 @@
 //! | high-level opt | [`rewrite`], [`fusion`] |
 //! | model opt | [`pruning`], [`fkw`] |
 //! | low-level opt | [`codegen`], [`deepreuse`], [`exec`] |
+//! | static analysis | [`verify`] |
 //! | device models | [`cost`], [`baselines`] |
 //! | co-search | [`caps`] |
 //! | runtime | [`xengine`], [`runtime`], [`coordinator`] |
@@ -79,6 +80,7 @@ pub mod fkw;
 pub mod codegen;
 pub mod deepreuse;
 pub mod exec;
+pub mod verify;
 pub mod cost;
 pub mod baselines;
 pub mod caps;

@@ -6,6 +6,7 @@
 //! xgen models                                   list the model zoo
 //! xgen compile --model resnet-50 [--scheme pattern|block|none]
 //!              [--opt 0..3] [--reuse] [--no-fkw] [--infer] [--generate N]
+//!              [--verify]
 //! xgen sched [--variant ADy416] [--horizon 3000]    Table 5 simulation
 //! xgen caps [--budget 8.0]                      NPAS co-search
 //! xgen emit-kernel [--pattern 0] [--unroll 4]   generated pattern kernel
@@ -81,7 +82,9 @@ xgen — CoCoPIE XGen reproduction (see DESIGN.md)
   models        list the model zoo with params/MACs
   compile       compile a zoo model through the session API
                 (--scheme, --opt 0..3, --reuse, --no-fkw, --infer;
-                 --generate N greedy-decodes N tokens on causal models)
+                 --generate N greedy-decodes N tokens on causal models;
+                 --verify runs the static soundness checkers even in
+                 release builds)
   sched         XEngine Table-5 scheduler simulation
   caps          NPAS architecture/pruning co-search
   emit-kernel   print a generated branch-less pattern kernel
@@ -128,7 +131,15 @@ fn cmd_models() -> Result<()> {
 
 fn cmd_compile(args: &Args) -> Result<()> {
     let model = args.opt_or("model", "resnet-50");
-    let cm = session(args, model, args.opt_usize("batch", 1))?.compile()?;
+    let mut c = session(args, model, args.opt_usize("batch", 1))?;
+    if args.flag("verify") {
+        // Force the static soundness checkers on even in release builds
+        // (debug builds run them by default); the report gains a
+        // `verify:` line, and a violation exits with error[InvalidGraph]
+        // or error[InvalidPlan] naming the offending pass.
+        c = c.verify(true);
+    }
+    let cm = c.compile()?;
     println!("model: {}", cm.graph().summary());
     print!("{}", cm.report().summary());
     for (fw, class, dev) in [

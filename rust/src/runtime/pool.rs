@@ -303,12 +303,65 @@ pub struct SharedSlice {
 }
 
 // SAFETY: disjointness of the regions handed to concurrent tasks is the
-// caller's obligation (documented on `slice_mut`).
+// caller's obligation (documented on `slice_mut` — and *checked* by the
+// debug-build claim registry below).
 unsafe impl Send for SharedSlice {}
 unsafe impl Sync for SharedSlice {}
 
+/// Debug-only disjointness checker behind [`SharedSlice`] (ISSUE-7):
+/// every `slice_mut` records its claimed `[start, start+len)` interval,
+/// keyed by the buffer's base address, and panics when a claim overlaps
+/// one already live in the same dispatch — turning the documented unsafe
+/// contract of the GEMM/FKW row-band parallelism into a checked
+/// invariant. A `SharedSlice::new` over the buffer starts a new dispatch
+/// and clears the old claims (keeping their allocation, so the
+/// steady-state engine stays allocation-free once every buffer's entry
+/// has warmed up). Compiled out entirely in release builds; tier-1
+/// `cargo test` (dev profile, `debug_assertions` on) runs with it live,
+/// and the Miri CI job exercises it alongside the raw-pointer unsafe.
+#[cfg(debug_assertions)]
+mod claims {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+    static CLAIMS: OnceLock<Mutex<HashMap<usize, Vec<(usize, usize)>>>> = OnceLock::new();
+
+    fn table() -> MutexGuard<'static, HashMap<usize, Vec<(usize, usize)>>> {
+        CLAIMS
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub(super) fn reset(base: usize) {
+        table().entry(base).or_default().clear();
+    }
+
+    pub(super) fn claim(base: usize, start: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let mut t = table();
+        let v = t.entry(base).or_default();
+        for &(s, l) in v.iter() {
+            if start < s + l && s < start + len {
+                // The registry's job is to panic: an overlap means two
+                // pool tasks hold `&mut` to the same f32s right now.
+                panic!(
+                    "SharedSlice overlap at base {base:#x}: claim [{start}, {}) intersects live claim [{s}, {})",
+                    start + len,
+                    s + l
+                );
+            }
+        }
+        v.push((start, len));
+    }
+}
+
 impl SharedSlice {
     pub fn new(s: &mut [f32]) -> SharedSlice {
+        #[cfg(debug_assertions)]
+        claims::reset(s.as_mut_ptr() as usize);
         SharedSlice { ptr: s.as_mut_ptr(), len: s.len() }
     }
 
@@ -326,9 +379,13 @@ impl SharedSlice {
     /// Concurrent callers must slice **disjoint** ranges, and the backing
     /// buffer must outlive every use (guaranteed when used inside a
     /// `parallel_for` over a buffer borrowed by the submitting frame).
+    /// Debug builds enforce the disjointness half through the claim
+    /// registry: an overlapping claim within one dispatch panics.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f32] {
         debug_assert!(start + len <= self.len, "SharedSlice range out of bounds");
+        #[cfg(debug_assertions)]
+        claims::claim(self.ptr as usize, start, len);
         std::slice::from_raw_parts_mut(self.ptr.add(start), len)
     }
 }
@@ -493,5 +550,35 @@ mod tests {
         assert!(a >= 1);
         assert_eq!(a, b);
         assert_eq!(global().size().max(1), global().size());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "SharedSlice overlap")]
+    fn overlapping_claims_panic_in_debug() {
+        let mut buf = vec![0.0f32; 32];
+        let sh = SharedSlice::new(&mut buf);
+        unsafe {
+            let _a = sh.slice_mut(0, 16);
+            let _b = sh.slice_mut(8, 16); // [8, 24) intersects [0, 16)
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn new_dispatch_resets_claims() {
+        let mut buf = vec![0.0f32; 16];
+        let sh = SharedSlice::new(&mut buf);
+        unsafe {
+            sh.slice_mut(0, 16)[0] = 1.0;
+        }
+        // Re-wrapping the same buffer starts a fresh dispatch: the full
+        // range is claimable again, and zero-length claims never conflict.
+        let sh2 = SharedSlice::new(&mut buf);
+        unsafe {
+            let _zero = sh2.slice_mut(4, 0);
+            sh2.slice_mut(0, 16)[15] = 2.0;
+        }
+        assert_eq!(buf[15], 2.0);
     }
 }

@@ -74,8 +74,11 @@ impl GemmConfig {
     /// [`GemmConfig::resolved_threads`] bounded by the number of MR-row
     /// bands so tiny matrices never over-split.
     fn effective_threads(&self, m: usize, k: usize, n: usize) -> usize {
-        // Below ~1 MFLOP the handoff overhead dominates any speedup.
-        if (m * k).saturating_mul(n) < 1 << 19 {
+        // Below ~1 MFLOP the handoff overhead dominates any speedup. Under
+        // Miri the cutoff drops so tiny test shapes still exercise the
+        // parallel unsafe path (SharedSlice bands) at interpretable cost.
+        let cutoff: usize = if cfg!(miri) { 1 << 8 } else { 1 << 19 };
+        if (m * k).saturating_mul(n) < cutoff {
             return 1;
         }
         self.resolved_threads().min((m + MR - 1) / MR).max(1)
@@ -492,6 +495,7 @@ mod tests {
     /// oracle within 1e-3 on shapes that are NOT multiples of any tile
     /// size (M/N/K drawn from {1, 7, 33, 129}).
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy property sweep; Miri runs the tiny-shape soundness test instead
     fn blocked_matches_naive_on_odd_shapes() {
         let dims = [1usize, 7, 33, 129];
         forall("blocked gemm == naive oracle", 32, |rng| {
@@ -518,6 +522,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy property sweep; Miri runs the tiny-shape soundness test instead
     fn parallel_matches_single_thread() {
         forall("parallel gemm == 1-thread gemm", 8, |rng| {
             // Sizes above the serial cutoff (m*k*n >= 1<<19) so the
@@ -567,6 +572,7 @@ mod tests {
     /// oracle on shapes that are NOT multiples of any tile size, across
     /// awkward pack-time blockings and thread counts.
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy property sweep; Miri runs the tiny-shape soundness test instead
     fn prepacked_matches_naive_on_odd_shapes() {
         let dims = [1usize, 7, 33, 129];
         forall("prepacked gemm == naive oracle", 32, |rng| {
@@ -597,6 +603,7 @@ mod tests {
     /// Prepacked and pack-on-the-fly paths agree bitwise: identical panel
     /// order, identical micro-kernel, only the time of packing differs.
     #[test]
+    #[cfg_attr(miri, ignore)] // heavy property sweep; Miri runs the tiny-shape soundness test instead
     fn prepacked_is_bitwise_equal_to_packing_on_the_fly() {
         let mut rng = Rng::new(0xBB);
         for &(m, k, n) in &[(5usize, 700usize, 6usize), (33, 129, 33), (256, 64, 96)] {
@@ -640,7 +647,35 @@ mod tests {
         gemm_prepacked(4, &[0.0; 16], &pb, &mut c, &run_cfg, &mut scratch);
     }
 
+    /// Miri target: a shape above the (Miri-lowered) serial cutoff so both
+    /// parallel unsafe paths — `gemm`'s C bands and `gemm_prepacked`'s C
+    /// bands + per-thread scratch — run under the interpreter, checking the
+    /// `SharedSlice` raw-pointer arithmetic and the debug claim registry.
+    /// Under a normal build the same shape is below the cutoff and takes
+    /// the serial path, which keeps this test cheap everywhere.
     #[test]
+    fn parallel_paths_are_sound_on_tiny_shapes() {
+        let mut rng = Rng::new(0x51);
+        let (m, k, n) = (9usize, 8usize, 8usize); // 576 >= Miri cutoff (1<<8)
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let cfg = GemmConfig { threads: 3, ..Default::default() };
+        let mut want = vec![0.0f32; m * n];
+        gemm_naive(m, k, n, &a, &b, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut got, &cfg);
+        assert!(max_abs_diff(&want, &got) <= 1e-4);
+        let pb = PackedB::pack(k, n, &b, &cfg);
+        let mut scratch = vec![0.0f32; prepacked_scratch_elems(&cfg) * 3];
+        let mut pre = vec![0.0f32; m * n];
+        gemm_prepacked(m, &a, &pb, &mut pre, &cfg, &mut scratch);
+        // Prepacked and on-the-fly packing are bitwise equal by construction
+        // (same panel order, same micro-kernel).
+        assert_eq!(got, pre);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // K=700 sweep is slow under the interpreter
     fn large_k_accumulates_accurately() {
         // K spanning several KC panels: panel-wise accumulation into C must
         // agree with the oracle.

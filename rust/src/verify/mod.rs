@@ -1,0 +1,632 @@
+//! `xgen::verify` — static soundness checkers for the compile pipeline.
+//!
+//! Every pass in the pipeline mutates the graph or aliases buffers:
+//! rewrite substitutes subgraphs, pruning rewrites weights, fusion
+//! flattens groups into an execution order, the memory planner maps many
+//! values onto few slots, and the steady-state engine lays every scratch
+//! buffer into one arena. PRs 4–6 each found a latent soundness bug in
+//! that chain (a missing K-transpose, a fusion-ordering violation, a
+//! poisoned-workspace recovery) only through end-to-end numeric oracles.
+//! This module proves the structural half of those invariants
+//! *mechanically*, after every stage, with failures that name the pass
+//! and the offending node / slot / region:
+//!
+//! * [`check_graph`] — deep IR check: [`crate::graph::Graph::validate`]
+//!   plus output presence, const-store sync, and weight-store shape
+//!   consistency. Failure: [`XgenError::InvalidGraph`].
+//! * [`check_fusion`] — the PR-4 fusion invariant: groups partition the
+//!   compute nodes and the flattened group order is topological (every
+//!   non-source input of a fused node is produced earlier in the
+//!   flattened order — exactly what both executors assume). Failure:
+//!   [`XgenError::InvalidGraph`].
+//! * [`check_plan`] — symbolic liveness replay over a
+//!   [`MemoryPlan`]: no two simultaneously-live values share a slot,
+//!   every slot is sized for all its occupants, expire lists agree with
+//!   the independently recomputed last-use positions, and outputs never
+//!   expire. Failure: [`XgenError::InvalidPlan`].
+//! * [`arena_regions`] + [`check_regions`] — the workspace arena laid
+//!   out symbolically (slots / ping-pong / im2col / GEMM staging / wt /
+//!   per-thread pack scratch), proven pairwise disjoint and in-bounds.
+//!   Failure: [`XgenError::InvalidPlan`].
+//!
+//! [`check_compiled`] runs all four against an [`ExecState`] — this is
+//! what [`crate::api::Compiler::compile`] calls after planning, and what
+//! the per-pass hooks call after rewrite/prune/fuse. The checkers take
+//! plain data (graph, order, mask, plan), so the mutation-based negative
+//! tests in `tests/verify.rs` can corrupt a valid artifact and assert
+//! the exact typed rejection.
+//!
+//! The third checker of the ISSUE-7 trio — the `SharedSlice` claim
+//! registry that turns the unsafe row-band disjointness contract into a
+//! checked invariant — lives where the contract lives, in
+//! [`crate::runtime::pool`]; it is active in every `debug_assertions`
+//! build and exercised (with the rest of the unsafe surface) by the
+//! Miri CI job.
+
+use std::collections::BTreeMap;
+
+use crate::error::XgenError;
+use crate::exec::{ExecState, MemoryPlan, WorkspaceSpec};
+use crate::fusion::FusionPlan;
+use crate::graph::{Graph, NodeId, OpKind, WeightStore};
+use crate::tensor::gemm::{prepacked_scratch_elems, GemmConfig};
+
+fn bad_graph(pass: &str, detail: String) -> XgenError {
+    XgenError::InvalidGraph { pass: pass.to_string(), detail }
+}
+
+fn bad_plan(pass: &str, detail: String) -> XgenError {
+    XgenError::InvalidPlan { pass: pass.to_string(), detail }
+}
+
+/// What one full verification run covered — recorded on
+/// [`crate::api::CompileReport`] and printed by its `summary()`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// Pipeline stages that passed the graph checker.
+    pub passes: Vec<String>,
+    /// Nodes deep-checked in the final graph.
+    pub nodes: usize,
+    /// Values replayed through the liveness checker.
+    pub planned_values: usize,
+    /// Slots whose occupancy intervals were proven disjoint.
+    pub slots: usize,
+    /// Arena regions proven pairwise disjoint and in-bounds.
+    pub regions: usize,
+}
+
+impl VerifyReport {
+    /// One-line summary for the compile report.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} passes clean ({}): {} nodes, {} values in {} slots, {} arena regions",
+            self.passes.len(),
+            self.passes.join("→"),
+            self.nodes,
+            self.planned_values,
+            self.slots,
+            self.regions
+        )
+    }
+}
+
+/// Deep IR check, beyond [`Graph::validate`]'s structural pass: the graph
+/// has outputs, every recorded constant still has a scalar weight node,
+/// duplicate weight names agree on shape, and (when a store is attached)
+/// every weight node's tensor exists with exactly the node's shape.
+/// `pass` names the pipeline stage being blamed in the error.
+pub fn check_graph(g: &Graph, ws: Option<&WeightStore>, pass: &str) -> Result<(), XgenError> {
+    g.validate().map_err(|e| e.with_pass(pass))?;
+    if g.outputs.is_empty() {
+        return Err(bad_graph(pass, format!("graph '{}' has no outputs", g.name)));
+    }
+    // Weight nodes by name: duplicates (shared/tied weights) must agree on
+    // shape — the store holds one tensor per name.
+    let mut weight_shape: BTreeMap<&str, (&[usize], NodeId)> = BTreeMap::new();
+    for n in &g.nodes {
+        if !matches!(n.op, OpKind::Weight) {
+            continue;
+        }
+        if let Some((shape, first)) = weight_shape.insert(&n.name, (&n.shape, n.id)) {
+            if shape != &n.shape[..] {
+                return Err(bad_graph(
+                    pass,
+                    format!(
+                        "weight '{}' has conflicting shapes: node {} is {:?}, node {} is {:?}",
+                        n.name, first, shape, n.id, n.shape
+                    ),
+                ));
+            }
+        }
+    }
+    // Const-store sync: a recorded constant whose weight node survives
+    // must still be a scalar (a rewrite that resized it would make
+    // `init_random` bake the constant into the wrong tensor). Stale
+    // entries for pruned-away nodes are harmless and allowed.
+    for name in g.consts.keys() {
+        if let Some(&(shape, id)) = weight_shape.get(name.as_str()) {
+            if shape.iter().product::<usize>() != 1 {
+                return Err(bad_graph(
+                    pass,
+                    format!("const '{}' (node {}) must be scalar, has shape {:?}", name, id, shape),
+                ));
+            }
+        }
+    }
+    // Weight-store sync: every surviving weight node must be backed by a
+    // tensor of exactly the node's shape — rewrite/prune must keep the
+    // store in lockstep with the graph.
+    if let Some(ws) = ws {
+        for (&name, &(shape, id)) in &weight_shape {
+            match ws.get(name) {
+                None => {
+                    return Err(bad_graph(
+                        pass,
+                        format!("weight '{}' (node {}) missing from the weight store", name, id),
+                    ));
+                }
+                Some(t) if t.shape() != shape => {
+                    return Err(bad_graph(
+                        pass,
+                        format!(
+                            "weight '{}' (node {}) is {:?} in the graph but {:?} in the store",
+                            name,
+                            id,
+                            shape,
+                            t.shape()
+                        ),
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The PR-4 fusion invariant, checked mechanically: groups are non-empty,
+/// contain only compute nodes, partition them exactly, and the flattened
+/// order (groups sorted by first member — how [`ExecState`] executes)
+/// is topological: every non-source input of every member is produced at
+/// an earlier flattened position. An input produced *later* is exactly
+/// the latent bug PR 4 fixed — a group absorbing a consumer whose other
+/// operand lands in a later-sorted group.
+pub fn check_fusion(g: &Graph, plan: &FusionPlan, pass: &str) -> Result<(), XgenError> {
+    let mut group_of: Vec<Option<usize>> = vec![None; g.nodes.len()];
+    for (gi, gr) in plan.groups.iter().enumerate() {
+        if gr.nodes.is_empty() {
+            return Err(bad_graph(pass, format!("fusion group {gi} is empty")));
+        }
+        for &id in &gr.nodes {
+            if id >= g.nodes.len() {
+                return Err(bad_graph(pass, format!("fusion group {gi} names node {id} out of range")));
+            }
+            if g.node(id).op.is_source() {
+                return Err(bad_graph(
+                    pass,
+                    format!("fusion group {gi} contains source node {id} ('{}')", g.node(id).name),
+                ));
+            }
+            if let Some(prev) = group_of[id] {
+                return Err(bad_graph(
+                    pass,
+                    format!("node {id} ('{}') is in groups {prev} and {gi}", g.node(id).name),
+                ));
+            }
+            group_of[id] = Some(gi);
+        }
+    }
+    for n in &g.nodes {
+        if !n.op.is_source() && group_of[n.id].is_none() {
+            return Err(bad_graph(
+                pass,
+                format!("compute node {} ('{}') is in no fusion group", n.id, n.name),
+            ));
+        }
+    }
+    // Flattened order exactly as ExecState builds it.
+    let mut order_of_group: Vec<usize> = (0..plan.groups.len()).collect();
+    order_of_group.sort_by_key(|&gi| plan.groups[gi].nodes[0]);
+    let mut flat_pos = vec![usize::MAX; g.nodes.len()];
+    let mut p = 0usize;
+    for &gi in &order_of_group {
+        for &id in &plan.groups[gi].nodes {
+            flat_pos[id] = p;
+            p += 1;
+        }
+    }
+    for n in &g.nodes {
+        if n.op.is_source() {
+            continue;
+        }
+        for &inp in &n.inputs {
+            if g.node(inp).op.is_source() {
+                continue;
+            }
+            if flat_pos[inp] >= flat_pos[n.id] {
+                return Err(bad_graph(
+                    pass,
+                    format!(
+                        "node {} ('{}') at flattened position {} consumes node {} \
+                         ('{}') at position {} — the fused order is not topological",
+                        n.id, n.name, flat_pos[n.id], inp, g.node(inp).name, flat_pos[inp]
+                    ),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Symbolic liveness replay over a [`MemoryPlan`]: recompute every
+/// value's live interval `[def, last-use]` from scratch (outputs live
+/// forever) and prove, independently of the planner's own bookkeeping,
+/// that
+///
+/// * `order` is a duplicate-free schedule of compute nodes whose every
+///   non-source operand is defined earlier in the schedule,
+/// * a value has a slot iff it is materialized,
+/// * occupants of the same slot have pairwise-disjoint live intervals
+///   (the slot may be rewritten only strictly after its previous
+///   occupant's last use — an input is still live *while* its consumer
+///   writes, so producer and consumer may never alias),
+/// * every slot's capacity covers every occupant,
+/// * the expire lists release exactly the non-output values at exactly
+///   their recomputed last use.
+///
+/// Returns `(planned_values, slots)` for the [`VerifyReport`].
+pub fn check_plan(
+    g: &Graph,
+    order: &[NodeId],
+    materialize: &[bool],
+    plan: &MemoryPlan,
+    pass: &str,
+) -> Result<(usize, usize), XgenError> {
+    let nn = g.nodes.len();
+    if materialize.len() != nn || plan.slot_of.len() != nn {
+        return Err(bad_plan(
+            pass,
+            format!(
+                "plan tables sized {}/{} for a graph of {} nodes",
+                materialize.len(),
+                plan.slot_of.len(),
+                nn
+            ),
+        ));
+    }
+    if plan.slot_elems.len() != plan.num_slots {
+        return Err(bad_plan(
+            pass,
+            format!("{} slot capacities for {} slots", plan.slot_elems.len(), plan.num_slots),
+        ));
+    }
+    // --- schedule sanity + position table ---------------------------------
+    let mut pos = vec![usize::MAX; nn];
+    for (p, &id) in order.iter().enumerate() {
+        if id >= nn {
+            return Err(bad_plan(pass, format!("order position {p} names node {id} out of range")));
+        }
+        if g.node(id).op.is_source() {
+            return Err(bad_plan(
+                pass,
+                format!("order position {p} schedules source node {id} ('{}')", g.node(id).name),
+            ));
+        }
+        if pos[id] != usize::MAX {
+            return Err(bad_plan(
+                pass,
+                format!("node {id} ('{}') scheduled twice (positions {} and {p})", g.node(id).name, pos[id]),
+            ));
+        }
+        pos[id] = p;
+    }
+    for (p, &id) in order.iter().enumerate() {
+        for &inp in &g.node(id).inputs {
+            if g.node(inp).op.is_source() {
+                continue;
+            }
+            if pos[inp] == usize::MAX || pos[inp] >= p {
+                return Err(bad_plan(
+                    pass,
+                    format!(
+                        "node {id} ('{}') at position {p} reads node {inp} which is not \
+                         defined earlier in the schedule",
+                        g.node(id).name
+                    ),
+                ));
+            }
+        }
+    }
+    // --- independent liveness: last use per scheduled value ----------------
+    let mut last = vec![usize::MAX; nn]; // MAX here = "not scheduled"
+    for &id in order {
+        last[id] = pos[id];
+    }
+    for &id in order {
+        for &inp in &g.node(id).inputs {
+            if pos[inp] != usize::MAX && last[inp] != usize::MAX {
+                last[inp] = last[inp].max(pos[id]);
+            }
+        }
+    }
+    const FOREVER: usize = usize::MAX - 1;
+    for &id in order {
+        if g.outputs.contains(&id) {
+            last[id] = FOREVER;
+        }
+    }
+    // --- slot assignment consistency ---------------------------------------
+    let mut planned_values = 0usize;
+    for id in 0..nn {
+        let scheduled = pos[id] != usize::MAX;
+        let mat = scheduled && materialize[id];
+        match plan.slot_of[id] {
+            Some(s) => {
+                if !mat {
+                    return Err(bad_plan(
+                        pass,
+                        format!("unmaterialized node {id} ('{}') holds slot {s}", g.node(id).name),
+                    ));
+                }
+                if s >= plan.num_slots {
+                    return Err(bad_plan(
+                        pass,
+                        format!("node {id} assigned slot {s} of {}", plan.num_slots),
+                    ));
+                }
+                let elems = g.node(id).out_elems() as usize;
+                if plan.slot_elems[s] < elems {
+                    return Err(bad_plan(
+                        pass,
+                        format!(
+                            "slot {s} holds {} elems but occupant node {id} ('{}') needs {}",
+                            plan.slot_elems[s],
+                            g.node(id).name,
+                            elems
+                        ),
+                    ));
+                }
+                planned_values += 1;
+            }
+            None => {
+                if mat {
+                    return Err(bad_plan(
+                        pass,
+                        format!("materialized node {id} ('{}') has no slot", g.node(id).name),
+                    ));
+                }
+            }
+        }
+    }
+    // --- alias check: per-slot occupancy intervals must be disjoint --------
+    let mut by_slot: Vec<Vec<(usize, usize, NodeId)>> = vec![Vec::new(); plan.num_slots];
+    for id in 0..nn {
+        if let Some(s) = plan.slot_of[id] {
+            by_slot[s].push((pos[id], last[id], id));
+        }
+    }
+    for (s, occ) in by_slot.iter_mut().enumerate() {
+        occ.sort_unstable();
+        for w in occ.windows(2) {
+            let (_, prev_last, prev_id) = w[0];
+            let (next_pos, _, next_id) = w[1];
+            if next_pos <= prev_last {
+                return Err(bad_plan(
+                    pass,
+                    format!(
+                        "slot {s} aliases two live values: node {prev_id} ('{}') lives through \
+                         position {} but node {next_id} ('{}') overwrites it at position {}",
+                        g.node(prev_id).name,
+                        prev_last,
+                        g.node(next_id).name,
+                        next_pos
+                    ),
+                ));
+            }
+        }
+    }
+    // --- expire lists agree with the recomputed liveness --------------------
+    if plan.expire.len() != order.len() {
+        return Err(bad_plan(
+            pass,
+            format!("{} expire positions for a schedule of {}", plan.expire.len(), order.len()),
+        ));
+    }
+    let mut expired_at = vec![usize::MAX; nn];
+    for (p, evs) in plan.expire.iter().enumerate() {
+        for &d in evs {
+            if d >= nn || plan.slot_of[d].is_none() {
+                return Err(bad_plan(
+                    pass,
+                    format!("expire[{p}] releases node {d} which holds no slot"),
+                ));
+            }
+            if expired_at[d] != usize::MAX {
+                return Err(bad_plan(
+                    pass,
+                    format!("node {d} expires twice (positions {} and {p})", expired_at[d]),
+                ));
+            }
+            expired_at[d] = p;
+        }
+    }
+    for id in 0..nn {
+        if plan.slot_of[id].is_none() {
+            continue;
+        }
+        let want = if last[id] == FOREVER { usize::MAX } else { last[id] };
+        if expired_at[id] != want {
+            return Err(bad_plan(
+                pass,
+                if want == usize::MAX {
+                    format!(
+                        "graph output node {id} ('{}') is expired at position {} — outputs \
+                         must keep their slot forever",
+                        g.node(id).name, expired_at[id]
+                    )
+                } else {
+                    format!(
+                        "node {id} ('{}') last used at position {want} but expires at {}",
+                        g.node(id).name,
+                        if expired_at[id] == usize::MAX {
+                            "never".to_string()
+                        } else {
+                            expired_at[id].to_string()
+                        }
+                    )
+                },
+            ));
+        }
+    }
+    Ok((planned_values, plan.num_slots))
+}
+
+/// One named interval of the steady-state workspace arena, in f32
+/// elements. Produced by [`arena_regions`], consumed by
+/// [`check_regions`]; the mutation tests corrupt these directly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub name: String,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Lay the arena out symbolically, in the same order
+/// [`crate::exec::Workspace::new`] allocates it: one region per value
+/// slot, the two ping-pong group buffers, im2col patches, GEMM staging,
+/// the per-call transposed weight buffer, and one A-pack scratch band
+/// per pool thread (the bands `gemm_prepacked` claims through
+/// `SharedSlice`). Returns `(regions, total_elems)`; `total_elems * 4`
+/// equals [`WorkspaceSpec::bytes`].
+pub fn arena_regions(spec: &WorkspaceSpec, cfg: &GemmConfig) -> (Vec<Region>, usize) {
+    let mut regions = Vec::new();
+    let mut cursor = 0usize;
+    let mut push = |name: String, len: usize, cursor: &mut usize| {
+        regions.push(Region { name, start: *cursor, len });
+        *cursor += len;
+    };
+    for (s, &elems) in spec.slot_elems.iter().enumerate() {
+        push(format!("slot[{s}]"), elems, &mut cursor);
+    }
+    push("group[0]".to_string(), spec.group_elems, &mut cursor);
+    push("group[1]".to_string(), spec.group_elems, &mut cursor);
+    push("patches".to_string(), spec.patches_elems, &mut cursor);
+    push("gemm_out".to_string(), spec.gemm_out_elems, &mut cursor);
+    push("wt".to_string(), spec.wt_elems, &mut cursor);
+    let per = prepacked_scratch_elems(cfg);
+    for t in 0..cfg.resolved_threads() {
+        push(format!("gemm_scratch[{t}]"), per, &mut cursor);
+    }
+    (regions, cursor)
+}
+
+/// Prove a region list pairwise disjoint and in-bounds. Zero-length
+/// regions are placeholders (a model without convs has empty conv
+/// scratch) and never conflict.
+pub fn check_regions(regions: &[Region], total: usize, pass: &str) -> Result<(), XgenError> {
+    for r in regions {
+        if r.start + r.len > total {
+            return Err(bad_plan(
+                pass,
+                format!(
+                    "arena region '{}' [{}, {}) exceeds the arena of {} elems",
+                    r.name,
+                    r.start,
+                    r.start + r.len,
+                    total
+                ),
+            ));
+        }
+    }
+    let mut spans: Vec<&Region> = regions.iter().filter(|r| r.len > 0).collect();
+    spans.sort_by_key(|r| r.start);
+    for w in spans.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if b.start < a.start + a.len {
+            return Err(bad_plan(
+                pass,
+                format!(
+                    "arena regions overlap: '{}' [{}, {}) intersects '{}' [{}, {})",
+                    a.name,
+                    a.start,
+                    a.start + a.len,
+                    b.name,
+                    b.start,
+                    b.start + b.len
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Run every static checker against a built [`ExecState`]: the deep graph
+/// check, the fusion invariant, the liveness replay over the state's own
+/// flattened order/mask/plan, and the arena layout under the state's GEMM
+/// config. This is the `pass = "plan"` hook of `Compiler::compile`.
+pub fn check_compiled(
+    g: &Graph,
+    ws: Option<&WeightStore>,
+    plan: &FusionPlan,
+    st: &ExecState,
+    pass: &str,
+) -> Result<VerifyReport, XgenError> {
+    check_graph(g, ws, pass)?;
+    check_fusion(g, plan, pass)?;
+    let order = st.execution_order(plan);
+    let (planned_values, slots) =
+        check_plan(g, &order, st.materialize_mask(), st.memory_plan(), pass)?;
+    let (regions, total) = arena_regions(st.workspace_spec(), st.gemm_config());
+    check_regions(&regions, total, pass)?;
+    Ok(VerifyReport {
+        passes: vec![pass.to_string()],
+        nodes: g.nodes.len(),
+        planned_values,
+        slots,
+        regions: regions.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecState;
+    use crate::fusion::{fuse, FusionConfig};
+    use crate::graph::zoo::by_name;
+
+    fn compiled(name: &str) -> (Graph, FusionPlan, ExecState) {
+        let g = by_name(name, 1);
+        let plan = fuse(&g, &FusionConfig::default());
+        let st = ExecState::new(&g, &plan);
+        (g, plan, st)
+    }
+
+    #[test]
+    fn demo_models_verify_clean() {
+        for name in ["demo-cnn", "demo-transformer", "demo-transformer-causal"] {
+            let (g, plan, st) = compiled(name);
+            let rep = check_compiled(&g, None, &plan, &st, "plan")
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(rep.nodes > 0);
+            assert!(rep.slots > 0);
+            assert!(rep.regions >= rep.slots + 2);
+            assert!(rep.summary().contains("plan"));
+        }
+    }
+
+    #[test]
+    fn straight_line_plan_verifies() {
+        let g = by_name("demo-cnn", 1);
+        let order = g.compute_nodes();
+        let materialize = vec![true; g.nodes.len()];
+        let plan = MemoryPlan::new(&g, &order, &materialize);
+        check_plan(&g, &order, &materialize, &plan, "plan").expect("straight line is sound");
+    }
+
+    #[test]
+    fn arena_total_matches_workspace_bytes() {
+        let (g, plan, st) = compiled("demo-cnn");
+        let _ = (g, plan);
+        let cfg = *st.gemm_config();
+        let (regions, total) = arena_regions(st.workspace_spec(), &cfg);
+        assert_eq!(total as u64 * 4, st.workspace_spec().bytes(&cfg));
+        check_regions(&regions, total, "plan").expect("fresh layout is disjoint");
+    }
+
+    #[test]
+    fn graph_checker_relabels_the_pass() {
+        let mut g = by_name("demo-cnn", 1);
+        g.nodes[2].shape = vec![0];
+        let err = check_graph(&g, None, "fuse").expect_err("zero dim");
+        assert_eq!(err.code(), "InvalidGraph");
+        assert!(err.to_string().contains("after pass 'fuse'"), "{err}");
+    }
+
+    #[test]
+    fn graph_checker_requires_outputs() {
+        let mut g = by_name("demo-cnn", 1);
+        g.outputs.clear();
+        let err = check_graph(&g, None, "rewrite").expect_err("no outputs");
+        assert!(err.to_string().contains("no outputs"));
+    }
+}

@@ -1,0 +1,270 @@
+//! ISSUE-7 acceptance for `xgen::verify` — the static soundness checkers.
+//!
+//! Positive half: every zoo model, at every fusion level the pipeline can
+//! produce (O0/O1 straight-line, O2 default, O3 aggressive), passes the
+//! deep graph check, the fusion-order invariant, the liveness replay over
+//! the memory plan, and the arena disjointness proof — with and without
+//! weights, across the fkw/reuse/prepack/workspace/threads toggle matrix
+//! on the demo models (full `Compiler::compile` with `.verify(true)`).
+//!
+//! Negative half: mutation tests. Each one corrupts a *valid* compiled
+//! artifact the way a buggy pass would — reordering the schedule,
+//! shrinking a slot, aliasing two live values, overlapping arena regions,
+//! breaking the fused topological order — and asserts the checker rejects
+//! it with the right typed code (`InvalidGraph` / `InvalidPlan`) and a
+//! message naming the pass and the offending node / slot / region.
+
+use xgen::api::{Compiler, OptLevel};
+use xgen::baselines::no_fusion;
+use xgen::exec::{ExecState, MemoryPlan, WorkspaceSpec};
+use xgen::fusion::{fuse, FusionConfig, FusionPlan};
+use xgen::graph::zoo::{all_models, by_name};
+use xgen::graph::Graph;
+use xgen::pruning::PruneScheme;
+use xgen::tensor::gemm::GemmConfig;
+use xgen::verify::{arena_regions, check_compiled, check_fusion, check_plan, check_regions};
+
+/// The three fusion shapes `Compiler::compile` can produce, labeled by
+/// the opt levels that select them.
+fn fusion_variants(g: &Graph) -> Vec<(&'static str, FusionPlan)> {
+    vec![
+        ("O0/O1", no_fusion(g)),
+        ("O2", fuse(g, &FusionConfig::default())),
+        ("O3", fuse(g, &FusionConfig { profile_threshold_bytes: 4 * 1024, max_group_size: 32 })),
+    ]
+}
+
+/// Every zoo model × every fusion level verifies clean, structurally
+/// (no weights: graph, fusion order, liveness, arena — the parts that
+/// exist before `random_weights`).
+#[test]
+fn zoo_verifies_clean_at_every_opt_level() {
+    for name in all_models() {
+        let g = by_name(name, 1);
+        for (label, plan) in fusion_variants(&g) {
+            let st = ExecState::new(&g, &plan);
+            let rep = check_compiled(&g, None, &plan, &st, "plan")
+                .unwrap_or_else(|e| panic!("{name} at {label}: {e}"));
+            assert_eq!(rep.nodes, g.nodes.len(), "{name} at {label}");
+            assert!(rep.slots > 0, "{name} at {label}: no slots planned");
+        }
+    }
+}
+
+/// The arena layout stays disjoint whatever the thread count resolves to
+/// (the per-thread GEMM scratch bands are the regions that scale).
+#[test]
+fn zoo_arenas_are_disjoint_across_thread_counts() {
+    for name in all_models() {
+        let g = by_name(name, 1);
+        let plan = fuse(&g, &FusionConfig::default());
+        let st = ExecState::new(&g, &plan);
+        for threads in [1usize, 4] {
+            let cfg = GemmConfig { threads, ..Default::default() };
+            let (regions, total) = arena_regions(st.workspace_spec(), &cfg);
+            check_regions(&regions, total, "plan")
+                .unwrap_or_else(|e| panic!("{name} at {threads} threads: {e}"));
+            assert_eq!(total as u64 * 4, st.workspace_spec().bytes(&cfg), "{name}");
+        }
+    }
+}
+
+fn demo_compiler(model: &str, opt: OptLevel) -> Compiler {
+    let scheme = if model == "demo-cnn" {
+        PruneScheme::Pattern { set_size: 8, connectivity_rate: 0.3 }
+    } else {
+        PruneScheme::None
+    };
+    Compiler::for_model(model, 1)
+        .expect("demo model exists")
+        .random_weights(7)
+        .scheme(scheme)
+        .opt_level(opt)
+        .verify(true)
+}
+
+/// Full weighted compiles through the session API with the verifier
+/// forced on: every demo model × O0–O3, plus the engine toggle matrix at
+/// O2 (fkw off, deep reuse on, prepacking off, shared workspace off,
+/// single-thread GEMM). All four pipeline hooks must report clean.
+#[test]
+fn demo_compile_matrix_verifies_with_toggles() {
+    let models = ["demo-cnn", "demo-transformer", "demo-transformer-causal"];
+    for model in models {
+        for opt in [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3] {
+            let cm = demo_compiler(model, opt).compile().unwrap_or_else(|e| {
+                panic!("{model} at {opt:?}: {e}");
+            });
+            let rep = cm.report().verify.as_ref().expect("verify(true) records a report");
+            assert_eq!(rep.passes, ["rewrite", "prune", "fuse", "plan"], "{model} at {opt:?}");
+            assert!(rep.slots > 0, "{model} at {opt:?}");
+            assert!(cm.report().summary().contains("verify:"), "{model} at {opt:?}");
+        }
+        let toggles: Vec<(&str, Compiler)> = vec![
+            ("no-fkw", demo_compiler(model, OptLevel::O2).fkw(false)),
+            ("reuse", demo_compiler(model, OptLevel::O2).deep_reuse(true)),
+            ("no-prepack", demo_compiler(model, OptLevel::O2).prepack(false)),
+            ("no-workspace", demo_compiler(model, OptLevel::O2).workspace(false)),
+            (
+                "threads-1",
+                demo_compiler(model, OptLevel::O2)
+                    .gemm_config(GemmConfig { threads: 1, ..Default::default() }),
+            ),
+        ];
+        for (label, c) in toggles {
+            let cm = c.compile().unwrap_or_else(|e| panic!("{model} [{label}]: {e}"));
+            let rep = cm.report().verify.as_ref().expect("verify report");
+            assert_eq!(rep.passes.last().map(String::as_str), Some("plan"), "{model} [{label}]");
+        }
+    }
+}
+
+/// With the memory planner off there is no plan to verify; the report
+/// still records the graph-stage passes.
+#[test]
+fn planner_off_verifies_graph_stages_only() {
+    let cm = demo_compiler("demo-cnn", OptLevel::O2)
+        .memory_planner(false)
+        .compile()
+        .expect("planner-off compile");
+    let rep = cm.report().verify.as_ref().expect("verify report");
+    assert_eq!(rep.passes, ["rewrite", "prune", "fuse"]);
+    assert_eq!(rep.slots, 0);
+}
+
+// --------------------------------------------------------------------
+// Mutation negatives: corrupt a valid artifact, assert the typed
+// rejection.
+// --------------------------------------------------------------------
+
+/// A valid straight-line schedule + plan over demo-cnn, the substrate the
+/// plan mutations corrupt.
+fn straight_line() -> (Graph, Vec<usize>, Vec<bool>, MemoryPlan) {
+    let g = by_name("demo-cnn", 1);
+    let order = g.compute_nodes();
+    let materialize = vec![true; g.nodes.len()];
+    let plan = MemoryPlan::new(&g, &order, &materialize);
+    (g, order, materialize, plan)
+}
+
+/// Position of an adjacent (producer, consumer) pair in the schedule.
+fn adjacent_dep(g: &Graph, order: &[usize]) -> usize {
+    (0..order.len() - 1)
+        .find(|&i| g.node(order[i + 1]).inputs.contains(&order[i]))
+        .expect("demo-cnn has an adjacent producer/consumer pair")
+}
+
+#[test]
+fn mutated_order_is_rejected() {
+    let (g, mut order, materialize, plan) = straight_line();
+    let i = adjacent_dep(&g, &order);
+    order.swap(i, i + 1); // consumer now runs before its producer
+    let err = check_plan(&g, &order, &materialize, &plan, "plan").expect_err("broken schedule");
+    assert_eq!(err.code(), "InvalidPlan");
+    assert!(err.to_string().contains("not defined earlier"), "{err}");
+    assert!(err.to_string().contains("after pass 'plan'"), "{err}");
+}
+
+#[test]
+fn shrunken_slot_is_rejected() {
+    let (g, order, materialize, mut plan) = straight_line();
+    let id = order[0];
+    let s = plan.slot_of[id].expect("straight line materializes everything");
+    plan.slot_elems[s] = g.node(id).out_elems() as usize - 1;
+    let err = check_plan(&g, &order, &materialize, &plan, "plan").expect_err("undersized slot");
+    assert_eq!(err.code(), "InvalidPlan");
+    assert!(err.to_string().contains(&format!("slot {s}")), "{err}");
+}
+
+#[test]
+fn aliased_live_values_are_rejected() {
+    let (g, order, materialize, mut plan) = straight_line();
+    let i = adjacent_dep(&g, &order);
+    let (a, b) = (order[i], order[i + 1]);
+    let sa = plan.slot_of[a].unwrap();
+    // Force the consumer into its live input's slot — sized up so only
+    // the aliasing is wrong.
+    plan.slot_of[b] = Some(sa);
+    plan.slot_elems[sa] = plan.slot_elems[sa].max(g.node(b).out_elems() as usize);
+    let err = check_plan(&g, &order, &materialize, &plan, "plan").expect_err("aliased slot");
+    assert_eq!(err.code(), "InvalidPlan");
+    assert!(err.to_string().contains("aliases two live values"), "{err}");
+    assert!(err.to_string().contains(&format!("slot {sa}")), "{err}");
+}
+
+#[test]
+fn overlapping_arena_regions_are_rejected() {
+    let g = by_name("demo-cnn", 1);
+    let plan = fuse(&g, &FusionConfig::default());
+    let st = ExecState::new(&g, &plan);
+    let cfg = GemmConfig::default();
+    let (mut regions, total) = arena_regions(st.workspace_spec(), &cfg);
+    let nz: Vec<usize> =
+        (0..regions.len()).filter(|&i| regions[i].len > 0).take(2).collect();
+    let &[i, j] = &nz[..] else { panic!("need two non-empty regions") };
+    // Slide the second region back so it overlaps the first by one elem.
+    regions[j].start = regions[i].start + regions[i].len - 1;
+    let err = check_regions(&regions, total, "plan").expect_err("overlapping regions");
+    assert_eq!(err.code(), "InvalidPlan");
+    let msg = err.to_string();
+    assert!(msg.contains("overlap"), "{msg}");
+    assert!(msg.contains(&regions[i].name) && msg.contains(&regions[j].name), "{msg}");
+}
+
+#[test]
+fn out_of_bounds_region_is_rejected() {
+    let g = by_name("demo-cnn", 1);
+    let plan = no_fusion(&g);
+    let st = ExecState::new(&g, &plan);
+    let cfg = GemmConfig::default();
+    let (mut regions, total) = arena_regions(st.workspace_spec(), &cfg);
+    regions[0].start = total; // pushed past the end of the arena
+    let err = check_regions(&regions, total, "plan").expect_err("region out of bounds");
+    assert_eq!(err.code(), "InvalidPlan");
+    assert!(err.to_string().contains("exceeds the arena"), "{err}");
+}
+
+#[test]
+fn broken_fusion_order_is_rejected() {
+    // Accept every fusion candidate so dependent chains are guaranteed
+    // to land in one group, then swap a producer/consumer pair *inside*
+    // a group — exactly the flattened-order violation the PR-4 bug
+    // produced.
+    let cfg = FusionConfig { profile_threshold_bytes: 0, max_group_size: 32 };
+    let found = ["demo-transformer", "demo-cnn"].iter().find_map(|name| {
+        let g = by_name(name, 1);
+        let plan = fuse(&g, &cfg);
+        plan.groups
+            .iter()
+            .enumerate()
+            .find_map(|(gi, gr)| {
+                (0..gr.nodes.len().saturating_sub(1))
+                    .find(|&i| g.node(gr.nodes[i + 1]).inputs.contains(&gr.nodes[i]))
+                    .map(|i| (gi, i))
+            })
+            .map(|(gi, i)| (g, plan, gi, i))
+    });
+    let (g, mut plan, gi, i) = found.expect("a demo model fuses a dependent chain");
+    plan.groups[gi].nodes.swap(i, i + 1);
+    let err = check_fusion(&g, &plan, "fuse").expect_err("non-topological fused order");
+    assert_eq!(err.code(), "InvalidGraph");
+    assert!(err.to_string().contains("not topological"), "{err}");
+    assert!(err.to_string().contains("after pass 'fuse'"), "{err}");
+}
+
+/// The spec-level arena total must agree with the bytes the real
+/// `Workspace` would allocate, for a spec with every scratch class
+/// non-empty (demo-cnn has convs, so patches/gemm_out/wt are all live).
+#[test]
+fn arena_covers_every_scratch_class() {
+    let g = by_name("demo-cnn", 1);
+    let plan = fuse(&g, &FusionConfig::default());
+    let st = ExecState::new(&g, &plan);
+    let spec: &WorkspaceSpec = st.workspace_spec();
+    assert!(spec.patches_elems > 0 && spec.gemm_out_elems > 0 && spec.wt_elems > 0);
+    let cfg = GemmConfig::default();
+    let (regions, total) = arena_regions(spec, &cfg);
+    // slots + group×2 + patches + gemm_out + wt + one scratch band per thread
+    assert_eq!(regions.len(), spec.slot_elems.len() + 5 + cfg.resolved_threads());
+    assert_eq!(total as u64 * 4, spec.bytes(&cfg));
+}
