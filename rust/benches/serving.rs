@@ -1,0 +1,134 @@
+//! Multi-stream decode serving bench — the ISSUE-8 acceptance artifact.
+//!
+//! Drives a many-streams load through the `coordinator::StreamScheduler`
+//! (one client thread per stream, all submitted at once) over a bounded
+//! session pool on `demo-transformer-causal`, and reports:
+//!
+//! * **aggregate tokens/sec** across all concurrent streams, and
+//! * **per-stream completion latency** (submit → last token) p50/p99.
+//!
+//! Before timing, the scheduler's output is asserted bit-for-bit equal to
+//! single-stream `CompiledModel::generate` — the bench never measures a
+//! wrong answer. Writes `BENCH_serving.json` at the repo root (fields
+//! documented in EXPERIMENTS.md §Serving). `XGEN_BENCH_QUICK=1` shrinks
+//! the load for the CI smoke job.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use xgen::api::{CompiledModel, Compiler};
+use xgen::coordinator::{SchedConfig, StreamScheduler};
+use xgen::util::bench::Table;
+use xgen::util::json::Json;
+use xgen::util::stats::{percentile_sorted, Summary};
+
+fn causal() -> CompiledModel {
+    Compiler::for_model("demo-transformer-causal", 1)
+        .unwrap()
+        .random_weights(42)
+        .compile()
+        .unwrap()
+}
+
+/// Distinct valid prompts: rotations of a fixed in-vocab base.
+fn prompts(count: usize) -> Vec<Vec<u32>> {
+    let base: Vec<u32> = vec![7, 42, 3, 255, 0, 99];
+    (0..count)
+        .map(|i| {
+            let mut p = base.clone();
+            p.rotate_left(i % p.len());
+            p
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("XGEN_BENCH_QUICK").is_ok();
+    let (streams, tokens, samples) = if quick { (16, 4, 2) } else { (64, 8, 5) };
+    let pool = 4usize;
+    let prompt_len = 6usize;
+    let max_seq = prompt_len + tokens - 1;
+    let ps = prompts(streams);
+    let cfg = || SchedConfig { max_streams: pool, ..SchedConfig::default() };
+
+    // ---- correctness guard: scheduler == single-stream decode, bitwise --
+    let m = causal();
+    let expect: Vec<Vec<u32>> =
+        ps.iter().take(4).map(|p| m.generate(p, tokens).unwrap()).collect();
+    let sched = StreamScheduler::start_cfg(m, max_seq, cfg()).unwrap();
+    for (i, p) in ps.iter().take(4).enumerate() {
+        let (toks, err) = sched.submit(p.clone(), tokens).collect();
+        assert!(err.is_none(), "warm-up stream {i} failed: {err:?}");
+        assert_eq!(toks, expect[i], "scheduler must match single-stream decode bitwise");
+    }
+    let session_kv_bytes = sched.stats().session_kv_bytes;
+    drop(sched);
+
+    // ---- measured load: all streams submitted at once ------------------
+    let mut agg_tok_s: Vec<f64> = Vec::new();
+    let mut lat_ms: Vec<f64> = Vec::new();
+    for _ in 0..samples {
+        let sched = Arc::new(StreamScheduler::start_cfg(causal(), max_seq, cfg()).unwrap());
+        let t0 = Instant::now();
+        let clients: Vec<_> = ps
+            .iter()
+            .map(|p| {
+                let sched = sched.clone();
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    let t = Instant::now();
+                    let (toks, err) = sched.submit(p, tokens).collect();
+                    assert!(err.is_none(), "stream failed under load: {err:?}");
+                    (toks.len(), t.elapsed().as_secs_f64() * 1e3)
+                })
+            })
+            .collect();
+        let mut total = 0usize;
+        for c in clients {
+            let (n, ms) = c.join().unwrap();
+            total += n;
+            lat_ms.push(ms);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(total, streams * tokens, "every stream must deliver all its tokens");
+        agg_tok_s.push(total as f64 / wall.max(1e-9));
+    }
+    lat_ms.sort_by(f64::total_cmp);
+    let s = Summary::of(&agg_tok_s);
+    let p50 = percentile_sorted(&lat_ms, 0.50);
+    let p99 = percentile_sorted(&lat_ms, 0.99);
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["aggregate tok/s (mean)".into(), format!("{:.0}", s.mean)]);
+    t.row(vec!["aggregate tok/s (min..max)".into(), format!("{:.0}..{:.0}", s.min, s.max)]);
+    t.row(vec!["stream latency p50".into(), format!("{p50:.2} ms")]);
+    t.row(vec!["stream latency p99".into(), format!("{p99:.2} ms")]);
+    t.print(&format!(
+        "multi-stream decode serving (demo-transformer-causal, {streams} streams × {tokens} \
+         tokens, pool {pool}, kv/session {:.1} KB)",
+        session_kv_bytes as f64 / 1024.0
+    ));
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("model", Json::str("demo-transformer-causal")),
+        ("streams", Json::num(streams as f64)),
+        ("tokens_per_stream", Json::num(tokens as f64)),
+        ("pool_sessions", Json::num(pool as f64)),
+        ("session_kv_bytes", Json::num(session_kv_bytes as f64)),
+        ("aggregate_tok_per_s_mean", Json::num(s.mean)),
+        ("aggregate_tok_per_s_std", Json::num(s.std)),
+        ("stream_latency_p50_ms", Json::num(p50)),
+        ("stream_latency_p99_ms", Json::num(p99)),
+        ("samples", Json::num(samples as f64)),
+    ]);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_serving.json"
+    } else {
+        "BENCH_serving.json"
+    };
+    match std::fs::write(path, json.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -934,6 +934,25 @@ impl CompiledModel {
         DecodeSession::new(&self.graph, ws, max_seq)
     }
 
+    /// Bytes one decode session's K/V caches occupy at `max_seq`
+    /// positions — the planner's
+    /// [`WorkspaceSpec::kv_cache_elems`](crate::exec::WorkspaceSpec::kv_cache_elems)
+    /// sizing × 4 bytes/f32. This is the unit
+    /// [`SchedConfig::kv_budget_bytes`](crate::coordinator::scheduler::SchedConfig)
+    /// is counted in: a stream scheduler over this model can hold
+    /// `budget / kv_cache_bytes(max_seq)` resident sessions.
+    pub fn kv_cache_bytes(&self, max_seq: usize) -> u64 {
+        let elems = match &self.state {
+            Some(st) => st.workspace_spec().kv_cache_elems(max_seq),
+            None => crate::exec::attention_specs(&self.graph)
+                .iter()
+                .filter(|a| a.causal)
+                .map(|a| 2 * a.row_elems() * max_seq)
+                .sum(),
+        };
+        elems as u64 * 4
+    }
+
     /// Greedy generation convenience: prefill `prompt`, then emit `n`
     /// argmax tokens through a fresh [`DecodeSession`] sized to fit
     /// (the last generated token needs no extra position).

@@ -40,8 +40,15 @@
 //!
 //! The old pipeline driver ([`compile`]/[`Compiled`]) is a deprecated
 //! shim over [`crate::api::Compiler`]; it stays for one release.
+//!
+//! Multi-stream decode serving — many concurrent generations interleaved
+//! over a pool of sessions with per-stream fault isolation and
+//! KV-pressure eviction — lives in [`scheduler`] (ISSUE-8).
 
+pub mod scheduler;
 pub mod service;
+
+pub use scheduler::{SchedConfig, SchedStats, StreamHandle, StreamScheduler, SubmitOpts};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -117,6 +124,77 @@ pub fn compile(
 /// acceptable for observability data, fatal for nothing).
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Retry-after estimate attached to an [`XgenError::Overloaded`] shed:
+/// observed queue depth × the recent mean service time, floored at 1 ms
+/// (when nothing has completed yet there is no observation to extrapolate
+/// from, but "come back immediately" would just shed again).
+fn retry_after_ms(depth: usize, mean_service_ms: f64) -> u64 {
+    let est = depth.max(1) as f64 * mean_service_ms;
+    (est.ceil() as u64).max(1)
+}
+
+/// Client-side backoff policy for the `*_with_retry` submission helpers:
+/// on every [`XgenError::Overloaded`] shed, sleep
+/// `min(max, max(base, server hint) × 2^attempt) × jitter` (jitter
+/// uniform in `[0.5, 1.5)`, seeded — deterministic for tests) and try
+/// again, up to `attempts` total attempts. Any error other than
+/// `Overloaded` aborts the loop immediately; exhausting the budget yields
+/// the typed [`XgenError::RetryExhausted`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total submission attempts (including the first). 0 is treated as 1.
+    pub attempts: usize,
+    /// First backoff, doubled per subsequent attempt (the server's
+    /// `retry_after_ms` hint overrides it when larger).
+    pub base: Duration,
+    /// Upper bound on a single backoff sleep (pre-jitter).
+    pub max: Duration,
+    /// Jitter seed — fixed default so tests are deterministic; vary per
+    /// client in production to decorrelate retry storms.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 5,
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(100),
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Shared engine of the `*_with_retry` helpers: run `attempt` under
+/// `policy`, sleeping between [`XgenError::Overloaded`] sheds.
+fn retry_loop<T>(
+    policy: &RetryPolicy,
+    mut attempt: impl FnMut() -> Result<T, XgenError>,
+) -> Result<T, XgenError> {
+    let attempts = policy.attempts.max(1);
+    let mut rng = crate::util::rng::Rng::new(policy.seed);
+    let mut last_depth = 0usize;
+    for k in 0..attempts {
+        match attempt() {
+            Ok(v) => return Ok(v),
+            Err(XgenError::Overloaded { depth, retry_after_ms, .. }) => {
+                last_depth = depth;
+                if k + 1 == attempts {
+                    break;
+                }
+                let hint = retry_after_ms.max(policy.base.as_millis() as u64);
+                let backoff = hint.saturating_mul(1u64 << k.min(20)).min(policy.max.as_millis() as u64);
+                let jitter = 0.5 + rng.f64();
+                std::thread::sleep(Duration::from_micros(
+                    (backoff as f64 * jitter * 1e3) as u64,
+                ));
+            }
+            Err(other) => return Err(other),
+        }
+    }
+    Err(XgenError::RetryExhausted { attempts, last_depth })
 }
 
 /// A single inference request: input tensor + response channel.
@@ -417,8 +495,14 @@ impl Server {
         let d = self.depth.fetch_add(1, Ordering::SeqCst);
         if d >= self.cap {
             self.depth.fetch_sub(1, Ordering::SeqCst);
-            lock(&self.stats).shed += 1;
-            return Err(XgenError::Overloaded { depth: d, capacity: self.cap });
+            let mut st = lock(&self.stats);
+            st.shed += 1;
+            let mean_ms = st.summary().map_or(0.0, |s| s.mean);
+            return Err(XgenError::Overloaded {
+                depth: d,
+                capacity: self.cap,
+                retry_after_ms: retry_after_ms(d, mean_ms),
+            });
         }
         let (reply, rx) = mpsc::channel();
         let now = Instant::now();
@@ -464,6 +548,19 @@ impl Server {
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, XgenError>>, XgenError> {
         self.enqueue(input, self.default_deadline)
+    }
+
+    /// [`Server::try_submit`] with client-side backoff: on an
+    /// [`XgenError::Overloaded`] shed, sleep per `policy` (starting from
+    /// the server's retry-after hint) and resubmit, up to
+    /// `policy.attempts` total attempts; exhausting them yields the typed
+    /// [`XgenError::RetryExhausted`]. Non-overload errors abort at once.
+    pub fn submit_with_retry(
+        &self,
+        input: Vec<f32>,
+        policy: &RetryPolicy,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, XgenError>>, XgenError> {
+        retry_loop(policy, || self.enqueue(input.clone(), self.default_deadline))
     }
 
     /// Blocking convenience call.
@@ -631,6 +728,15 @@ pub struct DecodeStats {
     pub deadline_exceeded: usize,
     /// Session panics caught; the session is rebuilt after each.
     pub worker_panics: usize,
+    /// Sessions rebuilt from the model after a caught panic. Every served
+    /// request ends in **exactly one** recovery action — rebuild (panic)
+    /// or reset (everything else) — pinned by the interleaved-failure
+    /// test in `tests/robustness.rs`.
+    pub session_rebuilds: usize,
+    /// Total client-visible time (enqueue → stream end) over counted
+    /// requests — `service_ms / requests` feeds the retry-after hint on
+    /// [`XgenError::Overloaded`] sheds.
+    pub service_ms: f64,
 }
 
 impl DecodeStats {
@@ -648,6 +754,121 @@ impl DecodeStats {
             self.worker_panics
         )
     }
+}
+
+/// The single recovery action a served request leaves the decode session
+/// owing: panics require a rebuild (buffers may be mid-move), everything
+/// else a reset. Unified here so both failure kinds take exactly one
+/// recovery step — the old loop reset at the top of *every* request and
+/// additionally rebuilt after panics, which made the recovery count
+/// depend on the failure kind.
+enum Teardown {
+    Reset,
+    Rebuild,
+}
+
+/// Serve one generation request on a clean session: prefill, stream
+/// argmax tokens, guard every logits row for finiteness, honor the
+/// deadline between steps. Returns the one [`Teardown`] action owed.
+fn serve_decode_request(
+    session: &mut crate::exec::DecodeSession<'_>,
+    logits: &mut Vec<f32>,
+    req: &GenRequest,
+    stats: &Mutex<DecodeStats>,
+) -> Teardown {
+    logits.clear();
+    // Prefill under panic isolation. A failed prefill ran nothing of the
+    // generation, so it is not counted in `requests`.
+    let prefill = catch_unwind(AssertUnwindSafe(|| {
+        session.prefill(&req.prompt).map(|l| {
+            logits.clear();
+            logits.extend_from_slice(l);
+        })
+    }));
+    match prefill {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => {
+            lock(stats).errors += 1;
+            let _ = req.reply.send(Err(XgenError::classify(&e)));
+            return Teardown::Reset;
+        }
+        Err(payload) => {
+            let mut st = lock(stats);
+            st.worker_panics += 1;
+            st.errors += 1;
+            drop(st);
+            let _ = req
+                .reply
+                .send(Err(XgenError::WorkerPanic { detail: panic_detail(payload.as_ref()) }));
+            return Teardown::Rebuild;
+        }
+    }
+    if !logits.iter().all(|v| v.is_finite()) {
+        lock(stats).errors += 1;
+        let _ = req.reply.send(Err(XgenError::NonFinite { at: "prefill logits".to_string() }));
+        return Teardown::Reset;
+    }
+    let mut sent = 0usize;
+    let mut teardown = Teardown::Reset;
+    for i in 0..req.n {
+        // Deadline between steps: the partial stream stands.
+        if let Some(d) = req.deadline {
+            if Instant::now() >= d {
+                let mut st = lock(stats);
+                st.deadline_exceeded += 1;
+                let elapsed_ms = req.enqueued.elapsed().as_millis() as u64;
+                if req.reply.send(Err(XgenError::DeadlineExceeded { elapsed_ms })).is_err() {
+                    st.cancelled += 1;
+                }
+                break;
+            }
+        }
+        let next = crate::exec::decode::argmax(logits) as u32;
+        if req.reply.send(Ok(next)).is_err() {
+            lock(stats).cancelled += 1;
+            break; // client hung up mid-stream
+        }
+        sent += 1;
+        if i + 1 < req.n {
+            let step = catch_unwind(AssertUnwindSafe(|| {
+                session.step(next).map(|l| {
+                    logits.clear();
+                    logits.extend_from_slice(l);
+                })
+            }));
+            match step {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    lock(stats).errors += 1;
+                    let _ = req.reply.send(Err(XgenError::classify(&e)));
+                    break;
+                }
+                Err(payload) => {
+                    let mut st = lock(stats);
+                    st.worker_panics += 1;
+                    st.errors += 1;
+                    drop(st);
+                    let _ = req.reply.send(Err(XgenError::WorkerPanic {
+                        detail: panic_detail(payload.as_ref()),
+                    }));
+                    teardown = Teardown::Rebuild;
+                    break;
+                }
+            }
+            if !logits.iter().all(|v| v.is_finite()) {
+                lock(stats).errors += 1;
+                let _ = req
+                    .reply
+                    .send(Err(XgenError::NonFinite { at: "step logits".to_string() }));
+                break;
+            }
+        }
+    }
+    let mut st = lock(stats);
+    st.requests += 1;
+    st.tokens += sent;
+    st.service_ms += req.enqueued.elapsed().as_secs_f64() * 1e3;
+    teardown
 }
 
 /// Token-streaming generation server: one thread owns a compiled *causal
@@ -711,7 +932,8 @@ impl DecodeServer {
             while let Ok(req) = rx.recv() {
                 depth2.fetch_sub(1, Ordering::SeqCst);
                 // Expired before we even started: shed without touching
-                // the session. Not counted in `requests` (nothing ran).
+                // the session. Not counted in `requests` (nothing ran),
+                // and no recovery needed (the session was never dirtied).
                 if let Some(d) = req.deadline {
                     if Instant::now() >= d {
                         let mut st = lock(&stats2);
@@ -727,111 +949,23 @@ impl DecodeServer {
                         continue;
                     }
                 }
-                session.reset();
-                logits.clear();
-                // Prefill under panic isolation. On a caught panic the
-                // session buffers may be mid-move — rebuild before the
-                // next request.
-                let prefill = catch_unwind(AssertUnwindSafe(|| {
-                    session.prefill(&req.prompt).map(|l| {
-                        logits.clear();
-                        logits.extend_from_slice(l);
-                    })
-                }));
-                match prefill {
-                    Ok(Ok(())) => {}
-                    Ok(Err(e)) => {
-                        lock(&stats2).errors += 1;
-                        let _ = req.reply.send(Err(XgenError::classify(&e)));
-                        continue;
-                    }
-                    Err(payload) => {
-                        let mut st = lock(&stats2);
-                        st.worker_panics += 1;
-                        st.errors += 1;
-                        drop(st);
-                        let _ = req.reply.send(Err(XgenError::WorkerPanic {
-                            detail: panic_detail(payload.as_ref()),
-                        }));
-                        match model.decode_session(max_seq) {
-                            Ok(s) => session = s,
-                            Err(_) => return, // cannot recover: stop serving
+                // Serve, then recover **exactly once** — rebuild after a
+                // caught panic (the session buffers may be mid-move),
+                // reset after everything else (success included; a typed
+                // step error leaves `len` and the K/V lengths at their
+                // pre-call values, so reset is sufficient). The loop
+                // invariant is that the session is clean at the top of
+                // every request.
+                match serve_decode_request(&mut session, &mut logits, &req, &stats2) {
+                    Teardown::Reset => session.reset(),
+                    Teardown::Rebuild => match model.decode_session(max_seq) {
+                        Ok(s) => {
+                            lock(&stats2).session_rebuilds += 1;
+                            session = s;
                         }
-                        continue;
-                    }
+                        Err(_) => return, // cannot recover: stop serving
+                    },
                 }
-                if !logits.iter().all(|v| v.is_finite()) {
-                    lock(&stats2).errors += 1;
-                    let _ = req
-                        .reply
-                        .send(Err(XgenError::NonFinite { at: "prefill logits".to_string() }));
-                    continue;
-                }
-                let mut sent = 0usize;
-                for i in 0..req.n {
-                    // Deadline between steps: the partial stream stands.
-                    if let Some(d) = req.deadline {
-                        if Instant::now() >= d {
-                            let mut st = lock(&stats2);
-                            st.deadline_exceeded += 1;
-                            let elapsed_ms = req.enqueued.elapsed().as_millis() as u64;
-                            if req
-                                .reply
-                                .send(Err(XgenError::DeadlineExceeded { elapsed_ms }))
-                                .is_err()
-                            {
-                                st.cancelled += 1;
-                            }
-                            break;
-                        }
-                    }
-                    let next = crate::exec::decode::argmax(&logits) as u32;
-                    if req.reply.send(Ok(next)).is_err() {
-                        lock(&stats2).cancelled += 1;
-                        break; // client hung up mid-stream
-                    }
-                    sent += 1;
-                    if i + 1 < req.n {
-                        let step = catch_unwind(AssertUnwindSafe(|| {
-                            session.step(next).map(|l| {
-                                logits.clear();
-                                logits.extend_from_slice(l);
-                            })
-                        }));
-                        match step {
-                            Ok(Ok(())) => {}
-                            Ok(Err(e)) => {
-                                lock(&stats2).errors += 1;
-                                let _ = req.reply.send(Err(XgenError::classify(&e)));
-                                break;
-                            }
-                            Err(payload) => {
-                                let mut st = lock(&stats2);
-                                st.worker_panics += 1;
-                                st.errors += 1;
-                                drop(st);
-                                let _ = req.reply.send(Err(XgenError::WorkerPanic {
-                                    detail: panic_detail(payload.as_ref()),
-                                }));
-                                match model.decode_session(max_seq) {
-                                    Ok(s) => session = s,
-                                    Err(_) => return, // cannot recover: stop serving
-                                }
-                                break;
-                            }
-                        }
-                        if !logits.iter().all(|v| v.is_finite()) {
-                            lock(&stats2).errors += 1;
-                            let _ = req.reply.send(Err(XgenError::NonFinite {
-                                at: "step logits".to_string(),
-                            }));
-                            break;
-                        }
-                    }
-                }
-                let mut st = lock(&stats2);
-                st.requests += 1;
-                st.tokens += sent;
             }
         });
         ready_rx
@@ -848,22 +982,30 @@ impl DecodeServer {
         })
     }
 
-    /// Shared admission path: shed past the cap, recover the reply sender
-    /// on a dead server so the stream still ends with a typed error.
-    fn stream_opt(
+    /// Typed admission path: shed past the cap with a retry-after hint
+    /// (observed depth × recent mean request time), recover the reply
+    /// sender on a dead server so the stream still ends with a typed
+    /// error.
+    fn enqueue(
         &self,
         prompt: Vec<u32>,
         n: usize,
         deadline: Option<Duration>,
-    ) -> mpsc::Receiver<Result<u32, XgenError>> {
-        let (reply, rx) = mpsc::channel();
+    ) -> Result<mpsc::Receiver<Result<u32, XgenError>>, XgenError> {
         let d = self.depth.fetch_add(1, Ordering::SeqCst);
         if d >= self.cap {
             self.depth.fetch_sub(1, Ordering::SeqCst);
-            lock(&self.stats).shed += 1;
-            let _ = reply.send(Err(XgenError::Overloaded { depth: d, capacity: self.cap }));
-            return rx;
+            let mut st = lock(&self.stats);
+            st.shed += 1;
+            let mean_ms =
+                if st.requests == 0 { 0.0 } else { st.service_ms / st.requests as f64 };
+            return Err(XgenError::Overloaded {
+                depth: d,
+                capacity: self.cap,
+                retry_after_ms: retry_after_ms(d, mean_ms),
+            });
         }
+        let (reply, rx) = mpsc::channel();
         let now = Instant::now();
         let req = GenRequest {
             prompt,
@@ -876,7 +1018,50 @@ impl DecodeServer {
             self.depth.fetch_sub(1, Ordering::SeqCst);
             let _ = req.reply.send(Err(XgenError::ServerGone));
         }
-        rx
+        Ok(rx)
+    }
+
+    /// Shared admission path of the infallible `generate_*` surface: a
+    /// shed becomes the first (and only) item on the stream.
+    fn stream_opt(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<Result<u32, XgenError>> {
+        match self.enqueue(prompt, n, deadline) {
+            Ok(rx) => rx,
+            Err(e) => {
+                let (reply, rx) = mpsc::channel();
+                let _ = reply.send(Err(e));
+                rx
+            }
+        }
+    }
+
+    /// Typed-admission variant of [`DecodeServer::generate_stream`]: a
+    /// full queue is an immediate `Err(Overloaded)` instead of an error
+    /// on the receiver.
+    pub fn try_generate_stream(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+    ) -> Result<mpsc::Receiver<Result<u32, XgenError>>, XgenError> {
+        self.enqueue(prompt, n, self.default_deadline)
+    }
+
+    /// [`DecodeServer::try_generate_stream`] with client-side backoff: on
+    /// an [`XgenError::Overloaded`] shed, sleep per `policy` (seeded by
+    /// the server's retry-after hint) and resubmit, up to
+    /// `policy.attempts` total attempts; exhausting them yields the typed
+    /// [`XgenError::RetryExhausted`]. Non-overload errors abort at once.
+    pub fn generate_with_retry(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+        policy: &RetryPolicy,
+    ) -> Result<mpsc::Receiver<Result<u32, XgenError>>, XgenError> {
+        retry_loop(policy, || self.enqueue(prompt.clone(), n, self.default_deadline))
     }
 
     /// Enqueue a generation request; tokens stream over the returned

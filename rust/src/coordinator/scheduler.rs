@@ -1,0 +1,814 @@
+//! Multi-stream decode serving: the [`StreamScheduler`] (ISSUE-8
+//! tentpole) multiplexes many concurrent greedy generations over a pool
+//! of [`DecodeSession`]s for one [`CompiledModel`].
+//!
+//! ## Model
+//!
+//! Every submitted generation is a **stream** walking the state machine
+//!
+//! ```text
+//! Queued → Prefilling → Decoding → {Finished, Evicted, Failed, Cancelled}
+//! ```
+//!
+//! * **Queued** — admitted past the [`SchedConfig::queue_cap`] bound
+//!   (beyond it submissions are shed with [`XgenError::Overloaded`]
+//!   carrying the observed depth and a retry-after hint), waiting for a
+//!   resident session.
+//! * **Prefilling** — bound to a session slot; the next scheduled unit
+//!   runs the prompt (or re-prefills a checkpoint) and emits the first
+//!   token.
+//! * **Decoding** — one `step()` per scheduling round, strict round-robin
+//!   over all resident streams, so no stream starves behind a long one.
+//! * **Finished / Evicted / Failed / Cancelled** — terminal; the slot
+//!   returns to the pool. *Evicted* means the per-stream deadline expired
+//!   mid-generation: the tokens already streamed stand and the stream
+//!   ends with a typed [`XgenError::DeadlineExceeded`].
+//!
+//! ## Fault isolation
+//!
+//! Each unit of work runs under `catch_unwind`: a panicking stream is
+//! answered with [`XgenError::WorkerPanic`] and **its** session is
+//! rebuilt from the model, a NaN-producing stream is answered with
+//! [`XgenError::NonFinite`], a typed step error flows through
+//! [`XgenError::classify`] — and in every case all other in-flight
+//! streams continue untouched, producing bitwise-identical output to a
+//! fault-free run (pinned by the chaos matrix in `tests/streams.rs`).
+//!
+//! ## KV-memory pressure
+//!
+//! The resident-session pool is bounded by
+//! [`SchedConfig::kv_budget_bytes`], counted in units of
+//! [`CompiledModel::kv_cache_bytes`] (the planner's
+//! `WorkspaceSpec::kv_cache_elems` sizing). When a higher-priority
+//! submission would exceed the budget, the scheduler **checkpoints** the
+//! lowest-priority resident stream — among equals, the one with the
+//! least progress, which is the cheapest to re-prefill (no resident
+//! stream is ever idle: all of them step every round). A checkpoint
+//! keeps the prompt + generated tokens ([`DecodeSession::snapshot`])
+//! and drops the K/V memory; on re-admission the session is restored by
+//! re-prefilling ([`DecodeSession::restore`]), which is bitwise-identical
+//! to never having been evicted because prefill *is* N × `step()`.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::api::CompiledModel;
+use crate::error::{panic_detail, XgenError};
+use crate::exec::{DecodeSession, SessionSnapshot};
+
+use super::{lock, retry_after_ms, retry_loop, RetryPolicy};
+
+/// Stream-scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Hard cap on resident sessions (concurrently decoding streams).
+    /// [`SchedConfig::kv_budget_bytes`] can only tighten it.
+    pub max_streams: usize,
+    /// Bound on *live* streams (queued + resident); past it, submissions
+    /// are shed with [`XgenError::Overloaded`].
+    pub queue_cap: usize,
+    /// K/V-memory budget in bytes. The pool holds at most
+    /// `budget / CompiledModel::kv_cache_bytes(max_seq)` sessions; a
+    /// budget smaller than one session fails `start_cfg` eagerly.
+    /// `None` leaves [`SchedConfig::max_streams`] in charge.
+    pub kv_budget_bytes: Option<u64>,
+    /// Deadline applied to [`StreamScheduler::submit`] streams (none by
+    /// default). Checked by the watchdog before every unit of work: an
+    /// expired stream keeps its streamed tokens and ends with
+    /// [`XgenError::DeadlineExceeded`].
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            max_streams: 8,
+            queue_cap: 1024,
+            kv_budget_bytes: None,
+            default_deadline: None,
+        }
+    }
+}
+
+/// Per-submission options.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// Higher wins a resident slot; a strictly higher-priority waiter
+    /// preempts (checkpoints) the lowest-priority resident stream. Equal
+    /// priorities never preempt each other — FIFO, run-to-completion.
+    pub priority: u8,
+    /// Per-stream deadline (overrides [`SchedConfig::default_deadline`]).
+    pub deadline: Option<Duration>,
+}
+
+/// Observable counters of a [`StreamScheduler`]. Terminal states are
+/// disjoint: every submitted stream ends in exactly one of `finished`,
+/// `failed`, `cancelled`, or `deadline_evicted` (shed submissions were
+/// never live).
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    pub submitted: usize,
+    pub finished: usize,
+    /// Typed step failures, non-finite logits, and caught panics.
+    pub failed: usize,
+    /// Streams whose client dropped the receiver mid-generation.
+    pub cancelled: usize,
+    /// Submissions refused at the admission bound.
+    pub shed: usize,
+    /// Streams evicted by the deadline watchdog (queued or resident);
+    /// their partial output stands.
+    pub deadline_evicted: usize,
+    /// KV-pressure checkpoints (stream survived, K/V dropped).
+    pub checkpoints: usize,
+    /// Checkpointed streams re-admitted and restored by re-prefill.
+    pub resumes: usize,
+    /// Tokens delivered across all streams.
+    pub tokens: usize,
+    /// Per-stream panics caught by the unit `catch_unwind`.
+    pub worker_panics: usize,
+    /// Sessions rebuilt from the model after a caught panic.
+    pub session_rebuilds: usize,
+    /// Resident-session pool size (after applying the KV budget).
+    pub pool_sessions: usize,
+    /// K/V bytes one session holds at `max_seq` — the budget unit.
+    pub session_kv_bytes: u64,
+    /// High-water mark of concurrently resident streams.
+    pub max_active: usize,
+    /// Session slots unaccounted for at drain exit; 0 unless the
+    /// scheduler aborted. Pinned by the drain-on-drop test.
+    pub leaked_sessions: usize,
+    /// Total client-visible stream time (submit → terminal) — feeds the
+    /// retry-after hint on sheds.
+    pub service_ms: f64,
+}
+
+impl SchedStats {
+    /// One-line operator-facing summary including the fault counters.
+    pub fn report(&self) -> String {
+        format!(
+            "{} streams ({} finished, {} failed, {} cancelled, {} evicted), {} tokens; \
+             shed {}, checkpoints {}, resumes {}, panics {}, rebuilds {}; \
+             pool {} × {} KV bytes, max active {}",
+            self.submitted,
+            self.finished,
+            self.failed,
+            self.cancelled,
+            self.deadline_evicted,
+            self.tokens,
+            self.shed,
+            self.checkpoints,
+            self.resumes,
+            self.worker_panics,
+            self.session_rebuilds,
+            self.pool_sessions,
+            self.session_kv_bytes,
+            self.max_active
+        )
+    }
+}
+
+/// One submitted generation, as it crosses the channel.
+struct StreamRequest {
+    prompt: Vec<u32>,
+    n: usize,
+    priority: u8,
+    reply: mpsc::Sender<Result<u32, XgenError>>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+/// Scheduler-side stream state. `slot` indexes the session pool while
+/// resident; `snapshot` is set while checkpointed under KV pressure.
+struct Stream {
+    /// Admission ordinal in arrival order — the `stream` coordinate the
+    /// fault hooks target.
+    id: u64,
+    prompt: Vec<u32>,
+    n: usize,
+    priority: u8,
+    reply: mpsc::Sender<Result<u32, XgenError>>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    /// Tokens delivered so far; also the step ordinal of the next unit
+    /// (0 = prefill), independent of eviction history.
+    emitted: usize,
+    /// Last delivered token, not yet fed back (valid when `emitted > 0`).
+    pending: u32,
+    snapshot: Option<SessionSnapshot>,
+    slot: usize,
+}
+
+/// Client handle to one stream: tokens arrive one by one; an `Err` item
+/// ends the stream (a deadline eviction still delivers the tokens decoded
+/// before it).
+pub struct StreamHandle {
+    rx: mpsc::Receiver<Result<u32, XgenError>>,
+}
+
+impl StreamHandle {
+    /// Next stream item; `None` when the stream is complete.
+    pub fn recv(&self) -> Option<Result<u32, XgenError>> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream: the tokens delivered plus the terminating error,
+    /// if any.
+    pub fn collect(self) -> (Vec<u32>, Option<XgenError>) {
+        let mut out = Vec::new();
+        for item in &self.rx {
+            match item {
+                Ok(t) => out.push(t),
+                Err(e) => return (out, Some(e)),
+            }
+        }
+        (out, None)
+    }
+
+    /// The raw receiver, for `select`-style consumers.
+    pub fn into_receiver(self) -> mpsc::Receiver<Result<u32, XgenError>> {
+        self.rx
+    }
+}
+
+/// How a unit of work left its stream.
+enum UnitEnd {
+    /// Stream stays resident.
+    Continue,
+    /// Stream went terminal (already removed, slot already freed).
+    Done,
+    /// Session rebuild failed — the scheduler cannot continue.
+    Fatal,
+}
+
+/// Terminal state counters.
+enum Terminal {
+    Finished,
+    Failed,
+    Cancelled,
+    DeadlineEvicted,
+}
+
+/// The scheduler thread's working set. Sessions borrow the model, so the
+/// whole engine lives inside the thread that owns the [`CompiledModel`].
+struct Engine<'m> {
+    model: &'m CompiledModel,
+    max_seq: usize,
+    pool_cap: usize,
+    sessions: Vec<DecodeSession<'m>>,
+    /// Free slots (indices into `sessions`). Invariant:
+    /// `free.len() + active.len() == sessions.len()`.
+    free: Vec<usize>,
+    waiting: VecDeque<Stream>,
+    active: Vec<Stream>,
+    next_id: u64,
+    /// Reusable logits buffer (one row — the scheduler is
+    /// allocation-free per token after warm-up, like the sessions).
+    logits: Vec<f32>,
+    depth: Arc<AtomicUsize>,
+    stats: Arc<Mutex<SchedStats>>,
+}
+
+impl<'m> Engine<'m> {
+    fn enroll(&mut self, r: StreamRequest) {
+        let s = Stream {
+            id: self.next_id,
+            prompt: r.prompt,
+            n: r.n,
+            priority: r.priority,
+            reply: r.reply,
+            enqueued: r.enqueued,
+            deadline: r.deadline,
+            emitted: 0,
+            pending: 0,
+            snapshot: None,
+            slot: usize::MAX,
+        };
+        self.next_id += 1;
+        lock(&self.stats).submitted += 1;
+        self.waiting.push_back(s);
+    }
+
+    /// A stream went terminal: close out its accounting. Dropping the
+    /// reply sender is what ends the client's stream.
+    fn finish(&mut self, s: Stream, t: Terminal) {
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        let mut st = lock(&self.stats);
+        st.service_ms += s.enqueued.elapsed().as_secs_f64() * 1e3;
+        match t {
+            Terminal::Finished => st.finished += 1,
+            Terminal::Failed => st.failed += 1,
+            Terminal::Cancelled => st.cancelled += 1,
+            Terminal::DeadlineEvicted => st.deadline_evicted += 1,
+        }
+    }
+
+    /// Return a slot to the pool with a clean session.
+    fn release_slot(&mut self, slot: usize) {
+        self.sessions[slot].reset();
+        self.free.push(slot);
+    }
+
+    /// Queued streams whose deadline expired never get a slot: deliver
+    /// the typed eviction (any checkpointed partial output stands).
+    fn shed_expired_waiters(&mut self) {
+        let now = Instant::now();
+        let mut k = 0;
+        while k < self.waiting.len() {
+            if self.waiting[k].deadline.is_some_and(|d| now >= d) {
+                if let Some(s) = self.waiting.remove(k) {
+                    let elapsed_ms = s.enqueued.elapsed().as_millis() as u64;
+                    let _ = s.reply.send(Err(XgenError::DeadlineExceeded { elapsed_ms }));
+                    self.finish(s, Terminal::DeadlineEvicted);
+                }
+            } else {
+                k += 1;
+            }
+        }
+    }
+
+    /// Index of the best waiter: highest priority, FIFO among equals.
+    fn best_waiter(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, s) in self.waiting.iter().enumerate() {
+            match best {
+                Some(b) if s.priority <= self.waiting[b].priority => {}
+                _ => best = Some(i),
+            }
+        }
+        best
+    }
+
+    /// Bind waiters to free slots (building sessions lazily up to the
+    /// pool cap), best-priority first.
+    fn admit(&mut self) {
+        while self.active.len() < self.pool_cap {
+            let Some(w) = self.best_waiter() else { return };
+            let slot = if let Some(slot) = self.free.pop() {
+                slot
+            } else if self.sessions.len() < self.pool_cap {
+                match self.model.decode_session(self.max_seq) {
+                    Ok(sess) => {
+                        self.sessions.push(sess);
+                        self.sessions.len() - 1
+                    }
+                    Err(e) => {
+                        // This stream alone fails; the pool is unchanged.
+                        if let Some(s) = self.waiting.remove(w) {
+                            let _ = s.reply.send(Err(XgenError::classify(&e)));
+                            self.finish(s, Terminal::Failed);
+                        }
+                        continue;
+                    }
+                }
+            } else {
+                return; // pool exhausted — preemption may still free a slot
+            };
+            match self.waiting.remove(w) {
+                Some(mut s) => {
+                    s.slot = slot;
+                    self.active.push(s);
+                }
+                None => self.free.push(slot), // unreachable: w is in range
+            }
+        }
+    }
+
+    /// KV-pressure preemption: when a waiter outranks the lowest-priority
+    /// resident stream, checkpoint that stream (tokens kept, K/V
+    /// dropped) and recycle its slot. Strictly-greater priority only, so
+    /// equal-priority streams never thrash, and each preemption raises
+    /// the resident priority multiset — the admit/preempt loop
+    /// terminates. Among equal-priority victims the least-progressed
+    /// stream goes (cheapest re-prefill; no resident stream is idle —
+    /// they all step every round).
+    fn preempt_one(&mut self) -> bool {
+        let Some(w) = self.best_waiter() else { return false };
+        let Some(v) = self
+            .active
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| (s.priority, s.emitted))
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        if self.waiting[w].priority <= self.active[v].priority {
+            return false;
+        }
+        let mut s = self.active.remove(v);
+        if s.emitted > 0 {
+            s.snapshot = Some(self.sessions[s.slot].snapshot());
+        }
+        self.release_slot(s.slot);
+        lock(&self.stats).checkpoints += 1;
+        self.waiting.push_back(s);
+        true
+    }
+
+    /// Remove the resident stream at `i`, freeing its slot.
+    fn retire(&mut self, i: usize) -> Stream {
+        let s = self.active.remove(i);
+        self.release_slot(s.slot);
+        s
+    }
+
+    /// One unit of work for the resident stream at `i`: prefill, restore
+    /// + step, or step — under per-stream panic isolation.
+    fn run_unit(&mut self, i: usize) -> UnitEnd {
+        // Zero-token streams finish without touching their session.
+        if self.active[i].emitted >= self.active[i].n {
+            let s = self.retire(i);
+            self.finish(s, Terminal::Finished);
+            return UnitEnd::Done;
+        }
+        // Watchdog: a stream past its deadline — stalled, preempted too
+        // long, or just slow — is evicted mid-generation. The tokens
+        // already delivered stand.
+        if self.active[i].deadline.is_some_and(|d| Instant::now() >= d) {
+            let s = self.retire(i);
+            let elapsed_ms = s.enqueued.elapsed().as_millis() as u64;
+            let _ = s.reply.send(Err(XgenError::DeadlineExceeded { elapsed_ms }));
+            self.finish(s, Terminal::DeadlineEvicted);
+            return UnitEnd::Done;
+        }
+        let slot = self.active[i].slot;
+        let run = {
+            // Split-borrow: the unit reads the stream and writes the
+            // session + logits buffer; the containers are disjoint.
+            let Engine { sessions, active, logits, .. } = self;
+            let s = &active[i];
+            let sess = &mut sessions[slot];
+            // The unit returns whether an injected fault demands NaN
+            // logits (always false without the fault-injection feature).
+            catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<bool> {
+                #[cfg(feature = "fault-injection")]
+                let nan = {
+                    use crate::runtime::fault::{on_stream_step, StreamFaultEffect};
+                    match on_stream_step(s.id, s.emitted as u64) {
+                        Ok(StreamFaultEffect::Nan) => true,
+                        Ok(StreamFaultEffect::None) => false,
+                        Err(m) => return Err(anyhow::anyhow!(m)),
+                    }
+                };
+                #[cfg(not(feature = "fault-injection"))]
+                let nan = false;
+                let l = if s.emitted == 0 {
+                    sess.prefill(&s.prompt)?
+                } else if let Some(snap) = &s.snapshot {
+                    // Re-admission after a KV-pressure checkpoint:
+                    // re-prefill the history, then run the pending step —
+                    // bitwise-identical to never having been evicted.
+                    sess.restore(snap)?;
+                    sess.step(s.pending)?
+                } else {
+                    sess.step(s.pending)?
+                };
+                logits.clear();
+                logits.extend_from_slice(l);
+                Ok(nan)
+            }))
+        };
+        match run {
+            Err(payload) => {
+                // Panic: typed reply, rebuild THIS stream's session from
+                // the model; every other resident stream is untouched.
+                let s = self.active.remove(i);
+                let _ = s.reply.send(Err(XgenError::WorkerPanic {
+                    detail: panic_detail(payload.as_ref()),
+                }));
+                lock(&self.stats).worker_panics += 1;
+                match self.model.decode_session(self.max_seq) {
+                    Ok(fresh) => {
+                        self.sessions[slot] = fresh;
+                        self.free.push(slot);
+                        lock(&self.stats).session_rebuilds += 1;
+                        self.finish(s, Terminal::Failed);
+                        UnitEnd::Done
+                    }
+                    Err(_) => {
+                        // The model can no longer build sessions; callers
+                        // get typed errors and the scheduler stops.
+                        self.finish(s, Terminal::Failed);
+                        UnitEnd::Fatal
+                    }
+                }
+            }
+            Ok(Err(e)) => {
+                // Typed failure: the session did not advance (step errors
+                // leave `len` and the K/V lengths untouched) — reset is
+                // sufficient.
+                let s = self.retire(i);
+                let _ = s.reply.send(Err(XgenError::classify(&e)));
+                self.finish(s, Terminal::Failed);
+                UnitEnd::Done
+            }
+            Ok(Ok(nan)) => {
+                if self.active[i].snapshot.take().is_some() {
+                    lock(&self.stats).resumes += 1;
+                }
+                if nan {
+                    // Injected-NaN effect: corrupt the logits row exactly
+                    // the way a kernel bug would.
+                    for v in self.logits.iter_mut() {
+                        *v = f32::NAN;
+                    }
+                }
+                if !self.logits.iter().all(|v| v.is_finite()) {
+                    let s = self.retire(i);
+                    let _ = s
+                        .reply
+                        .send(Err(XgenError::NonFinite { at: "stream logits".to_string() }));
+                    self.finish(s, Terminal::Failed);
+                    return UnitEnd::Done;
+                }
+                let next = crate::exec::decode::argmax(&self.logits) as u32;
+                if self.active[i].reply.send(Ok(next)).is_err() {
+                    let s = self.retire(i);
+                    self.finish(s, Terminal::Cancelled);
+                    return UnitEnd::Done;
+                }
+                lock(&self.stats).tokens += 1;
+                let s = &mut self.active[i];
+                s.pending = next;
+                s.emitted += 1;
+                if s.emitted >= s.n {
+                    let s = self.retire(i);
+                    self.finish(s, Terminal::Finished);
+                    return UnitEnd::Done;
+                }
+                UnitEnd::Continue
+            }
+        }
+    }
+
+    /// Catastrophic stop: every remaining stream gets a typed error.
+    fn fail_all(&mut self) {
+        let mut rest: Vec<Stream> = self.active.drain(..).collect();
+        rest.extend(self.waiting.drain(..));
+        for s in rest {
+            let _ = s.reply.send(Err(XgenError::ServerGone));
+            self.finish(s, Terminal::Failed);
+        }
+    }
+}
+
+/// The scheduler thread: intake → admission (+ preemption) → one
+/// round-robin unit per resident stream, until the channel closes *and*
+/// every live stream is terminal (drain-on-drop).
+fn scheduler_loop(
+    model: CompiledModel,
+    max_seq: usize,
+    cfg: SchedConfig,
+    rx: mpsc::Receiver<StreamRequest>,
+    depth: Arc<AtomicUsize>,
+    stats: Arc<Mutex<SchedStats>>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    // The probe session validates the model (causal decoder, weights,
+    // max_seq in range) and measures the KV budget unit.
+    let probe = match model.decode_session(max_seq) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let session_bytes = (probe.kv_cache_elems() as u64 * 4).max(1);
+    let by_budget = match cfg.kv_budget_bytes {
+        Some(b) => {
+            let fit = (b / session_bytes) as usize;
+            if fit == 0 {
+                let _ = ready.send(Err(format!(
+                    "kv_budget_bytes {b} holds no session: one session's K/V caches at \
+                     max_seq {max_seq} need {session_bytes} bytes"
+                )));
+                return;
+            }
+            fit
+        }
+        None => usize::MAX,
+    };
+    let pool_cap = cfg.max_streams.max(1).min(by_budget);
+    {
+        let mut st = lock(&stats);
+        st.pool_sessions = pool_cap;
+        st.session_kv_bytes = session_bytes;
+    }
+    let _ = ready.send(Ok(()));
+
+    let mut eng = Engine {
+        model: &model,
+        max_seq,
+        pool_cap,
+        sessions: vec![probe],
+        free: vec![0],
+        waiting: VecDeque::new(),
+        active: Vec::new(),
+        next_id: 0,
+        logits: Vec::new(),
+        depth,
+        stats,
+    };
+    loop {
+        // Intake: block only when fully idle; the recv error after the
+        // last sender drops is the shutdown signal — by then every
+        // buffered submission has been drained and served.
+        if eng.active.is_empty() && eng.waiting.is_empty() {
+            match rx.recv() {
+                Ok(r) => eng.enroll(r),
+                Err(_) => break,
+            }
+        }
+        while let Ok(r) = rx.try_recv() {
+            eng.enroll(r);
+        }
+        eng.shed_expired_waiters();
+        // Admission + KV-pressure preemption to a fixed point.
+        loop {
+            eng.admit();
+            if !eng.preempt_one() {
+                break;
+            }
+        }
+        {
+            let mut st = lock(&eng.stats);
+            st.max_active = st.max_active.max(eng.active.len());
+        }
+        // One unit per resident stream, strict round-robin.
+        let mut i = 0;
+        while i < eng.active.len() {
+            match eng.run_unit(i) {
+                UnitEnd::Continue => i += 1,
+                UnitEnd::Done => {} // removed at i; successor shifted in
+                UnitEnd::Fatal => {
+                    eng.fail_all();
+                    return;
+                }
+            }
+        }
+    }
+    // Clean drain exit: every slot must be back on the free list.
+    let leaked = eng.sessions.len() - eng.free.len();
+    lock(&eng.stats).leaked_sessions = leaked;
+}
+
+/// Multi-stream greedy-decoding scheduler over one compiled causal
+/// decoder — see the [module docs](self) for the state machine, the
+/// isolation guarantees, and the eviction policy.
+pub struct StreamScheduler {
+    tx: mpsc::Sender<StreamRequest>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<SchedStats>>,
+    depth: Arc<AtomicUsize>,
+    cap: usize,
+    default_deadline: Option<Duration>,
+}
+
+impl StreamScheduler {
+    /// Spawn the scheduler thread with default [`SchedConfig`] bounds.
+    /// The model must carry weights and decode incrementally (validated
+    /// before the call returns).
+    pub fn start(model: CompiledModel, max_seq: usize) -> anyhow::Result<StreamScheduler> {
+        StreamScheduler::start_cfg(model, max_seq, SchedConfig::default())
+    }
+
+    /// [`StreamScheduler::start`] with explicit pool/queue/budget bounds.
+    pub fn start_cfg(
+        model: CompiledModel,
+        max_seq: usize,
+        cfg: SchedConfig,
+    ) -> anyhow::Result<StreamScheduler> {
+        let (tx, rx) = mpsc::channel::<StreamRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let stats = Arc::new(Mutex::new(SchedStats::default()));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let cap = cfg.queue_cap;
+        let default_deadline = cfg.default_deadline;
+        let (stats2, depth2) = (stats.clone(), depth.clone());
+        let handle = std::thread::spawn(move || {
+            scheduler_loop(model, max_seq, cfg, rx, depth2, stats2, ready_tx);
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("stream scheduler thread died"))?
+            .map_err(anyhow::Error::msg)?;
+        Ok(StreamScheduler { tx, handle: Some(handle), stats, depth, cap, default_deadline })
+    }
+
+    /// Typed admission: bump the live-stream count, shed past the cap
+    /// with the observed depth and a retry-after hint.
+    fn enqueue(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+        opts: &SubmitOpts,
+    ) -> Result<StreamHandle, XgenError> {
+        let d = self.depth.fetch_add(1, Ordering::SeqCst);
+        if d >= self.cap {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            let mut st = lock(&self.stats);
+            st.shed += 1;
+            let done = st.finished + st.failed + st.cancelled + st.deadline_evicted;
+            let mean_ms = if done == 0 { 0.0 } else { st.service_ms / done as f64 };
+            return Err(XgenError::Overloaded {
+                depth: d,
+                capacity: self.cap,
+                retry_after_ms: retry_after_ms(d, mean_ms),
+            });
+        }
+        let (reply, rx) = mpsc::channel();
+        let now = Instant::now();
+        let req = StreamRequest {
+            prompt,
+            n,
+            priority: opts.priority,
+            reply,
+            enqueued: now,
+            deadline: opts.deadline.or(self.default_deadline).map(|w| now + w),
+        };
+        if let Err(mpsc::SendError(req)) = self.tx.send(req) {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            let _ = req.reply.send(Err(XgenError::ServerGone));
+        }
+        Ok(StreamHandle { rx })
+    }
+
+    /// Submit a greedy generation of `n` tokens; tokens stream over the
+    /// returned handle. Infallible surface: a shed becomes the first
+    /// (and only) item on the stream.
+    pub fn submit(&self, prompt: Vec<u32>, n: usize) -> StreamHandle {
+        self.submit_opts(prompt, n, SubmitOpts::default())
+    }
+
+    /// [`StreamScheduler::submit`] with priority/deadline options.
+    pub fn submit_opts(&self, prompt: Vec<u32>, n: usize, opts: SubmitOpts) -> StreamHandle {
+        match self.enqueue(prompt, n, &opts) {
+            Ok(h) => h,
+            Err(e) => {
+                let (reply, rx) = mpsc::channel();
+                let _ = reply.send(Err(e));
+                StreamHandle { rx }
+            }
+        }
+    }
+
+    /// Typed-admission variant: a full queue is an immediate
+    /// `Err(Overloaded)` instead of an error on the stream.
+    pub fn try_submit(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+        opts: SubmitOpts,
+    ) -> Result<StreamHandle, XgenError> {
+        self.enqueue(prompt, n, &opts)
+    }
+
+    /// [`StreamScheduler::try_submit`] with client-side backoff: on an
+    /// [`XgenError::Overloaded`] shed, sleep per `policy` (seeded by the
+    /// server's retry-after hint) and resubmit, up to `policy.attempts`
+    /// total attempts; exhausting them yields the typed
+    /// [`XgenError::RetryExhausted`].
+    pub fn submit_with_retry(
+        &self,
+        prompt: Vec<u32>,
+        n: usize,
+        opts: SubmitOpts,
+        policy: &RetryPolicy,
+    ) -> Result<StreamHandle, XgenError> {
+        retry_loop(policy, || self.enqueue(prompt.clone(), n, &opts))
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        lock(&self.stats).clone()
+    }
+
+    /// Drain every live stream, stop the scheduler thread, and return the
+    /// final statistics (including the drain-exit leak check).
+    pub fn shutdown(mut self) -> SchedStats {
+        self.close_and_join();
+        let st = lock(&self.stats).clone();
+        st
+    }
+
+    /// Close the submission channel and join the thread (idempotent).
+    /// Buffered submissions survive sender drop, so every admitted
+    /// stream is served before the thread exits — drop is a drain, not
+    /// an abort.
+    fn close_and_join(&mut self) {
+        let (dummy_tx, _) = mpsc::channel();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StreamScheduler {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}

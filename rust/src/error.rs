@@ -39,8 +39,11 @@ pub enum XgenError {
     /// `at` is the current length, `want` the tokens being added.
     SeqOverflow { at: usize, want: usize, max_seq: usize },
     /// The bounded submission queue is full — the request was shed
-    /// immediately, nothing was enqueued.
-    Overloaded { depth: usize, capacity: usize },
+    /// immediately, nothing was enqueued. `retry_after_ms` is the
+    /// server's estimate of when capacity frees up (observed queue depth
+    /// × recent mean service time; at least 1 ms) — the backoff seed the
+    /// `submit_with_retry` helpers start from.
+    Overloaded { depth: usize, capacity: usize, retry_after_ms: u64 },
     /// The per-request deadline expired. For streaming generation the
     /// tokens decoded before the deadline were already delivered — the
     /// partial generation stands.
@@ -57,6 +60,10 @@ pub enum XgenError {
     /// Non-finite values surfaced at a guarded point (e.g. serving-time
     /// logits).
     NonFinite { at: String },
+    /// A `submit_with_retry` helper exhausted its attempt budget — every
+    /// attempt was shed with [`XgenError::Overloaded`]. `last_depth` is
+    /// the queue depth observed on the final attempt.
+    RetryExhausted { attempts: usize, last_depth: usize },
     /// The server thread is gone (shut down or crashed at startup).
     ServerGone,
     /// A structural graph invariant failed — topological order, payload
@@ -87,6 +94,7 @@ impl XgenError {
             XgenError::WorkerPanic { .. } => "WorkerPanic",
             XgenError::EngineFallback { .. } => "EngineFallback",
             XgenError::NonFinite { .. } => "NonFinite",
+            XgenError::RetryExhausted { .. } => "RetryExhausted",
             XgenError::ServerGone => "ServerGone",
             XgenError::InvalidGraph { .. } => "InvalidGraph",
             XgenError::InvalidPlan { .. } => "InvalidPlan",
@@ -152,8 +160,12 @@ impl fmt::Display for XgenError {
                     )
                 }
             }
-            XgenError::Overloaded { depth, capacity } => {
-                write!(f, "server overloaded: {depth} requests queued (capacity {capacity})")
+            XgenError::Overloaded { depth, capacity, retry_after_ms } => {
+                write!(
+                    f,
+                    "server overloaded: {depth} requests queued (capacity {capacity}) — \
+                     retry in ~{retry_after_ms} ms"
+                )
             }
             XgenError::DeadlineExceeded { elapsed_ms } => {
                 write!(f, "deadline exceeded after {elapsed_ms} ms")
@@ -167,6 +179,13 @@ impl fmt::Display for XgenError {
             }
             XgenError::NonFinite { at } => {
                 write!(f, "non-finite values detected at {at}")
+            }
+            XgenError::RetryExhausted { attempts, last_depth } => {
+                write!(
+                    f,
+                    "gave up after {attempts} overloaded attempts (last observed depth \
+                     {last_depth})"
+                )
             }
             XgenError::ServerGone => write!(f, "server shut down"),
             XgenError::InvalidGraph { pass, detail } => {
@@ -207,6 +226,12 @@ mod tests {
         assert!(full.to_string().contains("full"));
         let long = XgenError::SeqOverflow { at: 0, want: 9, max_seq: 4 };
         assert!(long.to_string().contains("exceeds max_seq"));
+        let shed = XgenError::Overloaded { depth: 8, capacity: 8, retry_after_ms: 12 };
+        assert_eq!(shed.code(), "Overloaded");
+        assert!(shed.to_string().contains("retry in ~12 ms"));
+        let gave_up = XgenError::RetryExhausted { attempts: 5, last_depth: 8 };
+        assert_eq!(gave_up.code(), "RetryExhausted");
+        assert!(gave_up.to_string().contains("gave up after 5"));
     }
 
     #[test]

@@ -258,6 +258,39 @@ pub struct DecodeSession<'m> {
     len: usize,
     /// Current sequence length *during* a step (`len + 1`).
     cur: usize,
+    /// Every token consumed since the last `reset()`, in order
+    /// (`history.len() == len`). Pre-allocated to `max_seq` so `step()`
+    /// stays allocation-free; this is what [`DecodeSession::snapshot`]
+    /// captures.
+    history: Vec<u32>,
+}
+
+/// A checkpoint of a session's consumed-token history — the prompt plus
+/// every generated token fed back so far. Deliberately tiny: it carries
+/// *no* K/V state, so an evicted stream costs `4 × len` bytes to park
+/// while its cache memory is reused. [`DecodeSession::restore`] rebuilds
+/// the full K/V state by re-prefilling, which is bitwise-identical to
+/// having never been evicted (prefill *is* N × `step()` — pinned by the
+/// snapshot oracles in `tests/decode.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionSnapshot {
+    tokens: Vec<u32>,
+}
+
+impl SessionSnapshot {
+    /// The captured token history (prompt + generated), oldest first.
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// Number of positions the restored session will hold.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
 }
 
 impl<'m> DecodeSession<'m> {
@@ -621,6 +654,7 @@ impl<'m> DecodeSession<'m> {
             max_seq,
             len: 0,
             cur: 0,
+            history: Vec::with_capacity(max_seq),
         })
     }
 
@@ -655,6 +689,36 @@ impl<'m> DecodeSession<'m> {
     /// reused without reallocation.
     pub fn reset(&mut self) {
         self.len = 0;
+        self.history.clear();
+    }
+
+    /// Every token consumed since the last `reset()`, oldest first.
+    pub fn tokens(&self) -> &[u32] {
+        &self.history
+    }
+
+    /// Checkpoint the session as its token history alone. The K/V caches
+    /// are *not* copied — [`restore`](DecodeSession::restore) re-derives
+    /// them by re-prefilling, so a snapshot is cheap enough to take on
+    /// every eviction under memory pressure.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot { tokens: self.history.clone() }
+    }
+
+    /// Replace this session's state with a [`SessionSnapshot`]: reset,
+    /// then re-prefill the captured history. Continuation afterwards
+    /// (`step`, `generate_continue`) is bitwise-identical to a session
+    /// that was never snapshotted, on *any* session of the same model —
+    /// including a freshly built one. An empty snapshot restores to the
+    /// reset state. On `Err` (snapshot longer than `max_seq`, id out of
+    /// vocabulary) the session is left reset and empty.
+    pub fn restore(&mut self, snap: &SessionSnapshot) -> Result<()> {
+        self.reset();
+        if snap.tokens.is_empty() {
+            return Ok(());
+        }
+        self.prefill(&snap.tokens)?;
+        Ok(())
     }
 
     /// Feed a prompt, one position at a time; returns the logits row of
@@ -771,6 +835,7 @@ impl<'m> DecodeSession<'m> {
             res?;
         }
         self.len = p + 1;
+        self.history.push(token);
         Ok(())
     }
 

@@ -36,7 +36,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-pub use decode::{attention_specs, AttnSpec, DecodeSession};
+pub use decode::{attention_specs, AttnSpec, DecodeSession, SessionSnapshot};
 pub use planner::{MemoryPlan, PlanStats, Workspace, WorkspaceSpec};
 
 use crate::deepreuse::{reuse_conv2d, reuse_conv2d_pre, reuse_gemm, ReuseConfig};

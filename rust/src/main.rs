@@ -14,6 +14,9 @@
 //! xgen serve [--model demo-cnn] [--requests 64] [--opt 0..3]
 //!            [--scheme none|pattern|...] [--reuse] [--no-fkw] [--pjrt]
 //!            [--queue-cap 1024] [--deadline-ms N]
+//! xgen decode-serve [--model demo-transformer-causal] [--streams 16]
+//!            [--tokens 12] [--prompt 4] [--max-streams 4]
+//!            [--kv-budget-kb N] [--queue-cap 1024] [--deadline-ms N]
 //! ```
 //!
 //! Failures exit nonzero and print `error[<code>]: ...` where `<code>` is
@@ -35,7 +38,7 @@ use anyhow::Result;
 use xgen::api::{CompiledModel, Compiler, OptLevel};
 use xgen::baselines::{DeviceClass, Framework};
 use xgen::caps::{search, CapsConfig};
-use xgen::coordinator::{ServeConfig, Server};
+use xgen::coordinator::{SchedConfig, ServeConfig, Server, StreamScheduler};
 use xgen::error::XgenError;
 use xgen::cost::devices;
 use xgen::graph::zoo::{all_models, by_name};
@@ -66,6 +69,7 @@ fn run() -> Result<()> {
         "emit-kernel" => cmd_emit(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "decode-serve" => cmd_decode_serve(&args),
         "" | "help" => {
             print!("{}", HELP);
             Ok(())
@@ -93,6 +97,11 @@ xgen — CoCoPIE XGen reproduction (see DESIGN.md)
                 default; --pjrt for the AOT artifact path;
                 --queue-cap bounds the queue, --deadline-ms sets a
                 per-request deadline)
+  decode-serve  multi-stream decode serving demo: --streams concurrent
+                greedy generations multiplexed over a session pool
+                (--max-streams residents, optionally tightened by
+                --kv-budget-kb; --deadline-ms arms the eviction
+                watchdog)
 ";
 
 /// CLI spelling of a pruning scheme; unknown spellings are a loud error,
@@ -279,6 +288,70 @@ fn cmd_run(args: &Args) -> Result<()> {
         t0.elapsed().as_secs_f64() * 1e3
     );
     println!("head: {:?}", &y[..y.len().min(8)]);
+    Ok(())
+}
+
+/// Multi-stream decode serving demo: many concurrent greedy generations
+/// over one compiled causal decoder, multiplexed by the
+/// [`StreamScheduler`] session pool (ISSUE-8).
+fn cmd_decode_serve(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "demo-transformer-causal");
+    let cm: CompiledModel = session(args, model, 1)?.compile()?;
+    let streams = args.opt_usize("streams", 16);
+    let tokens = args.opt_usize("tokens", 12);
+    let prompt_len = args.opt_usize("prompt", 4).max(1);
+    let max_seq = (prompt_len + tokens.saturating_sub(1)).max(1);
+    let cfg = SchedConfig {
+        max_streams: args.opt_usize("max-streams", 4),
+        queue_cap: args.opt_usize("queue-cap", 1024),
+        kv_budget_bytes: args
+            .opt("kv-budget-kb")
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(|kb| kb * 1024),
+        default_deadline: args
+            .opt("deadline-ms")
+            .and_then(|v| v.parse().ok())
+            .map(std::time::Duration::from_millis),
+    };
+    // Valid token ids for this decoder, rotated per stream so every
+    // stream decodes a different prompt.
+    let xs = cm.sample_inputs(args.opt_u64("seed", 9));
+    let base: Vec<u32> = xs[0].data().iter().take(prompt_len).map(|&v| v as u32).collect();
+    println!(
+        "decode-serving {model}: one session's K/V at max_seq {max_seq} = {:.1} KB",
+        cm.kv_cache_bytes(max_seq) as f64 / 1024.0
+    );
+    let sched = StreamScheduler::start_cfg(cm, max_seq, cfg)?;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..streams)
+        .map(|i| {
+            let mut p = base.clone();
+            p.rotate_left(i % p.len());
+            sched.submit(p, tokens)
+        })
+        .collect();
+    let mut toks = 0usize;
+    let mut failed = 0usize;
+    let mut first_err: Option<XgenError> = None;
+    for h in handles {
+        let (out, err) = h.collect();
+        toks += out.len();
+        if let Some(e) = err {
+            failed += 1;
+            first_err.get_or_insert(e);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = sched.shutdown();
+    println!("{}", st.report());
+    println!(
+        "{streams} streams × {tokens} tokens in {:.1} ms: {:.0} tok/s aggregate",
+        wall * 1e3,
+        toks as f64 / wall.max(1e-9)
+    );
+    if let Some(e) = first_err {
+        return Err(anyhow::Error::new(e).context(format!("{failed}/{streams} streams failed")));
+    }
     Ok(())
 }
 

@@ -18,6 +18,12 @@
 //!   (`crate::exec::DecodeSession`) step.
 //! * [`on_decode_step`] — stall each `step()` by a fixed duration (drives
 //!   deadline-exceeded partial generations).
+//! * [`on_stream_step`] — stream-targeted faults for the
+//!   `coordinator::StreamScheduler` (ISSUE-8): fail, panic, corrupt with
+//!   NaN, or stall at an exact `(stream, step)` ordinal, where `stream`
+//!   is the scheduler's admission-ordered stream id and `step` 0 is the
+//!   prefill. This is what the chaos matrix in `tests/streams.rs` aims
+//!   with.
 //!
 //! With no plan installed every hook is a single relaxed atomic load —
 //! the unfaulted path stays allocation-free, which is how the counting-
@@ -60,6 +66,50 @@ pub struct FaultPlan {
     pub panic_decode_node: Option<(String, u64)>,
     /// Sleep this many milliseconds inside every `DecodeSession::step`.
     pub stall_step_ms: Option<u64>,
+    /// Stream-targeted faults for the stream scheduler, each aimed at an
+    /// exact `(stream, step)` ordinal. Multiple entries may target
+    /// different streams in the same plan — that is what makes the chaos
+    /// matrix a *matrix*.
+    pub stream_faults: Vec<StreamFault>,
+}
+
+/// One stream-scheduler fault: break stream `stream` at step `step`.
+#[derive(Debug, Clone)]
+pub struct StreamFault {
+    /// The scheduler's admission-ordered stream ordinal (0-based, in
+    /// submission order — stable regardless of interleaving).
+    pub stream: u64,
+    /// Step ordinal within the stream: 0 is the prefill, `k` the k-th
+    /// decode step after it.
+    pub step: u64,
+    pub kind: StreamFaultKind,
+}
+
+/// How a targeted stream step breaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamFaultKind {
+    /// The hook returns `Err` — the stream fails with a typed error while
+    /// its session stays structurally sound (reset suffices).
+    Fail,
+    /// The hook panics — drives the scheduler's per-stream
+    /// `catch_unwind` + session-rebuild path.
+    Panic,
+    /// The scheduler is told to overwrite the step's logits with NaN —
+    /// drives the `NonFinite` guard.
+    Nan,
+    /// Sleep this many milliseconds before the step runs — drives the
+    /// deadline watchdog's mid-generation eviction.
+    Stall(u64),
+}
+
+/// What [`on_stream_step`] asks the scheduler to do after it returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StreamFaultEffect {
+    /// Proceed normally.
+    #[default]
+    None,
+    /// Overwrite the logits produced by this step with NaN.
+    Nan,
 }
 
 /// Fast-path gate: hooks return immediately while this is false.
@@ -193,6 +243,38 @@ pub fn on_decode_node(name: &str, out: &mut [f32]) -> Result<(), String> {
     Ok(())
 }
 
+/// Hook: called by the stream scheduler once per scheduled unit of work
+/// (`step` 0 = the prefill, then one call per decode step) with the
+/// stream's admission ordinal. Fails, panics, stalls, or requests NaN
+/// corruption when an installed [`StreamFault`] matches exactly.
+pub fn on_stream_step(stream: u64, step: u64) -> Result<StreamFaultEffect, String> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Ok(StreamFaultEffect::None);
+    }
+    let guard = plan_lock();
+    let hit = guard
+        .as_ref()
+        .and_then(|p| p.stream_faults.iter().find(|f| f.stream == stream && f.step == step))
+        .map(|f| f.kind);
+    let Some(kind) = hit else { return Ok(StreamFaultEffect::None) };
+    // Release the plan lock before sleeping or unwinding so concurrent
+    // hooks (and the clearing guard) never contend with the holder.
+    drop(guard);
+    match kind {
+        StreamFaultKind::Fail => {
+            Err(format!("injected fault: stream {stream} failed at step {step}"))
+        }
+        StreamFaultKind::Panic => {
+            panic!("injected fault: stream {stream} panicked at step {step}");
+        }
+        StreamFaultKind::Nan => Ok(StreamFaultEffect::Nan),
+        StreamFaultKind::Stall(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(StreamFaultEffect::None)
+        }
+    }
+}
+
 /// Hook: called once per `DecodeSession::step` (not per prefill
 /// position). Stalls when the plan says so.
 pub fn on_decode_step() {
@@ -221,6 +303,21 @@ mod tests {
         assert!(on_decode_node("any", &mut buf).is_ok());
         assert_eq!(buf, [1.0f32; 4]);
         on_decode_step();
+        assert_eq!(on_stream_step(0, 0), Ok(StreamFaultEffect::None));
+        {
+            let _g = install(FaultPlan {
+                stream_faults: vec![StreamFault {
+                    stream: 3,
+                    step: 1,
+                    kind: StreamFaultKind::Fail,
+                }],
+                ..Default::default()
+            });
+            // Exact-match targeting: neighbours are untouched.
+            assert_eq!(on_stream_step(3, 0), Ok(StreamFaultEffect::None));
+            assert_eq!(on_stream_step(2, 1), Ok(StreamFaultEffect::None));
+            assert!(on_stream_step(3, 1).is_err(), "targeted ordinal fails");
+        }
         {
             let _g = install(FaultPlan {
                 nan_decode_node: Some(("x".into(), 1)),

@@ -238,6 +238,92 @@ fn decode_session_validates_inputs_loudly() {
     assert!(cnn.decode_session(8).is_err());
 }
 
+/// ISSUE-8 satellite: `snapshot()` at *every* position of a generation,
+/// restored into a fresh (or dirty) session, continues bitwise-identically
+/// to the uninterrupted run. A snapshot keeps only the token history and
+/// restore re-prefills it, so this leans on the pinned "prefill == N×step"
+/// identity — and it is the guarantee the stream scheduler's KV-pressure
+/// eviction (checkpoint, drop K/V, re-prefill on re-admission) is built
+/// on. Full toggle matrix at O2, all-on at O0/O1/O3.
+#[test]
+fn snapshot_restore_continues_bitwise_at_every_position() {
+    let mut configs: Vec<(bool, bool, bool, bool, OptLevel)> = Vec::new();
+    for fkw in [false, true] {
+        for prepack in [false, true] {
+            for workspace in [false, true] {
+                for pool in [false, true] {
+                    configs.push((fkw, prepack, workspace, pool, OptLevel::O2));
+                }
+            }
+        }
+    }
+    for opt in [OptLevel::O0, OptLevel::O1, OptLevel::O3] {
+        configs.push((true, true, true, true, opt));
+    }
+    for (fkw, prepack, workspace, pool, opt) in configs {
+        let label = format!(
+            "demo fkw={fkw} prepack={prepack} ws={workspace} pool={pool} {}",
+            opt.name()
+        );
+        let m = compile_demo(fkw, prepack, workspace, pool, opt);
+        let max_seq = PROMPT.len() + 4;
+
+        // Uninterrupted trajectory: the prompt plus greedy continuations,
+        // recording the logits row at every position.
+        let mut traj = m.decode_session(max_seq).unwrap();
+        let mut tokens: Vec<u32> = PROMPT.to_vec();
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(max_seq);
+        for i in 0..max_seq {
+            let l = traj.step(tokens[i]).unwrap().to_vec();
+            if tokens.len() < max_seq {
+                tokens.push(xgen::exec::decode::argmax(&l) as u32);
+            }
+            rows.push(l);
+        }
+
+        for k in 1..max_seq {
+            // Snapshot a session holding the first k tokens…
+            let mut part = m.decode_session(max_seq).unwrap();
+            part.prefill(&tokens[..k]).unwrap();
+            let snap = part.snapshot();
+            assert_eq!(snap.tokens(), &tokens[..k], "{label}: snapshot holds the history");
+            assert_eq!(snap.len(), k);
+            // …restore it into a session with unrelated prior state
+            // (restore must fully supersede, not merge)…
+            let mut fresh = m.decode_session(max_seq).unwrap();
+            fresh.prefill(&[9, 1]).unwrap();
+            fresh.restore(&snap).unwrap();
+            assert_eq!(fresh.len(), k, "{label}: restore re-prefills to the cut");
+            // …and the continuation must be bitwise the uninterrupted run.
+            for i in k..max_seq {
+                let l = fresh.step(tokens[i]).unwrap();
+                assert_eq!(
+                    l,
+                    &rows[i][..],
+                    "{label}: cut at {k}, position {i} diverges after restore"
+                );
+            }
+        }
+    }
+}
+
+/// An empty snapshot is legal and restores to a blank session.
+#[test]
+fn empty_snapshot_restores_to_blank() {
+    let m = compile_demo(true, true, true, true, OptLevel::O2);
+    let blank = m.decode_session(4).unwrap();
+    let snap = blank.snapshot();
+    assert!(snap.is_empty());
+    let mut s = m.decode_session(4).unwrap();
+    s.prefill(&[5, 6]).unwrap();
+    s.restore(&snap).unwrap();
+    assert_eq!(s.len(), 0);
+    assert_eq!(s.tokens(), &[] as &[u32]);
+    // The blanked session decodes normally afterwards.
+    assert!(s.prefill(&[5, 6, 7]).is_ok());
+    assert_eq!(s.tokens(), &[5, 6, 7]);
+}
+
 /// The compact causal registry entry ("gpt-2-decoder") decodes too — a
 /// cheap structural smoke at 1 layer scale via the builder, checking the
 /// tied-LM-head constant path (MatMul against a transposed weight).

@@ -23,7 +23,7 @@ use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use xgen::api::{CompiledModel, Compiler};
-use xgen::coordinator::{DecodeConfig, DecodeServer, ServeConfig, Server};
+use xgen::coordinator::{DecodeConfig, DecodeServer, RetryPolicy, ServeConfig, Server};
 use xgen::error::XgenError;
 use xgen::tensor::Tensor;
 
@@ -61,12 +61,13 @@ fn every_variant_has_a_stable_code_and_message() {
         XgenError::ShapeMismatch { expected: "a".into(), got: "b".into() },
         XgenError::VocabOutOfRange { token: 300, vocab: 256 },
         XgenError::SeqOverflow { at: 0, want: 9, max_seq: 4 },
-        XgenError::Overloaded { depth: 3, capacity: 2 },
+        XgenError::Overloaded { depth: 3, capacity: 2, retry_after_ms: 6 },
         XgenError::DeadlineExceeded { elapsed_ms: 17 },
         XgenError::Cancelled,
         XgenError::WorkerPanic { detail: "boom".into() },
         XgenError::EngineFallback { detail: "both".into() },
         XgenError::NonFinite { at: "logits".into() },
+        XgenError::RetryExhausted { attempts: 4, last_depth: 3 },
         XgenError::ServerGone,
         XgenError::Internal { detail: "other".into() },
     ];
@@ -189,6 +190,62 @@ fn zero_capacity_queues_shed_with_overloaded() {
     let st = server.stats();
     assert_eq!(st.shed, 1);
     assert_eq!(st.requests, 0, "shed requests never reach the session");
+}
+
+/// ISSUE-8 satellite: the shed carries the observed depth and a
+/// retry-after hint, and the `*_with_retry` helpers back off and give up
+/// with a typed error instead of spinning forever.
+#[test]
+fn overloaded_carries_a_hint_and_retry_gives_up_typed() {
+    let _g = serial();
+    // Tight bounded backoff so the give-up path runs in milliseconds.
+    let policy = RetryPolicy {
+        attempts: 3,
+        base: Duration::from_micros(200),
+        max: Duration::from_millis(2),
+        ..RetryPolicy::default()
+    };
+
+    // Batch server at cap 0: every attempt sheds.
+    let server = Server::start_compiled_cfg(
+        cnn(1),
+        cnn(4),
+        ServeConfig { queue_cap: 0, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let per = 3 * 24 * 24;
+    let e = server.try_submit(vec![0.0; per]).unwrap_err();
+    match e {
+        XgenError::Overloaded { capacity, retry_after_ms, .. } => {
+            assert_eq!(capacity, 0);
+            assert!(retry_after_ms >= 1, "hint is at least 1 ms");
+        }
+        other => panic!("expected Overloaded, got {other}"),
+    }
+    let e = server.submit_with_retry(vec![0.0; per], &policy).unwrap_err();
+    assert!(
+        matches!(e, XgenError::RetryExhausted { attempts: 3, .. }),
+        "expected RetryExhausted after 3 attempts, got {e}"
+    );
+    assert_eq!(server.stats().shed, 4, "1 direct + 3 retry attempts all shed");
+    drop(server);
+
+    // Decode server: same give-up contract on the streaming path, and an
+    // uncontended server succeeds on the first attempt.
+    let server = DecodeServer::start_cfg(
+        causal(),
+        16,
+        DecodeConfig { queue_cap: 0, ..DecodeConfig::default() },
+    )
+    .unwrap();
+    let e = server.generate_with_retry(vec![5, 6, 7], 2, &policy).unwrap_err();
+    assert!(matches!(e, XgenError::RetryExhausted { attempts: 3, .. }), "got {e}");
+    drop(server);
+
+    let server = DecodeServer::start(causal(), 16).unwrap();
+    let rx = server.generate_with_retry(vec![5, 6, 7], 2, &policy).unwrap();
+    let toks: Vec<u32> = rx.into_iter().filter_map(|r| r.ok()).collect();
+    assert_eq!(toks.len(), 2, "first attempt succeeds on an idle server");
 }
 
 #[test]
@@ -450,6 +507,66 @@ mod faults {
         let st = server.stats();
         assert_eq!(st.worker_panics, 1);
         assert_eq!(st.errors, 1);
+    }
+
+    /// ISSUE-8 satellite: per-request session teardown is exactly-once —
+    /// a typed step failure *resets* the session, a panic *rebuilds* it,
+    /// and interleaving the two failure kinds back-to-back never
+    /// double-resets, skips a teardown, or leaks a torn session into the
+    /// next request.
+    #[test]
+    fn interleaved_failure_kinds_tear_down_exactly_once() {
+        let _g = serial();
+        let reference = causal().generate(&[5, 6, 7], 4).unwrap();
+        let node = logits_node_name();
+        let server = DecodeServer::start(causal(), 16).unwrap();
+
+        // Typed fail → panic → typed fail, each at the first step (a
+        // 3-token prompt burns hits 1..=3; hit 4 is step one), each
+        // followed by a request that must be bitwise-clean.
+        for (round, kind) in ["fail", "panic", "fail"].iter().enumerate() {
+            let plan = match *kind {
+                "fail" => FaultPlan {
+                    fail_decode_node: Some((node.clone(), 4)),
+                    ..Default::default()
+                },
+                _ => FaultPlan {
+                    panic_decode_node: Some((node.clone(), 4)),
+                    ..Default::default()
+                },
+            };
+            let guard = fault::install(plan);
+            let rx = server.generate_stream(vec![5, 6, 7], 4);
+            let mut tokens = Vec::new();
+            let mut err = None;
+            for item in rx {
+                match item {
+                    Ok(t) => tokens.push(t),
+                    Err(e) => {
+                        err = Some(e);
+                        break;
+                    }
+                }
+            }
+            drop(guard);
+            assert_eq!(tokens, &reference[..1], "round {round}: one token, then the fault");
+            let err = err.expect("faulted stream ends in an error");
+            if *kind == "panic" {
+                assert_eq!(err.code(), "WorkerPanic", "round {round}");
+            } else {
+                assert!(err.to_string().contains("injected fault"), "round {round}: {err}");
+            }
+            assert_eq!(
+                server.generate(vec![5, 6, 7], 4).unwrap(),
+                reference,
+                "round {round}: the request after the fault must be bitwise-clean"
+            );
+        }
+        let st = server.stats();
+        assert_eq!(st.errors, 3);
+        assert_eq!(st.worker_panics, 1);
+        assert_eq!(st.session_rebuilds, 1, "only the panic rebuilds; typed failures reset");
+        assert_eq!(st.requests, 6, "3 faulted (past prefill) + 3 clean");
     }
 
     /// Deadline + stall: a 400 ms deadline over 500 ms steps yields

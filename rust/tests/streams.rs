@@ -1,0 +1,382 @@
+//! ISSUE-8 acceptance: resilient multi-stream decode serving.
+//!
+//! Always-on tests pin the `StreamScheduler` contract: many concurrent
+//! streams multiplexed over a bounded session pool decode exactly what a
+//! single-stream `CompiledModel::generate` produces; the KV budget sizes
+//! the pool (and refuses a budget too small for one session); bounded
+//! admission sheds typed `Overloaded` errors carrying a retry-after hint
+//! and the retry helper gives up typed; zero deadlines evict queued
+//! streams; and dropping the scheduler *drains* — every admitted stream
+//! (64 of them over a 4-session pool) completes, with zero leaked
+//! sessions at thread exit.
+//!
+//! The `chaos` module (compiled under `--features fault-injection`) aims
+//! `xgen::runtime::fault::StreamFault`s at exact `(stream, step)`
+//! ordinals and proves isolation *bitwise*: a failing, panicking, or
+//! NaN-corrupted stream gets its typed error while every unaffected
+//! stream's output is bit-for-bit the fault-free run; a stall-driven
+//! priority preemption checkpoints the victim and its resumed output is
+//! bit-for-bit an uninterrupted decode; a stalled stream is evicted at
+//! its deadline with its partial output standing.
+//!
+//! The fault plan is process-global, so every test in this binary runs
+//! behind one file-local mutex (same discipline as `tests/robustness.rs`).
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use xgen::api::{CompiledModel, Compiler};
+use xgen::coordinator::{RetryPolicy, SchedConfig, StreamScheduler, SubmitOpts};
+use xgen::error::XgenError;
+
+/// Serialize every test in this binary (see module docs).
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn causal() -> CompiledModel {
+    Compiler::for_model("demo-transformer-causal", 1)
+        .unwrap()
+        .random_weights(31)
+        .compile()
+        .unwrap()
+}
+
+/// Distinct valid prompts: rotations of a fixed in-vocab base.
+fn prompts(count: usize) -> Vec<Vec<u32>> {
+    let base: Vec<u32> = vec![7, 42, 3, 255, 0, 99];
+    (0..count)
+        .map(|i| {
+            let mut p = base.clone();
+            p.rotate_left(i % p.len());
+            p
+        })
+        .collect()
+}
+
+/// Single-stream references for the same prompts.
+fn references(m: &CompiledModel, ps: &[Vec<u32>], n: usize) -> Vec<Vec<u32>> {
+    ps.iter().map(|p| m.generate(p, n).unwrap()).collect()
+}
+
+#[test]
+fn many_streams_match_single_stream_generation_bitwise() {
+    let _g = serial();
+    let n = 5;
+    let ps = prompts(6);
+    let expect = references(&causal(), &ps, n);
+    let sched = StreamScheduler::start_cfg(
+        causal(),
+        16,
+        SchedConfig { max_streams: 3, ..SchedConfig::default() },
+    )
+    .unwrap();
+    let handles: Vec<_> = ps.iter().map(|p| sched.submit(p.clone(), n)).collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (toks, err) = h.collect();
+        assert_eq!(err, None, "stream {i} must finish cleanly");
+        assert_eq!(toks, expect[i], "stream {i} must decode exactly its single-stream run");
+    }
+    let st = sched.shutdown();
+    assert_eq!(st.submitted, 6);
+    assert_eq!(st.finished, 6);
+    assert_eq!(st.tokens, 6 * n);
+    assert_eq!(st.failed + st.cancelled + st.deadline_evicted, 0);
+    assert!(st.max_active <= 3, "the pool bounds concurrency");
+    assert_eq!(st.leaked_sessions, 0);
+}
+
+#[test]
+fn kv_budget_sizes_the_pool() {
+    let _g = serial();
+    let m = causal();
+    let per = m.kv_cache_bytes(16);
+    assert!(per > 0);
+    let sched = StreamScheduler::start_cfg(
+        m,
+        16,
+        SchedConfig {
+            max_streams: 8,
+            kv_budget_bytes: Some(2 * per + per / 2), // room for 2, not 3
+            ..SchedConfig::default()
+        },
+    )
+    .unwrap();
+    let st = sched.stats();
+    assert_eq!(st.pool_sessions, 2, "the budget tightens max_streams");
+    assert_eq!(st.session_kv_bytes, per, "pool accounting matches the planner's sizing");
+    drop(sched);
+
+    // A budget that cannot hold even one session is refused eagerly.
+    let e = StreamScheduler::start_cfg(
+        causal(),
+        16,
+        SchedConfig { kv_budget_bytes: Some(per - 1), ..SchedConfig::default() },
+    )
+    .err()
+    .expect("sub-session budget must fail start");
+    assert!(e.to_string().contains("holds no session"), "got: {e}");
+}
+
+#[test]
+fn overload_sheds_typed_and_retry_gives_up_typed() {
+    let _g = serial();
+    let sched = StreamScheduler::start_cfg(
+        causal(),
+        16,
+        SchedConfig { queue_cap: 0, ..SchedConfig::default() },
+    )
+    .unwrap();
+    // Typed admission: immediate Overloaded with depth + hint.
+    let e = sched.try_submit(vec![5, 6, 7], 2, SubmitOpts::default()).unwrap_err();
+    match e {
+        XgenError::Overloaded { capacity, retry_after_ms, .. } => {
+            assert_eq!(capacity, 0);
+            assert!(retry_after_ms >= 1);
+        }
+        other => panic!("expected Overloaded, got {other}"),
+    }
+    // Infallible surface: the shed is the stream's only item.
+    let (toks, err) = sched.submit(vec![5, 6, 7], 2).collect();
+    assert!(toks.is_empty());
+    assert_eq!(err.map(|e| e.code()), Some("Overloaded"));
+    // Bounded backoff gives up typed.
+    let policy = RetryPolicy {
+        attempts: 3,
+        base: Duration::from_micros(200),
+        max: Duration::from_millis(2),
+        ..RetryPolicy::default()
+    };
+    let e = sched
+        .submit_with_retry(vec![5, 6, 7], 2, SubmitOpts::default(), &policy)
+        .unwrap_err();
+    assert!(matches!(e, XgenError::RetryExhausted { attempts: 3, .. }), "got {e}");
+    let st = sched.stats();
+    assert_eq!(st.shed, 5, "1 typed + 1 stream-embedded + 3 retry attempts");
+    assert_eq!(st.submitted, 0, "shed submissions never become streams");
+}
+
+#[test]
+fn zero_deadline_evicts_queued_streams_typed() {
+    let _g = serial();
+    let sched = StreamScheduler::start_cfg(
+        causal(),
+        16,
+        SchedConfig { default_deadline: Some(Duration::ZERO), ..SchedConfig::default() },
+    )
+    .unwrap();
+    let (toks, err) = sched.submit(vec![5, 6, 7], 3).collect();
+    assert!(toks.is_empty(), "a zero deadline never decodes");
+    assert_eq!(err.map(|e| e.code()), Some("DeadlineExceeded"));
+    let st = sched.shutdown();
+    assert_eq!(st.deadline_evicted, 1);
+    assert_eq!(st.finished, 0);
+    assert_eq!(st.leaked_sessions, 0);
+}
+
+/// Acceptance: drain-on-drop at 64 concurrent streams over a 4-session
+/// pool — no deadlock, no stuck client, zero session leak at exit.
+#[test]
+fn drain_on_drop_serves_all_64_streams_without_leaks() {
+    let _g = serial();
+    let n = 3;
+    let ps = prompts(4);
+    let expect = references(&causal(), &ps, n);
+    let sched = StreamScheduler::start_cfg(
+        causal(),
+        16,
+        SchedConfig { max_streams: 4, ..SchedConfig::default() },
+    )
+    .unwrap();
+    let handles: Vec<_> =
+        (0..64).map(|i| sched.submit(ps[i % ps.len()].clone(), n)).collect();
+    // Shut down immediately: the channel closes but every admitted stream
+    // must still be served before the thread exits.
+    let st = sched.shutdown();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (toks, err) = h.collect();
+        assert_eq!(err, None, "stream {i} must survive the drain");
+        assert_eq!(toks, expect[i % expect.len()], "stream {i} bitwise after drain");
+    }
+    assert_eq!(st.submitted, 64);
+    assert_eq!(st.finished, 64);
+    assert_eq!(st.pool_sessions, 4);
+    assert!(st.max_active <= 4);
+    assert_eq!(st.leaked_sessions, 0, "every slot must return to the pool");
+}
+
+#[test]
+fn dropped_handle_is_cancelled_coherently() {
+    let _g = serial();
+    let sched = StreamScheduler::start_cfg(
+        causal(),
+        30,
+        SchedConfig::default(),
+    )
+    .unwrap();
+    drop(sched.submit(vec![5, 6, 7], 28)); // hang up immediately
+    let st = sched.shutdown();
+    assert_eq!(st.submitted, 1);
+    assert_eq!(
+        st.finished + st.cancelled,
+        1,
+        "the hung-up stream either finished first or was cancelled — never an error"
+    );
+    assert_eq!(st.failed, 0);
+    assert_eq!(st.leaked_sessions, 0);
+}
+
+#[cfg(feature = "fault-injection")]
+mod chaos {
+    use super::*;
+    use xgen::runtime::fault::{self, FaultPlan, StreamFault, StreamFaultKind};
+
+    /// The chaos matrix: three fault kinds aimed at three different
+    /// streams of a six-stream run over a three-session pool, in one
+    /// plan. Each faulted stream gets its partial output (bitwise) and
+    /// its typed error; every unaffected stream is bit-for-bit the
+    /// fault-free run.
+    #[test]
+    fn chaos_matrix_isolates_faulted_streams_bitwise() {
+        let _g = serial();
+        let n = 5;
+        let ps = prompts(6);
+        let expect = references(&causal(), &ps, n);
+        let sched = StreamScheduler::start_cfg(
+            causal(),
+            16,
+            SchedConfig { max_streams: 3, ..SchedConfig::default() },
+        )
+        .unwrap();
+        let guard = fault::install(FaultPlan {
+            stream_faults: vec![
+                StreamFault { stream: 1, step: 2, kind: StreamFaultKind::Fail },
+                StreamFault { stream: 2, step: 0, kind: StreamFaultKind::Panic },
+                StreamFault { stream: 3, step: 1, kind: StreamFaultKind::Nan },
+            ],
+            ..Default::default()
+        });
+        let handles: Vec<_> = ps.iter().map(|p| sched.submit(p.clone(), n)).collect();
+        let results: Vec<(Vec<u32>, Option<XgenError>)> =
+            handles.into_iter().map(|h| h.collect()).collect();
+        drop(guard);
+
+        // Stream 1: two clean tokens, then the injected typed failure.
+        assert_eq!(results[1].0, expect[1][..2], "stream 1 partial is bitwise");
+        let e = results[1].1.as_ref().expect("stream 1 ends in an error");
+        assert!(e.to_string().contains("injected fault"), "got: {e}");
+        // Stream 2: panicked at prefill — no tokens, typed WorkerPanic.
+        assert!(results[2].0.is_empty());
+        assert_eq!(results[2].1.as_ref().map(|e| e.code()), Some("WorkerPanic"));
+        // Stream 3: one clean token, then the NaN guard fires typed.
+        assert_eq!(results[3].0, expect[3][..1], "stream 3 partial is bitwise");
+        assert_eq!(results[3].1.as_ref().map(|e| e.code()), Some("NonFinite"));
+        // Streams 0, 4, 5: bit-for-bit the fault-free single-stream run.
+        for i in [0usize, 4, 5] {
+            assert_eq!(results[i].1, None, "stream {i} must be untouched");
+            assert_eq!(results[i].0, expect[i], "stream {i} must be bitwise fault-free");
+        }
+        let st = sched.shutdown();
+        assert_eq!(st.finished, 3);
+        assert_eq!(st.failed, 3);
+        assert_eq!(st.worker_panics, 1);
+        assert_eq!(st.session_rebuilds, 1, "only the panic rebuilds a session");
+        assert_eq!(st.leaked_sessions, 0);
+    }
+
+    /// KV-pressure eviction end to end: a single-session pool, a stalled
+    /// low-priority stream, and a high-priority arrival. The victim is
+    /// checkpointed (tokens kept, K/V dropped), the high-priority stream
+    /// runs to completion, and the victim's resumed output — re-prefilled
+    /// from its snapshot — is bit-for-bit an uninterrupted decode.
+    #[test]
+    fn preempted_stream_resumes_bitwise_after_checkpoint() {
+        let _g = serial();
+        let ps = prompts(2);
+        let m = causal();
+        let expect_a = m.generate(&ps[0], 6).unwrap();
+        let expect_b = m.generate(&ps[1], 4).unwrap();
+        let sched = StreamScheduler::start_cfg(
+            m,
+            16,
+            SchedConfig { max_streams: 1, ..SchedConfig::default() },
+        )
+        .unwrap();
+        // Stall stream 0's second unit long enough that stream 1 is
+        // certainly queued by the time the unit completes.
+        let guard = fault::install(FaultPlan {
+            stream_faults: vec![StreamFault {
+                stream: 0,
+                step: 1,
+                kind: StreamFaultKind::Stall(150),
+            }],
+            ..Default::default()
+        });
+        let a = sched.submit_opts(ps[0].clone(), 6, SubmitOpts { priority: 0, deadline: None });
+        // Let stream 0 win the only slot before the rival shows up.
+        std::thread::sleep(Duration::from_millis(40));
+        let b = sched.submit_opts(ps[1].clone(), 4, SubmitOpts { priority: 9, deadline: None });
+        let (toks_b, err_b) = b.collect();
+        let (toks_a, err_a) = a.collect();
+        drop(guard);
+        assert_eq!(err_b, None);
+        assert_eq!(toks_b, expect_b, "the preemptor decodes bitwise");
+        assert_eq!(err_a, None, "the victim survives its eviction");
+        assert_eq!(toks_a, expect_a, "checkpoint + re-prefill resume is bitwise");
+        let st = sched.shutdown();
+        assert_eq!(st.pool_sessions, 1);
+        assert!(st.checkpoints >= 1, "the high-priority arrival must preempt");
+        assert!(st.resumes >= 1, "the victim must resume from its snapshot");
+        assert_eq!(st.finished, 2);
+        assert_eq!(st.leaked_sessions, 0);
+    }
+
+    /// The watchdog: a stream stalled past its deadline is evicted with
+    /// its partial output standing (bitwise) and a typed error, while a
+    /// deadline-free stream sharing the pool finishes untouched.
+    #[test]
+    fn stalled_stream_is_evicted_at_deadline_with_partial_output() {
+        let _g = serial();
+        let ps = prompts(2);
+        let m = causal();
+        let expect_a = m.generate(&ps[0], 6).unwrap();
+        let expect_b = m.generate(&ps[1], 6).unwrap();
+        let sched = StreamScheduler::start_cfg(
+            m,
+            16,
+            SchedConfig { max_streams: 2, ..SchedConfig::default() },
+        )
+        .unwrap();
+        // Stream 0's third unit sleeps well past its 150 ms deadline.
+        let guard = fault::install(FaultPlan {
+            stream_faults: vec![StreamFault {
+                stream: 0,
+                step: 2,
+                kind: StreamFaultKind::Stall(400),
+            }],
+            ..Default::default()
+        });
+        let a = sched.submit_opts(
+            ps[0].clone(),
+            6,
+            SubmitOpts { priority: 0, deadline: Some(Duration::from_millis(150)) },
+        );
+        let b = sched.submit_opts(ps[1].clone(), 6, SubmitOpts::default());
+        let (toks_a, err_a) = a.collect();
+        let (toks_b, err_b) = b.collect();
+        drop(guard);
+        // The stalled unit itself completes (token 3 of 6), then the
+        // watchdog evicts before unit 4 — a 3-token partial, bitwise.
+        assert_eq!(toks_a, expect_a[..3], "the partial stands, bitwise");
+        assert_eq!(err_a.map(|e| e.code()), Some("DeadlineExceeded"));
+        // The deadline-free neighbour is untouched.
+        assert_eq!(err_b, None);
+        assert_eq!(toks_b, expect_b);
+        let st = sched.shutdown();
+        assert_eq!(st.deadline_evicted, 1);
+        assert_eq!(st.finished, 1);
+        assert_eq!(st.tokens, 3 + 6, "partial tokens are accounted");
+        assert_eq!(st.leaked_sessions, 0);
+    }
+}
