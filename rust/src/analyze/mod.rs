@@ -1,0 +1,292 @@
+//! Semantic dataflow analyses over the IR (ISSUE-9 tentpole).
+//!
+//! `xgen::verify` (PR 7) proves *structural* invariants — topology,
+//! payload consistency, memory-plan aliasing. This module adds the
+//! *semantic* half: a forward abstract-interpretation framework
+//! ([`run_forward`]) over [`Graph`]'s validated topological order, with
+//! pluggable lattice domains ([`Lattice`]) and per-node transfer
+//! functions ([`Transfer`]), plus the three client analyses the roadmap
+//! items consume:
+//!
+//! * **[`range`]** — value-range / NaN-propagation over the
+//!   interval-with-flags domain [`AbsVal`]: proves per-node finiteness
+//!   from weight statistics and declared input ranges, and flags
+//!   *guaranteed* non-finite paths as typed
+//!   [`XgenError::AnalysisDiagnostic`](crate::error::XgenError) warnings
+//!   at compile time (blamed on the origin node, not downstream victims).
+//! * **[`quant`]** — int8 quantization feasibility: per-layer dynamic
+//!   range and per-channel scales derived from the range analysis plus
+//!   [`PruneReport`] sparsity, emitted as a serializable [`QuantPlan`]
+//!   on the `CompileReport` — the artifact the int8 GEMM work (ROADMAP
+//!   item 3) consumes.
+//! * **[`purity`]** — trace-purity / effect classification of every op
+//!   and fused group ({pure-elementwise, GEMM-epilogue-fusable,
+//!   stateful, fallback-only}), cross-checked against
+//!   [`exec::eval_supported`](crate::exec::eval_supported) — the
+//!   trace-safety report the trace-compiler work (ROADMAP item 4) needs,
+//!   and what `DecodeSession::new` uses to reject untraceable graphs
+//!   with a typed error instead of a mid-generate failure.
+//!
+//! Wired into `Compiler::compile` behind `.analyze(bool)` (default on at
+//! O2+) and the CLI's `compile --analyze`; results surface in
+//! `report()` next to the verify section.
+
+pub mod purity;
+pub mod quant;
+pub mod range;
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::fusion::FusionPlan;
+use crate::graph::{Graph, Node, NodeId, OpKind, WeightStore};
+use crate::pruning::PruneReport;
+
+pub use purity::{classify, op_effect, Effect, GroupPurity, PurityReport};
+pub use quant::{QuantLayerPlan, QuantPlan};
+pub use range::{AbsVal, RangeAnalysis};
+
+/// Tunables of the built-in analyses. The defaults are deliberately wide:
+/// the range analysis must never call a reachable value impossible.
+#[derive(Debug, Clone)]
+pub struct AnalysisConfig {
+    /// Declared magnitude bound of dense (non-token) graph inputs:
+    /// `[-input_bound, input_bound]`. Matches `CompiledModel`'s
+    /// normalized-input convention (sample inputs are N(0,1); ±6 covers
+    /// the 6σ tail).
+    pub input_bound: f64,
+    /// Sigma multiplier for the statistical weight envelope used when no
+    /// weight store is attached (`init_random` draws N(0,1)/√fan_in).
+    pub weight_sigma: f64,
+    /// A layer whose input amplitude exceeds this is int8-infeasible
+    /// ("dynamic-range"): 8-bit resolution at that scale is coarser than
+    /// any useful signal.
+    pub int8_max_amax: f64,
+    /// Accumulator budget in bits; i8×i8 products need `15 + ⌈log2 K⌉`
+    /// bits over a depth-K reduction ("accumulator-width" when exceeded).
+    pub int8_acc_bits: u32,
+    /// Worklist budget per node before the analysis gives up soundly
+    /// (returns ⊤ everywhere). A DAG converges in one pass; this only
+    /// bounds pathological inputs.
+    pub max_steps_per_node: usize,
+}
+
+impl Default for AnalysisConfig {
+    fn default() -> Self {
+        AnalysisConfig {
+            input_bound: 6.0,
+            weight_sigma: 4.0,
+            int8_max_amax: 1e4,
+            int8_acc_bits: 32,
+            max_steps_per_node: 8,
+        }
+    }
+}
+
+/// A join-semilattice of abstract values.
+pub trait Lattice: Clone + PartialEq {
+    /// Least element (unreached / no information yet).
+    fn bottom() -> Self;
+    /// Greatest element (no property proven).
+    fn top() -> Self;
+    /// Least upper bound; must be monotone in both arguments.
+    fn join(&self, other: &Self) -> Self;
+}
+
+/// One forward analysis: how sources are seeded and how each compute op
+/// transforms the abstract values of its inputs.
+pub trait Transfer {
+    type Value: Lattice;
+    /// Abstract value of a source node (`Input` / `Weight`).
+    fn seed(&self, g: &Graph, node: &Node) -> Self::Value;
+    /// Abstract value of a compute node from its inputs' values
+    /// (`args[i]` is the value of `node.inputs[i]`).
+    fn transfer(&self, g: &Graph, node: &Node, args: &[Self::Value]) -> Self::Value;
+}
+
+/// Run a forward dataflow analysis to fixpoint.
+///
+/// The graph's builder invariant (inputs precede users) makes the node
+/// order a topological order, so on a DAG one sweep converges and the
+/// worklist only re-queues on genuine lattice movement. The step budget
+/// is a backstop for non-monotone transfers: when exhausted the analysis
+/// *gives up soundly* by returning ⊤ for every node — no property is
+/// claimed, no diagnostic can fire spuriously.
+pub fn run_forward<T: Transfer>(
+    g: &Graph,
+    t: &T,
+    max_steps_per_node: usize,
+) -> Result<Vec<T::Value>> {
+    g.validate()?;
+    let nn = g.nodes.len();
+    let users = g.users();
+    let mut vals: Vec<T::Value> = vec![T::Value::bottom(); nn];
+    let mut queued = vec![true; nn];
+    let mut work: VecDeque<NodeId> = (0..nn).collect();
+    let mut budget = nn.saturating_mul(max_steps_per_node.max(1)) + 64;
+    while let Some(id) = work.pop_front() {
+        queued[id] = false;
+        if budget == 0 {
+            return Ok((0..nn).map(|_| T::Value::top()).collect());
+        }
+        budget -= 1;
+        let n = g.node(id);
+        let out = if n.op.is_source() {
+            t.seed(g, n)
+        } else {
+            let args: Vec<T::Value> = n.inputs.iter().map(|&i| vals[i].clone()).collect();
+            t.transfer(g, n, &args)
+        };
+        let joined = vals[id].join(&out);
+        if joined != vals[id] {
+            vals[id] = joined;
+            for &u in &users[id] {
+                if !queued[u] {
+                    queued[u] = true;
+                    work.push_back(u);
+                }
+            }
+        }
+    }
+    Ok(vals)
+}
+
+/// Reduction depth K of a contraction node (products accumulated per
+/// output element), or `None` for non-contraction ops. This is both the
+/// range analysis's accumulation factor and the int8 accumulator-width
+/// driver.
+pub fn reduction_depth(g: &Graph, id: NodeId) -> Option<usize> {
+    let n = g.node(id);
+    if n.inputs.is_empty() {
+        return None;
+    }
+    let in_shape = &g.node(n.inputs[0]).shape;
+    match &n.op {
+        OpKind::Conv2d { k, groups, .. } => {
+            let in_c = in_shape.get(1).copied().unwrap_or(1);
+            Some((in_c / (*groups).max(1)).max(1) * k * k)
+        }
+        OpKind::Conv3d { kt, k, .. } => {
+            let in_c = in_shape.get(1).copied().unwrap_or(1);
+            Some(in_c.max(1) * kt * k * k)
+        }
+        OpKind::ConvTranspose2d { k, .. } => {
+            let in_c = in_shape.get(1).copied().unwrap_or(1);
+            Some(in_c.max(1) * k * k)
+        }
+        OpKind::Dense | OpKind::MatMul => Some(in_shape.last().copied().unwrap_or(1)),
+        _ => None,
+    }
+}
+
+/// Everything one `analyze()` run proved, in report form.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    /// Total IR nodes analyzed.
+    pub nodes: usize,
+    /// Nodes proven finite for all inputs in the declared ranges.
+    pub finite_nodes: usize,
+    /// Guaranteed-failure diagnostics (compile *warnings*: the model
+    /// still compiles, but these paths are provably broken).
+    pub warnings: Vec<crate::error::XgenError>,
+    /// Per-node abstract values, indexed by `NodeId`.
+    pub ranges: Vec<AbsVal>,
+    /// Int8 feasibility per contraction layer.
+    pub quant: QuantPlan,
+    /// Effect classification per node and per fused group.
+    pub purity: PurityReport,
+}
+
+impl AnalysisReport {
+    /// One-line form for `CompileReport::summary()`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}/{} nodes proven finite, {} warning(s); int8: {}; purity: {}",
+            self.finite_nodes,
+            self.nodes,
+            self.warnings.len(),
+            self.quant.summary(),
+            self.purity.summary()
+        )
+    }
+}
+
+/// Run all three client analyses over a compiled graph.
+pub fn analyze(
+    g: &Graph,
+    ws: Option<&WeightStore>,
+    plan: &FusionPlan,
+    prune: Option<&PruneReport>,
+    cfg: &AnalysisConfig,
+) -> Result<AnalysisReport> {
+    let ra = RangeAnalysis::new(g, ws, cfg);
+    let ranges = run_forward(g, &ra, cfg.max_steps_per_node)?;
+    let warnings = range::diagnostics(g, &ranges);
+    let quant = quant::plan(g, ws, &ranges, prune, cfg);
+    let purity = purity::classify(g, plan);
+    let finite_nodes = ranges.iter().filter(|v| v.is_finite()).count();
+    Ok(AnalysisReport { nodes: g.nodes.len(), finite_nodes, warnings, ranges, quant, purity })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Act;
+
+    fn chain() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[1, 8]);
+        let r = g.add("relu", OpKind::Activation(Act::Relu), vec![x], vec![1, 8]);
+        let s = g.add("sig", OpKind::Activation(Act::Sigmoid), vec![r], vec![1, 8]);
+        g.outputs = vec![s];
+        g
+    }
+
+    #[test]
+    fn forward_pass_reaches_fixpoint_on_a_dag() {
+        let g = chain();
+        let cfg = AnalysisConfig::default();
+        let ra = RangeAnalysis::new(&g, None, &cfg);
+        let vals = run_forward(&g, &ra, cfg.max_steps_per_node).unwrap();
+        assert_eq!(vals.len(), 3);
+        // input ±6 → relu [0,6] → sigmoid [σ(0), σ(6)] ⊂ (0,1).
+        assert!(vals.iter().all(|v| v.is_finite()));
+        assert_eq!((vals[1].lo, vals[1].hi), (0.0, 6.0));
+        assert!(vals[2].lo >= 0.49 && vals[2].hi <= 1.0);
+    }
+
+    #[test]
+    fn exhausted_budget_gives_up_soundly_with_top() {
+        let g = chain();
+        let cfg = AnalysisConfig::default();
+        let ra = RangeAnalysis::new(&g, None, &cfg);
+        // Budget 64 + 3 ≥ 3 nodes, so force exhaustion via a fake huge
+        // graph is impractical here; instead check the ⊤ contract
+        // directly: ⊤ proves nothing and fires nothing.
+        let top = AbsVal::top();
+        assert!(!top.is_finite() && !top.guaranteed_non_finite());
+        let _ = run_forward(&g, &ra, 0).unwrap(); // min-clamped, still fine
+    }
+
+    #[test]
+    fn reduction_depth_follows_contraction_shapes() {
+        let mut g = Graph::new("k");
+        let x = g.input("x", &[1, 16, 8, 8]);
+        let w = g.weight("w", &[32, 16, 3, 3]);
+        let c = g.add(
+            "conv",
+            OpKind::Conv2d { k: 3, stride: 1, pad: 1, groups: 1 },
+            vec![x, w],
+            vec![1, 32, 8, 8],
+        );
+        let f = g.add("flat", OpKind::Flatten, vec![c], vec![1, 32 * 64]);
+        let dw = g.weight("dw", &[32 * 64, 10]);
+        let d = g.add("fc", OpKind::Dense, vec![f, dw], vec![1, 10]);
+        g.outputs = vec![d];
+        assert_eq!(reduction_depth(&g, c), Some(16 * 9));
+        assert_eq!(reduction_depth(&g, d), Some(32 * 64));
+        assert_eq!(reduction_depth(&g, f), None);
+        assert_eq!(reduction_depth(&g, x), None);
+    }
+}

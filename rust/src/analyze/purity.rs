@@ -1,0 +1,171 @@
+//! Trace-purity / effect analysis: which ops (and fused groups) are pure
+//! enough to trace-compile, which must stay on the interpreter, and which
+//! can only run through the estimate-only fallback.
+//!
+//! The trace compiler (ROADMAP item 4) flattens a fused group into a
+//! straight-line execution trace — legal only when every member is a
+//! pure function of its inputs with a statically known access pattern.
+//! The classification is cross-checked against
+//! [`exec::eval_supported`](crate::exec::eval_supported): an op without a
+//! kernel can never be traced, whatever its algebraic shape.
+
+use crate::exec::eval_supported;
+use crate::fusion::FusionPlan;
+use crate::graph::{Graph, MappingType, NodeId, OpKind};
+
+/// Effect class of an op or fused group. Declaration order is severity
+/// order (derived `Ord`): a group is as impure as its worst member.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Effect {
+    /// Pure elementwise / movement op: fusable anywhere, traceable, and
+    /// eligible for a GEMM epilogue slot.
+    PureElementwise,
+    /// Pure contraction/reduction (ManyToMany): traceable as the *anchor*
+    /// of a group, with elementwise followers fused into its epilogue.
+    GemmEpilogueFusable,
+    /// Observable effects or data-dependent control (detection
+    /// post-processing): never traceable, breaks an incremental decode.
+    Stateful,
+    /// No executable kernel at all — estimate-only fallback path.
+    FallbackOnly,
+}
+
+impl Effect {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Effect::PureElementwise => "pure-elementwise",
+            Effect::GemmEpilogueFusable => "gemm-epilogue-fusable",
+            Effect::Stateful => "stateful",
+            Effect::FallbackOnly => "fallback-only",
+        }
+    }
+
+    /// Can an incremental decode trace replay this effect every step?
+    pub fn trace_safe(&self) -> bool {
+        matches!(self, Effect::PureElementwise | Effect::GemmEpilogueFusable)
+    }
+}
+
+/// Effect of a single op.
+///
+/// `PostProcess` is checked *before* the `eval_supported` cross-check:
+/// it is stateful by nature (data-dependent NMS on the CPU side), and
+/// "stateful" is the stronger claim — adding a kernel for it would not
+/// make it traceable.
+pub fn op_effect(op: &OpKind) -> Effect {
+    if matches!(op, OpKind::PostProcess) {
+        return Effect::Stateful;
+    }
+    if !eval_supported(op) {
+        return Effect::FallbackOnly;
+    }
+    match op.mapping() {
+        MappingType::ManyToMany => Effect::GemmEpilogueFusable,
+        _ => Effect::PureElementwise,
+    }
+}
+
+/// Effect classification of one fused group.
+#[derive(Debug, Clone)]
+pub struct GroupPurity {
+    pub nodes: Vec<NodeId>,
+    pub effect: Effect,
+}
+
+/// Per-node and per-group effect classification of a compiled graph.
+#[derive(Debug, Clone)]
+pub struct PurityReport {
+    /// Effect of every node, indexed by `NodeId` (sources are pure).
+    pub per_node: Vec<Effect>,
+    /// One entry per fused group of the [`FusionPlan`], in plan order.
+    pub groups: Vec<GroupPurity>,
+}
+
+impl PurityReport {
+    pub fn count(&self, e: Effect) -> usize {
+        self.groups.iter().filter(|gp| gp.effect == e).count()
+    }
+
+    /// True when every fused group can be trace-compiled.
+    pub fn trace_safe(&self) -> bool {
+        self.groups.iter().all(|gp| gp.effect.trace_safe())
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} gemm / {} pure / {} stateful / {} fallback groups",
+            self.count(Effect::GemmEpilogueFusable),
+            self.count(Effect::PureElementwise),
+            self.count(Effect::Stateful),
+            self.count(Effect::FallbackOnly)
+        )
+    }
+}
+
+/// Classify every node and every fused group of `plan`. Group effect is
+/// the maximum (worst) member effect — one stateful op poisons the group.
+pub fn classify(g: &Graph, plan: &FusionPlan) -> PurityReport {
+    let per_node: Vec<Effect> = g
+        .nodes
+        .iter()
+        .map(|n| if n.op.is_source() { Effect::PureElementwise } else { op_effect(&n.op) })
+        .collect();
+    let groups = plan
+        .groups
+        .iter()
+        .map(|grp| GroupPurity {
+            nodes: grp.nodes.clone(),
+            effect: grp
+                .nodes
+                .iter()
+                .map(|&id| per_node[id])
+                .max()
+                .unwrap_or(Effect::PureElementwise),
+        })
+        .collect();
+    PurityReport { per_node, groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Act;
+
+    #[test]
+    fn effects_cross_check_eval_supported() {
+        let cases = [
+            OpKind::Activation(Act::Relu),
+            OpKind::Add,
+            OpKind::Reshape,
+            OpKind::CausalMask,
+            OpKind::Dense,
+            OpKind::Softmax,
+            OpKind::Conv2d { k: 3, stride: 1, pad: 1, groups: 1 },
+            OpKind::Conv3d { kt: 3, k: 3, stride: 1, pad: 1 },
+            OpKind::ConvTranspose2d { k: 4, stride: 2, pad: 1 },
+            OpKind::ChannelShuffle { groups: 2 },
+            OpKind::PostProcess,
+        ];
+        for op in cases {
+            let e = op_effect(&op);
+            // Every op with no kernel is fallback-only or stateful, and
+            // every traceable op has a kernel — no misclassification can
+            // promise the trace compiler an op it cannot execute.
+            assert_eq!(e.trace_safe(), eval_supported(&op) && !matches!(op, OpKind::PostProcess));
+        }
+        assert_eq!(op_effect(&OpKind::Dense), Effect::GemmEpilogueFusable);
+        assert_eq!(op_effect(&OpKind::Add), Effect::PureElementwise);
+        assert_eq!(op_effect(&OpKind::PostProcess), Effect::Stateful);
+        assert_eq!(
+            op_effect(&OpKind::Conv3d { kt: 3, k: 3, stride: 1, pad: 1 }),
+            Effect::FallbackOnly
+        );
+    }
+
+    #[test]
+    fn severity_order_backs_group_max() {
+        assert!(Effect::PureElementwise < Effect::GemmEpilogueFusable);
+        assert!(Effect::GemmEpilogueFusable < Effect::Stateful);
+        assert!(Effect::Stateful < Effect::FallbackOnly);
+    }
+}

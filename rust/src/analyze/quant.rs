@@ -1,0 +1,199 @@
+//! Int8 quantization-feasibility analysis: per-contraction-layer dynamic
+//! range, per-channel scales and accumulator width, derived from the
+//! range analysis plus the prune report.
+//!
+//! The output, [`QuantPlan`], is the compile-time artifact ROADMAP item 3
+//! (int8 GEMM end-to-end) consumes: the future quantized executor picks
+//! precision per layer by reading `feasible` here, instead of re-deriving
+//! calibration from scratch. Infeasibility is a *reason code* on the
+//! plan, never a compile diagnostic — an fp32 model with a wide dynamic
+//! range is a perfectly valid model.
+
+use crate::graph::{Graph, OpKind, WeightStore};
+use crate::pruning::quant::{quantize, QuantMode};
+use crate::pruning::PruneReport;
+use crate::util::json::Json;
+
+use super::{range::AbsVal, AnalysisConfig};
+
+/// Int8 feasibility verdict for one contraction layer.
+#[derive(Debug, Clone)]
+pub struct QuantLayerPlan {
+    /// Blamed IR node and its display identity.
+    pub node: usize,
+    pub name: String,
+    pub op: &'static str,
+    pub feasible: bool,
+    /// Why not, when infeasible: "non-finite-input", "dynamic-range" or
+    /// "accumulator-width".
+    pub reason: Option<&'static str>,
+    /// Largest finite input magnitude the range analysis allows.
+    pub in_amax: f64,
+    /// Symmetric input scale (`in_amax / 127`).
+    pub in_scale: f64,
+    /// Largest per-channel weight scale (0 when no store is attached).
+    pub weight_scale: f64,
+    /// Per-output-channel weight scales from the symmetric int8
+    /// quantizer; empty when no store is attached.
+    pub channel_scales: Vec<f32>,
+    /// Bits an exact i8×i8 accumulation over depth `k` needs.
+    pub acc_bits: u32,
+    /// Reduction depth (products per output element).
+    pub k: usize,
+    /// Weight sparsity: exact zero fraction with a store, else the prune
+    /// report's global sparsity.
+    pub sparsity: f64,
+}
+
+/// The per-layer int8 plan attached to `CompileReport`.
+#[derive(Debug, Clone, Default)]
+pub struct QuantPlan {
+    pub layers: Vec<QuantLayerPlan>,
+}
+
+impl QuantPlan {
+    pub fn feasible_count(&self) -> usize {
+        self.layers.iter().filter(|l| l.feasible).count()
+    }
+
+    pub fn summary(&self) -> String {
+        format!("{}/{} layers int8-feasible", self.feasible_count(), self.layers.len())
+    }
+
+    /// Serializable form (the artifact contract with the int8 GEMM PR).
+    pub fn to_json(&self) -> Json {
+        let layers = self.layers.iter().map(|l| {
+            let mut pairs = vec![
+                ("node", Json::num(l.node as f64)),
+                ("name", Json::str(&l.name)),
+                ("op", Json::str(l.op)),
+                ("feasible", Json::Bool(l.feasible)),
+                ("in_amax", Json::num(l.in_amax)),
+                ("in_scale", Json::num(l.in_scale)),
+                ("weight_scale", Json::num(l.weight_scale)),
+                ("acc_bits", Json::num(l.acc_bits as f64)),
+                ("k", Json::num(l.k as f64)),
+                ("sparsity", Json::num(l.sparsity)),
+                (
+                    "channel_scales",
+                    Json::arr(l.channel_scales.iter().map(|&s| Json::num(s as f64))),
+                ),
+            ];
+            if let Some(r) = l.reason {
+                pairs.push(("reason", Json::str(r)));
+            }
+            Json::obj(pairs)
+        });
+        Json::obj(vec![
+            ("feasible_layers", Json::num(self.feasible_count() as f64)),
+            ("layers", Json::arr(layers)),
+        ])
+    }
+}
+
+/// Bits needed to index `k` values: ⌈log2 k⌉ (0 for k ≤ 1).
+fn ceil_log2(k: usize) -> u32 {
+    if k <= 1 {
+        0
+    } else {
+        64 - ((k - 1) as u64).leading_zeros()
+    }
+}
+
+/// Build the int8 plan: one entry per contraction node
+/// (`reduction_depth` = Some), in node order.
+pub fn plan(
+    g: &Graph,
+    ws: Option<&WeightStore>,
+    ranges: &[AbsVal],
+    prune: Option<&PruneReport>,
+    cfg: &AnalysisConfig,
+) -> QuantPlan {
+    let fallback_sparsity = prune.map(|p| p.sparsity).unwrap_or(0.0);
+    let mut layers = Vec::new();
+    for n in &g.nodes {
+        let Some(k) = super::reduction_depth(g, n.id) else { continue };
+        let xin = ranges.get(n.inputs[0]).copied().unwrap_or_else(AbsVal::top);
+        let acc_bits = 15 + ceil_log2(k);
+
+        // Per-channel weight statistics, exact when a store is attached.
+        let wnode = n.inputs.iter().copied().find(|&i| matches!(g.node(i).op, OpKind::Weight));
+        let mut weight_scale = 0.0f64;
+        let mut channel_scales = Vec::new();
+        let mut sparsity = fallback_sparsity;
+        if let Some(t) = wnode.and_then(|wid| ws.and_then(|ws| ws.get(&g.node(wid).name))) {
+            let q = quantize(t, QuantMode::PerChannel);
+            weight_scale = q.scales.iter().fold(0.0f32, |m, &s| m.max(s)) as f64;
+            channel_scales = q.scales;
+            let zeros = t.data().iter().filter(|&&v| v == 0.0).count();
+            sparsity = zeros as f64 / t.len().max(1) as f64;
+        }
+
+        let in_amax = xin.amax();
+        let reason = if !xin.is_finite() {
+            Some("non-finite-input")
+        } else if in_amax > cfg.int8_max_amax {
+            Some("dynamic-range")
+        } else if acc_bits > cfg.int8_acc_bits {
+            Some("accumulator-width")
+        } else {
+            None
+        };
+        layers.push(QuantLayerPlan {
+            node: n.id,
+            name: n.name.clone(),
+            op: n.op.name(),
+            feasible: reason.is_none(),
+            reason,
+            in_amax,
+            in_scale: in_amax / 127.0,
+            weight_scale,
+            channel_scales,
+            acc_bits,
+            k,
+            sparsity,
+        });
+    }
+    QuantPlan { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_width_grows_with_depth() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(ceil_log2(1 << 17), 17);
+        assert_eq!(ceil_log2((1 << 17) + 1), 18);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let p = QuantPlan {
+            layers: vec![QuantLayerPlan {
+                node: 3,
+                name: "fc".into(),
+                op: "dense",
+                feasible: false,
+                reason: Some("dynamic-range"),
+                in_amax: 2e4,
+                in_scale: 2e4 / 127.0,
+                weight_scale: 0.01,
+                channel_scales: vec![0.01, 0.008],
+                acc_bits: 18,
+                k: 512,
+                sparsity: 0.5,
+            }],
+        };
+        let text = p.to_json().to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("feasible_layers").and_then(Json::as_f64), Some(0.0));
+        let layers = back.get("layers").and_then(Json::as_arr).unwrap();
+        assert_eq!(layers.len(), 1);
+        assert_eq!(layers[0].get("reason").and_then(Json::as_str), Some("dynamic-range"));
+        assert_eq!(layers[0].get("channel_scales").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+}

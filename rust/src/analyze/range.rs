@@ -1,0 +1,745 @@
+//! Value-range / NaN-propagation analysis: the interval-with-flags
+//! abstract domain ([`AbsVal`]) and its per-op transfer functions.
+//!
+//! The domain over-approximates the set of f32 values a tensor may hold:
+//!
+//! * `[lo, hi]` bounds the **finite** values (clamped to ±`f32::MAX`);
+//! * `nan` / `pinf` / `ninf` say the tensor **may** contain that
+//!   non-finite value.
+//!
+//! The one non-obvious encoding: an *empty* real interval (`lo > hi`,
+//! canonically `(+∞, -∞)`) with at least one flag set means **every**
+//! element is non-finite — that is what lets the analysis report
+//! *guaranteed* failures (`analysis[guaranteed-nan]`) instead of noisy
+//! "might be NaN" warnings. An empty interval with no flags is ⊥
+//! (unreached). [`AbsVal::fix`] maintains the canonical form, folding
+//! overflow past `f32::MAX` into the inf flags: when a whole interval
+//! lands above the representable range, every runtime f32 is `+inf` and
+//! the value becomes empty+`pinf` — a proof, not a heuristic.
+//!
+//! Every transfer mirrors the *exact* kernel semantics in `exec`:
+//! `Relu` is `x.max(0.0)`, which maps NaN to 0 (Rust `max` drops NaN),
+//! so it **clears** the nan flag; `Relu6` is `clamp(0.0, 6.0)`, which
+//! keeps NaN; `Sqrt` is IEEE (negative input → NaN — the PR-4 fix);
+//! a `Softmax` fed by `CausalMask` runs the fused masked kernel that
+//! never touches the masked `-inf` entries, so the mask's own `ninf`
+//! flag is forgiven there and only there.
+
+use std::collections::BTreeMap;
+
+use crate::error::XgenError;
+use crate::graph::{Act, Graph, Node, NodeId, OpKind, WeightStore};
+
+use super::{AnalysisConfig, Lattice, Transfer};
+
+/// Largest finite f32, as the f64 the domain computes in.
+pub const MAXF: f64 = f32::MAX as f64;
+
+/// One abstract tensor value: finite-value interval + may-flags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AbsVal {
+    pub lo: f64,
+    pub hi: f64,
+    /// May contain NaN.
+    pub nan: bool,
+    /// May contain +inf.
+    pub pinf: bool,
+    /// May contain -inf.
+    pub ninf: bool,
+}
+
+impl AbsVal {
+    /// ⊥ — no values at all (unreached node).
+    pub fn bottom() -> AbsVal {
+        AbsVal { lo: f64::INFINITY, hi: f64::NEG_INFINITY, nan: false, pinf: false, ninf: false }
+    }
+
+    /// ⊤ — any f32 whatsoever.
+    pub fn top() -> AbsVal {
+        AbsVal { lo: -MAXF, hi: MAXF, nan: true, pinf: true, ninf: true }
+    }
+
+    /// Empty real interval carrying only non-finite possibilities.
+    pub fn empty_with(nan: bool, pinf: bool, ninf: bool) -> AbsVal {
+        AbsVal { lo: f64::INFINITY, hi: f64::NEG_INFINITY, nan, pinf, ninf }
+    }
+
+    /// The single finite value `v`.
+    pub fn exact(v: f64) -> AbsVal {
+        AbsVal::range(v, v)
+    }
+
+    /// Finite interval `[lo, hi]` (normalized through [`AbsVal::fix`]).
+    pub fn range(lo: f64, hi: f64) -> AbsVal {
+        let mut r = AbsVal { lo, hi, nan: false, pinf: false, ninf: false };
+        r.fix();
+        r
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo > self.hi
+    }
+
+    pub fn any_flag(&self) -> bool {
+        self.nan || self.pinf || self.ninf
+    }
+
+    /// Provably finite: some finite values, no non-finite possibility.
+    pub fn is_finite(&self) -> bool {
+        !self.is_empty() && !self.any_flag()
+    }
+
+    /// Provably non-finite: *every* concrete element is NaN/±inf.
+    pub fn guaranteed_non_finite(&self) -> bool {
+        self.is_empty() && self.any_flag()
+    }
+
+    /// Largest finite magnitude the value may reach (0 when empty).
+    pub fn amax(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.lo.abs().max(self.hi.abs())
+        }
+    }
+
+    /// Restore the canonical form: NaN bounds become the nan flag over the
+    /// full finite range, an interval entirely outside ±`f32::MAX` becomes
+    /// empty + the matching inf flag (a *guarantee* — every f32 overflows),
+    /// and bounds poking past ±`f32::MAX` are clamped with the flag set.
+    pub fn fix(&mut self) {
+        if self.lo.is_nan() || self.hi.is_nan() {
+            self.nan = true;
+            self.lo = -MAXF;
+            self.hi = MAXF;
+            return;
+        }
+        if self.lo > self.hi {
+            self.lo = f64::INFINITY;
+            self.hi = f64::NEG_INFINITY;
+            return;
+        }
+        if self.lo > MAXF {
+            self.pinf = true;
+            self.lo = f64::INFINITY;
+            self.hi = f64::NEG_INFINITY;
+            return;
+        }
+        if self.hi < -MAXF {
+            self.ninf = true;
+            self.lo = f64::INFINITY;
+            self.hi = f64::NEG_INFINITY;
+            return;
+        }
+        if self.hi > MAXF {
+            self.pinf = true;
+            self.hi = MAXF;
+        }
+        if self.lo < -MAXF {
+            self.ninf = true;
+            self.lo = -MAXF;
+        }
+    }
+
+    /// Least upper bound: interval hull + flag union.
+    pub fn join(&self, o: &AbsVal) -> AbsVal {
+        let mut r = AbsVal {
+            lo: self.lo.min(o.lo),
+            hi: self.hi.max(o.hi),
+            nan: self.nan || o.nan,
+            pinf: self.pinf || o.pinf,
+            ninf: self.ninf || o.ninf,
+        };
+        r.fix();
+        r
+    }
+
+    pub fn join_point(&self, v: f64) -> AbsVal {
+        self.join(&AbsVal::exact(v))
+    }
+
+    pub fn add(&self, o: &AbsVal) -> AbsVal {
+        let (lo, hi) = if self.is_empty() || o.is_empty() {
+            (f64::INFINITY, f64::NEG_INFINITY)
+        } else {
+            (self.lo + o.lo, self.hi + o.hi)
+        };
+        let mut r = AbsVal {
+            lo,
+            hi,
+            // (+inf) + (-inf) = NaN.
+            nan: self.nan || o.nan || (self.pinf && o.ninf) || (self.ninf && o.pinf),
+            pinf: self.pinf || o.pinf,
+            ninf: self.ninf || o.ninf,
+        };
+        r.fix();
+        r
+    }
+
+    pub fn neg(&self) -> AbsVal {
+        let mut r = AbsVal {
+            lo: -self.hi,
+            hi: -self.lo,
+            nan: self.nan,
+            pinf: self.ninf,
+            ninf: self.pinf,
+        };
+        r.fix();
+        r
+    }
+
+    pub fn sub(&self, o: &AbsVal) -> AbsVal {
+        self.add(&o.neg())
+    }
+
+    pub fn mul(&self, o: &AbsVal) -> AbsVal {
+        let (lo, hi) = if self.is_empty() || o.is_empty() {
+            (f64::INFINITY, f64::NEG_INFINITY)
+        } else {
+            let c = [self.lo * o.lo, self.lo * o.hi, self.hi * o.lo, self.hi * o.hi];
+            (c.iter().copied().fold(f64::INFINITY, f64::min),
+             c.iter().copied().fold(f64::NEG_INFINITY, f64::max))
+        };
+        let mut r = AbsVal { lo, hi, nan: self.nan || o.nan, pinf: false, ninf: false };
+        if self.pinf || self.ninf || o.pinf || o.ninf {
+            // inf × (unknown sign, possibly 0) can be ±inf or NaN.
+            r.nan = true;
+            r.pinf = true;
+            r.ninf = true;
+        }
+        r.fix();
+        r
+    }
+
+    pub fn div(&self, o: &AbsVal) -> AbsVal {
+        // Denominator may be zero or non-finite: anything can come out.
+        if o.is_empty() || o.any_flag() || (o.lo..=o.hi).contains(&0.0) {
+            return AbsVal::top();
+        }
+        if self.is_empty() {
+            // Guaranteed non-finite numerator over a finite nonzero
+            // denominator stays non-finite; the infinity's sign follows
+            // the denominator's, so keep both inf flags to stay sound.
+            let inf = self.pinf || self.ninf;
+            return AbsVal::empty_with(self.nan, inf, inf);
+        }
+        let c = [self.lo / o.lo, self.lo / o.hi, self.hi / o.lo, self.hi / o.hi];
+        let mut r = AbsVal {
+            lo: c.iter().copied().fold(f64::INFINITY, f64::min),
+            hi: c.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            nan: self.nan,
+            pinf: self.pinf || self.ninf,
+            ninf: self.pinf || self.ninf,
+        };
+        r.fix();
+        r
+    }
+
+    /// `x*m + a` with constant `m`, `a` (the `Scale` op's payload form).
+    pub fn scale_affine(&self, m: f64, a: f64) -> AbsVal {
+        let mut r = *self;
+        if m == 0.0 {
+            // 0·x is 0 for finite x, NaN for ±inf.
+            r.nan = self.nan || self.pinf || self.ninf;
+            r.pinf = false;
+            r.ninf = false;
+            if !self.is_empty() {
+                r.lo = a;
+                r.hi = a;
+            }
+        } else {
+            if !self.is_empty() {
+                let (x, y) = (self.lo * m + a, self.hi * m + a);
+                r.lo = x.min(y);
+                r.hi = x.max(y);
+            }
+            if m < 0.0 {
+                r.pinf = self.ninf;
+                r.ninf = self.pinf;
+            }
+        }
+        r.fix();
+        r
+    }
+
+    /// Exact abstraction of a concrete tensor (weight-store seeding).
+    pub fn from_data(data: &[f32]) -> AbsVal {
+        if data.is_empty() {
+            return AbsVal::exact(0.0);
+        }
+        let mut r = AbsVal::bottom();
+        for &v in data {
+            if v.is_nan() {
+                r.nan = true;
+            } else if v == f32::INFINITY {
+                r.pinf = true;
+            } else if v == f32::NEG_INFINITY {
+                r.ninf = true;
+            } else {
+                let v = v as f64;
+                r.lo = r.lo.min(v);
+                r.hi = r.hi.max(v);
+            }
+        }
+        r
+    }
+}
+
+impl Lattice for AbsVal {
+    fn bottom() -> Self {
+        AbsVal::bottom()
+    }
+    fn top() -> Self {
+        AbsVal::top()
+    }
+    fn join(&self, other: &Self) -> Self {
+        AbsVal::join(self, other)
+    }
+}
+
+/// The range analysis: seeds from declared input bounds / embedding
+/// vocabularies / weight statistics, transfers per [`OpKind`].
+pub struct RangeAnalysis<'a> {
+    ws: Option<&'a WeightStore>,
+    input_bound: f64,
+    weight_sigma: f64,
+    /// Input nodes that feed an `Embedding`/`Gather` index slot, mapped to
+    /// the lookup table's row count: their declared range is `[0, vocab)`.
+    token_vocab: BTreeMap<NodeId, usize>,
+}
+
+impl<'a> RangeAnalysis<'a> {
+    pub fn new(g: &Graph, ws: Option<&'a WeightStore>, cfg: &AnalysisConfig) -> RangeAnalysis<'a> {
+        let mut token_vocab = BTreeMap::new();
+        for n in &g.nodes {
+            if matches!(n.op, OpKind::Embedding | OpKind::Gather) && n.inputs.len() == 2 {
+                let (idx, table) = (n.inputs[0], n.inputs[1]);
+                if matches!(g.node(idx).op, OpKind::Input) {
+                    if let Some(&rows) = g.node(table).shape.first() {
+                        token_vocab.insert(idx, rows);
+                    }
+                }
+            }
+        }
+        RangeAnalysis { ws, input_bound: cfg.input_bound, weight_sigma: cfg.weight_sigma, token_vocab }
+    }
+
+    fn weight_range(&self, g: &Graph, n: &Node) -> AbsVal {
+        // Exact when a store is attached; statistical envelope otherwise
+        // (matches `WeightStore::init_random`: N(0,1)/√fan_in tensors, and
+        // `[2, C]` affine tables with scale 1+0.1·N, shift 0.1·N).
+        if let Some(t) = self.ws.and_then(|ws| ws.get(&n.name)) {
+            return AbsVal::from_data(t.data());
+        }
+        if let Some(&v) = g.consts.get(&n.name) {
+            return AbsVal::exact(v as f64);
+        }
+        let s = self.weight_sigma;
+        if n.shape.len() == 2 && n.shape[0] == 2 {
+            return AbsVal::range((1.0 - 0.1 * s).min(-0.1 * s), (1.0 + 0.1 * s).max(0.1 * s));
+        }
+        let fan_in: usize = n.shape.iter().skip(1).product::<usize>().max(1);
+        let b = s / (fan_in as f64).sqrt();
+        AbsVal::range(-b, b)
+    }
+}
+
+impl Transfer for RangeAnalysis<'_> {
+    type Value = AbsVal;
+
+    fn seed(&self, g: &Graph, n: &Node) -> AbsVal {
+        match n.op {
+            OpKind::Input => match self.token_vocab.get(&n.id) {
+                Some(&vocab) => AbsVal::range(0.0, vocab.saturating_sub(1) as f64),
+                None => AbsVal::range(-self.input_bound, self.input_bound),
+            },
+            OpKind::Weight => self.weight_range(g, n),
+            // Non-source ops never reach seed() (run_forward dispatches on
+            // `is_source`); ⊥ keeps a misuse visible instead of masking it.
+            _ => AbsVal::bottom(),
+        }
+    }
+
+    fn transfer(&self, g: &Graph, n: &Node, args: &[AbsVal]) -> AbsVal {
+        transfer_op(g, n, args)
+    }
+}
+
+/// Second operand, or ⊤ for malformed arity (sound, never unsound).
+fn arg1(args: &[AbsVal]) -> AbsVal {
+    args.get(1).copied().unwrap_or_else(AbsVal::top)
+}
+
+/// Empty input stays empty: the op maps non-finite to non-finite, and we
+/// conservatively collapse which kind to "may be NaN".
+fn carry_empty(x: &AbsVal) -> AbsVal {
+    AbsVal::empty_with(x.any_flag(), false, false)
+}
+
+/// GEMM-family contraction over depth `k`: `k` products accumulated.
+fn gemm_like(x: &AbsVal, w: &AbsVal, k: usize) -> AbsVal {
+    x.mul(w).scale_affine(k.max(1) as f64, 0.0)
+}
+
+/// Per-channel `x*w + w` where `w` is a `[2, C]` scale/shift table
+/// (BatchNorm, weighted Scale).
+fn affine_by_table(x: &AbsVal, w: &AbsVal) -> AbsVal {
+    x.mul(w).add(w)
+}
+
+/// Monotone activation saturating at `sat_lo`/`sat_hi` (sigmoid, tanh):
+/// `f(-inf) = sat_lo`, `f(+inf) = sat_hi`, NaN stays NaN.
+fn bounded_monotone(x: &AbsVal, f: impl Fn(f64) -> f64, sat_lo: f64, sat_hi: f64) -> AbsVal {
+    let mut r = AbsVal::empty_with(x.nan, false, false);
+    if !x.is_empty() {
+        r = r.join(&AbsVal::range(f(x.lo), f(x.hi)));
+    }
+    if x.ninf {
+        r = r.join_point(sat_lo);
+    }
+    if x.pinf {
+        r = r.join_point(sat_hi);
+    }
+    r
+}
+
+/// The x·σ(x) family (gelu/swish/hard-swish/mish): bounded below by a
+/// small negative constant, `f(x) ≤ max(x, 0)` above, `f(x) ≥ 0` once
+/// `x ≥ 0`. `f(-inf) = -inf·0 = NaN`, `f(+inf) = +inf`.
+fn xish(x: &AbsVal, min_bound: f64) -> AbsVal {
+    let mut r = AbsVal::empty_with(x.nan || x.ninf, x.pinf, false);
+    if !x.is_empty() {
+        let lo = if x.lo >= 0.0 { 0.0 } else { min_bound };
+        r = r.join(&AbsVal::range(lo, x.hi.max(0.0)));
+    }
+    r
+}
+
+fn act_range(a: Act, x: &AbsVal) -> AbsVal {
+    match a {
+        Act::Relu => {
+            // `x.max(0.0)`: Rust max drops NaN, so NaN (and -inf) land on 0.
+            let mut r = AbsVal::empty_with(false, x.pinf, false);
+            if !x.is_empty() {
+                r = r.join(&AbsVal::range(x.lo.max(0.0), x.hi.max(0.0)));
+            }
+            if x.nan || x.ninf {
+                r = r.join_point(0.0);
+            }
+            r
+        }
+        Act::Relu6 => {
+            // `clamp(0,6)` keeps NaN; ±inf clamp to the endpoints.
+            let mut r = AbsVal::empty_with(x.nan, false, false);
+            if !x.is_empty() {
+                r = r.join(&AbsVal::range(x.lo.clamp(0.0, 6.0), x.hi.clamp(0.0, 6.0)));
+            }
+            if x.ninf {
+                r = r.join_point(0.0);
+            }
+            if x.pinf {
+                r = r.join_point(6.0);
+            }
+            r
+        }
+        Act::Sigmoid => bounded_monotone(x, |v| 1.0 / (1.0 + (-v).exp()), 0.0, 1.0),
+        Act::Tanh => bounded_monotone(x, f64::tanh, -1.0, 1.0),
+        Act::LeakyRelu => {
+            let f = |v: f64| if v >= 0.0 { v } else { 0.1 * v };
+            let mut r = *x;
+            if !x.is_empty() {
+                r.lo = f(x.lo);
+                r.hi = f(x.hi);
+            }
+            r.fix();
+            r
+        }
+        Act::Gelu => xish(x, -0.2),
+        Act::Swish => xish(x, -0.3),
+        Act::HardSwish => xish(x, -0.4),
+        Act::Mish => xish(x, -0.32),
+    }
+}
+
+/// The per-op transfer function: abstract semantics of [`OpKind`] over
+/// [`AbsVal`], mirroring `exec::eval_op` exactly.
+pub fn transfer_op(g: &Graph, n: &Node, args: &[AbsVal]) -> AbsVal {
+    let x = args.first().copied().unwrap_or_else(AbsVal::top);
+    match &n.op {
+        OpKind::Input | OpKind::Weight => x, // sources; handled by seed()
+        OpKind::Conv2d { .. }
+        | OpKind::Conv3d { .. }
+        | OpKind::ConvTranspose2d { .. }
+        | OpKind::Dense
+        | OpKind::MatMul => {
+            let k = super::reduction_depth(g, n.id).unwrap_or(1);
+            gemm_like(&x, &arg1(args), k)
+        }
+        OpKind::BatchNorm => affine_by_table(&x, &arg1(args)),
+        OpKind::Bias => x.add(&arg1(args)),
+        OpKind::LayerNorm => {
+            if x.is_empty() {
+                carry_empty(&x)
+            } else {
+                // Normalized rows are bounded by ±√d; then per-channel
+                // gain/shift from the [2, C] table. Any non-finite input
+                // poisons the row mean → may-NaN.
+                let d = *n.shape.last().unwrap_or(&1) as f64;
+                let z = AbsVal::range(-d.sqrt(), d.sqrt());
+                let w = arg1(args);
+                let mut out = z.mul(&w).add(&w);
+                out.nan = out.nan || x.any_flag();
+                out
+            }
+        }
+        OpKind::Activation(a) => act_range(*a, &x),
+        OpKind::Add => x.add(&arg1(args)),
+        OpKind::Sub => x.sub(&arg1(args)),
+        OpKind::Mul => x.mul(&arg1(args)),
+        OpKind::Div => x.div(&arg1(args)),
+        OpKind::Pow { e } => pow_range(&x, *e),
+        OpKind::Sqrt => sqrt_range(&x),
+        OpKind::Scale { mul, add } => {
+            if args.len() > 1 {
+                affine_by_table(&x, &args[1]) // per-channel weight override
+            } else {
+                x.scale_affine(*mul, *add)
+            }
+        }
+        OpKind::CausalMask => {
+            // Masked positions become -inf; the kept ones pass through.
+            let mut r = x;
+            if !x.is_empty() || x.any_flag() {
+                r.ninf = true;
+            }
+            r
+        }
+        OpKind::Softmax => {
+            let mut x = x;
+            if matches!(g.node(n.inputs[0]).op, OpKind::CausalMask) {
+                // The fused masked kernel normalizes each row over its
+                // allowed prefix and never reads the masked entries — the
+                // mask's own -inf is structurally harmless.
+                x.ninf = false;
+            }
+            if x.is_empty() {
+                carry_empty(&x)
+            } else {
+                AbsVal { lo: 0.0, hi: 1.0, nan: x.any_flag(), pinf: false, ninf: false }
+            }
+        }
+        OpKind::MaxPool { pad, .. } => {
+            if x.is_empty() {
+                carry_empty(&x)
+            } else if *pad > 0 {
+                x.join_point(0.0) // zero padding enters the windows
+            } else {
+                x
+            }
+        }
+        OpKind::AvgPool { pad, .. } => {
+            if x.is_empty() {
+                carry_empty(&x)
+            } else {
+                let mut r = if *pad > 0 { x.join_point(0.0) } else { x };
+                r.nan = r.nan || (r.pinf && r.ninf); // inf + -inf in one window
+                r
+            }
+        }
+        OpKind::GlobalAvgPool => {
+            let mut r = x;
+            r.nan = r.nan || (r.pinf && r.ninf);
+            r
+        }
+        OpKind::Pad { .. } => x.join_point(0.0),
+        OpKind::Reshape
+        | OpKind::Flatten
+        | OpKind::Transpose { .. }
+        | OpKind::Slice { .. }
+        | OpKind::ChannelShuffle { .. }
+        | OpKind::PixelShuffle { .. }
+        | OpKind::Upsample { .. }
+        | OpKind::Broadcast => x,
+        OpKind::Concat => args.iter().fold(AbsVal::bottom(), |acc, v| acc.join(v)),
+        OpKind::Embedding | OpKind::Gather => {
+            // Row lookup: output values come from the table operand.
+            if args.len() >= 2 {
+                args[1]
+            } else {
+                x
+            }
+        }
+        // Opaque CPU-side op (NMS etc.) — no useful abstraction.
+        OpKind::PostProcess => AbsVal::top(),
+    }
+}
+
+fn pow_range(x: &AbsVal, e: f64) -> AbsVal {
+    if x.is_empty() {
+        // inf^e / nan^e: conservatively any non-finite outcome.
+        return AbsVal::empty_with(true, x.pinf, x.ninf);
+    }
+    if x.any_flag() {
+        return AbsVal::top();
+    }
+    if x.lo < 0.0 && x.hi > 0.0 && e < 0.0 {
+        return AbsVal::top(); // pole at 0 inside the interval
+    }
+    let mut c = vec![x.lo.powf(e), x.hi.powf(e)];
+    if x.lo < 0.0 && x.hi > 0.0 {
+        c.push(0.0f64.powf(e));
+    }
+    // f64 min/max folds *drop* NaN operands, so detect them explicitly:
+    // all-NaN candidates leave an empty hull → guaranteed-NaN, which is
+    // exactly right for e.g. [-8,-2]^0.5.
+    let has_nan = c.iter().any(|v| v.is_nan());
+    let mut r = AbsVal {
+        lo: c.iter().copied().fold(f64::INFINITY, f64::min),
+        hi: c.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        nan: has_nan || (x.lo < 0.0 && e.fract() != 0.0),
+        pinf: false,
+        ninf: false,
+    };
+    r.fix();
+    r
+}
+
+fn sqrt_range(x: &AbsVal) -> AbsVal {
+    if x.is_empty() {
+        // sqrt(NaN) = NaN, sqrt(-inf) = NaN, sqrt(+inf) = +inf.
+        return AbsVal::empty_with(x.nan || x.ninf, x.pinf, false);
+    }
+    if x.hi < 0.0 {
+        // Every finite value is strictly negative: IEEE sqrt yields NaN
+        // for all of them. This is the guaranteed-NaN origin case.
+        return AbsVal::empty_with(true, x.pinf, false);
+    }
+    let mut r = AbsVal::range(x.lo.max(0.0).sqrt(), x.hi.sqrt());
+    r.nan = x.nan || x.ninf || x.lo < 0.0;
+    r.pinf = x.pinf;
+    r.fix();
+    r
+}
+
+/// Compile-time warnings: one typed diagnostic per *origin* node whose
+/// value is guaranteed non-finite. Downstream nodes the poison merely
+/// propagates to are skipped — blame lands where the problem starts.
+pub fn diagnostics(g: &Graph, vals: &[AbsVal]) -> Vec<XgenError> {
+    let mut out = Vec::new();
+    for n in &g.nodes {
+        if n.op.is_source() {
+            continue;
+        }
+        let v = &vals[n.id];
+        if !v.guaranteed_non_finite() {
+            continue;
+        }
+        if n.inputs.iter().any(|&i| vals[i].guaranteed_non_finite()) {
+            continue;
+        }
+        let code = if v.nan { "guaranteed-nan" } else { "guaranteed-inf" };
+        out.push(XgenError::AnalysisDiagnostic {
+            code: code.to_string(),
+            node: n.id,
+            name: n.name.clone(),
+            detail: format!(
+                "every element of '{}' ({}) is non-finite for all inputs in the declared ranges",
+                n.name,
+                n.op.name()
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_arithmetic_is_sound() {
+        let a = AbsVal::range(-2.0, 3.0);
+        let b = AbsVal::range(1.0, 4.0);
+        let s = a.add(&b);
+        assert_eq!((s.lo, s.hi), (-1.0, 7.0));
+        let m = a.mul(&b);
+        assert_eq!((m.lo, m.hi), (-8.0, 12.0));
+        let d = a.div(&b);
+        assert_eq!((d.lo, d.hi), (-2.0, 3.0));
+        assert!(a.div(&AbsVal::range(-1.0, 1.0)).nan); // zero in denominator
+        let n = a.neg();
+        assert_eq!((n.lo, n.hi), (-3.0, 2.0));
+    }
+
+    #[test]
+    fn overflow_becomes_a_guaranteed_inf() {
+        let big = AbsVal::range(1e30, 1e30);
+        let sq = big.mul(&big); // 1e60 > f32::MAX everywhere
+        assert!(sq.guaranteed_non_finite());
+        assert!(sq.pinf && !sq.ninf && !sq.nan);
+        // A symmetric blow-up is clamped, flagged, but NOT guaranteed.
+        let sym = AbsVal::range(-1e30, 1e30).mul(&AbsVal::range(-1e30, 1e30));
+        assert!(!sym.guaranteed_non_finite());
+        assert!(sym.pinf && sym.ninf);
+    }
+
+    #[test]
+    fn sqrt_of_negative_range_is_guaranteed_nan() {
+        let v = sqrt_range(&AbsVal::range(-9.0, -1.0));
+        assert!(v.guaranteed_non_finite() && v.nan);
+        // Straddling zero: may-NaN but not guaranteed.
+        let v = sqrt_range(&AbsVal::range(-1.0, 4.0));
+        assert!(!v.guaranteed_non_finite() && v.nan);
+        assert_eq!((v.lo, v.hi), (0.0, 2.0));
+    }
+
+    #[test]
+    fn relu_launders_nan_relu6_keeps_it() {
+        let poison = AbsVal { lo: 1.0, hi: 2.0, nan: true, pinf: false, ninf: true };
+        let r = act_range(Act::Relu, &poison);
+        assert!(!r.nan && !r.ninf);
+        assert_eq!((r.lo, r.hi), (0.0, 2.0)); // NaN/-inf land on 0
+        let r6 = act_range(Act::Relu6, &poison);
+        assert!(r6.nan && !r6.ninf);
+        let g = act_range(Act::Gelu, &poison);
+        assert!(g.nan); // gelu(-inf) = NaN
+    }
+
+    #[test]
+    fn saturating_activations_absorb_infinities() {
+        let wild = AbsVal { lo: -5.0, hi: 5.0, nan: false, pinf: true, ninf: true };
+        let s = act_range(Act::Sigmoid, &wild);
+        assert!(s.is_finite());
+        assert!(s.lo >= 0.0 && s.hi <= 1.0);
+        let t = act_range(Act::Tanh, &wild);
+        assert!(t.is_finite() && t.lo >= -1.0 && t.hi <= 1.0);
+    }
+
+    #[test]
+    fn pow_of_strictly_negative_base_with_half_exponent_is_nan() {
+        let v = pow_range(&AbsVal::range(-8.0, -2.0), 0.5);
+        assert!(v.guaranteed_non_finite() && v.nan);
+        let v = pow_range(&AbsVal::range(2.0, 3.0), 2.0);
+        assert_eq!((v.lo, v.hi), (4.0, 9.0));
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn from_data_scans_flags_and_bounds() {
+        let v = AbsVal::from_data(&[1.0, -3.5, f32::NAN, 2.0]);
+        assert!(v.nan && !v.pinf && !v.ninf);
+        assert_eq!((v.lo, v.hi), (-3.5, 2.0));
+        let v = AbsVal::from_data(&[f32::INFINITY; 4]);
+        assert!(v.guaranteed_non_finite() && v.pinf);
+    }
+
+    #[test]
+    fn join_is_hull_plus_flag_union() {
+        let a = AbsVal::range(0.0, 1.0);
+        let b = AbsVal { lo: 5.0, hi: 6.0, nan: true, pinf: false, ninf: false };
+        let j = a.join(&b);
+        assert_eq!((j.lo, j.hi), (0.0, 6.0));
+        assert!(j.nan);
+        assert_eq!(AbsVal::bottom().join(&a), a);
+    }
+}

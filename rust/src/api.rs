@@ -46,6 +46,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::analyze::{self, AnalysisConfig, AnalysisReport};
 use crate::baselines::{no_fusion, DeviceClass, Framework};
 use crate::error::{panic_detail, XgenError};
 use crate::cost::{
@@ -147,6 +148,12 @@ pub struct CompileReport {
     /// check aborts `compile()` with a typed
     /// [`XgenError::InvalidGraph`]/[`XgenError::InvalidPlan`] instead.
     pub verify: Option<VerifyReport>,
+    /// What the semantic dataflow analyses found (ISSUE-9): present when
+    /// the session compiled with `.analyze(true)` — the default at O2+.
+    /// Guaranteed-failure findings are *warnings* on the report
+    /// (`analysis.warnings`), not compile aborts: the model still
+    /// compiles, the broken path is named at build time.
+    pub analysis: Option<AnalysisReport>,
     pub compile_ms: f64,
 }
 
@@ -206,6 +213,12 @@ impl CompileReport {
         if let Some(v) = &self.verify {
             s += &format!("  verify: {}\n", v.summary());
         }
+        if let Some(a) = &self.analysis {
+            s += &format!("  analysis: {}\n", a.summary());
+            for w in &a.warnings {
+                s += &format!("    warning: {w}\n");
+            }
+        }
         s
     }
 }
@@ -224,6 +237,8 @@ pub struct Compiler {
     workspace: bool,
     gemm: GemmConfig,
     verify: bool,
+    /// `None` = follow the opt level (on at O2+); `Some` = explicit.
+    analyze: Option<bool>,
 }
 
 impl Compiler {
@@ -244,6 +259,7 @@ impl Compiler {
             // Every debug build verifies every compile; release opts in
             // via `.verify(true)` / `xgen compile --verify`.
             verify: cfg!(debug_assertions),
+            analyze: None,
         }
     }
 
@@ -359,6 +375,18 @@ impl Compiler {
         self
     }
 
+    /// Run the [`crate::analyze`] semantic dataflow analyses after the
+    /// pipeline: value-range / NaN propagation (guaranteed-non-finite
+    /// paths become typed warnings on the report), int8
+    /// quantization-feasibility (`QuantPlan`), and trace-purity effect
+    /// classification of every op and fused group. Default: follows the
+    /// opt level — on at [`OptLevel::O2`] and above, off below (the
+    /// CLI's `compile --analyze` forces it on).
+    pub fn analyze(mut self, on: bool) -> Self {
+        self.analyze = Some(on);
+        self
+    }
+
     /// Run the pipeline: rewrite → prune → fuse → plan (+ FKW encode).
     pub fn compile(mut self) -> Result<CompiledModel> {
         let t0 = Instant::now();
@@ -468,6 +496,21 @@ impl Compiler {
         } else {
             None
         };
+        // ISSUE-9: the semantic layer on top of the structural verifier —
+        // value ranges / NaN safety, int8 feasibility, trace purity.
+        // Runs over the *final* graph + fusion plan so its QuantPlan and
+        // purity groups describe what will actually execute.
+        let analysis = if self.analyze.unwrap_or(self.opt >= OptLevel::O2) {
+            Some(analyze::analyze(
+                &self.graph,
+                self.weights.as_ref(),
+                &plan,
+                prune_report.as_ref(),
+                &AnalysisConfig::default(),
+            )?)
+        } else {
+            None
+        };
         // The steady-state arena: allocated once here, borrowed by every
         // infer. Sized by the planner's extended liveness pass.
         let workspace = match (&state, self.workspace) {
@@ -508,6 +551,7 @@ impl Compiler {
             workspace_bytes,
             pool_threads: self.gemm.resolved_threads(),
             verify: verify_report,
+            analysis,
             compile_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
         Ok(CompiledModel {
@@ -931,7 +975,11 @@ impl CompiledModel {
             .weights
             .as_ref()
             .ok_or_else(|| anyhow!("model was compiled without weights — cannot decode"))?;
-        DecodeSession::new(&self.graph, ws, max_seq)
+        // ISSUE-9 satellite: sessions that compiled with verification on
+        // keep the structural check in *release* builds too — the old
+        // behavior silently dropped it outside debug_assertions.
+        let check = self.report.verify.is_some() || cfg!(debug_assertions);
+        DecodeSession::new_checked(&self.graph, ws, max_seq, check)
     }
 
     /// Bytes one decode session's K/V caches occupy at `max_seq`

@@ -75,6 +75,12 @@ pub enum XgenError {
     /// share a slot, a slot is under-sized for one of its users, or an
     /// arena region overlaps/overflows. `pass` names the checker stage.
     InvalidPlan { pass: String, detail: String },
+    /// A semantic dataflow analysis (`xgen::analyze`) proved a property
+    /// violation at compile time. `code` is the analysis-level reason
+    /// ("guaranteed-nan", "guaranteed-inf", "trace-unsafe"), `node`/`name`
+    /// identify the blamed IR node — the *origin* of the problem, not a
+    /// downstream victim it propagated to.
+    AnalysisDiagnostic { code: String, node: usize, name: String, detail: String },
     /// Anything else: an internal invariant or a wrapped lower-level
     /// error that has no dedicated variant.
     Internal { detail: String },
@@ -98,6 +104,7 @@ impl XgenError {
             XgenError::ServerGone => "ServerGone",
             XgenError::InvalidGraph { .. } => "InvalidGraph",
             XgenError::InvalidPlan { .. } => "InvalidPlan",
+            XgenError::AnalysisDiagnostic { .. } => "AnalysisDiagnostic",
             XgenError::Internal { .. } => "Internal",
         }
     }
@@ -194,6 +201,9 @@ impl fmt::Display for XgenError {
             XgenError::InvalidPlan { pass, detail } => {
                 write!(f, "invalid memory plan after pass '{pass}': {detail}")
             }
+            XgenError::AnalysisDiagnostic { code, node, name, detail } => {
+                write!(f, "analysis[{code}] at node {node} ('{name}'): {detail}")
+            }
             XgenError::Internal { detail } => write!(f, "{detail}"),
         }
     }
@@ -245,6 +255,23 @@ mod tests {
         assert!(p.to_string().contains("invalid memory plan"));
         // Non-verifier variants are untouched by with_pass.
         assert_eq!(XgenError::Cancelled.with_pass("fuse"), XgenError::Cancelled);
+    }
+
+    #[test]
+    fn analysis_diagnostics_name_the_blamed_node() {
+        let d = XgenError::AnalysisDiagnostic {
+            code: "guaranteed-nan".into(),
+            node: 7,
+            name: "sqrt_bad".into(),
+            detail: "sqrt of a strictly-negative range".into(),
+        };
+        assert_eq!(d.code(), "AnalysisDiagnostic");
+        assert!(d.to_string().contains("analysis[guaranteed-nan]"));
+        assert!(d.to_string().contains("node 7"));
+        assert!(d.to_string().contains("sqrt_bad"));
+        // Analysis diagnostics already carry their origin; with_pass is
+        // a verifier re-label and must leave them untouched.
+        assert_eq!(d.clone().with_pass("fuse"), d);
     }
 
     #[test]

@@ -299,13 +299,29 @@ impl<'m> DecodeSession<'m> {
     /// token embedding, non-causal attention, unsupported ops, or
     /// `max_seq` outside `1..=S`.
     pub fn new(g: &'m Graph, ws: &'m WeightStore, max_seq: usize) -> Result<DecodeSession<'m>> {
+        DecodeSession::new_checked(g, ws, max_seq, cfg!(debug_assertions))
+    }
+
+    /// [`DecodeSession::new`] with the structural pre-check made explicit:
+    /// the session API passes `check = true` whenever the model compiled
+    /// with `.verify(true)`, so release builds keep the guarantee instead
+    /// of silently dropping it (ISSUE-9 satellite). The trace-purity gate
+    /// below runs unconditionally — it is cheap and a stateful op in the
+    /// decode closure is always a hard error.
+    pub fn new_checked(
+        g: &'m Graph,
+        ws: &'m WeightStore,
+        max_seq: usize,
+        check: bool,
+    ) -> Result<DecodeSession<'m>> {
         let nn = g.nodes.len();
         // The decode planner trusts the graph invariants the IR verifier
         // proves (topological order, shape consistency, weight backing);
-        // check them up front in debug builds so a corrupted graph fails
-        // with a named pass instead of a mid-plan index panic.
-        #[cfg(debug_assertions)]
-        crate::verify::check_graph(g, Some(ws), "decode")?;
+        // check them up front so a corrupted graph fails with a named
+        // pass instead of a mid-plan index panic.
+        if check {
+            crate::verify::check_graph(g, Some(ws), "decode")?;
+        }
         // --- the single token input ------------------------------------
         let inputs: Vec<NodeId> = g
             .nodes
@@ -363,6 +379,32 @@ impl<'m> DecodeSession<'m> {
         }
         if !dep[out_id] {
             bail!("graph output does not depend on the token input");
+        }
+
+        // --- trace-purity gate (ISSUE-9) -------------------------------
+        // Every op the incremental trace replays per token must be pure:
+        // a stateful op (detection post-processing) or a kernel-less
+        // fallback op inside the decode closure would fail — or silently
+        // corrupt — generation mid-stream. Reject it here, typed, with
+        // the blamed node.
+        for n in &g.nodes {
+            if !dep[n.id] || n.op.is_source() {
+                continue;
+            }
+            let eff = crate::analyze::op_effect(&n.op);
+            if !eff.trace_safe() {
+                return Err(XgenError::AnalysisDiagnostic {
+                    code: "trace-unsafe".to_string(),
+                    node: n.id,
+                    name: n.name.clone(),
+                    detail: format!(
+                        "op '{}' is {} — the incremental decode trace cannot replay it",
+                        n.op.name(),
+                        eff.name()
+                    ),
+                }
+                .into());
+            }
         }
 
         // --- constant subgraphs, evaluated once ------------------------

@@ -37,7 +37,7 @@
 //! | high-level opt | [`rewrite`], [`fusion`] |
 //! | model opt | [`pruning`], [`fkw`] |
 //! | low-level opt | [`codegen`], [`deepreuse`], [`exec`] |
-//! | static analysis | [`verify`] |
+//! | static analysis | [`verify`], [`analyze`] |
 //! | device models | [`cost`], [`baselines`] |
 //! | co-search | [`caps`] |
 //! | runtime | [`xengine`], [`runtime`], [`coordinator`] |
@@ -81,6 +81,7 @@ pub mod codegen;
 pub mod deepreuse;
 pub mod exec;
 pub mod verify;
+pub mod analyze;
 pub mod cost;
 pub mod baselines;
 pub mod caps;

@@ -6,7 +6,7 @@
 //! xgen models                                   list the model zoo
 //! xgen compile --model resnet-50 [--scheme pattern|block|none]
 //!              [--opt 0..3] [--reuse] [--no-fkw] [--infer] [--generate N]
-//!              [--verify]
+//!              [--verify] [--analyze]
 //! xgen sched [--variant ADy416] [--horizon 3000]    Table 5 simulation
 //! xgen caps [--budget 8.0]                      NPAS co-search
 //! xgen emit-kernel [--pattern 0] [--unroll 4]   generated pattern kernel
@@ -88,7 +88,9 @@ xgen — CoCoPIE XGen reproduction (see DESIGN.md)
                 (--scheme, --opt 0..3, --reuse, --no-fkw, --infer;
                  --generate N greedy-decodes N tokens on causal models;
                  --verify runs the static soundness checkers even in
-                 release builds)
+                 release builds; --analyze forces the semantic dataflow
+                 analyses — range/NaN safety, int8 feasibility, trace
+                 purity — below O2, where they are on by default)
   sched         XEngine Table-5 scheduler simulation
   caps          NPAS architecture/pruning co-search
   emit-kernel   print a generated branch-less pattern kernel
@@ -147,6 +149,13 @@ fn cmd_compile(args: &Args) -> Result<()> {
         // `verify:` line, and a violation exits with error[InvalidGraph]
         // or error[InvalidPlan] naming the offending pass.
         c = c.verify(true);
+    }
+    if args.flag("analyze") {
+        // Force the semantic analyses on below O2 (O2+ runs them by
+        // default). The report gains an `analysis:` line with the int8
+        // QuantPlan summary and the purity classification; guaranteed
+        // non-finite paths print as typed warnings.
+        c = c.analyze(true);
     }
     let cm = c.compile()?;
     println!("model: {}", cm.graph().summary());

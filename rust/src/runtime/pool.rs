@@ -471,6 +471,8 @@ mod tests {
         let ss = SharedSlice::new(&mut buf);
         let pool = ThreadPool::new(4);
         pool.parallel_for(8, |t| {
+            // SAFETY: task indices are distinct, so the bands
+            // [t*8, t*8+8) are pairwise disjoint and within the buffer.
             let chunk = unsafe { ss.slice_mut(t * 8, 8) };
             for (j, v) in chunk.iter_mut().enumerate() {
                 *v = (t * 8 + j) as f32;
@@ -558,6 +560,9 @@ mod tests {
     fn overlapping_claims_panic_in_debug() {
         let mut buf = vec![0.0f32; 32];
         let sh = SharedSlice::new(&mut buf);
+        // SAFETY: deliberately violates the disjointness contract to
+        // prove the debug claim registry catches the overlap (the test
+        // expects the panic; the aliased slices are never used).
         unsafe {
             let _a = sh.slice_mut(0, 16);
             let _b = sh.slice_mut(8, 16); // [8, 24) intersects [0, 16)
@@ -569,12 +574,15 @@ mod tests {
     fn new_dispatch_resets_claims() {
         let mut buf = vec![0.0f32; 16];
         let sh = SharedSlice::new(&mut buf);
+        // SAFETY: sole claim over the whole buffer — nothing to overlap.
         unsafe {
             sh.slice_mut(0, 16)[0] = 1.0;
         }
         // Re-wrapping the same buffer starts a fresh dispatch: the full
         // range is claimable again, and zero-length claims never conflict.
         let sh2 = SharedSlice::new(&mut buf);
+        // SAFETY: the zero-length claim covers no elements, so the full
+        // 16-element claim that follows is the only live borrow.
         unsafe {
             let _zero = sh2.slice_mut(4, 0);
             sh2.slice_mut(0, 16)[15] = 2.0;

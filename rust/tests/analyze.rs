@@ -1,0 +1,216 @@
+//! ISSUE-9 acceptance: the semantic dataflow analyses (`xgen::analyze`)
+//! through the session API.
+//!
+//! * Positive sweep: every zoo model compiles with the analyses forced on
+//!   at every opt level and produces **zero** warnings — the range
+//!   domain's "guaranteed non-finite" trigger must never fire on a sane
+//!   model, whatever the fusion level.
+//! * Mutation negatives: a guaranteed-NaN path (Sqrt over a proven
+//!   strictly-negative range), an int8-infeasible dynamic range, an
+//!   accumulator-width overflow and a stateful op in the decode closure
+//!   each produce a *typed* diagnostic pinned to code + blamed node.
+//! * The demo models surface a QuantPlan with feasible int8 layers,
+//!   per-channel scales, and a purity class for every fused group.
+
+use xgen::analyze::Effect;
+use xgen::api::{Compiler, OptLevel};
+use xgen::error::XgenError;
+use xgen::exec::DecodeSession;
+use xgen::graph::zoo::{all_models, by_name};
+use xgen::graph::{Act, Graph, OpKind, WeightStore};
+use xgen::util::json::Json;
+use xgen::util::rng::Rng;
+
+const OPTS: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
+
+/// Every registry model × every opt level analyzes clean: no guaranteed
+/// non-finite paths, a range for every node, an effect for every fused
+/// group. Weightless — the statistical weight envelope must be wide
+/// enough to cover anything `init_random` would produce, yet never so
+/// wide it proves a blow-up that cannot happen.
+#[test]
+fn zoo_analyzes_clean_at_every_opt_level() {
+    for name in all_models() {
+        for opt in OPTS {
+            let cm = Compiler::for_model(name, 1)
+                .expect("registry name")
+                .opt_level(opt)
+                .analyze(true)
+                .compile()
+                .unwrap_or_else(|e| panic!("{name} at {opt:?}: {e}"));
+            let a = cm.report().analysis.as_ref().expect("analysis forced on");
+            assert_eq!(a.nodes, cm.graph().nodes.len(), "{name} at {opt:?}");
+            assert_eq!(a.ranges.len(), a.nodes, "{name} at {opt:?}");
+            assert!(
+                a.warnings.is_empty(),
+                "{name} at {opt:?}: spurious diagnostics {:?}",
+                a.warnings.iter().map(|w| w.to_string()).collect::<Vec<_>>()
+            );
+            for gp in &a.purity.groups {
+                assert!(!gp.nodes.is_empty(), "{name} at {opt:?}: empty purity group");
+            }
+        }
+    }
+}
+
+/// A path that is NaN for *every* input in the declared ranges is blamed
+/// on its origin node — the Sqrt — with a typed compile warning, not on
+/// the downstream nodes the poison flows into.
+#[test]
+fn guaranteed_nan_path_is_diagnosed_and_blamed() {
+    let mut g = Graph::new("nan-trap");
+    let x = g.input("x", &[1, 8]);
+    let r = g.add("relu", OpKind::Activation(Act::Relu), vec![x], vec![1, 8]);
+    // relu ⊆ [0, 6]; -x - 1 ⊆ [-7, -1]: strictly negative, so IEEE sqrt
+    // is NaN over the whole reachable set.
+    let s = g.add("flip", OpKind::Scale { mul: -1.0, add: -1.0 }, vec![r], vec![1, 8]);
+    let q = g.add("sqrt_bad", OpKind::Sqrt, vec![s], vec![1, 8]);
+    let t = g.add("after", OpKind::Activation(Act::Relu6), vec![q], vec![1, 8]);
+    g.outputs = vec![t];
+
+    let cm = Compiler::new(g)
+        .opt_level(OptLevel::O0) // no rewrites: node ids stay as built
+        .analyze(true)
+        .compile()
+        .expect("diagnostics are warnings, not compile aborts");
+    let a = cm.report().analysis.as_ref().unwrap();
+    assert_eq!(a.warnings.len(), 1, "origin-only blame: downstream Relu6 is not re-reported");
+    let XgenError::AnalysisDiagnostic { code, node, name, detail } = &a.warnings[0] else {
+        panic!("expected AnalysisDiagnostic, got {}", a.warnings[0]);
+    };
+    assert_eq!(code, "guaranteed-nan");
+    assert_eq!(*node, q);
+    assert_eq!(name, "sqrt_bad");
+    assert!(detail.contains("sqrt"), "detail names the op: {detail}");
+    assert!(a.ranges[q].guaranteed_non_finite());
+    assert!(cm.report().summary().contains("warning: analysis[guaranteed-nan]"));
+}
+
+/// Int8 infeasibility is a reason code on the QuantPlan — never a
+/// warning: the model compiles clean, the plan records why the layer
+/// must stay fp32.
+#[test]
+fn int8_infeasible_layers_carry_reason_codes() {
+    // (a) dynamic range: a 1e7 pre-scale puts the dense input far past
+    // any useful 8-bit resolution.
+    let mut g = Graph::new("wide");
+    let x = g.input("x", &[1, 8]);
+    let s = g.add("blow", OpKind::Scale { mul: 1e7, add: 0.0 }, vec![x], vec![1, 8]);
+    let w = g.weight("w", &[8, 4]);
+    let d = g.add("fc", OpKind::Dense, vec![s, w], vec![1, 4]);
+    g.outputs = vec![d];
+    let cm = Compiler::new(g).opt_level(OptLevel::O0).analyze(true).compile().unwrap();
+    let a = cm.report().analysis.as_ref().unwrap();
+    assert!(a.warnings.is_empty(), "infeasibility is not a diagnostic");
+    let layer = a.quant.layers.iter().find(|l| l.name == "fc").expect("dense layer planned");
+    assert!(!layer.feasible);
+    assert_eq!(layer.reason, Some("dynamic-range"));
+    assert!(layer.in_amax > 1e4);
+
+    // (b) accumulator width: K = 200_000 needs 15 + ⌈log2 K⌉ = 33 bits,
+    // one more than the i32 accumulator has.
+    let mut g = Graph::new("deep");
+    let x = g.input("x", &[1, 200_000]);
+    let w = g.weight("w", &[200_000, 4]);
+    let d = g.add("fc", OpKind::Dense, vec![x, w], vec![1, 4]);
+    g.outputs = vec![d];
+    let cm = Compiler::new(g).opt_level(OptLevel::O0).analyze(true).compile().unwrap();
+    let a = cm.report().analysis.as_ref().unwrap();
+    let layer = a.quant.layers.iter().find(|l| l.name == "fc").unwrap();
+    assert!(!layer.feasible);
+    assert_eq!(layer.reason, Some("accumulator-width"));
+    assert_eq!(layer.acc_bits, 33);
+    assert_eq!(layer.k, 200_000);
+}
+
+/// A stateful op inside the decode closure is rejected by the purity
+/// gate at session construction — typed, with the blamed node — instead
+/// of corrupting generation mid-stream.
+#[test]
+fn decode_rejects_stateful_op_with_typed_diagnostic() {
+    let mut g = by_name("demo-transformer-causal", 1);
+    let out = g.outputs[0];
+    let shape = g.node(out).shape.clone();
+    let pp = g.add("nms", OpKind::PostProcess, vec![out], shape);
+    g.outputs = vec![pp];
+    let ws = WeightStore::init_random(&g, &mut Rng::new(7));
+
+    let err = DecodeSession::new(&g, &ws, 8).expect_err("stateful op in the trace");
+    let xe = XgenError::of(&err).expect("typed error surfaces through anyhow");
+    let XgenError::AnalysisDiagnostic { code, node, name, .. } = xe else {
+        panic!("expected AnalysisDiagnostic, got {xe}");
+    };
+    assert_eq!(code, "trace-unsafe");
+    assert_eq!(*node, pp);
+    assert_eq!(name, "nms");
+}
+
+/// The baseline stays usable: the unmodified causal demo passes the
+/// purity gate and builds a session (release builds included — the gate
+/// and the `.verify(true)` pre-check no longer hide behind
+/// `debug_assertions`).
+#[test]
+fn causal_decoder_passes_the_purity_gate() {
+    let cm = Compiler::for_model("demo-transformer-causal", 1)
+        .unwrap()
+        .random_weights(7)
+        .verify(true)
+        .compile()
+        .unwrap();
+    assert!(cm.decode_session(8).is_ok());
+    let a = cm.report().analysis.as_ref().expect("O2 default runs the analyses");
+    assert!(a.purity.trace_safe(), "every fused group of the causal demo is traceable");
+}
+
+/// The demo CNN's report carries the full artifact set: a QuantPlan with
+/// at least one feasible int8 layer (with per-channel scales), a purity
+/// class for every fused group, and a serializable JSON form.
+#[test]
+fn demo_model_reports_quant_plan_and_purity() {
+    let cm = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(7)
+        .opt_level(OptLevel::O2)
+        .compile()
+        .unwrap();
+    let a = cm.report().analysis.as_ref().expect("analysis defaults on at O2");
+    assert!(a.warnings.is_empty());
+    assert!(a.finite_nodes > 0);
+
+    assert!(!a.quant.layers.is_empty(), "demo-cnn has contraction layers");
+    assert!(a.quant.feasible_count() >= 1, "at least one layer is int8-feasible");
+    let feas = a.quant.layers.iter().find(|l| l.feasible).unwrap();
+    assert!(!feas.channel_scales.is_empty(), "weighted compile yields per-channel scales");
+    assert!(feas.in_scale > 0.0 && feas.weight_scale > 0.0);
+    for l in &a.quant.layers {
+        assert_eq!(l.feasible, l.reason.is_none(), "{}: reason iff infeasible", l.name);
+    }
+
+    assert!(!a.purity.groups.is_empty());
+    assert!(a.purity.count(Effect::GemmEpilogueFusable) >= 1, "conv groups anchor on a GEMM");
+    assert_eq!(a.purity.count(Effect::Stateful), 0);
+    assert_eq!(a.purity.count(Effect::FallbackOnly), 0);
+
+    let summary = cm.report().summary();
+    assert!(summary.contains("analysis:"), "report surfaces the analysis line:\n{summary}");
+
+    let back = Json::parse(&a.quant.to_json().to_string()).expect("QuantPlan serializes");
+    let n = back.get("layers").and_then(Json::as_arr).map(<[Json]>::len);
+    assert_eq!(n, Some(a.quant.layers.len()));
+}
+
+/// `.analyze(bool)` overrides the opt-level default (on at O2+).
+#[test]
+fn analyze_defaults_follow_opt_level_and_override() {
+    let at = |opt, force: Option<bool>| {
+        let mut c = Compiler::for_model("demo-cnn", 1).unwrap().opt_level(opt);
+        if let Some(on) = force {
+            c = c.analyze(on);
+        }
+        c.compile().unwrap().report().analysis.is_some()
+    };
+    assert!(!at(OptLevel::O1, None), "below O2 the analyses default off");
+    assert!(at(OptLevel::O2, None), "O2 default on");
+    assert!(at(OptLevel::O0, Some(true)), "forced on at O0");
+    assert!(!at(OptLevel::O3, Some(false)), "forced off at O3");
+}
