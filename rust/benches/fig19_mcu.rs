@@ -44,8 +44,8 @@ fn main() {
     // the int8 SIMD path (no per-layer requant fallbacks to f32).
     let mut rng = Rng::new(19);
     let w = Tensor::randn(&[32, 144], 0.8, &mut rng);
-    let e_t = quant_rms_error(&w, QuantMode::PerTensor);
-    let e_c = quant_rms_error(&w, QuantMode::PerChannel);
+    let e_t = quant_rms_error(&w, QuantMode::PerTensor).expect("finite weights");
+    let e_c = quant_rms_error(&w, QuantMode::PerChannel).expect("finite weights");
     // Layers whose per-tensor error exceeds budget fall back to f32 in
     // TFLM (4x slower); per-channel keeps them int8.
     let f32_fallback_frac: f64 = 0.18;

@@ -1,0 +1,146 @@
+//! ISSUE-10 — int8 quantized inference end-to-end: the i32-accumulate
+//! GEMM vs the f32 blocked kernel on transformer contraction shapes, and
+//! the session-level `quantize(force)` arm vs the f32 baseline on the
+//! demo transformer. Correctness is asserted before anything is timed
+//! (int8 agrees with f32 within the quantization error bound); timing
+//! numbers are machine-local and go to `BENCH_quant.json` at the repo
+//! root (the checked-in file is a placeholder until this bench runs).
+
+use xgen::api::{Compiler, QuantPolicy};
+use xgen::pruning::quant::quantize_gemm_weight;
+use xgen::pruning::PruneScheme;
+use xgen::tensor::gemm::{gemm, GemmConfig};
+use xgen::tensor::qgemm::{qgemm_prepacked, qgemm_scratch_elems, PackedQB};
+use xgen::tensor::Tensor;
+use xgen::util::bench::{time_ms, Table};
+use xgen::util::json::Json;
+use xgen::util::rng::Rng;
+
+fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+fn max_abs_diff(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+}
+
+fn main() {
+    let mut rng = Rng::new(0x1A78);
+    let quick = std::env::var("XGEN_BENCH_QUICK").is_ok();
+    let cfg = GemmConfig::default();
+
+    // --- kernel-level: prepacked int8 vs prepacked-equivalent f32 ----
+    // Transformer contraction shapes (tokens × d_model × d_ff etc.).
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(64, 64, 256), (64, 256, 64)]
+    } else {
+        &[(64, 64, 256), (64, 256, 64), (128, 128, 512), (256, 256, 1024)]
+    };
+    let mut t = Table::new(&["m x k x n", "f32 (ms)", "int8 (ms)", "int8 x", "rel err"]);
+    let mut results = Vec::new();
+    for &(m, k, n) in shapes {
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        // Weight in the Dense layout [in=k, out=n]; packed once like
+        // ExecState::prepack does it.
+        let w = Tensor::from_vec(&[k, n], rng.normal_vec(k * n, 0.0, 0.1));
+        let pqb = PackedQB::from_weight(&w, &cfg).expect("finite weights");
+        let q = quantize_gemm_weight(&w).expect("finite weights");
+        assert_eq!(q.scales.len(), n, "one dequant scale per output column");
+
+        let mut want = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, w.data(), &mut want, &cfg);
+        let mut got = vec![0.0f32; m * n];
+        let mut scratch = vec![0i8; qgemm_scratch_elems(&cfg) * cfg.resolved_threads()];
+        qgemm_prepacked(m, &a, &pqb, &mut got, &cfg, &mut scratch);
+        // Matched-accuracy gate before timing: int8 must sit inside the
+        // symmetric-quantization error envelope of the f32 result.
+        let rel = max_abs_diff(&want, &got) / max_abs(&want).max(1e-6);
+        assert!(rel < 0.05, "int8 GEMM off the f32 oracle: rel err {rel} at {m}x{k}x{n}");
+
+        let (warm, samples) = if quick { (1, 3) } else { (1, 5) };
+        let f32_t = time_ms(warm, samples, || {
+            gemm(m, k, n, &a, w.data(), &mut want, &cfg);
+        });
+        let int8_t = time_ms(warm, samples, || {
+            qgemm_prepacked(m, &a, &pqb, &mut got, &cfg, &mut scratch);
+        });
+        t.row(vec![
+            format!("{m}x{k}x{n}"),
+            format!("{:.3}", f32_t.mean),
+            format!("{:.3}", int8_t.mean),
+            format!("{:.2}x", f32_t.mean / int8_t.mean),
+            format!("{rel:.1e}"),
+        ]);
+        results.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("n", Json::num(n as f64)),
+            ("f32_ms", Json::num(f32_t.mean)),
+            ("int8_ms", Json::num(int8_t.mean)),
+            ("speedup", Json::num(f32_t.mean / int8_t.mean)),
+            ("rel_err", Json::num(rel as f64)),
+        ]));
+    }
+    t.print("prepacked int8 GEMM vs f32 blocked kernel");
+
+    // --- session-level: quantize(force) vs f32 on the demo transformer --
+    let compile = |policy: QuantPolicy| {
+        Compiler::for_model("demo-transformer", 1)
+            .expect("zoo model")
+            .random_weights(11)
+            .scheme(PruneScheme::None)
+            .quantize(policy)
+            .compile()
+            .expect("compile")
+    };
+    let f32_m = compile(QuantPolicy::Off);
+    let int8_m = compile(QuantPolicy::Force);
+    let xs = f32_m.sample_inputs(11);
+    let y_f32 = f32_m.infer(&xs).expect("f32 infer");
+    let y_int8 = int8_m.infer(&xs).expect("int8 infer");
+    let rel = max_abs_diff(y_f32[0].data(), y_int8[0].data()) / max_abs(y_f32[0].data()).max(1e-6);
+    assert!(rel < 0.25, "quantized transformer diverged from f32: rel err {rel}");
+    let int8_layers = int8_m.report().int8_layer_count();
+    assert!(int8_layers > 0, "force policy quantized no layers");
+
+    let (warm, samples) = if quick { (1, 3) } else { (2, 8) };
+    let e2e_f32 = time_ms(warm, samples, || {
+        let _ = f32_m.infer(&xs).expect("f32 infer");
+    });
+    let e2e_int8 = time_ms(warm, samples, || {
+        let _ = int8_m.infer(&xs).expect("int8 infer");
+    });
+    println!(
+        "\ndemo-transformer e2e: f32 {:.2} ms, int8[force] {:.2} ms ({:.2}x), \
+         {int8_layers}/{} contraction layers int8, rel err {rel:.1e}",
+        e2e_f32.mean,
+        e2e_int8.mean,
+        e2e_f32.mean / e2e_int8.mean,
+        int8_m.report().precision.len(),
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("quant")),
+        ("results", Json::Arr(results)),
+        (
+            "e2e",
+            Json::obj(vec![
+                ("model", Json::str("demo-transformer")),
+                ("f32_ms", Json::num(e2e_f32.mean)),
+                ("int8_ms", Json::num(e2e_int8.mean)),
+                ("speedup", Json::num(e2e_f32.mean / e2e_int8.mean)),
+                ("int8_layers", Json::num(int8_layers as f64)),
+                ("rel_err", Json::num(rel as f64)),
+            ]),
+        ),
+    ]);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_quant.json"
+    } else {
+        "BENCH_quant.json"
+    };
+    match std::fs::write(path, json.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

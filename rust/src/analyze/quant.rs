@@ -10,7 +10,7 @@
 //! range is a perfectly valid model.
 
 use crate::graph::{Graph, OpKind, WeightStore};
-use crate::pruning::quant::{quantize, QuantMode};
+use crate::pruning::quant::quantize_gemm_weight;
 use crate::pruning::PruneReport;
 use crate::util::json::Json;
 
@@ -24,8 +24,8 @@ pub struct QuantLayerPlan {
     pub name: String,
     pub op: &'static str,
     pub feasible: bool,
-    /// Why not, when infeasible: "non-finite-input", "dynamic-range" or
-    /// "accumulator-width".
+    /// Why not, when infeasible: "non-finite-input", "non-finite-weight",
+    /// "dynamic-range" or "accumulator-width".
     pub reason: Option<&'static str>,
     /// Largest finite input magnitude the range analysis allows.
     pub in_amax: f64,
@@ -117,14 +117,22 @@ pub fn plan(
         let acc_bits = 15 + ceil_log2(k);
 
         // Per-channel weight statistics, exact when a store is attached.
+        // `quantize_gemm_weight` is the same helper `ExecState::prepack`
+        // packs from, so the plan's scales agree bitwise with the scales
+        // the int8 epilogue actually multiplies by.
         let wnode = n.inputs.iter().copied().find(|&i| matches!(g.node(i).op, OpKind::Weight));
         let mut weight_scale = 0.0f64;
         let mut channel_scales = Vec::new();
         let mut sparsity = fallback_sparsity;
+        let mut weight_nonfinite = false;
         if let Some(t) = wnode.and_then(|wid| ws.and_then(|ws| ws.get(&g.node(wid).name))) {
-            let q = quantize(t, QuantMode::PerChannel);
-            weight_scale = q.scales.iter().fold(0.0f32, |m, &s| m.max(s)) as f64;
-            channel_scales = q.scales;
+            match quantize_gemm_weight(t) {
+                Ok(q) => {
+                    weight_scale = q.scales.iter().fold(0.0f32, |m, &s| m.max(s)) as f64;
+                    channel_scales = q.scales;
+                }
+                Err(_) => weight_nonfinite = true,
+            }
             let zeros = t.data().iter().filter(|&&v| v == 0.0).count();
             sparsity = zeros as f64 / t.len().max(1) as f64;
         }
@@ -132,6 +140,8 @@ pub fn plan(
         let in_amax = xin.amax();
         let reason = if !xin.is_finite() {
             Some("non-finite-input")
+        } else if weight_nonfinite {
+            Some("non-finite-weight")
         } else if in_amax > cfg.int8_max_amax {
             Some("dynamic-range")
         } else if acc_bits > cfg.int8_acc_bits {

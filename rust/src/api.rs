@@ -39,6 +39,7 @@
 //! [`Server`](crate::coordinator::Server) goes through this seam; future
 //! backends (sharding, multi-device XEngine dispatch) plug in here.
 
+use std::collections::BTreeSet;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
@@ -101,6 +102,61 @@ impl OptLevel {
     }
 }
 
+/// How the session picks numeric precision for its contraction layers
+/// (Dense, groups=1 conv, batched matmul) — ROADMAP item 3's int8 GEMM
+/// end-to-end, with the compression–compilation co-design twist: the
+/// *compile-time* [`QuantPlan`](crate::analyze::quant::QuantPlan) decides,
+/// not a runtime calibration pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QuantPolicy {
+    /// Everything stays f32 (the default).
+    #[default]
+    Off,
+    /// Every eligible contraction layer runs int8, feasible or not —
+    /// the accuracy-vs-speed stress arm. Non-finite weights still fail
+    /// the compile with a typed error.
+    Force,
+    /// Consult the analysis pass's `QuantPlan` per layer: int8 where
+    /// `feasible`, f32 (with the plan's reason on the report) elsewhere.
+    /// Forces the analysis pass on even below O2.
+    Auto,
+}
+
+impl QuantPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantPolicy::Off => "off",
+            QuantPolicy::Force => "force",
+            QuantPolicy::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI spelling (`off`/`force`/`auto`).
+    pub fn parse(s: &str) -> Option<QuantPolicy> {
+        match s {
+            "off" | "f32" => Some(QuantPolicy::Off),
+            "force" | "int8" => Some(QuantPolicy::Force),
+            "auto" => Some(QuantPolicy::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Resolved precision of one contraction layer on the compiled session —
+/// what will *actually* execute, not what the plan wished for: FKW- and
+/// reuse-routed layers report f32 with the routing as the reason.
+#[derive(Debug, Clone)]
+pub struct LayerPrecision {
+    pub node: usize,
+    pub name: String,
+    pub op: &'static str,
+    /// True when the layer executes through the int8 kernel (packed
+    /// weights for Dense/conv, dynamic quantization for MatMul).
+    pub int8: bool,
+    /// Why the layer stayed f32 under a non-`Off` policy.
+    pub reason: Option<String>,
+}
+
 /// Summary of the pruning stage (the full
 /// [`PruneReport`] — including per-layer pattern assignments — is on
 /// [`CompiledModel::prune_report`]).
@@ -154,10 +210,20 @@ pub struct CompileReport {
     /// (`analysis.warnings`), not compile aborts: the model still
     /// compiles, the broken path is named at build time.
     pub analysis: Option<AnalysisReport>,
+    /// Precision policy the session compiled under (ISSUE-10).
+    pub quant_policy: QuantPolicy,
+    /// Per-contraction-layer resolved precision; empty when the policy
+    /// is [`QuantPolicy::Off`].
+    pub precision: Vec<LayerPrecision>,
     pub compile_ms: f64,
 }
 
 impl CompileReport {
+    /// Contraction layers that resolved to int8 (0 under `Off`).
+    pub fn int8_layer_count(&self) -> usize {
+        self.precision.iter().filter(|l| l.int8).count()
+    }
+
     /// Human-readable multi-line summary (what `xgen compile` prints).
     pub fn summary(&self) -> String {
         let mut s = format!(
@@ -210,6 +276,19 @@ impl CompileReport {
             self.workspace_bytes as f64 / 1024.0,
             self.pool_threads
         );
+        if !matches!(self.quant_policy, QuantPolicy::Off) {
+            s += &format!(
+                "  quant[{}]: {}/{} contraction layers int8\n",
+                self.quant_policy.name(),
+                self.int8_layer_count(),
+                self.precision.len()
+            );
+            for l in self.precision.iter().filter(|l| !l.int8) {
+                if let Some(r) = &l.reason {
+                    s += &format!("    f32 {} ({}): {r}\n", l.name, l.op);
+                }
+            }
+        }
         if let Some(v) = &self.verify {
             s += &format!("  verify: {}\n", v.summary());
         }
@@ -239,6 +318,7 @@ pub struct Compiler {
     verify: bool,
     /// `None` = follow the opt level (on at O2+); `Some` = explicit.
     analyze: Option<bool>,
+    quantize: QuantPolicy,
 }
 
 impl Compiler {
@@ -260,6 +340,7 @@ impl Compiler {
             // via `.verify(true)` / `xgen compile --verify`.
             verify: cfg!(debug_assertions),
             analyze: None,
+            quantize: QuantPolicy::Off,
         }
     }
 
@@ -387,6 +468,20 @@ impl Compiler {
         self
     }
 
+    /// Int8 precision policy for the session's contraction layers
+    /// (default [`QuantPolicy::Off`]). Under [`QuantPolicy::Auto`] the
+    /// compile-time [`QuantPlan`](crate::analyze::quant::QuantPlan) picks
+    /// precision per layer — the analysis pass is forced on for this.
+    /// Dense and groups=1 conv weights quantize per output channel and
+    /// pack once at compile time; selected `MatMul` layers (attention
+    /// QK^T / AV) quantize dynamically around the f32 masked softmax.
+    /// Decode sessions always run f32 and work unchanged on
+    /// mixed-precision plans.
+    pub fn quantize(mut self, policy: QuantPolicy) -> Self {
+        self.quantize = policy;
+        self
+    }
+
     /// Run the pipeline: rewrite → prune → fuse → plan (+ FKW encode).
     pub fn compile(mut self) -> Result<CompiledModel> {
         let t0 = Instant::now();
@@ -437,6 +532,49 @@ impl Compiler {
         let density = scheme_density_map(&self.graph, &self.scheme);
         let sparse_eff = sparse_efficiency(&self.scheme);
 
+        // ISSUE-9: the semantic layer on top of the structural verifier —
+        // value ranges / NaN safety, int8 feasibility, trace purity.
+        // Runs over the *final* graph + fusion plan so its QuantPlan and
+        // purity groups describe what will actually execute. Runs before
+        // the executor state is built: under `quantize(Auto)` (which
+        // forces it on, ISSUE-10) the plan's per-layer verdicts decide
+        // which weights pre-pack to int8.
+        let analysis = if self.analyze.unwrap_or(self.opt >= OptLevel::O2)
+            || matches!(self.quantize, QuantPolicy::Auto)
+        {
+            Some(analyze::analyze(
+                &self.graph,
+                self.weights.as_ref(),
+                &plan,
+                prune_report.as_ref(),
+                &AnalysisConfig::default(),
+            )?)
+        } else {
+            None
+        };
+        // The int8 node set the policy selects. `Force` takes every
+        // eligible contraction; `Auto` takes the QuantPlan's feasible
+        // subset. Routing (FKW, deep reuse) still wins at prepack time —
+        // the precision report below blames those truthfully.
+        let eligible = quant_eligible_nodes(&self.graph);
+        let quant_sel: BTreeSet<usize> = match self.quantize {
+            QuantPolicy::Off => BTreeSet::new(),
+            QuantPolicy::Force => eligible.iter().copied().collect(),
+            QuantPolicy::Auto => {
+                let qp = analysis
+                    .as_ref()
+                    .map(|a| &a.quant)
+                    .expect("Auto forces the analysis pass on");
+                eligible
+                    .iter()
+                    .copied()
+                    .filter(|&id| {
+                        qp.layers.iter().any(|l| l.node == id && l.feasible)
+                    })
+                    .collect()
+            }
+        };
+
         // With the planner off, infer() runs the straight-line reference
         // executor — don't build (or report) executor state that would
         // never be used.
@@ -468,6 +606,8 @@ impl Compiler {
             }
             st.set_reuse(self.reuse);
             st.set_gemm_config(self.gemm);
+            // Before prepack: the set decides which weights pack to int8.
+            st.set_quant(quant_sel.clone());
             if self.prepack {
                 // After FKW attachment and reuse routing, so each conv
                 // packs for the kernel that will actually run it.
@@ -496,20 +636,58 @@ impl Compiler {
         } else {
             None
         };
-        // ISSUE-9: the semantic layer on top of the structural verifier —
-        // value ranges / NaN safety, int8 feasibility, trace purity.
-        // Runs over the *final* graph + fusion plan so its QuantPlan and
-        // purity groups describe what will actually execute.
-        let analysis = if self.analyze.unwrap_or(self.opt >= OptLevel::O2) {
-            Some(analyze::analyze(
-                &self.graph,
-                self.weights.as_ref(),
-                &plan,
-                prune_report.as_ref(),
-                &AnalysisConfig::default(),
-            )?)
+        // Resolved per-layer precision: computed from the sets the
+        // executor state *actually* built (packed int8 tables, the
+        // dynamic-MatMul membership), so FKW-/reuse-routed and
+        // prepack-off layers report f32 with a truthful reason.
+        let precision: Vec<LayerPrecision> = if matches!(self.quantize, QuantPolicy::Off) {
+            Vec::new()
         } else {
-            None
+            let plan_reason = |id: usize| -> Option<String> {
+                analysis.as_ref().and_then(|a| {
+                    a.quant
+                        .layers
+                        .iter()
+                        .find(|l| l.node == id)
+                        .and_then(|l| l.reason.map(|r| format!("infeasible: {r}")))
+                })
+            };
+            eligible
+                .iter()
+                .map(|&id| {
+                    let n = self.graph.node(id);
+                    let is_matmul = matches!(n.op, OpKind::MatMul);
+                    let (int8, reason) = match &state {
+                        None => (false, Some("planner-off".to_string())),
+                        Some(st) => {
+                            if st.int8_scales(id).is_some()
+                                || (is_matmul && st.quant_nodes().contains(&id))
+                            {
+                                (true, None)
+                            } else if st.has_fkw(id) {
+                                (false, Some("fkw-routed".to_string()))
+                            } else if self.reuse.is_some() && !is_matmul {
+                                (false, Some("reuse-routed".to_string()))
+                            } else if matches!(self.quantize, QuantPolicy::Auto)
+                                && !quant_sel.contains(&id)
+                            {
+                                (false, plan_reason(id).or_else(|| Some("not-in-plan".into())))
+                            } else if !self.prepack && !is_matmul {
+                                (false, Some("prepack-off".to_string()))
+                            } else {
+                                (false, Some("f32".to_string()))
+                            }
+                        }
+                    };
+                    LayerPrecision {
+                        node: id,
+                        name: n.name.clone(),
+                        op: n.op.name(),
+                        int8,
+                        reason,
+                    }
+                })
+                .collect()
         };
         // The steady-state arena: allocated once here, borrowed by every
         // infer. Sized by the planner's extended liveness pass.
@@ -552,6 +730,8 @@ impl Compiler {
             pool_threads: self.gemm.resolved_threads(),
             verify: verify_report,
             analysis,
+            quant_policy: self.quantize,
+            precision,
             compile_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
         Ok(CompiledModel {
@@ -570,6 +750,18 @@ impl Compiler {
             counters: RuntimeCounters::default(),
         })
     }
+}
+
+/// Contraction nodes the int8 kernel can execute: Dense, groups=1 conv
+/// (im2col GEMM) and batched MatMul (the attention contractions).
+fn quant_eligible_nodes(g: &Graph) -> Vec<usize> {
+    g.nodes
+        .iter()
+        .filter(|n| {
+            matches!(n.op, OpKind::Dense | OpKind::MatMul | OpKind::Conv2d { groups: 1, .. })
+        })
+        .map(|n| n.id)
+        .collect()
 }
 
 /// Serve-time self-healing counters (internal; read through
@@ -644,6 +836,15 @@ impl CompiledModel {
     /// Per-stage compile statistics.
     pub fn report(&self) -> &CompileReport {
         &self.report
+    }
+
+    /// Per-output-channel dequant scales of node `node`'s int8-packed
+    /// weight, when the session's quant policy packed it (Dense /
+    /// groups=1 conv). The bitwise source of truth the scale-agreement
+    /// test compares against the compile-time
+    /// [`QuantPlan`](crate::analyze::quant::QuantPlan).
+    pub fn int8_scales(&self, node: usize) -> Option<&[f32]> {
+        self.state.as_ref().and_then(|st| st.int8_scales(node))
     }
 
     /// Shapes of the graph's Input nodes, in execution order.

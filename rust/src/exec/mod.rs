@@ -32,7 +32,7 @@ pub mod decode;
 pub mod planner;
 
 use std::borrow::Cow;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -45,9 +45,10 @@ use crate::fusion::FusionPlan;
 use crate::graph::{Act, Graph, NodeId, OpKind, WeightStore};
 use crate::pruning::pattern::PatternAssignment;
 use crate::tensor::gemm::{gemm, gemm_prepacked, GemmConfig, PackedB};
+use crate::tensor::qgemm::{qgemm, qgemm_prepacked, qgemm_scratch_elems, PackedQB};
 use crate::tensor::{
-    conv2d_gemm_prepacked_into, conv2d_gemm_wt_into, conv_weight_matrix, conv_weight_matrix_into,
-    Tensor,
+    conv2d_gemm_prepacked_into, conv2d_gemm_wt_into, conv2d_qgemm_prepacked_into,
+    conv_weight_matrix, conv_weight_matrix_into, Tensor,
 };
 
 /// Straight-line reference executor.
@@ -425,6 +426,42 @@ fn batched_matmul_into(
     }
 }
 
+/// Int8 twin of [`batched_matmul_into`]: both operands are activations, so
+/// each per-batch multiply runs the dynamically-quantizing
+/// [`crate::tensor::qgemm::qgemm`] (per-tensor scales derived per batch
+/// slice). This is the quantized-attention contraction path — int8 QK^T
+/// and int8 AV around the unchanged f32 masked softmax. Like the f32
+/// batched matmul, it is not part of the zero-allocation guarantee (the
+/// int8 kernel packs into its own buffers here).
+#[allow(clippy::too_many_arguments)]
+fn batched_qmatmul_into(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    b_broadcast: bool,
+    cfg: &GemmConfig,
+    out: &mut [f32],
+) {
+    if b_broadcast {
+        qgemm(batch * m, k, n, a, b, &mut out[..batch * m * n], cfg);
+        return;
+    }
+    for bi in 0..batch {
+        qgemm(
+            m,
+            k,
+            n,
+            &a[bi * m * k..(bi + 1) * m * k],
+            &b[bi * k * n..(bi + 1) * k * n],
+            &mut out[bi * m * n..(bi + 1) * m * n],
+            cfg,
+        );
+    }
+}
+
 /// Batched matmul over arbitrary leading dims: `[..., m, k] x [..., k, n]`
 /// (or a 2-D rhs broadcast across every batch) — rank-4 attention shapes
 /// (`[n, heads, L, d_h]`) included.
@@ -746,6 +783,11 @@ pub struct ExecState {
     /// Constant GEMM operands pre-packed at compile time
     /// ([`ExecState::prepack`]).
     packed: PackedWeights,
+    /// Contraction nodes the quant plan selected for int8 execution
+    /// ([`ExecState::set_quant`]): Dense and groups=1 conv weights pack to
+    /// [`PackedQB`] at prepack time; `MatMul` members route through the
+    /// dynamically-quantizing kernel at run time.
+    quant: BTreeSet<NodeId>,
     /// Blocking/thread config of the steady-state engine (packs and runs
     /// must agree, so it lives here).
     gemm_cfg: GemmConfig,
@@ -770,16 +812,32 @@ pub struct PackedWeights {
     /// Deep-reuse-routed conv node id -> transposed `[i*kh*kw, o]` weight
     /// matrix (reuse clusters per call, so only the transpose is cached).
     reuse_wt: BTreeMap<NodeId, Tensor>,
+    /// Quantized Dense node id -> int8-packed `[in_f, out_f]` operand with
+    /// per-output-channel dequant scales. A node is in `qdense` *or*
+    /// `dense`, never both — the quant plan decides at prepack time.
+    qdense: BTreeMap<NodeId, PackedQB>,
+    /// Quantized groups=1 conv node id -> int8-packed transposed
+    /// `[i*kh*kw, o]` filter matrix (per-output-channel scales).
+    qconv: BTreeMap<NodeId, PackedQB>,
 }
 
 impl PackedWeights {
     /// Number of pre-packed operands.
     pub fn len(&self) -> usize {
-        self.dense.len() + self.conv.len() + self.reuse_wt.len()
+        self.dense.len()
+            + self.conv.len()
+            + self.reuse_wt.len()
+            + self.qdense.len()
+            + self.qconv.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Number of operands packed in int8 (the quantized subset of `len`).
+    pub fn int8_len(&self) -> usize {
+        self.qdense.len() + self.qconv.len()
     }
 
     /// Resident bytes of the side table.
@@ -787,6 +845,19 @@ impl PackedWeights {
         self.dense.values().map(|p| p.bytes()).sum::<u64>()
             + self.conv.values().map(|p| p.bytes()).sum::<u64>()
             + self.reuse_wt.values().map(|t| t.len() as u64 * 4).sum::<u64>()
+            + self.qdense.values().map(|p| p.bytes()).sum::<u64>()
+            + self.qconv.values().map(|p| p.bytes()).sum::<u64>()
+    }
+
+    /// Per-output-channel dequant scales of a quantized node's packed
+    /// weight (Dense or conv), if that node was int8-packed — the bitwise
+    /// source of truth the scale-agreement test pins against
+    /// [`crate::analyze::quant::QuantPlan`].
+    pub fn int8_scales(&self, id: NodeId) -> Option<&[f32]> {
+        self.qdense
+            .get(&id)
+            .or_else(|| self.qconv.get(&id))
+            .map(|p| p.col_scales.as_slice())
     }
 }
 
@@ -828,6 +899,7 @@ impl ExecState {
             fkw: BTreeMap::new(),
             reuse: None,
             packed: PackedWeights::default(),
+            quant: BTreeSet::new(),
             gemm_cfg: GemmConfig::default(),
             wspec,
             input_pos,
@@ -865,9 +937,30 @@ impl ExecState {
         self.reuse = cfg;
     }
 
+    /// Select the contraction nodes that execute in int8 (the compiler's
+    /// quant plan). Must be called **before** [`ExecState::prepack`]: the
+    /// set decides which weights pack to [`PackedQB`] instead of the f32
+    /// panel layout. FKW- and reuse-routed nodes are skipped at prepack
+    /// time regardless of membership.
+    pub fn set_quant(&mut self, nodes: BTreeSet<NodeId>) {
+        self.quant = nodes;
+    }
+
+    /// The int8-selected node set (empty when quantization is off).
+    pub fn quant_nodes(&self) -> &BTreeSet<NodeId> {
+        &self.quant
+    }
+
     /// Number of conv nodes with an attached FKW kernel.
     pub fn fkw_count(&self) -> usize {
         self.fkw.len()
+    }
+
+    /// Whether node `id` executes through an attached FKW kernel (such
+    /// nodes never pack — f32 or int8 — and the precision report blames
+    /// the routing, not the quant plan).
+    pub fn has_fkw(&self, id: NodeId) -> bool {
+        self.fkw.contains_key(&id)
     }
 
     /// The memory planner's pool statistics.
@@ -934,6 +1027,12 @@ impl ExecState {
                         // [in, out] weight — nothing to pre-pack.
                         continue;
                     }
+                    if self.quant.contains(&n.id) {
+                        // Int8: quantize per output channel and pack once;
+                        // the f32 panel table is not built for this node.
+                        self.packed.qdense.insert(n.id, PackedQB::from_weight(w, &self.gemm_cfg)?);
+                        continue;
+                    }
                     let (in_f, out_f) = (w.shape()[0], w.shape()[1]);
                     self.packed
                         .dense
@@ -941,6 +1040,10 @@ impl ExecState {
                 }
                 OpKind::Conv2d { groups: 1, .. } => {
                     if self.fkw.contains_key(&n.id) {
+                        continue;
+                    }
+                    if self.reuse.is_none() && self.quant.contains(&n.id) {
+                        self.packed.qconv.insert(n.id, PackedQB::from_weight(w, &self.gemm_cfg)?);
                         continue;
                     }
                     let wt = conv_weight_matrix(w); // [i*kh*kw, o]
@@ -962,6 +1065,34 @@ impl ExecState {
     /// Pre-packed operand count and resident bytes.
     pub fn packed_stats(&self) -> (usize, u64) {
         (self.packed.len(), self.packed.bytes())
+    }
+
+    /// Per-output-channel dequant scales of node `id`'s int8-packed weight
+    /// (Dense or conv), when the quant plan selected it and prepack built
+    /// the [`PackedQB`] table. `None` for f32-packed, FKW-routed and
+    /// dynamically-quantized (`MatMul`) nodes.
+    pub fn int8_scales(&self, id: NodeId) -> Option<&[f32]> {
+        self.packed.int8_scales(id)
+    }
+
+    /// Node ids whose weights were actually int8-packed at prepack time —
+    /// the truthful subset of [`ExecState::quant_nodes`] (FKW- and
+    /// reuse-routed members are skipped at prepack). Sorted by id.
+    pub fn int8_packed_nodes(&self) -> Vec<NodeId> {
+        let mut ids: Vec<NodeId> = self
+            .packed
+            .qdense
+            .keys()
+            .chain(self.packed.qconv.keys())
+            .copied()
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Number of int8-packed operands (see [`PackedWeights::int8_len`]).
+    pub fn int8_packed_len(&self) -> usize {
+        self.packed.int8_len()
     }
 
     /// The workspace arena sizing of this state.
@@ -1153,6 +1284,85 @@ impl<'g> FusedExecutor<'g> {
                             let xm = args[0].reshape(&[rows, in_f]);
                             reuse_gemm(&xm, args[1], &cfg).0.reshape(&n.shape)
                         }
+                        // Int8 plan members (this engine allocates its
+                        // buffers per call; the arena-backed steady engine
+                        // is the zero-allocation path).
+                        (OpKind::Dense, None) if state.packed.qdense.contains_key(&id) => {
+                            let pqb = &state.packed.qdense[&id];
+                            let in_f = *args[0].shape().last().unwrap();
+                            let rows = args[0].len() / in_f;
+                            let mut y = Tensor::zeros(&n.shape);
+                            let mut qs = vec![
+                                0i8;
+                                qgemm_scratch_elems(&state.gemm_cfg)
+                                    * state.gemm_cfg.resolved_threads()
+                            ];
+                            qgemm_prepacked(
+                                rows,
+                                args[0].data(),
+                                pqb,
+                                y.data_mut(),
+                                &state.gemm_cfg,
+                                &mut qs,
+                            );
+                            y
+                        }
+                        (OpKind::Conv2d { stride, pad, groups: 1, .. }, None)
+                            if state.packed.qconv.contains_key(&id) =>
+                        {
+                            let pqb = &state.packed.qconv[&id];
+                            let xs = args[0].shape();
+                            let (nb, c, h, w) = (xs[0], xs[1], xs[2], xs[3]);
+                            let wsh = args[1].shape(); // [o, i, kh, kw]
+                            let (kh, kw) = (wsh[2], wsh[3]);
+                            let oh = (h + 2 * pad - kh) / stride + 1;
+                            let ow = (w + 2 * pad - kw) / stride + 1;
+                            let rows = nb * oh * ow;
+                            let cols = c * kh * kw;
+                            let mut patches = vec![0.0f32; rows * cols];
+                            let mut gout = vec![0.0f32; rows * pqb.n];
+                            let mut qs = vec![
+                                0i8;
+                                qgemm_scratch_elems(&state.gemm_cfg)
+                                    * state.gemm_cfg.resolved_threads()
+                            ];
+                            let mut y = Tensor::zeros(&n.shape);
+                            conv2d_qgemm_prepacked_into(
+                                args[0].data(),
+                                nb,
+                                c,
+                                h,
+                                w,
+                                pqb,
+                                kh,
+                                kw,
+                                *stride,
+                                *pad,
+                                &state.gemm_cfg,
+                                &mut patches,
+                                &mut gout,
+                                &mut qs,
+                                y.data_mut(),
+                            );
+                            y
+                        }
+                        (OpKind::MatMul, _) if state.quant.contains(&id) => {
+                            let (batch, m, k, nn, bb) =
+                                batched_matmul_dims(args[0].shape(), args[1].shape())?;
+                            let mut y = Tensor::zeros(&n.shape);
+                            batched_qmatmul_into(
+                                args[0].data(),
+                                args[1].data(),
+                                batch,
+                                m,
+                                k,
+                                nn,
+                                bb,
+                                &state.gemm_cfg,
+                                y.data_mut(),
+                            );
+                            y
+                        }
                         _ => eval_op(self.g, id, &args)?,
                     }
                 };
@@ -1289,6 +1499,7 @@ impl<'g> FusedExecutor<'g> {
                     &mut ws.gemm_out,
                     &mut ws.wt,
                     &mut ws.gemm_scratch,
+                    &mut ws.qgemm_scratch,
                 );
                 // Reinstall the buffer before propagating any error so the
                 // arena stays structurally intact.
@@ -1325,6 +1536,7 @@ impl<'g> FusedExecutor<'g> {
         gemm_out: &mut [f32],
         wt: &mut [f32],
         gemm_scratch: &mut [f32],
+        qgemm_scratch: &mut [i8],
     ) -> Result<()> {
         let state: &ExecState = &self.state;
         let g = self.g;
@@ -1368,7 +1580,15 @@ impl<'g> FusedExecutor<'g> {
                     out.copy_from_slice(y.data());
                     return Ok(());
                 }
-                if let Some(pb) = state.packed.conv.get(&id) {
+                if let Some(pqb) = state.packed.qconv.get(&id) {
+                    // Int8 plan member: quantized filter matrix was packed
+                    // at compile time; activations quantize in-flight into
+                    // the arena's i8 scratch. Zero allocation, like f32.
+                    conv2d_qgemm_prepacked_into(
+                        x, nb, c, h, w, pqb, kh, kw, stride, pad, &state.gemm_cfg, patches,
+                        gemm_out, qgemm_scratch, out,
+                    );
+                } else if let Some(pb) = state.packed.conv.get(&id) {
                     conv2d_gemm_prepacked_into(
                         x, nb, c, h, w, pb, kh, kw, stride, pad, &state.gemm_cfg, patches,
                         gemm_out, gemm_scratch, out,
@@ -1425,7 +1645,18 @@ impl<'g> FusedExecutor<'g> {
                     out.copy_from_slice(y.data());
                     return Ok(());
                 }
-                if let Some(pb) = state.packed.dense.get(&id) {
+                if let Some(pqb) = state.packed.qdense.get(&id) {
+                    // Int8 plan member — per-output-channel scales rode in
+                    // with the compile-time pack.
+                    qgemm_prepacked(
+                        rows,
+                        x,
+                        pqb,
+                        &mut out[..rows * out_f],
+                        &state.gemm_cfg,
+                        qgemm_scratch,
+                    );
+                } else if let Some(pb) = state.packed.dense.get(&id) {
                     gemm_prepacked(rows, x, pb, &mut out[..rows * out_f], &state.gemm_cfg, gemm_scratch);
                 } else {
                     let w = steady_arg(g, self.ws, state, inputs, slots, group, prev, wid)?;
@@ -1576,7 +1807,13 @@ impl<'g> FusedExecutor<'g> {
                 let b = steady_arg(g, self.ws, state, inputs, slots, group, prev, bid)?;
                 let (batch, m, k, n, bb) =
                     batched_matmul_dims(&g.node(aid).shape, &g.node(bid).shape)?;
-                batched_matmul_into(a, b, batch, m, k, n, bb, &state.gemm_cfg, out);
+                if state.quant.contains(&id) {
+                    // Quantized attention contraction: both operands are
+                    // activations, so scales are dynamic per batch slice.
+                    batched_qmatmul_into(a, b, batch, m, k, n, bb, &state.gemm_cfg, out);
+                } else {
+                    batched_matmul_into(a, b, batch, m, k, n, bb, &state.gemm_cfg, out);
+                }
                 Ok(())
             }
             OpKind::Transpose { perm } => {

@@ -20,6 +20,7 @@
 
 use crate::graph::{Graph, NodeId, OpKind};
 use crate::tensor::gemm::{prepacked_scratch_elems, GemmConfig};
+use crate::tensor::qgemm::qgemm_scratch_band_bytes;
 
 /// Size statistics of a memory plan.
 #[derive(Debug, Clone, Default)]
@@ -260,10 +261,14 @@ impl WorkspaceSpec {
     }
 
     /// Total arena footprint in bytes under `cfg` (reported by
-    /// `CompiledModel::report`).
+    /// `CompiledModel::report`). Includes the int8 A-pack scratch — one
+    /// 4-byte-aligned i8 band per pool thread — whether or not the plan
+    /// quantizes anything: the arena is sized at compile time and the
+    /// int8 bands cost 1/4 of the f32 bands they sit beside.
     pub fn bytes(&self, cfg: &GemmConfig) -> u64 {
         let slots: usize = self.slot_elems.iter().sum();
         let scratch = prepacked_scratch_elems(cfg) * cfg.resolved_threads();
+        let qscratch_bytes = qgemm_scratch_band_bytes(cfg) * cfg.resolved_threads();
         (slots
             + 2 * self.group_elems
             + self.patches_elems
@@ -271,6 +276,7 @@ impl WorkspaceSpec {
             + self.wt_elems
             + scratch) as u64
             * 4
+            + qscratch_bytes as u64
     }
 }
 
@@ -293,6 +299,11 @@ pub struct Workspace {
     /// A-panel pack scratch for `gemm_prepacked`, one band per pool
     /// thread.
     pub gemm_scratch: Vec<f32>,
+    /// Quantized A-panel pack scratch for the int8 kernel
+    /// (`qgemm_prepacked`), one 4-byte-aligned i8 band per pool thread —
+    /// the int8 steady path quantizes activations into this arena region
+    /// instead of allocating.
+    pub qgemm_scratch: Vec<i8>,
 }
 
 impl Workspace {
@@ -306,6 +317,10 @@ impl Workspace {
             gemm_scratch: vec![
                 0.0;
                 prepacked_scratch_elems(cfg) * cfg.resolved_threads()
+            ],
+            qgemm_scratch: vec![
+                0i8;
+                qgemm_scratch_band_bytes(cfg) * cfg.resolved_threads()
             ],
         }
     }
@@ -321,6 +336,7 @@ impl Workspace {
             + self.wt.len()
             + self.gemm_scratch.len()) as u64
             * 4
+            + self.qgemm_scratch.len() as u64
     }
 }
 

@@ -6,7 +6,7 @@
 //! xgen models                                   list the model zoo
 //! xgen compile --model resnet-50 [--scheme pattern|block|none]
 //!              [--opt 0..3] [--reuse] [--no-fkw] [--infer] [--generate N]
-//!              [--verify] [--analyze]
+//!              [--verify] [--analyze] [--int8 off|force|auto]
 //! xgen sched [--variant ADy416] [--horizon 3000]    Table 5 simulation
 //! xgen caps [--budget 8.0]                      NPAS co-search
 //! xgen emit-kernel [--pattern 0] [--unroll 4]   generated pattern kernel
@@ -35,7 +35,7 @@
 
 use anyhow::Result;
 
-use xgen::api::{CompiledModel, Compiler, OptLevel};
+use xgen::api::{CompiledModel, Compiler, OptLevel, QuantPolicy};
 use xgen::baselines::{DeviceClass, Framework};
 use xgen::caps::{search, CapsConfig};
 use xgen::coordinator::{SchedConfig, ServeConfig, Server, StreamScheduler};
@@ -90,7 +90,9 @@ xgen — CoCoPIE XGen reproduction (see DESIGN.md)
                  --verify runs the static soundness checkers even in
                  release builds; --analyze forces the semantic dataflow
                  analyses — range/NaN safety, int8 feasibility, trace
-                 purity — below O2, where they are on by default)
+                 purity — below O2, where they are on by default;
+                 --int8 off|force|auto picks contraction-layer precision —
+                 auto follows the compile-time QuantPlan per layer)
   sched         XEngine Table-5 scheduler simulation
   caps          NPAS architecture/pruning co-search
   emit-kernel   print a generated branch-less pattern kernel
@@ -157,6 +159,15 @@ fn cmd_compile(args: &Args) -> Result<()> {
         // non-finite paths print as typed warnings.
         c = c.analyze(true);
     }
+    // Int8 precision policy (ISSUE-10): `force` quantizes every eligible
+    // contraction layer, `auto` follows the compile-time QuantPlan per
+    // layer (forcing analysis on). The report gains a `quant:` line with
+    // the per-layer precision split.
+    let int8 = args.opt_or("int8", "off");
+    c = c.quantize(
+        QuantPolicy::parse(int8)
+            .ok_or_else(|| anyhow::anyhow!("bad --int8 '{int8}' (use off|force|auto)"))?,
+    );
     let cm = c.compile()?;
     println!("model: {}", cm.graph().summary());
     print!("{}", cm.report().summary());

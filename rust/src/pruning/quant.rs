@@ -4,8 +4,18 @@
 //! path uses) or one scale per output channel (XGen's optimized variant —
 //! better accuracy at the same bit width, and the form the MCU codegen
 //! exploits).
+//!
+//! Every entry point returns `Result`: non-finite input is rejected with a
+//! typed [`XgenError::NonFinite`] naming the offending channel (a NaN
+//! weight would otherwise quantize to a silently-wrong 0 through the
+//! saturating cast), and malformed shapes/payloads are rejected with
+//! [`XgenError::ShapeMismatch`] instead of panicking or truncating. The
+//! module is inside the xtask panic-hygiene ratchet's scope: zero
+//! unwrap / expect / panic sites, tests included.
 
+use crate::error::XgenError;
 use crate::tensor::Tensor;
+use anyhow::Result;
 
 /// Quantization granularity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,48 +41,144 @@ impl QuantTensor {
     }
 }
 
-/// Quantize symmetric int8.
-pub fn quantize(t: &Tensor, mode: QuantMode) -> QuantTensor {
+/// Absolute max of a slice, rejecting non-finite values with a typed
+/// error naming `at` (the tensor or the channel the value sits in).
+fn amax_checked(row: &[f32], at: impl Fn() -> String) -> Result<f32> {
+    let mut amax = 0.0f32;
+    for &v in row {
+        if !v.is_finite() {
+            return Err(XgenError::NonFinite { at: at() }.into());
+        }
+        amax = amax.max(v.abs());
+    }
+    Ok(amax)
+}
+
+/// Quantize symmetric int8. Non-finite input is a typed error, not a
+/// silent zero.
+pub fn quantize(t: &Tensor, mode: QuantMode) -> Result<QuantTensor> {
     match mode {
         QuantMode::PerTensor => {
-            let amax = t.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let amax = amax_checked(t.data(), || "quantize(per-tensor) input".into())?;
             let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
             let data = t.data().iter().map(|&v| quant1(v, scale)).collect();
-            QuantTensor { shape: t.shape().to_vec(), data, scales: vec![scale], mode }
+            Ok(QuantTensor { shape: t.shape().to_vec(), data, scales: vec![scale], mode })
         }
         QuantMode::PerChannel => {
-            assert!(t.rank() >= 2, "per-channel wants >=2-d weights");
+            if t.rank() < 2 {
+                return Err(XgenError::ShapeMismatch {
+                    expected: "rank >= 2 weights for per-channel quantization".into(),
+                    got: format!("rank {} {:?}", t.rank(), t.shape()),
+                }
+                .into());
+            }
             let ch = t.shape()[0];
+            if ch == 0 || t.len() % ch != 0 {
+                return Err(XgenError::ShapeMismatch {
+                    expected: format!("len divisible by {ch} channels"),
+                    got: format!("len {} {:?}", t.len(), t.shape()),
+                }
+                .into());
+            }
             let per = t.len() / ch;
             let mut scales = Vec::with_capacity(ch);
             let mut data = Vec::with_capacity(t.len());
             for c in 0..ch {
                 let row = &t.data()[c * per..(c + 1) * per];
-                let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let amax = amax_checked(row, || format!("quantize(per-channel) channel {c}"))?;
                 let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
                 scales.push(scale);
                 data.extend(row.iter().map(|&v| quant1(v, scale)));
             }
-            QuantTensor { shape: t.shape().to_vec(), data, scales, mode }
+            Ok(QuantTensor { shape: t.shape().to_vec(), data, scales, mode })
         }
     }
 }
 
+/// Quantize a contraction weight per *output channel*, normalized to the
+/// row-major `[out_ch, k]` layout the int8 GEMM packs from.
+///
+/// - rank-2 Dense weights are stored `[in_f, out_f]` (output channels are
+///   *columns*), so the data is transposed to `[out_f, in_f]` rows first —
+///   raw `quantize(PerChannel)` on the stored layout would yield
+///   per-*input* scales, which the dequant epilogue cannot apply.
+/// - rank-4 OIHW conv weights already lead with the output channel; rows
+///   are the flattened `[o, i*kh*kw]` filter matrix.
+///
+/// Both `analyze::quant` (feasibility planning) and `ExecState::prepack`
+/// (the kernel's packed weights) call this one helper, so the plan's
+/// per-channel scales and the scales the epilogue actually multiplies by
+/// agree bitwise by construction.
+pub fn quantize_gemm_weight(t: &Tensor) -> Result<QuantTensor> {
+    match t.rank() {
+        2 => {
+            let (in_f, out_f) = (t.shape()[0], t.shape()[1]);
+            let mut tr = vec![0.0f32; in_f * out_f];
+            for r in 0..in_f {
+                for c in 0..out_f {
+                    tr[c * in_f + r] = t.data()[r * out_f + c];
+                }
+            }
+            quantize(&Tensor::from_vec(&[out_f, in_f], tr), QuantMode::PerChannel)
+        }
+        4 => {
+            let o = t.shape()[0];
+            let cols = t.shape()[1] * t.shape()[2] * t.shape()[3];
+            let mut q = quantize(t, QuantMode::PerChannel)?;
+            q.shape = vec![o, cols];
+            Ok(q)
+        }
+        _ => Err(XgenError::ShapeMismatch {
+            expected: "rank-2 [in,out] or rank-4 OIHW contraction weight".into(),
+            got: format!("rank {} {:?}", t.rank(), t.shape()),
+        }
+        .into()),
+    }
+}
+
+/// One value, one scale: round-to-nearest, saturate at ±127. Callers have
+/// already rejected non-finite input.
 fn quant1(v: f32, scale: f32) -> i8 {
     (v / scale).round().clamp(-127.0, 127.0) as i8
 }
 
-/// Dequantize back to f32.
-pub fn dequantize(q: &QuantTensor) -> Tensor {
+/// Dequantize back to f32. A `QuantTensor` whose scales/payload/shape
+/// disagree is a typed error — the old truncating `n / ch` silently
+/// dropped trailing elements.
+pub fn dequantize(q: &QuantTensor) -> Result<Tensor> {
     let n = q.data.len();
+    let shape_elems: usize = q.shape.iter().product();
+    if shape_elems != n {
+        return Err(XgenError::ShapeMismatch {
+            expected: format!("payload of {shape_elems} elements for shape {:?}", q.shape),
+            got: format!("{n} elements"),
+        }
+        .into());
+    }
     let mut out = Vec::with_capacity(n);
     match q.mode {
         QuantMode::PerTensor => {
-            let s = q.scales[0];
+            let s = match q.scales.as_slice() {
+                [s] => *s,
+                _ => {
+                    return Err(XgenError::ShapeMismatch {
+                        expected: "exactly 1 per-tensor scale".into(),
+                        got: format!("{} scales", q.scales.len()),
+                    }
+                    .into())
+                }
+            };
             out.extend(q.data.iter().map(|&v| v as f32 * s));
         }
         QuantMode::PerChannel => {
             let ch = q.scales.len();
+            if ch == 0 || n % ch != 0 {
+                return Err(XgenError::ShapeMismatch {
+                    expected: format!("payload divisible into {ch} channels"),
+                    got: format!("{n} elements"),
+                }
+                .into());
+            }
             let per = n / ch;
             for c in 0..ch {
                 let s = q.scales[c];
@@ -80,12 +186,12 @@ pub fn dequantize(q: &QuantTensor) -> Tensor {
             }
         }
     }
-    Tensor::from_vec(&q.shape, out)
+    Ok(Tensor::from_vec(&q.shape, out))
 }
 
 /// RMS quantization error of a round trip.
-pub fn quant_rms_error(t: &Tensor, mode: QuantMode) -> f64 {
-    let back = dequantize(&quantize(t, mode));
+pub fn quant_rms_error(t: &Tensor, mode: QuantMode) -> Result<f64> {
+    let back = dequantize(&quantize(t, mode)?)?;
     let n = t.len().max(1);
     let s: f64 = t
         .data()
@@ -93,7 +199,7 @@ pub fn quant_rms_error(t: &Tensor, mode: QuantMode) -> f64 {
         .zip(back.data())
         .map(|(&a, &b)| ((a - b) as f64).powi(2))
         .sum();
-    (s / n as f64).sqrt()
+    Ok((s / n as f64).sqrt())
 }
 
 #[cfg(test)]
@@ -103,20 +209,27 @@ mod tests {
     use crate::util::rng::Rng;
 
     #[test]
-    fn roundtrip_error_bounded_by_half_step() {
+    fn roundtrip_error_bounded_by_half_step() -> Result<()> {
         forall("quant roundtrip bounded", 24, |rng| {
             let t = Tensor::randn(&[4, 16], 2.0, rng);
-            let q = quantize(&t, QuantMode::PerTensor);
-            let back = dequantize(&q);
+            let q = match quantize(&t, QuantMode::PerTensor) {
+                Ok(q) => q,
+                Err(e) => unreachable!("finite input rejected: {e}"),
+            };
+            let back = match dequantize(&q) {
+                Ok(b) => b,
+                Err(e) => unreachable!("well-formed roundtrip rejected: {e}"),
+            };
             let step = q.scales[0];
             for (a, b) in t.data().iter().zip(back.data()) {
                 assert!((a - b).abs() <= step * 0.5 + 1e-6);
             }
         });
+        Ok(())
     }
 
     #[test]
-    fn per_channel_beats_per_tensor_on_mixed_ranges() {
+    fn per_channel_beats_per_tensor_on_mixed_ranges() -> Result<()> {
         // Channel 0 tiny values, channel 1 huge: per-tensor wastes range.
         let mut rng = Rng::new(21);
         let mut data = Vec::new();
@@ -125,32 +238,115 @@ mod tests {
         let t = Tensor::from_vec(&[2, 64], data);
         // Overall RMS is dominated by the huge channel; the per-channel win
         // shows on the *small* channel's slice.
-        let small_err = |mode| {
-            let back = dequantize(&quantize(&t, mode));
+        let small_err = |mode| -> Result<f64> {
+            let back = dequantize(&quantize(&t, mode)?)?;
             let s: f64 = t.data()[..64]
                 .iter()
                 .zip(&back.data()[..64])
                 .map(|(&a, &b)| ((a - b) as f64).powi(2))
                 .sum();
-            (s / 64.0).sqrt()
+            Ok((s / 64.0).sqrt())
         };
-        let e_t = small_err(QuantMode::PerTensor);
-        let e_c = small_err(QuantMode::PerChannel);
+        let e_t = small_err(QuantMode::PerTensor)?;
+        let e_c = small_err(QuantMode::PerChannel)?;
         assert!(e_c < e_t * 0.1, "per-channel {e_c} vs per-tensor {e_t}");
+        Ok(())
     }
 
     #[test]
-    fn storage_is_4x_smaller_than_f32() {
+    fn storage_is_4x_smaller_than_f32() -> Result<()> {
         let t = Tensor::zeros(&[8, 32]);
-        let q = quantize(&t, QuantMode::PerChannel);
+        let q = quantize(&t, QuantMode::PerChannel)?;
         assert!(q.bytes() * 3 < 8 * 32 * 4);
+        Ok(())
     }
 
     #[test]
-    fn zeros_stay_zero() {
+    fn zeros_stay_zero() -> Result<()> {
         let t = Tensor::zeros(&[3, 3]);
-        let q = quantize(&t, QuantMode::PerTensor);
+        let q = quantize(&t, QuantMode::PerTensor)?;
         assert!(q.data.iter().all(|&v| v == 0));
-        assert_eq!(dequantize(&q), t);
+        assert_eq!(dequantize(&q)?, t);
+        Ok(())
+    }
+
+    #[test]
+    fn nan_and_inf_are_typed_errors_naming_the_channel() {
+        // Per-tensor: NaN anywhere is NonFinite, not a silent zero (the
+        // old `fold(0.0, max)` ignored NaN and `quant1` cast it to 0).
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, f32::NAN, 2.0, 3.0]);
+        let err = match quantize(&t, QuantMode::PerTensor) {
+            Ok(_) => unreachable!("NaN input must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("non-finite"), "got: {err}");
+
+        // Per-channel: the error names the offending channel (row 1).
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, f32::INFINITY, 3.0]);
+        let err = match quantize(&t, QuantMode::PerChannel) {
+            Ok(_) => unreachable!("Inf input must be rejected"),
+            Err(e) => e,
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("channel 1"), "got: {msg}");
+    }
+
+    #[test]
+    fn rank1_per_channel_is_a_shape_error_not_a_panic() {
+        let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let err = match quantize(&t, QuantMode::PerChannel) {
+            Ok(_) => unreachable!("rank-1 per-channel must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("shape mismatch"), "got: {err}");
+    }
+
+    #[test]
+    fn malformed_quant_tensors_are_rejected() {
+        // Payload/shape disagreement.
+        let q = QuantTensor {
+            shape: vec![2, 3],
+            data: vec![1, 2, 3, 4],
+            scales: vec![1.0],
+            mode: QuantMode::PerTensor,
+        };
+        assert!(dequantize(&q).is_err());
+        // Scales that don't divide the payload (the old truncating
+        // `per = n / ch` silently dropped the trailing elements).
+        let q = QuantTensor {
+            shape: vec![5],
+            data: vec![1, 2, 3, 4, 5],
+            scales: vec![1.0, 1.0],
+            mode: QuantMode::PerChannel,
+        };
+        assert!(dequantize(&q).is_err());
+        // Per-tensor with zero scales.
+        let q = QuantTensor {
+            shape: vec![1],
+            data: vec![1],
+            scales: vec![],
+            mode: QuantMode::PerTensor,
+        };
+        assert!(dequantize(&q).is_err());
+    }
+
+    #[test]
+    fn gemm_weight_scales_are_per_output_channel() -> Result<()> {
+        // Dense [in=2, out=3]: column c has amax c+1, so scale (c+1)/127.
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 0.5, 1.0, 1.5]);
+        let q = quantize_gemm_weight(&t)?;
+        assert_eq!(q.shape, vec![3, 2]);
+        assert_eq!(q.scales.len(), 3);
+        for (c, &s) in q.scales.iter().enumerate() {
+            assert_eq!(s, (c + 1) as f32 / 127.0);
+        }
+        // Row-major [out, in]: row c is column c of the stored weight.
+        assert_eq!(q.data[0..2], [64, 127]);
+        // OIHW conv weights normalize to [o, i*kh*kw].
+        let w = Tensor::randn(&[3, 2, 3, 3], 1.0, &mut Rng::new(7));
+        let q = quantize_gemm_weight(&w)?;
+        assert_eq!(q.shape, vec![3, 18]);
+        assert_eq!(q.scales.len(), 3);
+        Ok(())
     }
 }

@@ -293,20 +293,24 @@ fn worker_body(shared: &Shared) {
     }
 }
 
-/// A mutable `f32` buffer shared across pool tasks that each write a
+/// A mutable buffer shared across pool tasks that each write a
 /// **disjoint** region — the zero-allocation alternative to
-/// `chunks_mut`-per-spawn under `thread::scope`.
+/// `chunks_mut`-per-spawn under `thread::scope`. Generic over the element
+/// (`f32` C/scratch bands in the f32 GEMM, `i8` pack scratch in the int8
+/// one); the default parameter keeps the original `SharedSlice` spelling
+/// working unchanged.
 #[derive(Clone, Copy)]
-pub struct SharedSlice {
-    ptr: *mut f32,
+pub struct SharedSlice<T = f32> {
+    ptr: *mut T,
     len: usize,
 }
 
 // SAFETY: disjointness of the regions handed to concurrent tasks is the
 // caller's obligation (documented on `slice_mut` — and *checked* by the
-// debug-build claim registry below).
-unsafe impl Send for SharedSlice {}
-unsafe impl Sync for SharedSlice {}
+// debug-build claim registry below). `T: Copy` rules out drop glue, and
+// the pointee is plain data owned by the submitting frame.
+unsafe impl<T: Copy + Send> Send for SharedSlice<T> {}
+unsafe impl<T: Copy + Send> Sync for SharedSlice<T> {}
 
 /// Debug-only disjointness checker behind [`SharedSlice`] (ISSUE-7):
 /// every `slice_mut` records its claimed `[start, start+len)` interval,
@@ -358,8 +362,8 @@ mod claims {
     }
 }
 
-impl SharedSlice {
-    pub fn new(s: &mut [f32]) -> SharedSlice {
+impl<T: Copy + Send> SharedSlice<T> {
+    pub fn new(s: &mut [T]) -> SharedSlice<T> {
         #[cfg(debug_assertions)]
         claims::reset(s.as_mut_ptr() as usize);
         SharedSlice { ptr: s.as_mut_ptr(), len: s.len() }
@@ -382,7 +386,7 @@ impl SharedSlice {
     /// Debug builds enforce the disjointness half through the claim
     /// registry: an overlapping claim within one dispatch panics.
     #[allow(clippy::mut_from_ref)]
-    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f32] {
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
         debug_assert!(start + len <= self.len, "SharedSlice range out of bounds");
         #[cfg(debug_assertions)]
         claims::claim(self.ptr as usize, start, len);

@@ -72,8 +72,9 @@ impl GemmConfig {
     }
 
     /// [`GemmConfig::resolved_threads`] bounded by the number of MR-row
-    /// bands so tiny matrices never over-split.
-    fn effective_threads(&self, m: usize, k: usize, n: usize) -> usize {
+    /// bands so tiny matrices never over-split. Shared with the int8
+    /// kernel ([`super::qgemm`]) so both split work identically.
+    pub(crate) fn effective_threads(&self, m: usize, k: usize, n: usize) -> usize {
         // Below ~1 MFLOP the handoff overhead dominates any speedup. Under
         // Miri the cutoff drops so tiny test shapes still exercise the
         // parallel unsafe path (SharedSlice bands) at interpretable cost.
@@ -128,7 +129,7 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], c
 
 /// Row-band split for `threads` workers: MR-aligned band height and the
 /// resulting band count (≤ `threads`).
-fn band_split(m: usize, threads: usize) -> (usize, usize) {
+pub(crate) fn band_split(m: usize, threads: usize) -> (usize, usize) {
     let per = (m + threads - 1) / threads;
     let rows_per = ((per + MR - 1) / MR) * MR;
     (rows_per, (m + rows_per - 1) / rows_per)
@@ -378,7 +379,7 @@ fn gemm_band_prepacked(
 }
 
 /// Round `x` up to a multiple of `to`.
-fn padded(x: usize, to: usize) -> usize {
+pub(crate) fn padded(x: usize, to: usize) -> usize {
     ((x + to - 1) / to) * to
 }
 

@@ -7,6 +7,7 @@
 //! oracle to be checked against.
 
 pub mod gemm;
+pub mod qgemm;
 
 use crate::util::rng::Rng;
 
@@ -462,6 +463,41 @@ pub fn conv2d_gemm_prepacked_into(
     let rows = n * oh * ow;
     im2col_into(x, n, c, h, w, kh, kw, stride, pad, &mut patches[..rows * cols]);
     gemm::gemm_prepacked(rows, &patches[..rows * cols], pb, &mut gemm_out[..rows * o], cfg, scratch);
+    scatter_rows_to_nchw(&gemm_out[..rows * o], n, o, oh, ow, out);
+}
+
+/// Int8 variant of [`conv2d_gemm_prepacked_into`]: im2col into the f32
+/// patch buffer, then the quantized GEMM against a compile-time
+/// [`qgemm::PackedQB`] filter matrix (per-output-channel scales ride in
+/// the pack). `qscratch` is the per-band i8 A-panel arena — the int8
+/// steady conv path allocates nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_qgemm_prepacked_into(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    pqb: &qgemm::PackedQB,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    cfg: &GemmConfig,
+    patches: &mut [f32],
+    gemm_out: &mut [f32],
+    qscratch: &mut [i8],
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), n * c * h * w, "conv input length");
+    let cols = c * kh * kw;
+    let o = pqb.n;
+    assert_eq!(pqb.k, cols, "prepacked int8 conv weight shape mismatch");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let rows = n * oh * ow;
+    im2col_into(x, n, c, h, w, kh, kw, stride, pad, &mut patches[..rows * cols]);
+    qgemm::qgemm_prepacked(rows, &patches[..rows * cols], pqb, &mut gemm_out[..rows * o], cfg, qscratch);
     scatter_rows_to_nchw(&gemm_out[..rows * o], n, o, oh, ow, out);
 }
 

@@ -1,0 +1,761 @@
+//! Cache-blocked, multi-threaded **int8** GEMM — the execution half of the
+//! compression–compilation co-design story (§2.1 of the paper: quantization
+//! is the "compatible compression technique"; PatDNN/CoCoPIE make the
+//! quantized tiled/packed micro-kernel the centerpiece of their mobile code
+//! generators). Same three-level MC/KC/NC blocking, MR×NR register tiles
+//! and persistent-pool row-band parallelism as the f32 engine
+//! ([`super::gemm`]) — the loop nests are deliberately line-for-line
+//! parallel so the two kernels stay reviewable side by side.
+//!
+//! Numerics: symmetric int8 with **dynamic per-tensor activation scales**
+//! (one amax pass over A per call) and **static per-output-channel weight
+//! scales** carried by [`PackedQB`] (packed once at compile time from
+//! [`crate::pruning::quant::quantize_gemm_weight`], so the scales the
+//! epilogue multiplies by are bitwise the ones `analyze::QuantPlan`
+//! reports). The micro-kernel accumulates in i32 over each KC panel
+//! (depth ≤ KC, so a panel's accumulator needs ≤ 15 + ⌈log2 KC⌉ bits —
+//! comfortably inside i32 for every supported blocking) and the epilogue
+//! dequantizes the panel's contribution into f32 C:
+//! `C[i,j] += acc_i32 · (a_scale · col_scale[j])`.
+//!
+//! Non-finite *activations* saturate deterministically through the
+//! rounding cast (NaN → 0) rather than erroring: the compile-time
+//! feasibility gate (`Compiler::quantize(Auto)` consulting the range
+//! analysis) is what keeps non-finite data off this path; weights are
+//! validated with typed errors at pack time. With caller-provided i8 pack
+//! scratch, [`qgemm_prepacked`] performs no heap allocation — the
+//! steady-state inference configuration. [`qgemm`] (both operands
+//! quantized on the fly — the attention QK^T/AV path) packs into its own
+//! buffers like the f32 `gemm` and is not part of the zero-allocation
+//! guarantee, exactly like f32 batched matmul.
+
+use super::gemm::{band_split, padded, GemmConfig, MR};
+use crate::pruning::quant::quantize_gemm_weight;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Dynamic symmetric per-tensor activation scale: `amax / 127`, or 1.0
+/// for an all-zero (or empty) tensor. NaN elements are ignored by the
+/// max, matching the saturating behavior of [`quant1`].
+pub fn act_scale(a: &[f32]) -> f32 {
+    let amax = a.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax > 0.0 && amax.is_finite() {
+        amax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// One value, one scale: round-to-nearest, saturate at ±127 (NaN → 0).
+#[inline(always)]
+pub fn quant1(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// A constant int8 B operand packed **once** (at `Compiler::compile` time)
+/// into the NR-column sliver layout the int8 micro-kernel consumes, plus
+/// the per-output-column dequant scales. Layout (panel order, sliver
+/// addressing, trailing sentinel) is identical to the f32 [`PackedB`]
+/// (`super::gemm::PackedB`); only the element type and the scale side
+/// table differ.
+#[derive(Debug, Clone)]
+pub struct PackedQB {
+    /// Logical shape of the packed operand: `[k, n]`.
+    pub k: usize,
+    pub n: usize,
+    kc: usize,
+    nc: usize,
+    nr: usize,
+    /// Panel start offsets in `(jc, pc)` order, with a trailing sentinel
+    /// equal to `data.len()`.
+    panel_off: Vec<usize>,
+    data: Vec<i8>,
+    /// Per-output-column dequant scales, length `n` — one per output
+    /// channel, straight from the symmetric per-channel quantizer.
+    pub col_scales: Vec<f32>,
+}
+
+impl PackedQB {
+    /// Pack row-major int8 `b [k, n]` with its per-column scales under
+    /// `cfg`'s blocking parameters.
+    pub fn pack(k: usize, n: usize, b: &[i8], col_scales: &[f32], cfg: &GemmConfig) -> PackedQB {
+        assert_eq!(b.len(), k * n, "PackedQB: B length");
+        assert_eq!(col_scales.len(), n, "PackedQB: one scale per output column");
+        let kc = cfg.kc.max(1);
+        let nc = cfg.nc.max(1);
+        let nr = if cfg.nr == 4 { 4 } else { 8 };
+        let mut data = Vec::new();
+        let mut panel_off = Vec::new();
+        let mut jc = 0;
+        while jc < n {
+            let ncb = nc.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kcb = kc.min(k - pc);
+                panel_off.push(data.len());
+                let start = data.len();
+                data.resize(start + padded(ncb, nr) * kcb, 0);
+                pack_b_q(b, n, pc, jc, kcb, ncb, nr, &mut data[start..]);
+                pc += kc;
+            }
+            jc += nc;
+        }
+        panel_off.push(data.len());
+        PackedQB { k, n, kc, nc, nr, panel_off, data, col_scales: col_scales.to_vec() }
+    }
+
+    /// Quantize-and-pack a contraction weight (rank-2 Dense `[in, out]` or
+    /// rank-4 OIHW conv) per output channel. This is the compile-time
+    /// entry `ExecState::prepack` uses; it rejects non-finite weights with
+    /// the quantizer's typed error.
+    pub fn from_weight(t: &Tensor, cfg: &GemmConfig) -> Result<PackedQB> {
+        let q = quantize_gemm_weight(t)?;
+        let (n, k) = (q.shape[0], q.shape[1]);
+        // `quantize_gemm_weight` yields row-major [out, k]; the GEMM wants
+        // B as [k, n=out].
+        let mut b = vec![0i8; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                b[p * n + j] = q.data[j * k + p];
+            }
+        }
+        Ok(PackedQB::pack(k, n, &b, &q.scales, cfg))
+    }
+
+    /// Packed bytes held (payload + scales — the compile-time memory cost
+    /// of pre-packing, 4x smaller than the f32 table).
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64 + self.col_scales.len() as u64 * 4
+    }
+
+    /// The packed panel at column block `jci`, K block `pci`.
+    fn panel(&self, jci: usize, pci: usize) -> &[i8] {
+        let n_pc = (self.k + self.kc - 1) / self.kc;
+        let idx = jci * n_pc + pci;
+        &self.data[self.panel_off[idx]..self.panel_off[idx + 1]]
+    }
+}
+
+/// Per-band A-pack scratch (in **i8** elements) that [`qgemm_prepacked`]
+/// needs under `cfg`; multiply by [`GemmConfig::resolved_threads`] for a
+/// buffer that covers every band of a parallel call.
+pub fn qgemm_scratch_elems(cfg: &GemmConfig) -> usize {
+    padded(cfg.mc.max(MR), MR) * cfg.kc.max(1)
+}
+
+/// [`qgemm_scratch_elems`] rounded up to a whole number of f32 words
+/// (i8 elems == bytes). The workspace arena accounts in 4-byte units, so
+/// sizing the per-band i8 region at this granularity keeps the
+/// `total f32 units × 4 == WorkspaceSpec::bytes` invariant exact.
+pub fn qgemm_scratch_band_bytes(cfg: &GemmConfig) -> usize {
+    padded(qgemm_scratch_elems(cfg), 4)
+}
+
+/// `C = dequant(quant(A) * packed_QB)` — the steady-state int8 GEMM entry
+/// point: B was quantized and packed at compile time ([`PackedQB`]), A is
+/// quantized on the fly with one dynamic per-tensor scale and packed into
+/// the caller's i8 `scratch` (≥ `qgemm_scratch_elems(cfg) *
+/// resolved_threads` elements), row bands run on the persistent pool.
+/// Performs **no** heap allocation and spawns **no** threads. `cfg` must
+/// carry the same blocking parameters B was packed with (asserted).
+pub fn qgemm_prepacked(
+    m: usize,
+    a: &[f32],
+    pqb: &PackedQB,
+    c: &mut [f32],
+    cfg: &GemmConfig,
+    scratch: &mut [i8],
+) {
+    let (k, n) = (pqb.k, pqb.n);
+    assert_eq!(a.len(), m * k, "qgemm_prepacked: A length");
+    assert_eq!(c.len(), m * n, "qgemm_prepacked: C length");
+    assert_eq!(pqb.kc, cfg.kc.max(1), "qgemm_prepacked: KC mismatch vs pack time");
+    assert_eq!(pqb.nc, cfg.nc.max(1), "qgemm_prepacked: NC mismatch vs pack time");
+    assert_eq!(pqb.nr, if cfg.nr == 4 { 4 } else { 8 }, "qgemm_prepacked: NR mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    // One global activation scale: deterministic across thread counts
+    // (bands share it instead of deriving per-band scales).
+    let a_scale = act_scale(a);
+    let per = qgemm_scratch_elems(cfg);
+    let threads = cfg.effective_threads(m, k, n);
+    if threads <= 1 {
+        qgemm_band_prepacked(m, a, a_scale, pqb, c, cfg, &mut scratch[..per]);
+        return;
+    }
+    let (rows_per, bands) = band_split(m, threads);
+    assert!(
+        scratch.len() >= per * bands,
+        "qgemm_prepacked: scratch {} < {} elems for {} bands",
+        scratch.len(),
+        per * bands,
+        bands
+    );
+    let c_sh = crate::runtime::pool::SharedSlice::new(c);
+    let s_sh = crate::runtime::pool::SharedSlice::new(scratch);
+    crate::runtime::pool::global().parallel_for(bands, |t| {
+        let row0 = t * rows_per;
+        let rows = rows_per.min(m - row0);
+        let a_band = &a[row0 * k..(row0 + rows) * k];
+        // SAFETY: disjoint row bands of C; disjoint per-band i8 scratch.
+        let c_band = unsafe { c_sh.slice_mut(row0 * n, rows * n) };
+        let a_pack = unsafe { s_sh.slice_mut(t * per, per) };
+        qgemm_band_prepacked(rows, a_band, a_scale, pqb, c_band, cfg, a_pack);
+    });
+}
+
+/// Single-threaded prepacked int8 GEMM over one row band of C.
+fn qgemm_band_prepacked(
+    m: usize,
+    a: &[f32],
+    a_scale: f32,
+    pqb: &PackedQB,
+    c: &mut [f32],
+    cfg: &GemmConfig,
+    a_pack: &mut [i8],
+) {
+    let (k, n) = (pqb.k, pqb.n);
+    let mc = cfg.mc.max(MR);
+    let (kc, nc, nr) = (pqb.kc, pqb.nc, pqb.nr);
+    c.fill(0.0);
+    let mut jc = 0;
+    let mut jci = 0;
+    while jc < n {
+        let ncb = nc.min(n - jc);
+        let mut pc = 0;
+        let mut pci = 0;
+        while pc < k {
+            let kcb = kc.min(k - pc);
+            let b_pack = pqb.panel(jci, pci);
+            let mut ic = 0;
+            while ic < m {
+                let mcb = mc.min(m - ic);
+                pack_a_q(a, a_scale, k, ic, pc, mcb, kcb, a_pack);
+                run_panel_q(
+                    c,
+                    n,
+                    ic,
+                    jc,
+                    mcb,
+                    ncb,
+                    kcb,
+                    nr,
+                    a_pack,
+                    b_pack,
+                    a_scale,
+                    &pqb.col_scales,
+                );
+                ic += mc;
+            }
+            pc += kc;
+            pci += 1;
+        }
+        jc += nc;
+        jci += 1;
+    }
+}
+
+/// `C = dequant(quant(A) * quant(B))` with **both** operands quantized on
+/// the fly (dynamic per-tensor scales) — the quantized-attention path
+/// (int8 QK^T and int8 AV around the f32 masked softmax), where B is an
+/// activation too and nothing can be packed at compile time. Allocates
+/// its own quantized-B copy and pack buffers, exactly like the f32
+/// [`super::gemm::gemm`] allocates pack buffers — batched matmul is not
+/// part of the zero-allocation guarantee in either precision.
+pub fn qgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], cfg: &GemmConfig) {
+    assert_eq!(a.len(), m * k, "qgemm: A length");
+    assert_eq!(b.len(), k * n, "qgemm: B length");
+    assert_eq!(c.len(), m * n, "qgemm: C length");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let a_scale = act_scale(a);
+    let b_scale = act_scale(b);
+    let qb: Vec<i8> = b.iter().map(|&v| quant1(v, b_scale)).collect();
+    let col_scales = vec![b_scale; n];
+    let threads = cfg.effective_threads(m, k, n);
+    if threads <= 1 {
+        qgemm_band(m, k, n, a, a_scale, &qb, &col_scales, c, cfg);
+        return;
+    }
+    let (rows_per, bands) = band_split(m, threads);
+    let c_sh = crate::runtime::pool::SharedSlice::new(c);
+    crate::runtime::pool::global().parallel_for(bands, |t| {
+        let row0 = t * rows_per;
+        let rows = rows_per.min(m - row0);
+        let a_band = &a[row0 * k..(row0 + rows) * k];
+        // SAFETY: bands are disjoint row ranges of C.
+        let c_band = unsafe { c_sh.slice_mut(row0 * n, rows * n) };
+        qgemm_band(rows, k, n, a_band, a_scale, &qb, &col_scales, c_band, cfg);
+    });
+}
+
+/// Single-threaded blocked int8 GEMM over one row band of C, packing both
+/// operands on the fly.
+#[allow(clippy::too_many_arguments)]
+fn qgemm_band(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    a_scale: f32,
+    qb: &[i8],
+    col_scales: &[f32],
+    c: &mut [f32],
+    cfg: &GemmConfig,
+) {
+    let mc = cfg.mc.max(MR);
+    let kc = cfg.kc.max(1);
+    let nc = cfg.nc.max(1);
+    let nr = if cfg.nr == 4 { 4 } else { 8 };
+    c.fill(0.0);
+    let mut a_pack = vec![0i8; padded(mc, MR) * kc];
+    let mut b_pack = vec![0i8; padded(nc.min(n), nr) * kc];
+    let mut jc = 0;
+    while jc < n {
+        let ncb = nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kcb = kc.min(k - pc);
+            pack_b_q(qb, n, pc, jc, kcb, ncb, nr, &mut b_pack);
+            let mut ic = 0;
+            while ic < m {
+                let mcb = mc.min(m - ic);
+                pack_a_q(a, a_scale, k, ic, pc, mcb, kcb, &mut a_pack);
+                run_panel_q(c, n, ic, jc, mcb, ncb, kcb, nr, &a_pack, &b_pack, a_scale, col_scales);
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Micro loops over one packed (A panel, B panel) pair: accumulate the
+/// `mcb x ncb` block of C whose top-left corner is `(ic, jc)`, i32 inside
+/// the register tile, dequantized into f32 C in the epilogue.
+#[allow(clippy::too_many_arguments)]
+fn run_panel_q(
+    c: &mut [f32],
+    n: usize,
+    ic: usize,
+    jc: usize,
+    mcb: usize,
+    ncb: usize,
+    kcb: usize,
+    nr: usize,
+    a_pack: &[i8],
+    b_pack: &[i8],
+    a_scale: f32,
+    col_scales: &[f32],
+) {
+    let mut jr = 0;
+    while jr < ncb {
+        let nrb = nr.min(ncb - jr);
+        let b_sliver = &b_pack[(jr / nr) * kcb * nr..(jr / nr + 1) * kcb * nr];
+        let mut ir = 0;
+        while ir < mcb {
+            let mrb = MR.min(mcb - ir);
+            let a_sliver = &a_pack[(ir / MR) * kcb * MR..(ir / MR + 1) * kcb * MR];
+            if nr == 8 {
+                let mut acc = [[0i32; 8]; MR];
+                microkernel_q8(kcb, a_sliver, b_sliver, &mut acc);
+                for i in 0..mrb {
+                    let crow = (ic + ir + i) * n + jc + jr;
+                    for j in 0..nrb {
+                        c[crow + j] += acc[i][j] as f32 * (a_scale * col_scales[jc + jr + j]);
+                    }
+                }
+            } else {
+                let mut acc = [[0i32; 4]; MR];
+                microkernel_q4(kcb, a_sliver, b_sliver, &mut acc);
+                for i in 0..mrb {
+                    let crow = (ic + ir + i) * n + jc + jr;
+                    for j in 0..nrb {
+                        c[crow + j] += acc[i][j] as f32 * (a_scale * col_scales[jc + jr + j]);
+                    }
+                }
+            }
+            ir += MR;
+        }
+        jr += nr;
+    }
+}
+
+/// Quantize-and-pack `A[ic..ic+mcb, pc..pc+kcb]` into MR-row i8 slivers —
+/// same sliver addressing as the f32 `pack_a`
+/// (`a_pack[s*kcb*MR + p*MR + i]`), with the dynamic activation scale
+/// applied element-wise during the pack (no separate quantized-A buffer
+/// ever exists).
+#[allow(clippy::too_many_arguments)]
+fn pack_a_q(
+    a: &[f32],
+    a_scale: f32,
+    k: usize,
+    ic: usize,
+    pc: usize,
+    mcb: usize,
+    kcb: usize,
+    a_pack: &mut [i8],
+) {
+    let slivers = (mcb + MR - 1) / MR;
+    for s in 0..slivers {
+        let base = s * kcb * MR;
+        for p in 0..kcb {
+            for i in 0..MR {
+                let row = s * MR + i;
+                a_pack[base + p * MR + i] = if row < mcb {
+                    quant1(a[(ic + row) * k + pc + p], a_scale)
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
+/// Pack int8 `B[pc..pc+kcb, jc..jc+ncb]` into NR-column slivers — same
+/// sliver addressing as the f32 `pack_b` (`b_pack[t*kcb*nr + p*nr + j]`),
+/// zero-padded to a full NR.
+#[allow(clippy::too_many_arguments)]
+fn pack_b_q(
+    b: &[i8],
+    n: usize,
+    pc: usize,
+    jc: usize,
+    kcb: usize,
+    ncb: usize,
+    nr: usize,
+    b_pack: &mut [i8],
+) {
+    let slivers = (ncb + nr - 1) / nr;
+    for t in 0..slivers {
+        let base = t * kcb * nr;
+        for p in 0..kcb {
+            let brow = (pc + p) * n + jc;
+            for j in 0..nr {
+                let col = t * nr + j;
+                b_pack[base + p * nr + j] = if col < ncb { b[brow + col] } else { 0 };
+            }
+        }
+    }
+}
+
+/// MR x 8 int8 register-tile micro-kernel over a K-depth of `kc`: i8×i8
+/// products widened to i32 before accumulation. Fixed-size array refs
+/// give LLVM exact trip counts so the inner loops unroll and vectorize
+/// (on targets with dot-product instructions this is the shape the
+/// autovectorizer matches).
+#[inline(always)]
+fn microkernel_q8(kc: usize, a: &[i8], b: &[i8], acc: &mut [[i32; 8]; MR]) {
+    for p in 0..kc {
+        let ap: &[i8; MR] = (&a[p * MR..p * MR + MR]).try_into().unwrap();
+        let bp: &[i8; 8] = (&b[p * 8..p * 8 + 8]).try_into().unwrap();
+        for i in 0..MR {
+            let ai = ap[i] as i32;
+            for j in 0..8 {
+                acc[i][j] += ai * bp[j] as i32;
+            }
+        }
+    }
+}
+
+/// MR x 4 variant for the narrow-register knob setting.
+#[inline(always)]
+fn microkernel_q4(kc: usize, a: &[i8], b: &[i8], acc: &mut [[i32; 4]; MR]) {
+    for p in 0..kc {
+        let ap: &[i8; MR] = (&a[p * MR..p * MR + MR]).try_into().unwrap();
+        let bp: &[i8; 4] = (&b[p * 4..p * 4 + 4]).try_into().unwrap();
+        for i in 0..MR {
+            let ai = ap[i] as i32;
+            for j in 0..4 {
+                acc[i][j] += ai * bp[j] as i32;
+            }
+        }
+    }
+}
+
+/// Reference int8 GEMM — full-depth i32 accumulation, then one dequant —
+/// the oracle the blocked kernel's panel-wise f32 accumulation is
+/// property-tested against.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_naive(
+    m: usize,
+    k: usize,
+    n: usize,
+    qa: &[i8],
+    qb: &[i8],
+    a_scale: f32,
+    col_scales: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(qa.len(), m * k);
+    assert_eq!(qb.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for p in 0..k {
+                acc += qa[i * k + p] as i32 * qb[p * n + j] as i32;
+            }
+            c[i * n + j] = acc as f32 * (a_scale * col_scales[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm::gemm_naive;
+    use crate::util::proptest_lite::forall;
+    use crate::util::rng::Rng;
+
+    /// Quantize a row-major f32 `b [k, n]` per *column* (the per-output-
+    /// channel form `PackedQB` carries), returning the int8 payload and
+    /// the column scales.
+    fn quantize_columns(k: usize, n: usize, b: &[f32]) -> (Vec<i8>, Vec<f32>) {
+        let mut scales = vec![1.0f32; n];
+        for j in 0..n {
+            let amax = (0..k).fold(0.0f32, |m, p| m.max(b[p * n + j].abs()));
+            if amax > 0.0 {
+                scales[j] = amax / 127.0;
+            }
+        }
+        let mut qb = vec![0i8; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                qb[p * n + j] = quant1(b[p * n + j], scales[j]);
+            }
+        }
+        (qb, scales)
+    }
+
+    /// Satellite acceptance: the int8 kernel matches the f32 oracle on
+    /// shapes that are NOT multiples of any tile size (M/N/K drawn from
+    /// {1, 7, 33, 129}) within the bound the scales imply: each quantized
+    /// factor carries ≤ half a step of error, so
+    /// |C_int8 - C_f32| ≤ k·(amax_a·s_bj/2 + amax_bj·s_a/2 + s_a·s_bj/4)
+    /// ≈ k·s_a·s_bj·127.25 per column j.
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy property sweep; Miri runs the tiny-shape soundness test instead
+    fn int8_matches_f32_oracle_within_scale_bound() {
+        let dims = [1usize, 7, 33, 129];
+        forall("int8 gemm ~= f32 oracle", 32, |rng| {
+            let m = *rng.choose(&dims);
+            let k = *rng.choose(&dims);
+            let n = *rng.choose(&dims);
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            gemm_naive(m, k, n, &a, &b, &mut want);
+            // Deliberately awkward tile sizes so every edge path runs.
+            let cfg = GemmConfig {
+                mc: 4 + rng.below(3) * 17,
+                kc: 1 + rng.below(60),
+                nc: 1 + rng.below(60),
+                nr: *rng.choose(&[4usize, 8]),
+                threads: 1 + rng.below(3),
+            };
+            let (qb, col_scales) = quantize_columns(k, n, &b);
+            let pqb = PackedQB::pack(k, n, &qb, &col_scales, &cfg);
+            let mut scratch = vec![0i8; qgemm_scratch_elems(&cfg) * cfg.resolved_threads()];
+            let mut got = vec![0.0f32; m * n];
+            qgemm_prepacked(m, &a, &pqb, &mut got, &cfg, &mut scratch);
+            let sa = act_scale(&a);
+            for i in 0..m {
+                for j in 0..n {
+                    let bound = k as f32 * sa * col_scales[j] * 130.0 + 1e-4;
+                    let d = (want[i * n + j] - got[i * n + j]).abs();
+                    assert!(d <= bound, "diff {d} > bound {bound} at ({i},{j}) m={m} k={k} n={n}");
+                }
+            }
+        });
+    }
+
+    /// The blocked kernel agrees with the straight-line int8 oracle to
+    /// f32 rounding (identical quantized inputs; only the panel-wise f32
+    /// accumulation of dequantized partials differs from the oracle's
+    /// full-depth i32 sum).
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy property sweep; Miri runs the tiny-shape soundness test instead
+    fn blocked_matches_int8_oracle() {
+        let dims = [1usize, 7, 33, 129];
+        forall("blocked int8 == int8 oracle", 16, |rng| {
+            let m = *rng.choose(&dims);
+            let k = *rng.choose(&dims);
+            let n = *rng.choose(&dims);
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let cfg = GemmConfig {
+                mc: 4 + rng.below(3) * 17,
+                kc: 1 + rng.below(60),
+                nc: 1 + rng.below(60),
+                nr: *rng.choose(&[4usize, 8]),
+                threads: 1 + rng.below(3),
+            };
+            let sa = act_scale(&a);
+            let qa: Vec<i8> = a.iter().map(|&v| quant1(v, sa)).collect();
+            let (qb, col_scales) = quantize_columns(k, n, &b);
+            let mut want = vec![0.0f32; m * n];
+            qgemm_naive(m, k, n, &qa, &qb, sa, &col_scales, &mut want);
+            let pqb = PackedQB::pack(k, n, &qb, &col_scales, &cfg);
+            let mut scratch = vec![0i8; qgemm_scratch_elems(&cfg) * cfg.resolved_threads()];
+            let mut got = vec![0.0f32; m * n];
+            qgemm_prepacked(m, &a, &pqb, &mut got, &cfg, &mut scratch);
+            for (idx, (w, g)) in want.iter().zip(&got).enumerate() {
+                // Worst case: k/kc panels each rounding an i32·scale
+                // product into f32.
+                let slack = (k as f32).sqrt() * 1e-3 * w.abs().max(1.0);
+                assert!((w - g).abs() <= slack, "idx {idx}: {w} vs {g} (m={m} k={k} n={n})");
+            }
+        });
+    }
+
+    /// Parallel band split is numerically invisible: every row's panel
+    /// accumulation is identical regardless of which band runs it, and the
+    /// activation scale is global, so serial and parallel agree bitwise.
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy shapes; Miri runs the tiny-shape soundness test instead
+    fn parallel_matches_single_thread_bitwise() {
+        let mut rng = Rng::new(0xA8);
+        // Above the serial cutoff (m*k*n >= 1<<19) so bands actually split.
+        let (m, k, n) = (160usize, 64usize, 96usize);
+        assert!(m * k * n >= 1 << 19);
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let (qb, col_scales) = quantize_columns(k, n, &b);
+        let one = GemmConfig { threads: 1, ..Default::default() };
+        let many = GemmConfig { threads: 4, ..Default::default() };
+        let pqb1 = PackedQB::pack(k, n, &qb, &col_scales, &one);
+        let pqb4 = PackedQB::pack(k, n, &qb, &col_scales, &many);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c4 = vec![0.0f32; m * n];
+        let mut s1 = vec![0i8; qgemm_scratch_elems(&one)];
+        let mut s4 = vec![0i8; qgemm_scratch_elems(&many) * 4];
+        qgemm_prepacked(m, &a, &pqb1, &mut c1, &one, &mut s1);
+        qgemm_prepacked(m, &a, &pqb4, &mut c4, &many, &mut s4);
+        assert_eq!(c1, c4);
+    }
+
+    /// Dynamic two-operand quantization (the attention path) stays within
+    /// the scale-derived bound of the f32 oracle.
+    #[test]
+    #[cfg_attr(miri, ignore)] // heavy property sweep; Miri runs the tiny-shape soundness test instead
+    fn dynamic_qgemm_matches_f32_oracle_within_scale_bound() {
+        let dims = [1usize, 7, 33, 129];
+        forall("dynamic int8 gemm ~= f32 oracle", 16, |rng| {
+            let m = *rng.choose(&dims);
+            let k = *rng.choose(&dims);
+            let n = *rng.choose(&dims);
+            let a = rng.normal_vec(m * k, 0.0, 1.0);
+            let b = rng.normal_vec(k * n, 0.0, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            gemm_naive(m, k, n, &a, &b, &mut want);
+            let cfg = GemmConfig {
+                mc: 4 + rng.below(3) * 17,
+                kc: 1 + rng.below(60),
+                nc: 1 + rng.below(60),
+                nr: *rng.choose(&[4usize, 8]),
+                threads: 1 + rng.below(3),
+            };
+            let mut got = vec![0.0f32; m * n];
+            qgemm(m, k, n, &a, &b, &mut got, &cfg);
+            let (sa, sb) = (act_scale(&a), act_scale(&b));
+            let bound = k as f32 * sa * sb * 130.0 + 1e-4;
+            for (w, g) in want.iter().zip(&got) {
+                assert!((w - g).abs() <= bound, "{w} vs {g} (m={m} k={k} n={n})");
+            }
+        });
+    }
+
+    #[test]
+    fn degenerate_dims_are_safe() {
+        let cfg = GemmConfig::default();
+        // k == 0: C must be zeroed, not left stale.
+        let pqb = PackedQB::pack(0, 2, &[], &[1.0, 1.0], &cfg);
+        let mut scratch = vec![0i8; qgemm_scratch_elems(&cfg)];
+        let mut c = vec![7.0f32; 4];
+        qgemm_prepacked(2, &[], &pqb, &mut c, &cfg, &mut scratch);
+        assert_eq!(c, vec![0.0; 4]);
+        // n == 0: nothing to do.
+        let pqb = PackedQB::pack(3, 0, &[], &[], &cfg);
+        let mut c: Vec<f32> = Vec::new();
+        qgemm_prepacked(2, &[0.0; 6], &pqb, &mut c, &cfg, &mut scratch);
+        // Dynamic path, k == 0.
+        let mut c = vec![7.0f32; 4];
+        qgemm(2, 0, 2, &[], &[], &mut c, &cfg);
+        assert_eq!(c, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prepacked_rejects_blocking_mismatch() {
+        let pack_cfg = GemmConfig { kc: 32, ..Default::default() };
+        let run_cfg = GemmConfig { kc: 64, ..Default::default() };
+        let pqb = PackedQB::pack(4, 4, &[0; 16], &[1.0; 4], &pack_cfg);
+        let mut scratch = vec![0i8; qgemm_scratch_elems(&run_cfg)];
+        let mut c = vec![0.0f32; 16];
+        qgemm_prepacked(4, &[0.0; 16], &pqb, &mut c, &run_cfg, &mut scratch);
+    }
+
+    #[test]
+    fn from_weight_scales_ride_along() {
+        // Dense [in=3, out=2]: column amax 3 and 6 → scales 3/127, 6/127.
+        let t = Tensor::from_vec(&[3, 2], vec![1.0, 2.0, 2.0, 4.0, 3.0, 6.0]);
+        let cfg = GemmConfig::default();
+        let pqb = match PackedQB::from_weight(&t, &cfg) {
+            Ok(p) => p,
+            Err(e) => unreachable!("finite weight rejected: {e}"),
+        };
+        assert_eq!((pqb.k, pqb.n), (3, 2));
+        assert_eq!(pqb.col_scales, vec![3.0 / 127.0, 6.0 / 127.0]);
+        // Non-finite weights are rejected with the quantizer's typed error.
+        let bad = Tensor::from_vec(&[2, 2], vec![1.0, f32::NAN, 2.0, 3.0]);
+        assert!(PackedQB::from_weight(&bad, &cfg).is_err());
+    }
+
+    /// Miri target: a shape above the (Miri-lowered) serial cutoff so both
+    /// parallel unsafe paths — prepacked C bands + per-band i8 scratch,
+    /// and the dynamic path's C bands — run under the interpreter,
+    /// checking the generic `SharedSlice<i8>` raw-pointer arithmetic and
+    /// the debug claim registry. Under a normal build the same shape is
+    /// below the cutoff and takes the serial path, keeping this cheap.
+    #[test]
+    fn parallel_paths_are_sound_on_tiny_shapes() {
+        let mut rng = Rng::new(0x52);
+        let (m, k, n) = (9usize, 8usize, 8usize); // 576 >= Miri cutoff (1<<8)
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let cfg = GemmConfig { threads: 3, ..Default::default() };
+        let (qb, col_scales) = quantize_columns(k, n, &b);
+        let pqb = PackedQB::pack(k, n, &qb, &col_scales, &cfg);
+        let mut scratch = vec![0i8; qgemm_scratch_elems(&cfg) * 3];
+        let mut got = vec![0.0f32; m * n];
+        qgemm_prepacked(m, &a, &pqb, &mut got, &cfg, &mut scratch);
+        let sa = act_scale(&a);
+        let qa: Vec<i8> = a.iter().map(|&v| quant1(v, sa)).collect();
+        let mut want = vec![0.0f32; m * n];
+        qgemm_naive(m, k, n, &qa, &qb, sa, &col_scales, &mut want);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((w - g).abs() <= 1e-3);
+        }
+        // Dynamic path under the same tiny shape.
+        let mut dynm = vec![0.0f32; m * n];
+        qgemm(m, k, n, &a, &b, &mut dynm, &cfg);
+        let mut want_f32 = vec![0.0f32; m * n];
+        gemm_naive(m, k, n, &a, &b, &mut want_f32);
+        let bound = k as f32 * sa * act_scale(&b) * 130.0 + 1e-4;
+        for (w, g) in want_f32.iter().zip(&dynm) {
+            assert!((w - g).abs() <= bound);
+        }
+    }
+}

@@ -50,6 +50,7 @@ use crate::exec::{ExecState, MemoryPlan, WorkspaceSpec};
 use crate::fusion::FusionPlan;
 use crate::graph::{Graph, NodeId, OpKind, WeightStore};
 use crate::tensor::gemm::{prepacked_scratch_elems, GemmConfig};
+use crate::tensor::qgemm::qgemm_scratch_band_bytes;
 
 fn bad_graph(pass: &str, detail: String) -> XgenError {
     XgenError::InvalidGraph { pass: pass.to_string(), detail }
@@ -474,10 +475,12 @@ pub struct Region {
 /// Lay the arena out symbolically, in the same order
 /// [`crate::exec::Workspace::new`] allocates it: one region per value
 /// slot, the two ping-pong group buffers, im2col patches, GEMM staging,
-/// the per-call transposed weight buffer, and one A-pack scratch band
+/// the per-call transposed weight buffer, one f32 A-pack scratch band
 /// per pool thread (the bands `gemm_prepacked` claims through
-/// `SharedSlice`). Returns `(regions, total_elems)`; `total_elems * 4`
-/// equals [`WorkspaceSpec::bytes`].
+/// `SharedSlice`), and one int8 A-pack band per thread (the quantized
+/// bands `qgemm_prepacked` claims — sized in whole f32 words, ISSUE-10).
+/// Returns `(regions, total_elems)`; `total_elems * 4` equals
+/// [`WorkspaceSpec::bytes`].
 pub fn arena_regions(spec: &WorkspaceSpec, cfg: &GemmConfig) -> (Vec<Region>, usize) {
     let mut regions = Vec::new();
     let mut cursor = 0usize;
@@ -496,6 +499,13 @@ pub fn arena_regions(spec: &WorkspaceSpec, cfg: &GemmConfig) -> (Vec<Region>, us
     let per = prepacked_scratch_elems(cfg);
     for t in 0..cfg.resolved_threads() {
         push(format!("gemm_scratch[{t}]"), per, &mut cursor);
+    }
+    // The int8 kernel's per-thread quantized A-pack bands: i8 elements,
+    // band length padded to a multiple of 4 bytes so it converts exactly
+    // into the arena's f32 accounting units.
+    let qper = qgemm_scratch_band_bytes(cfg) / 4;
+    for t in 0..cfg.resolved_threads() {
+        push(format!("qgemm_scratch[{t}]"), qper, &mut cursor);
     }
     (regions, cursor)
 }

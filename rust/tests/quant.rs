@@ -1,0 +1,265 @@
+//! ISSUE-10 acceptance: int8 quantized inference end-to-end.
+//!
+//! * Toggle matrix: `quantize(auto)` on the demo CNN and both demo
+//!   transformers at O0–O3 stays within the quantization error envelope
+//!   of the f32 baseline (matched accuracy, relative L2), and `auto`
+//!   provably selects its int8 layers from the compile-time `QuantPlan`
+//!   (every int8 layer has a `feasible` plan entry).
+//! * Scale agreement: the per-channel dequant scales the executor packed
+//!   (`CompiledModel::int8_scales`) equal the plan's `channel_scales`
+//!   **bitwise** — both sides derive from the same
+//!   `quantize_gemm_weight` normalization, by construction.
+//! * Decode oracle: a `quantize(auto)` causal decoder still opens an
+//!   (f32) `DecodeSession`, and its incremental logits match the
+//!   mixed-precision full forward within the quant envelope — decode
+//!   works unchanged on mixed-precision plans.
+//! * `force` quantizes every packable contraction layer; engine toggles
+//!   (workspace off, prepack off, planner off) keep working and the
+//!   precision report blames skipped layers truthfully.
+
+use xgen::api::{CompiledModel, Compiler, OptLevel, QuantPolicy};
+use xgen::graph::OpKind;
+use xgen::pruning::PruneScheme;
+use xgen::tensor::Tensor;
+
+/// Relative L2 distance — statistically stable under quantization noise,
+/// unlike per-element max error.
+fn rel_l2(want: &[f32], got: &[f32]) -> f32 {
+    assert_eq!(want.len(), got.len());
+    let num: f32 = want.iter().zip(got).map(|(a, b)| (a - b) * (a - b)).sum();
+    let den: f32 = want.iter().map(|a| a * a).sum();
+    (num / den.max(1e-12)).sqrt()
+}
+
+fn compile(model: &str, opt: OptLevel, policy: QuantPolicy) -> CompiledModel {
+    Compiler::for_model(model, 1)
+        .unwrap()
+        .random_weights(17)
+        .scheme(PruneScheme::None)
+        .opt_level(opt)
+        .quantize(policy)
+        .compile()
+        .unwrap()
+}
+
+/// Matched accuracy: int8-under-`auto` against the f32 baseline within
+/// the symmetric-quantization error envelope, across the zoo demos and
+/// every opt level.
+#[test]
+fn quantize_auto_matches_f32_across_models_and_opt_levels() {
+    for model in ["demo-cnn", "demo-transformer", "demo-transformer-causal"] {
+        for opt in [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3] {
+            let f32_m = compile(model, opt, QuantPolicy::Off);
+            let q_m = compile(model, opt, QuantPolicy::Auto);
+            let xs = f32_m.sample_inputs(5);
+            let want = f32_m.infer(&xs).unwrap();
+            let got = q_m.infer(&xs).unwrap();
+            let e = rel_l2(want[0].data(), got[0].data());
+            assert!(
+                e < 0.25,
+                "{model}@{}: quantize(auto) diverged from f32 (rel L2 {e})",
+                opt.name()
+            );
+            assert!(got[0].data().iter().all(|v| v.is_finite()), "{model}: non-finite int8 output");
+
+            // Auto selects *from the plan*: every int8 layer has a
+            // feasible QuantPlan entry (Auto forces the analysis on, so
+            // the plan exists even at O0/O1).
+            let r = q_m.report();
+            assert_eq!(r.quant_policy, QuantPolicy::Auto);
+            assert!(!r.precision.is_empty(), "{model}: no contraction layers reported");
+            let plan = &r.analysis.as_ref().expect("auto forces analysis").quant;
+            for l in r.precision.iter().filter(|l| l.int8) {
+                let p = plan.layers.iter().find(|p| p.node == l.node);
+                assert!(
+                    p.is_some_and(|p| p.feasible),
+                    "{model}: int8 layer {} not feasible in the QuantPlan",
+                    l.name
+                );
+            }
+            for l in r.precision.iter().filter(|l| !l.int8) {
+                assert!(l.reason.is_some(), "{model}: f32 layer {} carries no reason", l.name);
+            }
+        }
+    }
+}
+
+/// The compile-time plan's per-channel scales and the scales the executor
+/// actually packed agree bitwise — one normalization helper feeds both.
+#[test]
+fn packed_scales_agree_with_quant_plan_bitwise() {
+    let m = compile("demo-cnn", OptLevel::O2, QuantPolicy::Auto);
+    let plan = &m.report().analysis.as_ref().unwrap().quant;
+    let mut checked = 0usize;
+    for l in &plan.layers {
+        if let Some(scales) = m.int8_scales(l.node) {
+            assert_eq!(
+                scales,
+                l.channel_scales.as_slice(),
+                "{}: packed scales != plan scales (must be bitwise)",
+                l.name
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "no layer was int8-packed under auto on demo-cnn");
+}
+
+/// `force` packs every eligible Dense/conv (scheme none, no reuse): the
+/// precision report shows all-contraction int8 and a summary line.
+#[test]
+fn force_policy_quantizes_every_packable_layer() {
+    let m = compile("demo-cnn", OptLevel::O2, QuantPolicy::Force);
+    let r = m.report();
+    assert_eq!(r.quant_policy, QuantPolicy::Force);
+    assert!(!r.precision.is_empty());
+    for l in &r.precision {
+        assert!(l.int8, "force left {} ({}) in f32: {:?}", l.name, l.op, l.reason);
+    }
+    assert_eq!(r.int8_layer_count(), r.precision.len());
+    assert!(r.summary().contains("quant[force]"), "summary misses the quant line");
+
+    // And the numerics stay in the envelope.
+    let f32_m = compile("demo-cnn", OptLevel::O2, QuantPolicy::Off);
+    let xs = f32_m.sample_inputs(3);
+    let want = f32_m.infer(&xs).unwrap();
+    let got = m.infer(&xs).unwrap();
+    let e = rel_l2(want[0].data(), got[0].data());
+    assert!(e < 0.25, "force diverged from f32 (rel L2 {e})");
+}
+
+/// Quantized attention: under `force` the transformer's MatMul layers
+/// (QK^T / AV) run the dynamically-quantizing int8 path around the f32
+/// masked softmax — the report lists them int8.
+#[test]
+fn force_quantizes_attention_matmuls() {
+    let m = compile("demo-transformer", OptLevel::O2, QuantPolicy::Force);
+    let matmuls: Vec<_> = m
+        .report()
+        .precision
+        .iter()
+        .filter(|l| matches!(m.graph().node(l.node).op, OpKind::MatMul))
+        .collect();
+    assert!(!matmuls.is_empty(), "demo-transformer has attention MatMuls");
+    for l in &matmuls {
+        assert!(l.int8, "attention contraction {} stayed f32", l.name);
+        // Dynamic quantization has no packed side table.
+        assert!(m.int8_scales(l.node).is_none(), "{}: MatMul must not pack scales", l.name);
+    }
+}
+
+/// Engine toggles under a quantized session: workspace-off (fused Tensor
+/// engine int8 arms) matches the steady arena engine; prepack-off and
+/// planner-off degrade to f32 with truthful reasons and unchanged
+/// numerics vs the f32 baseline.
+#[test]
+fn quantized_engine_toggles_agree() {
+    let xs = compile("demo-cnn", OptLevel::O2, QuantPolicy::Off).sample_inputs(9);
+
+    let steady = compile("demo-cnn", OptLevel::O2, QuantPolicy::Force);
+    let want = steady.infer(&xs).unwrap();
+
+    // Fused Tensor engine (workspace off) runs the same int8 kernels.
+    let fused = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(17)
+        .scheme(PruneScheme::None)
+        .workspace(false)
+        .quantize(QuantPolicy::Force)
+        .compile()
+        .unwrap();
+    let got = fused.infer(&xs).unwrap();
+    let e = rel_l2(want[0].data(), got[0].data());
+    assert!(e < 1e-4, "fused int8 engine != steady int8 engine (rel L2 {e})");
+
+    // Prepack off: no int8 side table can exist; layers degrade to f32
+    // and say so.
+    let nopack = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(17)
+        .scheme(PruneScheme::None)
+        .prepack(false)
+        .quantize(QuantPolicy::Force)
+        .compile()
+        .unwrap();
+    assert_eq!(nopack.report().int8_layer_count(), 0);
+    for l in &nopack.report().precision {
+        assert_eq!(l.reason.as_deref(), Some("prepack-off"), "{}", l.name);
+    }
+    assert!(nopack.infer(&xs).is_ok());
+
+    // Planner off: the reference executor runs pure f32.
+    let noplan = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(17)
+        .scheme(PruneScheme::None)
+        .memory_planner(false)
+        .quantize(QuantPolicy::Force)
+        .compile()
+        .unwrap();
+    assert_eq!(noplan.report().int8_layer_count(), 0);
+    for l in &noplan.report().precision {
+        assert_eq!(l.reason.as_deref(), Some("planner-off"), "{}", l.name);
+    }
+    let f32_want = compile("demo-cnn", OptLevel::O2, QuantPolicy::Off).infer(&xs).unwrap();
+    let y = noplan.infer(&xs).unwrap();
+    assert!(rel_l2(f32_want[0].data(), y[0].data()) < 1e-5, "planner-off must stay f32");
+}
+
+/// Decode on a mixed-precision plan: the (always-f32) `DecodeSession` of
+/// a `quantize(auto)` causal decoder matches the quantized full forward
+/// within the quantization envelope at every prompt position — the int8
+/// side tables don't disturb the decode path.
+#[test]
+fn quantized_causal_decode_matches_full_forward_oracle() {
+    let m = compile("demo-transformer-causal", OptLevel::O2, QuantPolicy::Auto);
+    let prompt: [u32; 6] = [3, 1, 4, 1, 5, 9];
+
+    // Full forward: first `prompt.len()` positions of the fixed-length
+    // causal graph over the padded prompt (padding only affects later
+    // rows).
+    let shape = m.input_shapes()[0].clone(); // [1, S]
+    let s = shape[1];
+    let mut ids = vec![0.0f32; s];
+    for (i, &t) in prompt.iter().enumerate() {
+        ids[i] = t as f32;
+    }
+    let y = m.infer(&[Tensor::from_vec(&shape, ids)]).unwrap();
+    let row = y[0].len() / s;
+
+    let mut sess = m.decode_session(prompt.len()).unwrap();
+    for (i, &t) in prompt.iter().enumerate() {
+        let logits = sess.step(t).unwrap();
+        let want = &y[0].data()[i * row..(i + 1) * row];
+        let e = rel_l2(want, logits);
+        assert!(
+            e < 0.25,
+            "decode diverges from mixed-precision full forward at {i} (rel L2 {e})"
+        );
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+    // Greedy generation still runs end-to-end on the quantized session.
+    let toks = m.generate(&[3, 1, 4], 4).unwrap();
+    assert_eq!(toks.len(), 4);
+    assert!(toks.iter().all(|&t| (t as usize) < 256));
+}
+
+/// Policy spellings round-trip and `off` is the default (empty report).
+#[test]
+fn quant_policy_parse_and_default_off() {
+    for (s, p) in [
+        ("off", QuantPolicy::Off),
+        ("force", QuantPolicy::Force),
+        ("auto", QuantPolicy::Auto),
+    ] {
+        assert_eq!(QuantPolicy::parse(s), Some(p));
+        assert_eq!(QuantPolicy::parse(p.name()), Some(p));
+    }
+    assert_eq!(QuantPolicy::parse("int4"), None);
+
+    let m = compile("demo-cnn", OptLevel::O2, QuantPolicy::Off);
+    assert_eq!(m.report().quant_policy, QuantPolicy::Off);
+    assert!(m.report().precision.is_empty());
+    assert!(!m.report().summary().contains("quant["));
+    assert!(m.int8_scales(0).is_none());
+}

@@ -16,7 +16,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::sync::atomic::Ordering;
 
-use xgen::api::Compiler;
+use xgen::api::{Compiler, QuantPolicy};
 use xgen::pruning::PruneScheme;
 use xgen::runtime::pool;
 use xgen::tensor::Tensor;
@@ -99,6 +99,37 @@ fn steady_state_infer_is_allocation_free() {
         "steady-state infer_into made {n} heap allocations on the calling thread"
     );
     assert_eq!(outs[0].data(), &want[..], "tracked runs changed the result");
+}
+
+/// ISSUE-10 acceptance: the int8 steady path is allocation-free too —
+/// activations quantize into the arena's per-thread i8 scratch bands and
+/// the weight side tables were packed at compile time, so `quantize(force)`
+/// adds no per-call heap traffic over the f32 engine.
+#[test]
+fn steady_state_int8_infer_is_allocation_free() {
+    let m = Compiler::for_model("demo-cnn", 1)
+        .unwrap()
+        .random_weights(42)
+        .quantize(QuantPolicy::Force)
+        .compile()
+        .unwrap();
+    assert!(m.report().int8_layer_count() > 0, "force packed no int8 layers");
+    let inputs = vec![Tensor::randn(&[1, 3, 24, 24], 1.0, &mut Rng::new(5))];
+    let mut outs: Vec<Tensor> = m.output_shapes().iter().map(|s| Tensor::zeros(s)).collect();
+    for _ in 0..3 {
+        m.infer_into(&inputs, &mut outs).unwrap();
+    }
+    let want = outs[0].data().to_vec();
+    let n = count_allocs(|| {
+        for _ in 0..5 {
+            m.infer_into(&inputs, &mut outs).unwrap();
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "int8 steady-state infer_into made {n} heap allocations on the calling thread"
+    );
+    assert_eq!(outs[0].data(), &want[..], "tracked int8 runs changed the result");
 }
 
 /// The FKW route (pattern-pruned convs) is allocation-free too.
